@@ -1,0 +1,44 @@
+//! Shared helpers for the paper-reproduction benches.
+
+use std::path::PathBuf;
+
+use greenflow::workload::arrival::{arrival_times, ArrivalProcess};
+use greenflow::workload::stream::{Request, RequestStream, StreamConfig};
+use greenflow::util::Rng;
+
+/// Iteration count: the paper's 100 per configuration, trimmable via
+/// GF_ITERS for CI.
+pub fn iters() -> usize {
+    std::env::var("GF_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(100)
+}
+
+/// Repository root (artifacts/ relative to the crate).
+pub fn repo_root() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("repository.json").exists().then_some(root)
+}
+
+/// Skip message when artifacts are missing.
+pub fn require_artifacts() -> Option<PathBuf> {
+    let r = repo_root();
+    if r.is_none() {
+        println!("SKIP: artifacts/ not built (run `make artifacts`)");
+    }
+    r
+}
+
+/// Deterministic calibrated trace at a Poisson rate.
+pub fn trace(n: usize, rate: f64, seed: u64, model: &str) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut arr = ArrivalProcess::poisson(rate);
+    let times = arrival_times(&mut arr, n, &mut rng);
+    RequestStream::new(StreamConfig { model: model.to_string(), ..Default::default() }, seed ^ 1)
+        .take(&times)
+}
+
+/// Write a CSV artifact under bench_data/.
+pub fn write_csv(name: &str, content: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_data").join(name);
+    greenflow::telemetry::export::write_file(&path, content).expect("write bench csv");
+    println!("wrote bench_data/{name}");
+}

@@ -1,0 +1,98 @@
+//! **Fig. 1** — bio-inspired optimisation over states/model confidence:
+//! τ(t) = τ∞ + (τ0 − τ∞)e^(−kt) decays while the controller admits points
+//! in the local stable basin. This bench emits the τ(t) curves for a k
+//! sweep, verifies Eq. 3 analytically, and traces the admit-rate-over-time
+//! of the default controller on the calibrated stream (the "shaded basin
+//! narrows as τ tightens" story).
+//!
+//! ```bash
+//! cargo bench --bench fig1_threshold
+//! ```
+
+mod common;
+
+use greenflow::benchkit::Table;
+use greenflow::controller::cost::{CostInputs, WeightPolicy};
+use greenflow::controller::threshold::ThresholdSchedule;
+use greenflow::controller::{AdmissionController, AdmissionPolicy, ControllerConfig};
+use greenflow::models;
+use greenflow::sim::landscape::tau_curve;
+
+fn main() {
+    // ---- Eq. 3 curves for a k sweep -----------------------------------
+    let mut csv = String::from("k,t,tau\n");
+    let mut t = Table::new(
+        "Fig. 1 analog — τ(t) = τ∞ + (τ0−τ∞)e^(−kt), τ0=0.2, τ∞=0.51",
+        &["k", "τ(0)", "τ(1s)", "τ(2s)", "τ(5s)", "95% settle (s)"],
+    );
+    for k in [0.5, 1.0, 2.0, 4.0] {
+        let s = ThresholdSchedule::Exponential { tau0: 0.2, tau_inf: 0.51, k };
+        t.row(vec![
+            format!("{k}"),
+            format!("{:.3}", s.tau(0.0)),
+            format!("{:.3}", s.tau(1.0)),
+            format!("{:.3}", s.tau(2.0)),
+            format!("{:.3}", s.tau(5.0)),
+            format!("{:.2}", s.settle_time_95().unwrap()),
+        ]);
+        for (tt, tau) in tau_curve(&s, 6.0, 61) {
+            csv.push_str(&format!("{k},{tt:.2},{tau:.5}\n"));
+        }
+        // analytic check of Eq. 3 at a few points
+        for tt in [0.0, 0.7, 3.3] {
+            let want = 0.51 + (0.2 - 0.51) * (-k * tt).exp();
+            assert!((s.tau(tt) - want).abs() < 1e-12, "Eq. 3 violated");
+        }
+    }
+    print!("{}", t.render());
+    println!("Eq. 3 verified analytically at sampled points.\n");
+    common::write_csv("fig1_tau_curves.csv", &csv);
+
+    // ---- admit-rate over time on the calibrated stream ----------------
+    let reqs = common::trace(4000, 200.0, 11, models::DISTILBERT);
+    let mut ctrl = AdmissionController::new(ControllerConfig {
+        weights: WeightPolicy::Balanced.weights(),
+        schedule: ThresholdSchedule::paper_default(),
+        respond_from_cache: true,
+    });
+    let max_ent = 2f64.ln();
+    let window = 200usize;
+    let mut admitted_in_window = 0usize;
+    let mut rate_table = Table::new(
+        "Admission rate vs time (window = 200 requests) — the basin narrowing",
+        &["t (s)", "τ(t)", "admit rate %"],
+    );
+    let mut rate_csv = String::from("t,tau,admit_rate\n");
+    for (i, r) in reqs.iter().enumerate() {
+        // idle-system inputs: isolates the τ(t) dynamic from congestion
+        let mut x = CostInputs::from_entropy(r.entropy(), max_ent);
+        x.energy_ewma = 0.5;
+        x.energy_ref = 1.0; // steady-state e_norm = 0.5, as in serving
+        if ctrl.decide(&x, r.arrival).admitted() {
+            admitted_in_window += 1;
+        }
+        if (i + 1) % window == 0 {
+            let rate = admitted_in_window as f64 / window as f64;
+            rate_table.row(vec![
+                format!("{:.2}", r.arrival),
+                format!("{:.3}", ctrl.tau_at(r.arrival)),
+                format!("{:.0}", rate * 100.0),
+            ]);
+            rate_csv.push_str(&format!(
+                "{:.3},{:.4},{:.3}\n",
+                r.arrival,
+                ctrl.tau_at(r.arrival),
+                rate
+            ));
+            admitted_in_window = 0;
+        }
+    }
+    print!("{}", rate_table.render());
+    println!(
+        "\nshape check: admit rate starts at 100% (permissive τ0) and narrows as τ → τ∞.\n\
+         Under these idle-system inputs (C=1) it settles at the entropy-only cut (~85%);\n\
+         in the full closed loop, energy + congestion feedback push it to the calibrated\n\
+         58% steady state — see `cargo bench --bench table3_ablation`."
+    );
+    common::write_csv("fig1_admit_rate.csv", &rate_csv);
+}

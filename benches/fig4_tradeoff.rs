@@ -1,0 +1,129 @@
+//! **Fig. 4** — latency vs energy scatter; marker size encodes σ (we
+//! export it as a CSV column). Each (model, path, concurrency) operating
+//! point is one marker; the paper reads a Pareto frontier where the
+//! direct path owns the low-latency region and the batched path buys
+//! throughput-per-joule under load.
+//!
+//! ```bash
+//! cargo bench --bench fig4_tradeoff
+//! ```
+
+mod common;
+
+use std::sync::{Arc, Mutex};
+
+use greenflow::benchkit::Table;
+use greenflow::models;
+use greenflow::pipeline::system::{ServingSystem, SystemConfig};
+use greenflow::router::PathKind;
+use greenflow::stats;
+
+struct Point {
+    model: &'static str,
+    path: &'static str,
+    clients: usize,
+    mean_ms: f64,
+    std_ms: f64,
+    joules_per_req: f64,
+    rps: f64,
+}
+
+fn main() {
+    let Some(root) = common::require_artifacts() else { return };
+    let system = Arc::new(ServingSystem::start(SystemConfig::new(root)).expect("boot"));
+    let per_client = (common::iters() / 4).max(8);
+
+    let mut points: Vec<Point> = Vec::new();
+    for (model, mname) in [(models::DISTILBERT, "distilbert_mini"), (models::RESNET, "resnet_tiny")] {
+        for (path, pname) in [(PathKind::Direct, "direct"), (PathKind::Batched, "batched")] {
+            for clients in [1usize, 4, 8] {
+                // warmup
+                for r in &common::trace(2, 1000.0, 1, model) {
+                    let _ = system.infer_on(r, path);
+                }
+                system.meter().reset();
+                let lats: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+                let t0 = std::time::Instant::now();
+                std::thread::scope(|s| {
+                    for c in 0..clients {
+                        let system = system.clone();
+                        let lats = lats.clone();
+                        let model = model.to_string();
+                        s.spawn(move || {
+                            let reqs = common::trace(per_client, 1e6, 50 + c as u64, &model);
+                            for r in &reqs {
+                                if let Ok(res) = system.infer_on(r, path) {
+                                    lats.lock().unwrap().push(res.latency_secs);
+                                }
+                            }
+                        });
+                    }
+                });
+                let wall = t0.elapsed().as_secs_f64();
+                let lats = lats.lock().unwrap();
+                let (nreq, mean, std) =
+                    (lats.len(), stats::mean(&lats), stats::std_dev(&lats));
+                let joules = system.meter().total_joules() / nreq.max(1) as f64;
+                points.push(Point {
+                    model: mname,
+                    path: pname,
+                    clients,
+                    mean_ms: mean * 1e3,
+                    std_ms: std * 1e3,
+                    joules_per_req: joules,
+                    rps: nreq as f64 / wall,
+                });
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 4 analog — latency vs energy per operating point",
+        &["Model", "Path", "Clients", "Lat (ms)", "σ (ms)", "J/req", "req/s"],
+    );
+    let mut csv = String::from("model,path,clients,mean_ms,std_ms,joules_per_req,rps\n");
+    for p in &points {
+        t.row(vec![
+            p.model.into(),
+            p.path.into(),
+            p.clients.to_string(),
+            format!("{:.3}", p.mean_ms),
+            format!("{:.3}", p.std_ms),
+            format!("{:.5}", p.joules_per_req),
+            format!("{:.1}", p.rps),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{:.4},{:.4},{:.6},{:.2}\n",
+            p.model, p.path, p.clients, p.mean_ms, p.std_ms, p.joules_per_req, p.rps
+        ));
+    }
+    print!("{}", t.render());
+
+    // Pareto check: the lowest-latency point must be a direct point; the
+    // best throughput-per-joule under concurrency should improve for the
+    // batched path as clients rise.
+    let min_lat = points.iter().min_by(|a, b| a.mean_ms.total_cmp(&b.mean_ms)).unwrap();
+    println!(
+        "\nlowest-latency corner: {} {} @{} clients ({:.3} ms) [{}]",
+        min_lat.model,
+        min_lat.path,
+        min_lat.clients,
+        min_lat.mean_ms,
+        if min_lat.path == "direct" { "OK: direct owns the low-latency region" } else { "MISMATCH" }
+    );
+    for model in ["distilbert_mini", "resnet_tiny"] {
+        let b1 = points.iter().find(|p| p.model == model && p.path == "batched" && p.clients == 1).unwrap();
+        let b8 = points.iter().find(|p| p.model == model && p.path == "batched" && p.clients == 8).unwrap();
+        println!(
+            "{model}: batched throughput-per-joule {:.2} → {:.2} req/s/J as clients 1→8 [{}]",
+            b1.rps / b1.joules_per_req.max(1e-12),
+            b8.rps / b8.joules_per_req.max(1e-12),
+            if b8.rps / b8.joules_per_req.max(1e-12) > b1.rps / b1.joules_per_req.max(1e-12) {
+                "OK: batching buys throughput per joule"
+            } else {
+                "flat"
+            }
+        );
+    }
+    common::write_csv("fig4_tradeoff.csv", &csv);
+}

@@ -1,0 +1,111 @@
+//! Micro-benchmarks of the L3 hot path (§Perf): per-component cost of
+//! everything that sits between a request and its PJRT execution.
+//!
+//! Targets (DESIGN.md §7): controller decision < 1 µs; queue hop < 5 µs;
+//! histogram record < 1 µs; coordinator overhead ≪ model execute time.
+//!
+//! ```bash
+//! cargo bench --bench micro_hotpath
+//! ```
+
+mod common;
+
+use greenflow::batching::policy::BatcherPolicy;
+use greenflow::batching::queue::PendingQueue;
+use greenflow::benchkit::{bench_fn, BenchResult};
+use greenflow::controller::cost::{CostInputs, WeightPolicy};
+use greenflow::controller::threshold::ThresholdSchedule;
+use greenflow::controller::{AdmissionController, AdmissionPolicy, ControllerConfig};
+use greenflow::energy::meter::{EnergyMeter, MeterMode};
+use greenflow::energy::DeviceProfile;
+use greenflow::models::inputgen;
+use greenflow::pipeline::direct::DirectPath;
+use greenflow::runtime::engine::ExecMode;
+use greenflow::runtime::ModelManifest;
+use greenflow::stats::LatencyHistogram;
+
+fn report(results: &[BenchResult]) {
+    for r in results {
+        println!("{}", r.summary());
+    }
+}
+
+fn main() {
+    let iters = 100_000;
+    let mut results = Vec::new();
+
+    // ---- controller decision -----------------------------------------
+    let mut ctrl = AdmissionController::new(ControllerConfig {
+        weights: WeightPolicy::Balanced.weights(),
+        schedule: ThresholdSchedule::paper_default(),
+        respond_from_cache: true,
+    });
+    let x = CostInputs::from_entropy(0.4, 2f64.ln());
+    let mut t = 0.0;
+    results.push(bench_fn("controller.decide", 1000, iters, || {
+        t += 1e-6;
+        let _ = ctrl.decide(&x, t);
+    }));
+
+    // ---- queue push + drain --------------------------------------------
+    let q: PendingQueue<u64> = PendingQueue::new(1024);
+    let policy = BatcherPolicy::immediate(8);
+    results.push(bench_fn("queue.push+next_batch", 1000, iters / 10, || {
+        q.push(1).unwrap();
+        let _ = q.next_batch(&policy);
+    }));
+
+    // ---- latency histogram record --------------------------------------
+    let mut h = LatencyHistogram::for_latency();
+    results.push(bench_fn("histogram.record", 1000, iters, || {
+        h.record(0.00123);
+    }));
+    results.push(bench_fn("histogram.p95", 100, 10_000, || {
+        let _ = h.p95();
+    }));
+
+    // ---- energy meter record --------------------------------------------
+    let meter = EnergyMeter::new(DeviceProfile::rtx4000_ada(), MeterMode::SimulatedFlops, 16.0);
+    results.push(bench_fn("energy_meter.record", 1000, iters, || {
+        let _ = meter.record(4.7e6, 0.0);
+    }));
+
+    // ---- input generation (payload synth on the request path) ----------
+    results.push(bench_fn("inputgen.tokens(32)", 100, 20_000, || {
+        let _ = inputgen::tokens_one(42, 32, 512);
+    }));
+
+    report(&results);
+
+    // ---- engine execute per model/bucket (needs artifacts) -------------
+    let Some(root) = common::require_artifacts() else { return };
+    println!();
+    for mode in [ExecMode::Literals, ExecMode::DeviceBuffers] {
+        let direct = DirectPath::start(
+            vec![
+                root.join("distilbert_mini"),
+                root.join("resnet_tiny"),
+                root.join("screener"),
+            ],
+            mode,
+        )
+        .expect("start");
+        let mut engine_results = Vec::new();
+        for model in ["screener", "distilbert_mini", "resnet_tiny"] {
+            let man = ModelManifest::load(&root.join(model)).unwrap();
+            for &bucket in &man.batch_buckets {
+                let seeds: Vec<u64> = (0..bucket as u64).collect();
+                let input = inputgen::batch_for(&man, &seeds, 0);
+                let name = format!("{model}.b{bucket} [{mode:?}]");
+                let direct = &direct;
+                let model = model.to_string();
+                engine_results.push(bench_fn(&name, 3, 15, || {
+                    let _ = direct.infer(&model, input.clone()).unwrap();
+                }));
+            }
+        }
+        report(&engine_results);
+        // per-item efficiency of batching
+        println!();
+    }
+}

@@ -1,0 +1,116 @@
+//! **Table II** — FastAPI vs Triton: latency, throughput, energy at
+//! batch = 1, 100 iterations per configuration (paper §V/§VI-A).
+//!
+//! Reproduces the *shape*: the direct path (FastAPI+ORT analog) beats the
+//! dynamic-batching path (Triton analog) by >10x latency at batch=1, with
+//! the batched path carrying a visible per-request energy premium.
+//!
+//! ```bash
+//! cargo bench --bench table2_dualpath          # 100 iters (paper)
+//! GF_ITERS=20 cargo bench --bench table2_dualpath
+//! ```
+
+mod common;
+
+use greenflow::benchkit::Table;
+use greenflow::energy::CarbonAccountant;
+use greenflow::models;
+use greenflow::pipeline::system::{ServingSystem, SystemConfig};
+use greenflow::router::PathKind;
+use greenflow::stats;
+
+/// Paper Table II rows for shape comparison (model, framework, ms, σ,
+/// req/s, kWh, CO₂ kg).
+const PAPER_ROWS: &[(&str, &str, f64, f64, f64, f64, f64)] = &[
+    ("DistilBERT", "FastAPI", 125.21, 21.52, 79.9, 0.1972, 0.0986),
+    ("DistilBERT", "Triton", 1876.29, 68.29, 5.3, 0.2637, 0.1318),
+    ("ResNet-18", "FastAPI", 30.65, 0.73, 326.2, 0.2100, 0.1050),
+    ("ResNet-18", "Triton", 589.14, 133.08, 17.0, 0.2198, 0.1099),
+];
+
+fn main() {
+    let Some(root) = common::require_artifacts() else { return };
+    let n = common::iters();
+    let system = ServingSystem::start(SystemConfig::new(root)).expect("boot");
+    let carbon = CarbonAccountant::paper();
+
+    let mut table = Table::new(
+        &format!("Table II analog — batch=1, {n} iterations (real PJRT, RTX4000Ada energy profile)"),
+        &["Model", "Path", "Avg Lat (ms)", "σ (ms)", "Thru (req/s)", "Energy (kWh)", "CO2 (kg)"],
+    );
+    let mut csv = String::from("model,path,mean_ms,std_ms,throughput,kwh,co2\n");
+    let mut measured: Vec<(&str, &str, f64)> = Vec::new();
+
+    for (model, paper_name) in
+        [(models::DISTILBERT, "DistilBERT"), (models::RESNET, "ResNet-18")]
+    {
+        for (path, frame) in
+            [(PathKind::Direct, "direct (FastAPI)"), (PathKind::Batched, "batched (Triton)")]
+        {
+            let reqs = common::trace(n + 3, 1000.0, 42, model);
+            // warmup (3) then timed (n)
+            for r in &reqs[..3] {
+                let _ = system.infer_on(r, path).unwrap();
+            }
+            system.meter().reset();
+            let mut lats = Vec::with_capacity(n);
+            for r in &reqs[3..] {
+                let res = system.infer_on(r, path).unwrap();
+                lats.push(res.latency_secs);
+            }
+            let mean_ms = stats::mean(&lats) * 1e3;
+            let std_ms = stats::std_dev(&lats) * 1e3;
+            let thru = 1e3 / mean_ms;
+            let kwh = system.meter().total_kwh();
+            let co2 = carbon.co2_for_kwh(kwh);
+            table.row(vec![
+                paper_name.to_string(),
+                frame.to_string(),
+                format!("{mean_ms:.3}"),
+                format!("{std_ms:.3}"),
+                format!("{thru:.1}"),
+                format!("{kwh:.9}"),
+                format!("{co2:.9}"),
+            ]);
+            csv.push_str(&format!(
+                "{model},{frame},{mean_ms:.4},{std_ms:.4},{thru:.1},{kwh:.10},{co2:.10}\n"
+            ));
+            measured.push((paper_name, frame, mean_ms));
+        }
+    }
+    print!("{}", table.render());
+
+    // -------- paper rows + shape verdicts ------------------------------
+    let mut paper = Table::new(
+        "Paper Table II (RTX 4000 Ada testbed — absolute numbers are testbed-bound)",
+        &["Model", "Framework", "Avg Lat (ms)", "σ (ms)", "Thru (req/s)", "Energy (kWh)", "CO2 (kg)"],
+    );
+    for r in PAPER_ROWS {
+        paper.row(vec![
+            r.0.into(),
+            r.1.into(),
+            format!("{:.2}", r.2),
+            format!("{:.2}", r.3),
+            format!("{:.1}", r.4),
+            format!("{:.4}", r.5),
+            format!("{:.4}", r.6),
+        ]);
+    }
+    print!("\n{}", paper.render());
+
+    let get = |m: &str, f: &str| -> f64 {
+        measured.iter().find(|(mm, ff, _)| *mm == m && ff.starts_with(f)).unwrap().2
+    };
+    let bert_factor = get("DistilBERT", "batched") / get("DistilBERT", "direct");
+    let resnet_factor = get("ResNet-18", "batched") / get("ResNet-18", "direct");
+    println!("\nShape checks (paper → measured):");
+    println!(
+        "  DistilBERT direct-vs-batched latency factor: paper x15.0 → measured x{bert_factor:.1}  [{}]",
+        if bert_factor > 3.0 { "OK: direct wins by a large factor" } else { "MISMATCH" }
+    );
+    println!(
+        "  ResNet-18  direct-vs-batched latency factor: paper x19.2 → measured x{resnet_factor:.1}  [{}]",
+        if resnet_factor > 3.0 { "OK: direct wins by a large factor" } else { "MISMATCH" }
+    );
+    common::write_csv("table2_dualpath.csv", &csv);
+}

@@ -1,0 +1,214 @@
+//! **Table III** — ablation: Standard (open-loop) vs Bio-Controller on
+//! DistilBERT @ A100 (paper §VI-E): total time, latency/request, SST-2
+//! accuracy, admission rate. Plus the baselines (static τ, random drop,
+//! oracle) and the §IV-A weight-policy sweep.
+//!
+//! The paper's run is 100 requests; we print both the paper-n run and a
+//! 5000-request run where the percentages are stable.
+//!
+//! ```bash
+//! cargo bench --bench table3_ablation
+//! ```
+
+mod common;
+
+use greenflow::benchkit::Table;
+use greenflow::controller::baselines::{OpenLoop, Oracle, RandomDrop, StaticThreshold};
+use greenflow::controller::cost::WeightPolicy;
+use greenflow::controller::threshold::ThresholdSchedule;
+use greenflow::controller::{AdmissionController, ControllerConfig};
+use greenflow::models;
+use greenflow::sim::{simulate, SimConfig, SimReport};
+use greenflow::util::fmt::pct_delta;
+
+const PAPER: &[(&str, f64, f64)] = &[
+    // (metric, standard, bio)
+    ("Total Time (s)", 0.50, 0.29),
+    ("Latency/Req (ms)", 5.0, 2.9),
+    ("Accuracy (SST2) %", 91.0, 90.5),
+    ("Admission Rate %", 100.0, 58.0),
+];
+
+fn bio() -> AdmissionController {
+    AdmissionController::new(ControllerConfig {
+        weights: WeightPolicy::Balanced.weights(),
+        schedule: ThresholdSchedule::paper_default(),
+        respond_from_cache: true,
+    })
+}
+
+/// 100-request variant: the paper's short run only makes sense with τ
+/// already settled (100 req at 200 req/s = 0.5 s of trace, while the
+/// default k = 2 settles in 1.5 s), so the paper-n table uses k = 20 —
+/// same τ0/τ∞, settled within the first 15% of the run.
+fn bio_fast() -> AdmissionController {
+    AdmissionController::new(ControllerConfig {
+        weights: WeightPolicy::Balanced.weights(),
+        schedule: ThresholdSchedule::Exponential { tau0: 0.2, tau_inf: 0.51, k: 20.0 },
+        respond_from_cache: true,
+    })
+}
+
+fn run_pair(n: usize, seed: u64, fast: bool) -> (SimReport, SimReport) {
+    let reqs = common::trace(n, 200.0, seed, models::DISTILBERT);
+    let cfg = SimConfig::table3_default();
+    let std_rep = simulate(&mut OpenLoop, &reqs, &cfg);
+    let mut ctrl = if fast { bio_fast() } else { bio() };
+    let bio_rep = simulate(&mut ctrl, &reqs, &cfg);
+    (std_rep, bio_rep)
+}
+
+fn print_table(title: &str, std_rep: &SimReport, bio_rep: &SimReport) {
+    let mut t = Table::new(title, &["Metric", "Standard", "Bio-Controller", "Delta", "Paper"]);
+    let rows: Vec<(&str, f64, f64, String)> = vec![
+        (
+            "Total Time (s)",
+            std_rep.total_busy_secs,
+            bio_rep.total_busy_secs,
+            format!("{:.2} → {:.2} (-42.0%)", PAPER[0].1, PAPER[0].2),
+        ),
+        (
+            "Latency/Req (ms)",
+            std_rep.latency_per_req * 1e3,
+            bio_rep.latency_per_req * 1e3,
+            format!("{:.1} → {:.1} (-42.0%)", PAPER[1].1, PAPER[1].2),
+        ),
+        (
+            "Accuracy %",
+            std_rep.accuracy * 100.0,
+            bio_rep.accuracy * 100.0,
+            format!("{:.1} → {:.1} (-0.5 pp)", PAPER[2].1, PAPER[2].2),
+        ),
+        (
+            "Admission Rate %",
+            100.0,
+            bio_rep.admission_rate() * 100.0,
+            format!("{:.0} → {:.0}", PAPER[3].1, PAPER[3].2),
+        ),
+    ];
+    for (name, a, b, paper) in rows {
+        t.row(vec![
+            name.into(),
+            format!("{a:.3}"),
+            format!("{b:.3}"),
+            pct_delta(a, b),
+            paper,
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn main() {
+    // paper-n run (100 requests, like Table III; k=20 so τ is settled)
+    let (s100, b100) = run_pair(100, 20260710, true);
+    print_table("Table III analog — 100 requests (paper n)", &s100, &b100);
+
+    // stable run
+    let (s5k, b5k) = run_pair(5000, 7, false);
+    println!();
+    print_table("Table III analog — 5000 requests (stable)", &s5k, &b5k);
+
+    let mut csv = String::from("n,policy,total_time_s,latency_ms,accuracy,admit_rate,kwh\n");
+    for (n, s, b) in [(100usize, &s100, &b100), (5000, &s5k, &b5k)] {
+        for rep in [s, b] {
+            csv.push_str(&format!(
+                "{n},{},{:.5},{:.4},{:.5},{:.4},{:.8}\n",
+                rep.policy,
+                rep.total_busy_secs,
+                rep.latency_per_req * 1e3,
+                rep.accuracy,
+                rep.admission_rate(),
+                rep.energy_kwh
+            ));
+        }
+    }
+
+    // ---- baselines at matched admission rate --------------------------
+    let reqs = common::trace(5000, 200.0, 7, models::DISTILBERT);
+    let cfg = SimConfig::table3_default();
+    let rate = b5k.admission_rate();
+    let mut base = Table::new(
+        "Baselines — selectivity matters, not just shedding (5000 req)",
+        &["Policy", "Admit %", "Busy (s)", "Accuracy %", "Acc loss vs open (pp)"],
+    );
+    let open = simulate(&mut OpenLoop, &reqs, &cfg);
+    let mut rows: Vec<(String, SimReport)> = vec![
+        ("bio-controller".into(), simulate(&mut bio(), &reqs, &cfg)),
+        ("static-tau".into(), simulate(&mut StaticThreshold::new(0.51), &reqs, &cfg)),
+        (format!("random@{:.0}%", rate * 100.0), simulate(&mut RandomDrop::new(rate, 3), &reqs, &cfg)),
+        ("oracle".into(), simulate(&mut Oracle::new(0.35), &reqs, &cfg)),
+    ];
+    rows.insert(0, ("open-loop".into(), open.clone()));
+    for (name, rep) in &rows {
+        base.row(vec![
+            name.clone(),
+            format!("{:.0}", rep.admission_rate() * 100.0),
+            format!("{:.3}", rep.total_busy_secs),
+            format!("{:.2}", rep.accuracy * 100.0),
+            format!("{:+.2}", (rep.accuracy - open.accuracy) * 100.0),
+        ]);
+        csv.push_str(&format!(
+            "5000,{},{:.5},{:.4},{:.5},{:.4},{:.8}\n",
+            name,
+            rep.total_busy_secs,
+            rep.latency_per_req * 1e3,
+            rep.accuracy,
+            rep.admission_rate(),
+            rep.energy_kwh
+        ));
+    }
+    print!("\n{}", base.render());
+
+    // ---- weight-policy sweep (§IV-A knobs) -----------------------------
+    let mut knobs = Table::new(
+        "Weight-policy sweep (alpha, beta, gamma)",
+        &["Policy", "alpha", "beta", "gamma", "Admit %", "Busy (s)", "kWh"],
+    );
+    for policy in [WeightPolicy::Balanced, WeightPolicy::Performance, WeightPolicy::Ecology] {
+        let mut c = AdmissionController::new(ControllerConfig {
+            weights: policy.weights(),
+            schedule: ThresholdSchedule::paper_default(),
+            respond_from_cache: true,
+        });
+        let rep = simulate(&mut c, &reqs, &cfg);
+        let w = policy.weights();
+        knobs.row(vec![
+            format!("{policy:?}"),
+            format!("{:.2}", w.alpha),
+            format!("{:.2}", w.beta),
+            format!("{:.2}", w.gamma),
+            format!("{:.0}", rep.admission_rate() * 100.0),
+            format!("{:.3}", rep.total_busy_secs),
+            format!("{:.6}", rep.energy_kwh),
+        ]);
+    }
+    print!("\n{}", knobs.render());
+
+    // ---- τ-schedule ablation (decay vs static vs step) -----------------
+    let mut sched = Table::new(
+        "τ-schedule ablation — is the *decay* doing work?",
+        &["Schedule", "Admit %", "Busy (s)", "Accuracy %"],
+    );
+    let schedules: Vec<(&str, ThresholdSchedule)> = vec![
+        ("exponential (paper)", ThresholdSchedule::paper_default()),
+        ("linear ramp", ThresholdSchedule::Linear { tau0: 0.2, tau_inf: 0.51, duration: 1.5 }),
+        ("step @1.5s", ThresholdSchedule::Step { tau0: 0.2, tau_inf: 0.51, at: 1.5 }),
+        ("constant strict", ThresholdSchedule::Constant { tau: 0.51 }),
+    ];
+    for (name, schedule) in schedules {
+        let mut c = AdmissionController::new(ControllerConfig {
+            weights: WeightPolicy::Balanced.weights(),
+            schedule,
+            respond_from_cache: true,
+        });
+        let rep = simulate(&mut c, &reqs, &cfg);
+        sched.row(vec![
+            name.into(),
+            format!("{:.0}", rep.admission_rate() * 100.0),
+            format!("{:.3}", rep.total_busy_secs),
+            format!("{:.2}", rep.accuracy * 100.0),
+        ]);
+    }
+    print!("\n{}", sched.render());
+    common::write_csv("table3_ablation.csv", &csv);
+}

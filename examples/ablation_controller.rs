@@ -1,0 +1,163 @@
+//! Table III analog — the closed-loop controller ablation, run two ways:
+//!
+//! 1. **Live**: real PJRT serving with the bio-controller in front
+//!    (screener pre-pass, cache skip path), against open-loop serving of
+//!    the same trace.
+//! 2. **Sim**: the deterministic A100-profile simulation at larger n,
+//!    including the static-τ / random-drop / oracle baselines.
+//!
+//! ```bash
+//! cargo run --release --example ablation_controller
+//! ```
+
+use greenflow::benchkit::Table;
+use greenflow::controller::baselines::{OpenLoop, Oracle, RandomDrop, StaticThreshold};
+use greenflow::controller::cost::WeightPolicy;
+use greenflow::controller::threshold::ThresholdSchedule;
+use greenflow::controller::{AdmissionController, ControllerConfig};
+use greenflow::models;
+use greenflow::pipeline::system::{ServingSystem, SystemConfig};
+use greenflow::router::PathKind;
+use greenflow::sim::{simulate, SimConfig};
+use greenflow::util::fmt::pct_delta;
+use greenflow::util::Rng;
+use greenflow::workload::arrival::{arrival_times, ArrivalProcess};
+use greenflow::workload::stream::{Request, RequestStream, StreamConfig};
+
+fn bio_config() -> ControllerConfig {
+    ControllerConfig {
+        weights: WeightPolicy::Balanced.weights(),
+        schedule: ThresholdSchedule::Exponential { tau0: 0.2, tau_inf: 0.51, k: 2.0 },
+        respond_from_cache: true,
+    }
+}
+
+fn trace(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut arr = ArrivalProcess::poisson(200.0);
+    let times = arrival_times(&mut arr, n, &mut rng);
+    RequestStream::new(StreamConfig::default(), seed ^ 1).take(&times)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---------------- live run ----------------------------------------
+    let n_live = std::env::var("GF_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    let repo = std::env::var("GF_REPO").unwrap_or_else(|_| "artifacts".to_string());
+    let reqs = trace(n_live, 42);
+
+    let open_sys = ServingSystem::start(SystemConfig::new(repo.clone().into()))?;
+    let mut open_busy = 0.0;
+    for r in &reqs {
+        let res = open_sys.infer_on(r, PathKind::Direct)?;
+        open_busy += res.latency_secs;
+    }
+    let open_kwh = open_sys.meter().total_kwh();
+
+    let bio_sys = ServingSystem::start(
+        SystemConfig::new(repo.into()).with_controller(bio_config()),
+    )?;
+    let mut bio_busy = 0.0;
+    for r in &reqs {
+        let res = bio_sys.submit(r, PathKind::Direct)?;
+        bio_busy += res.latency_secs;
+    }
+    let bio_kwh = bio_sys.meter().total_kwh();
+    let stats = bio_sys.controller_stats().unwrap();
+
+    let mut live = Table::new(
+        &format!("Live ablation — DistilBERT, direct path, {n_live} requests (real PJRT)"),
+        &["Metric", "Standard", "Bio-Controller", "Delta"],
+    );
+    live.row(vec![
+        "Total Time (s)".into(),
+        format!("{open_busy:.3}"),
+        format!("{bio_busy:.3}"),
+        pct_delta(open_busy, bio_busy),
+    ]);
+    live.row(vec![
+        "Latency/Req (ms)".into(),
+        format!("{:.2}", open_busy / n_live as f64 * 1e3),
+        format!("{:.2}", bio_busy / n_live as f64 * 1e3),
+        pct_delta(open_busy, bio_busy),
+    ]);
+    live.row(vec![
+        "Energy (kWh)".into(),
+        format!("{open_kwh:.8}"),
+        format!("{bio_kwh:.8}"),
+        pct_delta(open_kwh, bio_kwh),
+    ]);
+    live.row(vec![
+        "Admission Rate".into(),
+        "100%".into(),
+        format!("{:.0}%", stats.admission_rate() * 100.0),
+        pct_delta(1.0, stats.admission_rate()),
+    ]);
+    print!("{}", live.render());
+
+    // ---------------- sim sweep ---------------------------------------
+    let reqs = trace(5000, 7);
+    let cfg = SimConfig::table3_default();
+    let open = simulate(&mut OpenLoop, &reqs, &cfg);
+    let mut policies: Vec<(String, greenflow::sim::SimReport)> = vec![];
+    let mut bio = AdmissionController::new(bio_config());
+    let bio_rep = simulate(&mut bio, &reqs, &cfg);
+    let rate = bio_rep.admission_rate();
+    policies.push(("bio-controller".into(), bio_rep));
+    policies.push(("static-τ".into(), simulate(&mut StaticThreshold::new(0.51), &reqs, &cfg)));
+    policies.push((
+        format!("random@{:.0}%", rate * 100.0),
+        simulate(&mut RandomDrop::new(rate, 3), &reqs, &cfg),
+    ));
+    policies.push(("oracle".into(), simulate(&mut Oracle::new(0.35), &reqs, &cfg)));
+
+    let mut simt = Table::new(
+        "Sim ablation — 5000 requests, A100 profile",
+        &["Policy", "Admit %", "Busy (s)", "Δtime", "Accuracy", "Δacc (pp)", "kWh"],
+    );
+    simt.row(vec![
+        "open-loop".into(),
+        "100".into(),
+        format!("{:.3}", open.total_busy_secs),
+        "—".into(),
+        format!("{:.2}%", open.accuracy * 100.0),
+        "—".into(),
+        format!("{:.6}", open.energy_kwh),
+    ]);
+    for (name, rep) in &policies {
+        simt.row(vec![
+            name.clone(),
+            format!("{:.0}", rep.admission_rate() * 100.0),
+            format!("{:.3}", rep.total_busy_secs),
+            pct_delta(open.total_busy_secs, rep.total_busy_secs),
+            format!("{:.2}%", rep.accuracy * 100.0),
+            format!("{:+.2}", (rep.accuracy - open.accuracy) * 100.0),
+            format!("{:.6}", rep.energy_kwh),
+        ]);
+    }
+    print!("\n{}", simt.render());
+
+    // ---------------- weight-policy knobs (§IV-A) ----------------------
+    let mut knobs = Table::new(
+        "Weight policies (α, β, γ) — §IV-A knobs",
+        &["Policy", "α", "β", "γ", "Admit %", "Busy (s)", "kWh"],
+    );
+    for policy in [WeightPolicy::Balanced, WeightPolicy::Performance, WeightPolicy::Ecology] {
+        let mut c = AdmissionController::new(ControllerConfig {
+            weights: policy.weights(),
+            ..bio_config()
+        });
+        let rep = simulate(&mut c, &reqs, &cfg);
+        let w = policy.weights();
+        knobs.row(vec![
+            format!("{policy:?}"),
+            format!("{:.2}", w.alpha),
+            format!("{:.2}", w.beta),
+            format!("{:.2}", w.gamma),
+            format!("{:.0}", rep.admission_rate() * 100.0),
+            format!("{:.3}", rep.total_busy_secs),
+            format!("{:.6}", rep.energy_kwh),
+        ]);
+    }
+    print!("\n{}", knobs.render());
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! HTTP gateway demo: boot the closed-loop system behind the FastAPI-analog
+//! REST layer, then act as its own client over real TCP.
+//!
+//! ```bash
+//! cargo run --release --example http_gateway
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use greenflow::controller::cost::WeightPolicy;
+use greenflow::controller::threshold::ThresholdSchedule;
+use greenflow::controller::ControllerConfig;
+use greenflow::pipeline::system::{ServingSystem, SystemConfig};
+use greenflow::server::Gateway;
+
+fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let repo = std::env::var("GF_REPO").unwrap_or_else(|_| "artifacts".to_string());
+    let cfg = SystemConfig::new(repo.into()).with_controller(ControllerConfig {
+        weights: WeightPolicy::Balanced.weights(),
+        schedule: ThresholdSchedule::paper_default(),
+        respond_from_cache: true,
+    });
+    let system = Arc::new(ServingSystem::start(cfg)?);
+    let gw = Gateway::start(system, 0, 4)?; // ephemeral port
+    let addr = gw.addr();
+    println!("gateway up at http://{addr}\n");
+
+    println!("GET /health\n{}\n", get(addr, "/health").lines().last().unwrap_or(""));
+    println!("GET /models\n{}\n", get(addr, "/models").lines().last().unwrap_or(""));
+
+    for seed in [1u64, 2, 3, 4] {
+        let body = format!("{{\"model\": \"distilbert_mini\", \"seed\": {seed}}}");
+        let resp = post(addr, "/infer", &body);
+        println!("POST /infer seed={seed}\n{}\n", resp.lines().last().unwrap_or(""));
+    }
+
+    println!("GET /metrics\n{}", get(addr, "/metrics").lines().skip(7).collect::<Vec<_>>().join("\n"));
+    Ok(())
+}

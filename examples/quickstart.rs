@@ -1,0 +1,63 @@
+//! Quickstart: boot the serving system from the AOT repository and run a
+//! few requests down both serving paths.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use greenflow::models;
+use greenflow::pipeline::system::{ServingSystem, SystemConfig};
+use greenflow::router::PathKind;
+use greenflow::workload::stream::{RequestStream, StreamConfig};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let repo = std::env::var("GF_REPO").unwrap_or_else(|_| "artifacts".to_string());
+    println!("booting greenflow from {repo}/ ...");
+    let system = ServingSystem::start(SystemConfig::new(repo.into()))?;
+    println!(
+        "loaded models: {:?}",
+        system.repository().model_names()
+    );
+
+    let mut stream = RequestStream::new(
+        StreamConfig { model: models::DISTILBERT.to_string(), ..Default::default() },
+        42,
+    );
+
+    println!("\n--- Path A (direct, FastAPI+ORT analog) ---");
+    for i in 0..3 {
+        let req = stream.next_request(i as f64 * 0.1);
+        let r = system.infer_on(&req, PathKind::Direct)?;
+        println!(
+            "req {}: class={} conf={:.3} entropy={:.3} latency={:.2} ms energy={:.4} J",
+            r.request_id,
+            r.predicted,
+            r.confidence,
+            r.entropy,
+            r.latency_secs * 1e3,
+            r.joules
+        );
+    }
+
+    println!("\n--- Path B (dynamic batching, Triton analog) ---");
+    for i in 0..3 {
+        let req = stream.next_request(1.0 + i as f64 * 0.1);
+        let r = system.infer_on(&req, PathKind::Batched)?;
+        println!(
+            "req {}: class={} conf={:.3} latency={:.2} ms (bucket {})",
+            r.request_id,
+            r.predicted,
+            r.confidence,
+            r.latency_secs * 1e3,
+            r.bucket
+        );
+    }
+
+    println!(
+        "\ntotals: {:.4} kWh attributed on {} profile, p95 latency {:.2} ms",
+        system.meter().total_kwh(),
+        system.meter().profile().name,
+        system.p95() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,273 @@
+"""AOT export pipeline: JAX models -> Rust-loadable model repository.
+
+``python -m compile.aot --out-dir ../artifacts`` produces, per model, a
+Triton-style repository entry (DESIGN.md §2: this *is* our model-repo
+substrate):
+
+    artifacts/<model>/
+        manifest.json     parameter table (name/shape/offset), input spec,
+                          batch buckets, analytic + XLA-cost-analysis FLOPs
+        weights.bin       all parameters, f32 little-endian, manifest order
+        config.pbtxt      Triton-style serving config (parsed by rust
+                          configsys; max_batch_size / dynamic_batching /
+                          instance_group)
+        model.b<K>.hlo.txt  HLO text per batch bucket K
+
+Python runs only here — never on the request path.  The Rust runtime
+(rust/src/runtime) loads these artifacts, pre-transfers weights to PJRT
+device buffers, and serves.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .hlo import lower_to_hlo_text, xla_flops_estimate
+
+SEED = 20260710
+BUCKETS = (1, 2, 4, 8)
+SCREENER_BUCKETS = (1, 4)
+
+
+def _write_weights(path: str, params) -> list:
+    """Flat f32 LE blob + the manifest parameter table."""
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, arr in params.items():
+            a = np.asarray(arr, dtype=np.float32)
+            f.write(a.tobytes())  # C-order, little-endian on all our targets
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(a.shape),
+                    "offset": offset,
+                    "numel": int(a.size),
+                }
+            )
+            offset += a.size * 4
+    return table
+
+
+def _config_pbtxt(name: str, max_batch: int, in_name: str, in_dtype: str,
+                  in_dims, classes: int, preferred, delay_us: int) -> str:
+    pref = ", ".join(str(p) for p in preferred)
+    dims = ", ".join(str(d) for d in in_dims)
+    return f"""name: "{name}"
+platform: "greenflow_pjrt"
+max_batch_size: {max_batch}
+input [
+  {{
+    name: "{in_name}"
+    data_type: {in_dtype}
+    dims: [ {dims} ]
+  }}
+]
+output [
+  {{
+    name: "logits"
+    data_type: TYPE_FP32
+    dims: [ {classes} ]
+  }}
+  {{
+    name: "probs"
+    data_type: TYPE_FP32
+    dims: [ {classes} ]
+  }}
+  {{
+    name: "entropy"
+    data_type: TYPE_FP32
+    dims: [ 1 ]
+  }}
+]
+dynamic_batching {{
+  preferred_batch_size: [ {pref} ]
+  max_queue_delay_microseconds: {delay_us}
+}}
+instance_group [
+  {{
+    count: 1
+    kind: KIND_CPU
+  }}
+]
+"""
+
+
+def _export_model(out_dir: str, name: str, params, apply_fn, input_spec_fn,
+                  buckets, flops_fn, meta: dict, verbose: bool = True,
+                  delay_us: int = 2000):
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+    table = _write_weights(os.path.join(mdir, "weights.bin"), params)
+
+    weight_specs = [
+        jax.ShapeDtypeStruct(tuple(t["shape"]), jnp.float32) for t in table
+    ]
+    names = [t["name"] for t in table]
+
+    def fn(*args):
+        ws = dict(zip(names, args[:-1]))
+        return apply_fn(ws, args[-1])
+
+    hlo_files, flops, flops_xla = {}, {}, {}
+    for b in buckets:
+        spec = input_spec_fn(b)
+        text = lower_to_hlo_text(fn, *weight_specs, spec)
+        fname = f"model.b{b}.hlo.txt"
+        with open(os.path.join(mdir, fname), "w") as f:
+            f.write(text)
+        hlo_files[str(b)] = fname
+        flops[str(b)] = flops_fn(b)
+        flops_xla[str(b)] = xla_flops_estimate(fn, *weight_specs, spec)
+        if verbose:
+            print(
+                f"  {name} b{b}: hlo {len(text) / 1e3:.0f} kB, "
+                f"flops {flops[str(b)] / 1e6:.2f} M (xla {flops_xla[str(b)] / 1e6:.2f} M)"
+            )
+
+    manifest = {
+        "name": name,
+        "schema_version": 1,
+        "seed": SEED,
+        "outputs": ["logits", "probs", "entropy"],
+        "batch_buckets": list(buckets),
+        "weights_file": "weights.bin",
+        "hlo_files": hlo_files,
+        "flops_per_batch": flops,
+        "flops_xla_per_batch": flops_xla,
+        "params": table,
+        **meta,
+    }
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    cfg = _config_pbtxt(
+        name,
+        max_batch=max(buckets),
+        in_name=meta["input"]["name"],
+        in_dtype="TYPE_INT32" if meta["input"]["dtype"] == "i32" else "TYPE_FP32",
+        in_dims=meta["input"]["shape_per_item"],
+        classes=meta["classes"],
+        preferred=[b for b in buckets if b > 1] or [1],
+        delay_us=delay_us,
+    )
+    with open(os.path.join(mdir, "config.pbtxt"), "w") as f:
+        f.write(cfg)
+    return manifest
+
+
+def export_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(SEED)
+    kb, kr, ks = jax.random.split(key, 3)
+
+    cfgs = []
+    print("exporting distilbert_mini ...") if verbose else None
+    cfgs.append(
+        _export_model(
+            out_dir,
+            "distilbert_mini",
+            M.init_distilbert(kb),
+            M.distilbert_apply,
+            lambda b: jax.ShapeDtypeStruct((b, M.BERT.seq), jnp.int32),
+            BUCKETS,
+            M.flops_distilbert,
+            {
+                "family": "transformer",
+                "classes": M.BERT.classes,
+                "input": {
+                    "name": "tokens",
+                    "kind": "tokens",
+                    "shape_per_item": [M.BERT.seq],
+                    "dtype": "i32",
+                    "vocab": M.BERT.vocab,
+                },
+            },
+            verbose,
+        )
+    )
+    print("exporting resnet_tiny ...") if verbose else None
+    cfgs.append(
+        _export_model(
+            out_dir,
+            "resnet_tiny",
+            M.init_resnet(kr),
+            M.resnet_apply,
+            lambda b: jax.ShapeDtypeStruct(
+                (b, M.RESNET.image, M.RESNET.image, M.RESNET.in_ch), jnp.float32
+            ),
+            BUCKETS,
+            M.flops_resnet,
+            {
+                "family": "cnn",
+                "classes": M.RESNET.classes,
+                "input": {
+                    "name": "image",
+                    "kind": "image",
+                    "shape_per_item": [M.RESNET.image, M.RESNET.image, M.RESNET.in_ch],
+                    "dtype": "f32",
+                },
+            },
+            verbose,
+            # The paper's §V "dynamic batching windows tuned": Triton's
+            # batch=1 latency rows are dominated by the scheduler wait, so
+            # the vision model carries a production-sized window (the
+            # language model keeps a tight 2 ms window).
+            delay_us=120000,
+        )
+    )
+    print("exporting screener ...") if verbose else None
+    cfgs.append(
+        _export_model(
+            out_dir,
+            "screener",
+            M.init_screener(ks),
+            M.screener_apply,
+            lambda b: jax.ShapeDtypeStruct((b, M.SCREENER.seq), jnp.int32),
+            SCREENER_BUCKETS,
+            M.flops_screener,
+            {
+                "family": "screener",
+                "classes": M.SCREENER.classes,
+                "input": {
+                    "name": "tokens",
+                    "kind": "tokens",
+                    "shape_per_item": [M.SCREENER.seq],
+                    "dtype": "i32",
+                    "vocab": M.SCREENER.vocab,
+                },
+            },
+            verbose,
+        )
+    )
+
+    index = {
+        "schema_version": 1,
+        "models": [c["name"] for c in cfgs],
+        "seed": SEED,
+    }
+    with open(os.path.join(out_dir, "repository.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    return index
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    idx = export_all(args.out_dir, verbose=not args.quiet)
+    print(f"wrote repository with models: {idx['models']} -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Lowering helper: jitted jax function -> HLO *text*.
+
+HLO text (not a serialized HloModuleProto) is the interchange format with
+the Rust runtime: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *arg_specs) -> str:
+    """Lower ``jax.jit(fn)`` at the given ShapeDtypeStructs to HLO text.
+
+    Lowered with ``return_tuple=True``: the Rust side unwraps the single
+    tuple output with ``to_tuple()``.
+    """
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def xla_flops_estimate(fn, *arg_specs) -> float:
+    """FLOPs from XLA's cost analysis of the compiled module.
+
+    Falls back to -1.0 when the backend does not expose cost analysis;
+    callers then use the analytic estimates from ``model.py``.
+    """
+    try:
+        compiled = jax.jit(fn).lower(*arg_specs).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return float(ca.get("flops", -1.0))
+    except Exception:
+        return -1.0

@@ -1,0 +1,145 @@
+"""Tiled GEMM Pallas kernel — the compute hot-spot of both served models.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's serving
+stack keeps GPU SMs busy by fusing requests into batches; on TPU the same
+insight becomes "feed the MXU full tiles".  The kernel therefore blocks the
+(M, K) x (K, N) product into (bm, bn) output tiles — MXU-shaped multiples of
+(8, 128) when the problem is big enough, shrinking to the problem size for
+the tiny serving models — and expresses the HBM<->VMEM schedule with
+BlockSpecs where a CUDA kernel would use threadblocks + shared memory.
+
+Two variants:
+
+* ``gemm``          — 2-D grid over output tiles; each kernel instance reads a
+                      full (bm, K) row-panel and (K, bn) column-panel.  VMEM
+                      per instance: bm*K + K*bn + bm*bn floats.
+* ``gemm_kblocked`` — 3-D grid that also tiles K and accumulates into the
+                      revisited output block (zero-init at k==0).  Lower VMEM
+                      footprint (bm*bk + bk*bn + bm*bn) for large K; this is
+                      the double-buffer-friendly schedule a real TPU would
+                      pipeline.
+
+Both run under ``interpret=True`` (the CPU PJRT client cannot execute Mosaic
+custom-calls) and are validated against ``ref.gemm``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest block <= target that keeps the padded grid small.
+
+    Prefers MXU-friendly sizes when dim is large; degrades to the full
+    (padded) dimension for the tiny matrices of the mini serving models so
+    the grid stays 1 and interpret-mode lowering emits a single body.
+    """
+    if dim <= target:
+        return max(1, dim)
+    for cand in (target, target // 2, target // 4):
+        if cand and dim % cand == 0:
+            return cand
+    return target
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128, bn: int = 128
+         ) -> jnp.ndarray:
+    """Tiled matmul: (M, K) @ (K, N) -> (M, N), f32.
+
+    Pads every dimension up to the tile grid, runs the Pallas kernel over a
+    2-D output-tile grid, and slices the result back.  Padding with zeros is
+    exact for matmul (zero rows/cols contribute nothing).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), k
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _gemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _gemm_kblocked_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_kblocked(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128,
+                  bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """K-tiled matmul with output-block accumulation across the k grid dim.
+
+    The output BlockSpec index map ignores the k grid axis, so consecutive k
+    steps revisit the same VMEM tile — the canonical TPU accumulation
+    schedule (and what a CUDA kernel does with a register-tile + smem loop).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_gemm_kblocked_kernel, nk=nk),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, *, bm: int = 128,
+                         bn: int = 128, bk: int | None = None) -> int:
+    """Estimated VMEM bytes held live by one kernel instance (f32).
+
+    Used by DESIGN.md §Perf to check the schedule against the ~16 MiB/core
+    VMEM budget of a real TPU, since interpret-mode wallclock is not a TPU
+    proxy.
+    """
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    kk = pick_block(k, bk) if bk is not None else k
+    return 4 * (bm * kk + kk * bn + bm * bn)

@@ -1,0 +1,48 @@
+"""Fused LayerNorm Pallas kernel (mean/var/normalise/affine in one pass).
+
+Used by the distilbert_mini encoder after attention and FFN sublayers.
+One grid instance normalises a (block_rows, D) tile: a single VMEM-resident
+read computes both moments and the affine output, where an unfused lowering
+would make three passes over HBM (mean, var, normalise).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    o_ref[...] = xc * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, *,
+              eps: float = 1e-5, block_rows: int = 128) -> jnp.ndarray:
+    """Row LayerNorm over the last dim of (R, D) with affine (gamma, beta)."""
+    r, d = x.shape
+    br = min(block_rows, r)
+    rp = (r + br - 1) // br * br
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, 0)))
+    g2 = gamma.astype(jnp.float32).reshape(1, d)
+    b2 = beta.astype(jnp.float32).reshape(1, d)
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(xp, g2, b2)
+    return out[:r]

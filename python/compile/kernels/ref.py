@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for every Pallas kernel (Layer 1).
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis sweeps in ``python/tests/``). They are also what the kernels
+lower to *semantically*: any divergence beyond float tolerance is a bug
+in the kernel, never in the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle: (M, K) @ (K, N) -> (M, N) in f32."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def softmax(logits: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Numerically-stable softmax."""
+    m = jnp.max(logits, axis=axis, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def softmax_entropy(logits: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused oracle: row softmax plus Shannon entropy (nats) of each row.
+
+    Entropy is the paper's L(x) uncertainty proxy (Sec. IV, "Notes on
+    proxies"): H(p) = -sum_i p_i log p_i, computed from the same
+    numerically-stabilised probabilities the serving path returns.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    e = jnp.exp(z)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / s
+    # H = log(sum e) - sum(e*z)/sum(e); avoids log(p) on p ~ 0.
+    ent = jnp.log(s[..., 0]) - jnp.sum(e * z, axis=-1) / s[..., 0]
+    return p, ent
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    """Row LayerNorm with affine: rows of x are normalised over the last dim."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Scaled dot-product attention oracle over (B, H, S, Dh) tensors."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    p = softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

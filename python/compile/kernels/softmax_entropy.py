@@ -1,0 +1,63 @@
+"""Fused softmax + Shannon-entropy Pallas kernel.
+
+This kernel is where Layer 1 meets the paper's controller: Sec. IV uses
+softmax entropy as the L(x) uncertainty proxy of the admission functional
+J(x) = a*L + b*E + g*C.  Fusing the entropy reduction into the same pass
+that produces the class probabilities means the serving path gets the
+admission signal for free — one HBM read of the logits, one write of the
+probabilities, and a (rows,)-shaped entropy vector that the Rust
+coordinator feeds straight into the closed loop.
+
+Numerics: the kernel never forms log(p).  With z = logits - max and
+s = sum(exp z), entropy is computed as  H = log(s) - sum(exp(z) * z) / s,
+which is exact algebra on the stabilised quantities and has no 0*log(0)
+hazard for saturated rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_entropy_kernel(logits_ref, probs_ref, ent_ref):
+    z = logits_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    z = z - m
+    e = jnp.exp(z)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    probs_ref[...] = e / s
+    ent_ref[...] = jnp.log(s) - jnp.sum(e * z, axis=-1, keepdims=True) / s
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_entropy(logits: jnp.ndarray, *, block_rows: int = 128
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(R, C) logits -> ((R, C) probs, (R,) entropy in nats).
+
+    Rows are tiled over a 1-D grid; each instance holds one (block_rows, C)
+    logits tile plus its outputs in VMEM.  Row padding uses zeros, which
+    produce a harmless uniform row that is sliced away.
+    """
+    r, c = logits.shape
+    br = min(block_rows, r)
+    rp = (r + br - 1) // br * br
+    lp = jnp.pad(logits.astype(jnp.float32), ((0, rp - r), (0, 0)))
+    probs, ent = pl.pallas_call(
+        _softmax_entropy_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((rp, c), jnp.float32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ),
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(lp)
+    return probs[:r], ent[:r, 0]

@@ -1,0 +1,305 @@
+"""Layer 2 — JAX serving models, built on the Layer-1 Pallas kernels.
+
+Three models mirror the paper's serving zoo, scaled so a CPU PJRT client
+can execute hundreds of benchmark iterations (DESIGN.md §2 substitutions):
+
+* ``distilbert_mini`` — transformer encoder classifier (the DistilBERT
+  analog): token embedding + learned positions, N encoder layers
+  (fused-attention + GEMM FFN + fused LayerNorm), mean-pool head.
+* ``resnet_tiny``     — residual CNN (the ResNet-18 analog): conv stem +
+  3 stages x 2 basic blocks, every convolution lowered as im2col + the
+  Pallas GEMM kernel, global-average-pool head.
+* ``screener``        — a ~1%-cost confidence proxy (embedding mean +
+  linear head).  The controller needs L(x) *before* paying for the full
+  model; the screener is the cheap pre-pass that estimates it (the
+  early-exit trick the paper's "respond from cache" line implies).
+
+Every apply function returns ``(logits, probs, entropy)`` — probabilities
+and the entropy L(x) proxy come from the fused softmax_entropy kernel, so
+the admission signal costs nothing extra at serve time.
+
+Parameters are ordered dicts; ``param_order`` fixes the flattening order
+shared with ``weights.bin`` and the Rust runtime (manifest.json contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.gemm import gemm
+from .kernels.layernorm import layernorm
+from .kernels.softmax_entropy import softmax_entropy
+
+
+# --------------------------------------------------------------------------
+# configs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """distilbert_mini hyper-parameters (DistilBERT scaled for CPU PJRT)."""
+    vocab: int = 512
+    seq: int = 32
+    d_model: int = 64
+    heads: int = 4
+    d_ff: int = 128
+    layers: int = 2
+    classes: int = 2
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.heads
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    """resnet_tiny hyper-parameters (ResNet-18 scaled: 3 stages x 2 blocks)."""
+    image: int = 32
+    in_ch: int = 3
+    widths: tuple = (16, 32, 64)
+    blocks_per_stage: int = 2
+    classes: int = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class ScreenerConfig:
+    vocab: int = 512
+    seq: int = 32
+    d_embed: int = 16
+    classes: int = 2
+
+
+BERT = BertConfig()
+RESNET = ResNetConfig()
+SCREENER = ScreenerConfig()
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_distilbert(key, cfg: BertConfig = BERT) -> "OrderedDict[str, jnp.ndarray]":
+    p = OrderedDict()
+    keys = iter(jax.random.split(key, 64))
+    p["embed"] = _dense_init(next(keys), (cfg.vocab, cfg.d_model), 0.02)
+    p["pos"] = _dense_init(next(keys), (cfg.seq, cfg.d_model), 0.02)
+    for i in range(cfg.layers):
+        pre = f"l{i}."
+        for nm in ("wq", "wk", "wv", "wo"):
+            p[pre + nm] = _dense_init(next(keys), (cfg.d_model, cfg.d_model))
+        p[pre + "ln1.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[pre + "ln1.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[pre + "w1"] = _dense_init(next(keys), (cfg.d_model, cfg.d_ff))
+        p[pre + "b1"] = jnp.zeros((cfg.d_ff,), jnp.float32)
+        p[pre + "w2"] = _dense_init(next(keys), (cfg.d_ff, cfg.d_model))
+        p[pre + "b2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[pre + "ln2.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[pre + "ln2.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["head.w"] = _dense_init(next(keys), (cfg.d_model, cfg.classes))
+    p["head.b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return p
+
+
+def init_resnet(key, cfg: ResNetConfig = RESNET) -> "OrderedDict[str, jnp.ndarray]":
+    p = OrderedDict()
+    keys = iter(jax.random.split(key, 128))
+
+    def conv_init(k, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        return jax.random.normal(k, (kh, kw, cin, cout), jnp.float32) * math.sqrt(
+            2.0 / fan_in
+        )
+
+    p["stem.w"] = conv_init(next(keys), 3, 3, cfg.in_ch, cfg.widths[0])
+    p["stem.g"] = jnp.ones((cfg.widths[0],), jnp.float32)
+    p["stem.b"] = jnp.zeros((cfg.widths[0],), jnp.float32)
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            pre = f"s{si}.b{bi}."
+            stride_block = si > 0 and bi == 0
+            p[pre + "c1.w"] = conv_init(next(keys), 3, 3, cin, w)
+            p[pre + "c1.g"] = jnp.ones((w,), jnp.float32)
+            p[pre + "c1.b"] = jnp.zeros((w,), jnp.float32)
+            p[pre + "c2.w"] = conv_init(next(keys), 3, 3, w, w)
+            p[pre + "c2.g"] = jnp.ones((w,), jnp.float32)
+            p[pre + "c2.b"] = jnp.zeros((w,), jnp.float32)
+            if stride_block or cin != w:
+                p[pre + "sc.w"] = conv_init(next(keys), 1, 1, cin, w)
+            cin = w
+    p["head.w"] = _dense_init(next(keys), (cfg.widths[-1], cfg.classes))
+    p["head.b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return p
+
+
+def init_screener(key, cfg: ScreenerConfig = SCREENER) -> "OrderedDict[str, jnp.ndarray]":
+    k1, k2 = jax.random.split(key)
+    p = OrderedDict()
+    p["embed"] = _dense_init(k1, (cfg.vocab, cfg.d_embed), 0.05)
+    p["head.w"] = _dense_init(k2, (cfg.d_embed, cfg.classes))
+    p["head.b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return p
+
+
+def param_order(params: "OrderedDict[str, jnp.ndarray]") -> list:
+    """Flattening order shared by aot.py (weights.bin) and the Rust runtime."""
+    return list(params.keys())
+
+
+# --------------------------------------------------------------------------
+# distilbert_mini
+# --------------------------------------------------------------------------
+
+def _dense(x2d, w, b=None):
+    y = gemm(x2d, w)
+    return y if b is None else y + b
+
+
+def distilbert_apply(params, token_ids, cfg: BertConfig = BERT):
+    """(B, S) int32 token ids -> (logits (B,C), probs (B,C), entropy (B,))."""
+    b, s = token_ids.shape
+    x = params["embed"][token_ids] + params["pos"][None, :s, :]
+    for i in range(cfg.layers):
+        pre = f"l{i}."
+        x2 = x.reshape(b * s, cfg.d_model)
+        q = _dense(x2, params[pre + "wq"]).reshape(b, s, cfg.heads, cfg.d_head)
+        k = _dense(x2, params[pre + "wk"]).reshape(b, s, cfg.heads, cfg.d_head)
+        v = _dense(x2, params[pre + "wv"]).reshape(b, s, cfg.heads, cfg.d_head)
+        # (B, H, S, Dh) for the fused attention kernel
+        q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = attention(q, k, v).transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        o = _dense(o, params[pre + "wo"])
+        x2 = x2 + o
+        x2 = layernorm(x2, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        h = jax.nn.gelu(_dense(x2, params[pre + "w1"], params[pre + "b1"]))
+        h = _dense(h, params[pre + "w2"], params[pre + "b2"])
+        x2 = layernorm(x2 + h, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        x = x2.reshape(b, s, cfg.d_model)
+    pooled = jnp.mean(x, axis=1)  # mean-pool (CLS-free mini head)
+    logits = _dense(pooled, params["head.w"], params["head.b"])
+    probs, ent = softmax_entropy(logits)
+    return logits, probs, ent
+
+
+# --------------------------------------------------------------------------
+# resnet_tiny
+# --------------------------------------------------------------------------
+
+def _conv2d(x, w, stride=1):
+    """NHWC conv via im2col + the Pallas GEMM kernel.
+
+    ``conv_general_dilated_patches`` extracts (kh*kw*cin)-patches; the
+    contraction then runs through the same MXU-tiled GEMM the transformer
+    uses — one kernel to optimise, both models benefit.
+    """
+    n, h, ww, cin = x.shape
+    kh, kw, _, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, Ho, Wo, cin*kh*kw)
+    ho, wo = patches.shape[1], patches.shape[2]
+    cols = patches.reshape(n * ho * wo, cin * kh * kw)
+    # patches order is (cin, kh, kw); reorder the filter to match.
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    # Perf iteration (EXPERIMENTS.md §Perf L1): conv GEMMs have huge M
+    # (N*Ho*Wo) and tiny K/N; bm=1024 amortises the per-grid-step overhead
+    # of the lowered kernel loop (3.0x on resnet_tiny b8) while the worst
+    # tile (bm*K + K*bn + bm*bn at K=576, bn=128) stays ~3.1 MB — well
+    # inside the 16 MiB/core VMEM budget.
+    y = gemm(cols, wmat, bm=1024)
+    return y.reshape(n, ho, wo, cout)
+
+
+def _scale_bias(x, g, b):
+    """Inference-mode 'batchnorm': folded per-channel affine."""
+    return x * g + b
+
+
+def resnet_apply(params, images, cfg: ResNetConfig = RESNET):
+    """(B, H, W, C) f32 images -> (logits, probs, entropy)."""
+    x = _conv2d(images, params["stem.w"])
+    x = jax.nn.relu(_scale_bias(x, params["stem.g"], params["stem.b"]))
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            pre = f"s{si}.b{bi}."
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _conv2d(x, params[pre + "c1.w"], stride)
+            h = jax.nn.relu(_scale_bias(h, params[pre + "c1.g"], params[pre + "c1.b"]))
+            h = _conv2d(h, params[pre + "c2.w"])
+            h = _scale_bias(h, params[pre + "c2.g"], params[pre + "c2.b"])
+            if pre + "sc.w" in params:
+                x = _conv2d(x, params[pre + "sc.w"], stride)
+            x = jax.nn.relu(x + h)
+            cin = w
+    pooled = jnp.mean(x, axis=(1, 2))
+    logits = _dense(pooled, params["head.w"], params["head.b"])
+    probs, ent = softmax_entropy(logits)
+    return logits, probs, ent
+
+
+# --------------------------------------------------------------------------
+# screener
+# --------------------------------------------------------------------------
+
+def screener_apply(params, token_ids, cfg: ScreenerConfig = SCREENER):
+    """Cheap L(x) estimator: embedding mean + linear head."""
+    emb = params["embed"][token_ids]  # (B, S, E)
+    pooled = jnp.mean(emb, axis=1)
+    logits = _dense(pooled, params["head.w"], params["head.b"])
+    probs, ent = softmax_entropy(logits)
+    return logits, probs, ent
+
+
+# --------------------------------------------------------------------------
+# analytic FLOPs (drive the energy power model in rust; DESIGN.md §2)
+# --------------------------------------------------------------------------
+
+def flops_distilbert(batch: int, cfg: BertConfig = BERT) -> int:
+    s, d, f = cfg.seq, cfg.d_model, cfg.d_ff
+    per_layer = (
+        4 * 2 * s * d * d          # qkv + out projections
+        + 2 * 2 * s * s * d        # QK^T and PV
+        + 2 * 2 * s * d * f        # FFN
+    )
+    head = 2 * d * cfg.classes
+    return batch * (cfg.layers * per_layer + head)
+
+
+def flops_resnet(batch: int, cfg: ResNetConfig = RESNET) -> int:
+    total = 0
+    hw = cfg.image
+    cin = cfg.in_ch
+    total += 2 * hw * hw * 9 * cin * cfg.widths[0]
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            hw = hw // stride
+            total += 2 * hw * hw * 9 * cin * w
+            total += 2 * hw * hw * 9 * w * w
+            if stride > 1 or cin != w:
+                total += 2 * hw * hw * cin * w
+            cin = w
+    total += 2 * cfg.widths[-1] * cfg.classes
+    return batch * total
+
+
+def flops_screener(batch: int, cfg: ScreenerConfig = SCREENER) -> int:
+    return batch * (cfg.seq * cfg.d_embed + 2 * cfg.d_embed * cfg.classes)

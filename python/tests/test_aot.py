@@ -1,0 +1,136 @@
+"""AOT export contract tests: manifest/weights/HLO artifacts the Rust
+runtime depends on.  Exports the screener (cheap) to a tmpdir and checks
+the full contract; the repo-level artifacts are exercised end-to-end by
+`cargo test`."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.hlo import lower_to_hlo_text
+
+
+@pytest.fixture(scope="module")
+def screener_export(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    params = M.init_screener(jax.random.PRNGKey(aot.SEED))
+    man = aot._export_model(
+        str(out),
+        "screener",
+        params,
+        M.screener_apply,
+        lambda b: jax.ShapeDtypeStruct((b, M.SCREENER.seq), jnp.int32),
+        (1, 4),
+        M.flops_screener,
+        {
+            "family": "screener",
+            "classes": M.SCREENER.classes,
+            "input": {
+                "name": "tokens",
+                "kind": "tokens",
+                "shape_per_item": [M.SCREENER.seq],
+                "dtype": "i32",
+                "vocab": M.SCREENER.vocab,
+            },
+        },
+        verbose=False,
+    )
+    return out / "screener", man, params
+
+
+def test_manifest_schema(screener_export):
+    mdir, man, _ = screener_export
+    disk = json.loads((mdir / "manifest.json").read_text())
+    assert disk["name"] == "screener"
+    assert disk["batch_buckets"] == [1, 4]
+    assert disk["outputs"] == ["logits", "probs", "entropy"]
+    assert [p["name"] for p in disk["params"]] == ["embed", "head.w", "head.b"]
+    for b in ("1", "4"):
+        assert disk["hlo_files"][b] == f"model.b{b}.hlo.txt"
+        assert (mdir / disk["hlo_files"][b]).exists()
+
+
+def test_weights_bin_layout(screener_export):
+    """weights.bin is the params flattened f32-LE in manifest order."""
+    mdir, man, params = screener_export
+    blob = (mdir / "weights.bin").read_bytes()
+    total = sum(int(np.asarray(p).size) for p in params.values())
+    assert len(blob) == total * 4
+    off = 0
+    for entry, (name, arr) in zip(man["params"], params.items()):
+        assert entry["name"] == name
+        assert entry["offset"] == off
+        n = entry["numel"]
+        got = np.frombuffer(blob, np.float32, count=n, offset=off)
+        np.testing.assert_array_equal(got, np.asarray(arr, np.float32).ravel())
+        off += n * 4
+
+
+def test_hlo_text_parseable_header(screener_export):
+    mdir, man, _ = screener_export
+    text = (mdir / "model.b1.hlo.txt").read_text()
+    assert text.startswith("HloModule"), "rust loader expects HLO text"
+    assert "ENTRY" in text
+
+
+def test_hlo_entry_arity(screener_export):
+    """Entry computation takes len(params)+1 parameters (weights..., input)."""
+    mdir, man, _ = screener_export
+    text = (mdir / "model.b1.hlo.txt").read_text()
+    entry = text[text.index("ENTRY"):]
+    first_line = entry.splitlines()[0]
+    assert first_line.count("parameter_") == 0 or True  # format varies
+    # robust check: parameter count via "parameter(k)" occurrences in entry body
+    nparams = sum(
+        1 for line in entry.splitlines() if "= f32[" in line and "parameter(" in line
+        or "= s32[" in line and "parameter(" in line
+    )
+    assert nparams == len(man["params"]) + 1
+
+
+def test_config_pbtxt_contract(screener_export):
+    mdir, _, _ = screener_export
+    cfg = (mdir / "config.pbtxt").read_text()
+    assert 'name: "screener"' in cfg
+    assert "max_batch_size: 4" in cfg
+    assert "dynamic_batching" in cfg
+    assert "max_queue_delay_microseconds" in cfg
+    assert "TYPE_INT32" in cfg
+
+
+def test_lowering_deterministic():
+    """Same seed + spec -> byte-identical HLO text (reproducibility note §X)."""
+    params = M.init_screener(jax.random.PRNGKey(0))
+    names = list(params.keys())
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params.values()]
+
+    def fn(*args):
+        return M.screener_apply(dict(zip(names, args[:-1])), args[-1])
+
+    spec = jax.ShapeDtypeStruct((1, M.SCREENER.seq), jnp.int32)
+    t1 = lower_to_hlo_text(fn, *specs, spec)
+    t2 = lower_to_hlo_text(fn, *specs, spec)
+    assert t1 == t2
+
+
+def test_repo_artifacts_exist_if_built():
+    """When `make artifacts` has run, the repository index must be complete."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    idx = os.path.join(root, "repository.json")
+    if not os.path.exists(idx):
+        pytest.skip("artifacts/ not built yet")
+    repo = json.loads(open(idx).read())
+    assert set(repo["models"]) == {"distilbert_mini", "resnet_tiny", "screener"}
+    for m in repo["models"]:
+        man = json.loads(open(os.path.join(root, m, "manifest.json")).read())
+        for f in man["hlo_files"].values():
+            assert os.path.exists(os.path.join(root, m, f))
+        wpath = os.path.join(root, m, man["weights_file"])
+        want = sum(p["numel"] for p in man["params"]) * 4
+        assert os.path.getsize(wpath) == want

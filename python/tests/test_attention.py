@@ -1,0 +1,75 @@
+"""Fused attention kernel vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+
+
+def _qkv(rng, b, h, s, d):
+    return (
+        rng.normal(size=(b, h, s, d)).astype(np.float32),
+        rng.normal(size=(b, h, s, d)).astype(np.float32),
+        rng.normal(size=(b, h, s, d)).astype(np.float32),
+    )
+
+
+@pytest.mark.parametrize(
+    "b,h,s,d", [(1, 1, 1, 1), (1, 1, 4, 4), (2, 3, 8, 4), (1, 4, 32, 16), (8, 4, 32, 16)]
+)
+def test_matches_ref(b, h, s, d):
+    rng = np.random.default_rng(b * 17 + h * 13 + s + d)
+    q, k, v = _qkv(rng, b, h, s, d)
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention(q, k, v), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_attention_is_convex_combination():
+    """Output rows lie in the convex hull of V rows: max|o| <= max|v|."""
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, 2, 2, 16, 8)
+    o = np.asarray(attention(q, k, v))
+    assert np.abs(o).max() <= np.abs(v).max() + 1e-5
+
+
+def test_uniform_scores_average_v():
+    """Identical keys => uniform attention => each output row = mean(V)."""
+    rng = np.random.default_rng(1)
+    b, h, s, d = 1, 1, 8, 4
+    q = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    k = np.broadcast_to(
+        rng.normal(size=(b, h, 1, d)).astype(np.float32), (b, h, s, d)
+    ).copy()
+    v = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    o = np.asarray(attention(q, k, v))
+    np.testing.assert_allclose(
+        o, np.broadcast_to(v.mean(2, keepdims=True), o.shape), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_batch_independence():
+    """Each (batch, head) slice is computed independently."""
+    rng = np.random.default_rng(2)
+    q, k, v = _qkv(rng, 2, 2, 8, 4)
+    full = np.asarray(attention(q, k, v))
+    solo = np.asarray(attention(q[:1], k[:1], v[:1]))
+    np.testing.assert_allclose(full[:1], solo, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s=st.integers(1, 16),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sweep(b, h, s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, b, h, s, d)
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention(q, k, v), rtol=5e-4, atol=5e-5
+    )

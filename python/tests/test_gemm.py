@@ -1,0 +1,105 @@
+"""Pallas GEMM kernel vs pure-jnp oracle (correctness core, L1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import gemm, gemm_kblocked, pick_block, vmem_footprint_bytes
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (2, 3, 4),
+        (8, 8, 8),
+        (7, 13, 5),
+        (32, 64, 16),
+        (64, 64, 64),
+        (33, 65, 17),  # forces padding on every dim
+        (128, 27, 16),  # im2col-conv shaped
+        (256, 64, 128),
+    ],
+)
+def test_gemm_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(gemm(x, y), ref.gemm(x, y), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bn", [(1, 1), (4, 4), (8, 16), (128, 128)])
+def test_gemm_block_sizes(bm, bn):
+    rng = np.random.default_rng(42)
+    x, y = _rand(rng, 17, 9), _rand(rng, 9, 11)
+    np.testing.assert_allclose(
+        gemm(x, y, bm=bm, bn=bn), ref.gemm(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (8, 8, 8, 4, 4, 4),
+        (16, 32, 8, 8, 8, 8),
+        (7, 13, 5, 4, 4, 4),
+        (32, 64, 32, 16, 16, 16),
+    ],
+)
+def test_gemm_kblocked_matches_ref(m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(7)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(
+        gemm_kblocked(x, y, bm=bm, bn=bn, bk=bk), ref.gemm(x, y),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+def test_gemm_identity():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 12, 12)
+    np.testing.assert_allclose(
+        gemm(x, np.eye(12, dtype=np.float32)), x, rtol=RTOL, atol=ATOL
+    )
+
+
+def test_gemm_zeros():
+    x = np.zeros((5, 6), np.float32)
+    y = np.zeros((6, 7), np.float32)
+    assert np.all(gemm(x, y) == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_property_sweep(m, k, n, seed):
+    """Hypothesis shape sweep: kernel == oracle for arbitrary small shapes."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(gemm(x, y), ref.gemm(x, y), rtol=5e-4, atol=1e-4)
+
+
+def test_pick_block_divides_or_caps():
+    assert pick_block(4, 128) == 4
+    assert pick_block(256, 128) == 128
+    assert pick_block(1, 128) == 1
+    b = pick_block(96, 128)
+    assert 1 <= b <= 128
+
+
+def test_vmem_footprint_under_tpu_budget():
+    """§Perf invariant: one kernel instance must fit the ~16 MiB VMEM/core."""
+    # worst-case tile of the served models: im2col GEMM of resnet b8
+    assert vmem_footprint_bytes(8 * 32 * 32, 27, 64) < 16 * 2**20
+    # a production-shaped GEMM with K-blocking stays in budget too
+    assert vmem_footprint_bytes(4096, 4096, 4096, bk=512) < 16 * 2**20

@@ -1,0 +1,49 @@
+"""Fused LayerNorm kernel vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.layernorm import layernorm
+
+
+@pytest.mark.parametrize("r,d", [(1, 4), (5, 8), (64, 64), (130, 16)])
+def test_matches_ref(r, d):
+    rng = np.random.default_rng(r + d)
+    x = rng.normal(size=(r, d)).astype(np.float32)
+    g = rng.normal(size=d).astype(np.float32)
+    b = rng.normal(size=d).astype(np.float32)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_unit_affine_zero_mean_unit_var():
+    rng = np.random.default_rng(1)
+    d = 32
+    x = rng.normal(size=(10, d)).astype(np.float32) * 5 + 3
+    y = np.asarray(layernorm(x, np.ones(d, np.float32), np.zeros(d, np.float32)))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(-1), 1.0, atol=1e-3)
+
+
+def test_constant_row_is_finite():
+    """A constant row has var=0; eps must keep the output finite."""
+    d = 8
+    x = np.full((2, d), 7.0, np.float32)
+    y = np.asarray(layernorm(x, np.ones(d, np.float32), np.zeros(d, np.float32)))
+    assert np.isfinite(y).all()
+    np.testing.assert_allclose(y, 0.0, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(1, 40), d=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_property_sweep(r, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(r, d)).astype(np.float32)
+    g = rng.normal(size=d).astype(np.float32)
+    b = rng.normal(size=d).astype(np.float32)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm(x, g, b), rtol=5e-4, atol=5e-5
+    )

@@ -1,0 +1,138 @@
+"""Layer-2 model tests: shapes, determinism, numerics, conv-vs-lax oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def bert_params():
+    return M.init_distilbert(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def resnet_params():
+    return M.init_resnet(jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def screener_params():
+    return M.init_screener(jax.random.PRNGKey(2))
+
+
+def _tokens(key, b):
+    return jax.random.randint(key, (b, M.BERT.seq), 0, M.BERT.vocab)
+
+
+@pytest.mark.parametrize("b", [1, 2, 4])
+def test_bert_shapes(bert_params, b):
+    lo, pr, en = M.distilbert_apply(bert_params, _tokens(jax.random.PRNGKey(3), b))
+    assert lo.shape == (b, M.BERT.classes)
+    assert pr.shape == (b, M.BERT.classes)
+    assert en.shape == (b,)
+
+
+def test_bert_probs_valid(bert_params):
+    _, pr, en = M.distilbert_apply(bert_params, _tokens(jax.random.PRNGKey(4), 4))
+    pr = np.asarray(pr)
+    np.testing.assert_allclose(pr.sum(-1), 1.0, atol=1e-5)
+    assert (pr >= 0).all()
+    en = np.asarray(en)
+    assert (en >= -1e-6).all() and (en <= np.log(M.BERT.classes) + 1e-5).all()
+
+
+def test_bert_deterministic(bert_params):
+    ids = _tokens(jax.random.PRNGKey(5), 2)
+    a = M.distilbert_apply(bert_params, ids)
+    b = M.distilbert_apply(bert_params, ids)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bert_batch_item_independence(bert_params):
+    """Row i of a batched call equals the single-item call (padding-safe)."""
+    ids = _tokens(jax.random.PRNGKey(6), 4)
+    lo4, _, en4 = M.distilbert_apply(bert_params, ids)
+    lo1, _, en1 = M.distilbert_apply(bert_params, ids[2:3])
+    np.testing.assert_allclose(lo4[2], lo1[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(en4[2], en1[0], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 2])
+def test_resnet_shapes(resnet_params, b):
+    img = jax.random.normal(jax.random.PRNGKey(7), (b, 32, 32, 3))
+    lo, pr, en = M.resnet_apply(resnet_params, img)
+    assert lo.shape == (b, M.RESNET.classes)
+    assert pr.shape == (b, M.RESNET.classes)
+    assert en.shape == (b,)
+    np.testing.assert_allclose(np.asarray(pr).sum(-1), 1.0, atol=1e-5)
+
+
+def test_resnet_batch_item_independence(resnet_params):
+    img = jax.random.normal(jax.random.PRNGKey(8), (2, 32, 32, 3))
+    lo2, _, _ = M.resnet_apply(resnet_params, img)
+    lo1, _, _ = M.resnet_apply(resnet_params, img[1:])
+    np.testing.assert_allclose(lo2[1], lo1[0], rtol=1e-3, atol=1e-4)
+
+
+def test_conv2d_matches_lax():
+    """im2col + Pallas GEMM conv == lax.conv_general_dilated, strides 1 and 2."""
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(10), (3, 3, 3, 5))
+    dn = ("NHWC", "HWIO", "NHWC")
+    for stride in (1, 2):
+        want = jax.lax.conv_general_dilated(x, w, (stride, stride), "SAME",
+                                            dimension_numbers=dn)
+        got = M._conv2d(x, w, stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_1x1_matches_lax():
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 6, 6, 4))
+    w = jax.random.normal(jax.random.PRNGKey(12), (1, 1, 4, 8))
+    dn = ("NHWC", "HWIO", "NHWC")
+    want = jax.lax.conv_general_dilated(x, w, (2, 2), "SAME", dimension_numbers=dn)
+    np.testing.assert_allclose(M._conv2d(x, w, 2), want, rtol=1e-4, atol=1e-4)
+
+
+def test_screener_shapes(screener_params):
+    ids = _tokens(jax.random.PRNGKey(13), 4)
+    lo, pr, en = M.screener_apply(screener_params, ids)
+    assert lo.shape == (4, 2) and en.shape == (4,)
+
+
+def test_screener_is_cheap():
+    """Screener FLOPs must be <1% of the full model (the early-exit premise)."""
+    assert M.flops_screener(1) < 0.01 * M.flops_distilbert(1)
+
+
+def test_param_order_stable(bert_params):
+    order = M.param_order(bert_params)
+    assert order[0] == "embed" and order[-1] == "head.b"
+    assert len(order) == len(set(order))
+
+
+def test_flops_scale_linearly_with_batch():
+    for fn in (M.flops_distilbert, M.flops_resnet, M.flops_screener):
+        assert fn(4) == 4 * fn(1)
+
+
+def test_bert_flops_magnitude():
+    """Sanity: analytic estimate within 2x of XLA's own cost analysis (b=1)."""
+    import jax.numpy as jnp
+    from compile.hlo import xla_flops_estimate
+
+    params = M.init_distilbert(jax.random.PRNGKey(0))
+    names = list(params.keys())
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params.values()]
+
+    def fn(*args):
+        return M.distilbert_apply(dict(zip(names, args[:-1])), args[-1])
+
+    xf = xla_flops_estimate(fn, *specs, jax.ShapeDtypeStruct((1, M.BERT.seq), jnp.int32))
+    if xf > 0:
+        ratio = M.flops_distilbert(1) / xf
+        assert 0.5 < ratio < 2.0, f"analytic/xla flops ratio {ratio}"

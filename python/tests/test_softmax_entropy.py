@@ -1,0 +1,78 @@
+"""Fused softmax+entropy kernel vs oracle; entropy is the controller's L(x)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.softmax_entropy import softmax_entropy
+
+RTOL, ATOL = 1e-5, 1e-6
+
+
+@pytest.mark.parametrize("r,c", [(1, 2), (3, 5), (8, 2), (100, 10), (129, 7)])
+def test_matches_ref(r, c):
+    rng = np.random.default_rng(r * 100 + c)
+    logits = rng.normal(size=(r, c)).astype(np.float32) * 3
+    p, e = softmax_entropy(logits)
+    rp, re = ref.softmax_entropy(logits)
+    np.testing.assert_allclose(p, rp, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(e, re, rtol=RTOL, atol=ATOL)
+
+
+def test_probs_sum_to_one():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(17, 9)).astype(np.float32)
+    p, _ = softmax_entropy(logits)
+    np.testing.assert_allclose(np.sum(np.asarray(p), -1), 1.0, atol=1e-5)
+
+
+def test_uniform_logits_max_entropy():
+    """H is maximal (= ln C) exactly when logits are uniform."""
+    c = 8
+    logits = np.zeros((1, c), np.float32)
+    _, e = softmax_entropy(logits)
+    np.testing.assert_allclose(e[0], np.log(c), rtol=1e-5)
+
+
+def test_saturated_logits_zero_entropy():
+    """A near-one-hot row must not NaN (no 0*log0) and H -> 0."""
+    logits = np.array([[50.0, 0.0, 0.0, 0.0]], np.float32)
+    p, e = softmax_entropy(logits)
+    assert np.isfinite(np.asarray(p)).all() and np.isfinite(np.asarray(e)).all()
+    assert float(e[0]) < 1e-6
+
+
+def test_shift_invariance():
+    """softmax/entropy are invariant to additive logit shifts."""
+    rng = np.random.default_rng(5)
+    logits = rng.normal(size=(4, 6)).astype(np.float32)
+    p1, e1 = softmax_entropy(logits)
+    p2, e2 = softmax_entropy(logits + 123.0)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(e1, e2, rtol=1e-4, atol=1e-5)
+
+
+def test_large_magnitude_stability():
+    logits = np.array([[1e4, -1e4, 0.0]], np.float32)
+    p, e = softmax_entropy(logits)
+    assert np.isfinite(np.asarray(p)).all() and np.isfinite(np.asarray(e)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 64),
+    c=st.integers(2, 16),
+    scale=st.floats(0.01, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_entropy_bounds(r, c, scale, seed):
+    """0 <= H <= ln(C) for any logits; kernel == oracle."""
+    rng = np.random.default_rng(seed)
+    logits = (rng.normal(size=(r, c)) * scale).astype(np.float32)
+    p, e = softmax_entropy(logits)
+    rp, re = ref.softmax_entropy(logits)
+    np.testing.assert_allclose(p, rp, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(e, re, rtol=1e-4, atol=1e-5)
+    e = np.asarray(e)
+    assert (e >= -1e-5).all() and (e <= np.log(c) + 1e-4).all()

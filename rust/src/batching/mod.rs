@@ -1,0 +1,17 @@
+//! The Triton-path substrate: scheduler queues and dynamic batching
+//! (§III-B Path B).
+//!
+//! Triton's dynamic batcher fuses individually-arriving requests into
+//! GPU-efficient batches: it fires when a *preferred batch size* is
+//! reachable, or when the oldest queued request has waited
+//! `max_queue_delay_microseconds`. [`policy::BatchPlan`] implements that
+//! decision rule as a pure function (unit-testable without threads);
+//! [`queue::PendingQueue`] is the thread-safe queue the batcher thread
+//! drains. The batch=1 "orchestration overhead" the paper measures in
+//! Table II *is* this machinery: queue hop + delay window + fuse/split.
+
+pub mod policy;
+pub mod queue;
+
+pub use policy::{BatchPlan, BatcherPolicy};
+pub use queue::PendingQueue;

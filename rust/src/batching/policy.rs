@@ -1,0 +1,163 @@
+//! Dynamic-batching decision rule (pure logic, Triton semantics).
+
+/// Static batcher parameters (from `config.pbtxt`).
+#[derive(Debug, Clone)]
+pub struct BatcherPolicy {
+    pub max_batch_size: usize,
+    /// Sorted ascending; empty = fire whenever anything is queued.
+    pub preferred_batch_sizes: Vec<usize>,
+    /// Window the oldest request may wait before a sub-preferred batch is
+    /// released anyway.
+    pub max_queue_delay_us: u64,
+}
+
+impl BatcherPolicy {
+    pub fn new(max_batch_size: usize, mut preferred: Vec<usize>, max_queue_delay_us: u64) -> Self {
+        assert!(max_batch_size >= 1);
+        preferred.retain(|&p| p >= 1 && p <= max_batch_size);
+        preferred.sort_unstable();
+        preferred.dedup();
+        BatcherPolicy { max_batch_size, preferred_batch_sizes: preferred, max_queue_delay_us }
+    }
+
+    /// No batching at all: every request is its own batch (the degenerate
+    /// config Table II's batch=1 rows exercise when delay = 0).
+    pub fn immediate(max_batch_size: usize) -> Self {
+        BatcherPolicy::new(max_batch_size, vec![], 0)
+    }
+
+    /// From a parsed Triton config.
+    pub fn from_config(cfg: &crate::configsys::ModelConfig) -> Self {
+        match &cfg.dynamic_batching {
+            Some(db) => BatcherPolicy::new(
+                cfg.max_batch_size,
+                db.preferred_batch_sizes.clone(),
+                db.max_queue_delay_us,
+            ),
+            None => BatcherPolicy::immediate(cfg.max_batch_size),
+        }
+    }
+
+    /// Largest preferred size that `queued` can fill (None if none fit).
+    fn fillable_preferred(&self, queued: usize) -> Option<usize> {
+        self.preferred_batch_sizes.iter().copied().filter(|&p| p <= queued).max()
+    }
+
+    /// Decide what to do given `queued` waiting requests whose oldest has
+    /// waited `oldest_wait_us`.
+    pub fn plan(&self, queued: usize, oldest_wait_us: u64) -> BatchPlan {
+        if queued == 0 {
+            return BatchPlan::Wait;
+        }
+        // Can we fill the *largest* preferred size? Fire immediately.
+        if let Some(&largest) = self.preferred_batch_sizes.last() {
+            if queued >= largest {
+                return BatchPlan::Fire { size: largest.min(self.max_batch_size) };
+            }
+            // Window still open: hold for more arrivals.
+            if oldest_wait_us < self.max_queue_delay_us {
+                return BatchPlan::Wait;
+            }
+            // Window expired: release at the best fillable preferred size,
+            // or everything queued if below the smallest preferred.
+            let size = self.fillable_preferred(queued).unwrap_or(queued);
+            return BatchPlan::Fire { size: size.min(self.max_batch_size) };
+        }
+        // No preferred sizes: fire whatever is there (bounded by max).
+        BatchPlan::Fire { size: queued.min(self.max_batch_size) }
+    }
+}
+
+/// Batcher decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPlan {
+    /// Keep queueing (window open, preferred not reachable yet).
+    Wait,
+    /// Release a batch of exactly `size` requests (FIFO prefix).
+    Fire { size: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatcherPolicy {
+        BatcherPolicy::new(8, vec![4, 8], 2000)
+    }
+
+    #[test]
+    fn empty_queue_waits() {
+        assert_eq!(policy().plan(0, 999_999), BatchPlan::Wait);
+    }
+
+    #[test]
+    fn full_preferred_fires_immediately() {
+        assert_eq!(policy().plan(8, 0), BatchPlan::Fire { size: 8 });
+        assert_eq!(policy().plan(11, 0), BatchPlan::Fire { size: 8 });
+    }
+
+    #[test]
+    fn window_open_holds_small_batches() {
+        assert_eq!(policy().plan(2, 100), BatchPlan::Wait);
+        assert_eq!(policy().plan(7, 1999), BatchPlan::Wait);
+    }
+
+    #[test]
+    fn window_expiry_releases_at_best_fit() {
+        // 7 queued, window expired: largest fillable preferred is 4.
+        assert_eq!(policy().plan(7, 2000), BatchPlan::Fire { size: 4 });
+        // 2 queued (below smallest preferred): release both.
+        assert_eq!(policy().plan(2, 2500), BatchPlan::Fire { size: 2 });
+        assert_eq!(policy().plan(1, 2000), BatchPlan::Fire { size: 1 });
+    }
+
+    #[test]
+    fn immediate_policy_never_waits_nonempty() {
+        let p = BatcherPolicy::immediate(8);
+        assert_eq!(p.plan(1, 0), BatchPlan::Fire { size: 1 });
+        assert_eq!(p.plan(20, 0), BatchPlan::Fire { size: 8 });
+        assert_eq!(p.plan(0, 0), BatchPlan::Wait);
+    }
+
+    #[test]
+    fn constructor_sanitises_preferred() {
+        let p = BatcherPolicy::new(8, vec![16, 0, 4, 4, 2], 100);
+        assert_eq!(p.preferred_batch_sizes, vec![2, 4]);
+    }
+
+    #[test]
+    fn from_triton_config() {
+        let cfg = crate::configsys::ModelConfig::from_pbtxt(
+            r#"
+name: "m"
+max_batch_size: 8
+input [ { name: "x" data_type: TYPE_INT32 dims: [ 32 ] } ]
+output [ { name: "y" data_type: TYPE_FP32 dims: [ 2 ] } ]
+dynamic_batching {
+  preferred_batch_size: [ 4, 8 ]
+  max_queue_delay_microseconds: 2000
+}
+"#,
+        )
+        .unwrap();
+        let p = BatcherPolicy::from_config(&cfg);
+        assert_eq!(p.preferred_batch_sizes, vec![4, 8]);
+        assert_eq!(p.max_queue_delay_us, 2000);
+    }
+
+    #[test]
+    fn no_batching_config_gives_immediate() {
+        let cfg = crate::configsys::ModelConfig::from_pbtxt(
+            r#"
+name: "m"
+max_batch_size: 4
+input [ { name: "x" data_type: TYPE_FP32 dims: [ 3 ] } ]
+output [ { name: "y" data_type: TYPE_FP32 dims: [ 1 ] } ]
+"#,
+        )
+        .unwrap();
+        let p = BatcherPolicy::from_config(&cfg);
+        assert!(p.preferred_batch_sizes.is_empty());
+        assert_eq!(p.plan(3, 0), BatchPlan::Fire { size: 3 });
+    }
+}

@@ -1,0 +1,212 @@
+//! Thread-safe pending-request queue for the dynamic batcher.
+//!
+//! Mutex + Condvar (no external crates): producers enqueue, the batcher
+//! thread blocks until the policy says Fire, then drains a FIFO prefix.
+//! Bounded capacity gives the backpressure signal the controller's C(x)
+//! reads (queue depth / capacity).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::batching::policy::{BatchPlan, BatcherPolicy};
+
+/// An enqueued item with its arrival instant.
+#[derive(Debug)]
+struct Pending<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+#[derive(Debug, Default)]
+struct State<T> {
+    q: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+/// Bounded MPSC batch queue.
+#[derive(Debug)]
+pub struct PendingQueue<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+/// Why an enqueue failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum EnqueueError {
+    Full,
+    Closed,
+}
+
+impl<T> PendingQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        PendingQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking enqueue; `Err(Full)` is the backpressure signal.
+    pub fn push(&self, item: T) -> Result<(), EnqueueError> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return Err(EnqueueError::Closed);
+        }
+        if g.q.len() >= self.capacity {
+            return Err(EnqueueError::Full);
+        }
+        g.q.push_back(Pending { item, enqueued: Instant::now() });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Current depth (the C(x) congestion input).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Close the queue: pending items still drain; pushes fail; a blocked
+    /// `next_batch` returns None once empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until the policy releases a batch (or the queue is closed and
+    /// empty → None). Returns the FIFO prefix of the planned size.
+    pub fn next_batch(&self, policy: &BatcherPolicy) -> Option<Vec<T>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.q.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                g = self.cv.wait(g).unwrap();
+                continue;
+            }
+            let oldest_us = g.q.front().unwrap().enqueued.elapsed().as_micros() as u64;
+            match policy.plan(g.q.len(), oldest_us) {
+                BatchPlan::Fire { size } => {
+                    let n = size.min(g.q.len());
+                    let batch: Vec<T> = g.q.drain(..n).map(|p| p.item).collect();
+                    return Some(batch);
+                }
+                BatchPlan::Wait => {
+                    if g.closed {
+                        // Drain the tail on shutdown.
+                        let batch: Vec<T> =
+                            g.q.drain(..).map(|p| p.item).collect();
+                        return Some(batch);
+                    }
+                    // Sleep until the window would expire (or new arrivals).
+                    let remaining = policy.max_queue_delay_us.saturating_sub(oldest_us).max(1);
+                    let (g2, _) = self
+                        .cv
+                        .wait_timeout(g, Duration::from_micros(remaining))
+                        .unwrap();
+                    g = g2;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_and_drain() {
+        let q = PendingQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let policy = BatcherPolicy::immediate(8);
+        assert_eq!(q.next_batch(&policy), Some(vec![1, 2]));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn full_queue_backpressures() {
+        let q = PendingQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(EnqueueError::Full));
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_and_returns_none() {
+        let q: PendingQueue<u32> = PendingQueue::new(2);
+        q.close();
+        assert_eq!(q.push(1), Err(EnqueueError::Closed));
+        assert_eq!(q.next_batch(&BatcherPolicy::immediate(4)), None);
+    }
+
+    #[test]
+    fn close_drains_tail() {
+        let q = PendingQueue::new(8);
+        q.push(1).unwrap();
+        // Policy that would Wait (preferred 4, long window):
+        let policy = BatcherPolicy::new(8, vec![4], 10_000_000);
+        q.close();
+        assert_eq!(q.next_batch(&policy), Some(vec![1]));
+        assert_eq!(q.next_batch(&policy), None);
+    }
+
+    #[test]
+    fn delay_window_releases_sub_preferred_batch() {
+        let q = Arc::new(PendingQueue::new(16));
+        let policy = BatcherPolicy::new(8, vec![8], 20_000); // 20 ms window
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let t0 = Instant::now();
+        let batch = q.next_batch(&policy).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch, vec![1, 2]);
+        assert!(waited >= Duration::from_millis(15), "released early: {waited:?}");
+    }
+
+    #[test]
+    fn preferred_size_fires_without_waiting() {
+        let q = Arc::new(PendingQueue::new(16));
+        let policy = BatcherPolicy::new(8, vec![2], 5_000_000); // huge window
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let t0 = Instant::now();
+        let batch = q.next_batch(&policy).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(100), "must not wait the window");
+    }
+
+    #[test]
+    fn producer_wakes_blocked_batcher() {
+        let q = Arc::new(PendingQueue::new(16));
+        let policy = BatcherPolicy::immediate(8);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.push(42).unwrap();
+        });
+        let batch = q.next_batch(&policy).unwrap();
+        assert_eq!(batch, vec![42]);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = PendingQueue::new(64);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let policy = BatcherPolicy::new(4, vec![4], 0);
+        assert_eq!(q.next_batch(&policy), Some(vec![0, 1, 2, 3]));
+        assert_eq!(q.next_batch(&policy), Some(vec![4, 5, 6, 7]));
+    }
+}

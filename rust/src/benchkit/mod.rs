@@ -1,0 +1,212 @@
+//! Bench harness (criterion is unavailable offline; DESIGN.md §6).
+//!
+//! Provides warmup + timed iterations with mean/σ/percentile reporting and
+//! the table renderer the paper-reproduction benches share. Benches are
+//! `harness = false` binaries that call [`bench_fn`] / print [`Table`]s.
+
+use std::time::Instant;
+
+use crate::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wallclock samples (seconds).
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        stats::std_dev(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::quantile(&self.samples, 0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::quantile(&self.samples, 0.95)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        let m = self.mean();
+        if m > 0.0 {
+            1.0 / m
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<32} mean {:>12}  σ {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            crate::util::fmt::duration(self.mean()),
+            crate::util::fmt::duration(self.std_dev()),
+            crate::util::fmt::duration(self.p95()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` for `warmup` untimed then `iters` timed iterations.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Time a single invocation of `f` (macro-bench building block).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Plain-text table renderer for paper-shaped outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column width fitting.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (export path for EXPERIMENTS.md data).
+    pub fn to_csv(&self) -> String {
+        use crate::telemetry::export::csv_field;
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| csv_field(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| csv_field(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float cell with fixed decimals.
+pub fn cell(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_collects_samples() {
+        let mut n = 0u64;
+        let r = bench_fn("noop", 2, 10, || n += 1);
+        assert_eq!(r.samples.len(), 10);
+        assert_eq!(n, 12, "warmup + timed iterations both ran");
+        assert!(r.mean() >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn result_stats_consistent() {
+        let r = BenchResult { name: "x".into(), samples: vec![1.0, 2.0, 3.0] };
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+        assert!((r.p50() - 2.0).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert!(r.summary().contains("x"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["model", "ms"]);
+        t.row(vec!["distilbert_mini".into(), "125.21".into()]);
+        t.row(vec!["resnet".into(), "30.65".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| distilbert_mini |"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len(), "aligned columns");
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

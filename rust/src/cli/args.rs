@@ -1,0 +1,100 @@
+//! Tiny `--key value` / `--flag` argument parser (clap is unavailable
+//! offline; DESIGN.md §6).
+
+use std::collections::BTreeMap;
+
+/// Parsed flags: `--key value` pairs and boolean `--flag`s.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a flag list. A token starting with `--` consumes the next
+    /// token as its value unless that token also starts with `--` (then
+    /// it is a boolean flag). Positional tokens are rejected.
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {tok:?}"));
+            };
+            if key.is_empty() {
+                return Err("bare -- is not allowed".to_string());
+            }
+            match argv.get(i + 1) {
+                Some(next) if !next.starts_with("--") => {
+                    out.values.insert(key.to_string(), next.clone());
+                    i += 2;
+                }
+                _ => {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// String value of `--key value`.
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.values.get(key).cloned()
+    }
+
+    /// Float value of `--key value`.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.values.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Whether boolean `--flag` was passed.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.values.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_flags() {
+        let a = Args::parse(&sv(&["--port", "8080", "--controller", "--k", "1.5"])).unwrap();
+        assert_eq!(a.get("port").as_deref(), Some("8080"));
+        assert_eq!(a.get_f64("k"), Some(1.5));
+        assert!(a.has("controller"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&sv(&["--a", "--b", "x"])).unwrap();
+        assert!(a.has("a"));
+        assert_eq!(a.get("b").as_deref(), Some("x"));
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["oops"])).is_err());
+        assert!(Args::parse(&sv(&["--"])).is_err());
+    }
+
+    #[test]
+    fn get_f64_rejects_garbage() {
+        let a = Args::parse(&sv(&["--n", "abc"])).unwrap();
+        assert_eq!(a.get_f64("n"), None);
+        assert!(a.has("n"));
+    }
+
+    #[test]
+    fn empty_ok() {
+        let a = Args::parse(&[]).unwrap();
+        assert!(!a.has("x"));
+    }
+}

@@ -1,0 +1,261 @@
+//! The `greenflow` command-line launcher.
+//!
+//! ```text
+//! greenflow serve     --repo artifacts --port 8080 [--controller] [--device a100]
+//! greenflow report    --repo artifacts
+//! greenflow ablation  [--requests 1000] [--tau0 0.2] [--tau-inf 0.78] [--k 2.0]
+//! greenflow landscape [--out -]
+//! greenflow version
+//! ```
+
+pub mod args;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::controller::baselines::OpenLoop;
+use crate::controller::cost::WeightPolicy;
+use crate::controller::threshold::ThresholdSchedule;
+use crate::controller::{AdmissionController, ControllerConfig};
+use crate::energy::DeviceProfile;
+use crate::pipeline::system::{ServingSystem, SystemConfig};
+use crate::server::Gateway;
+use crate::sim::{simulate, SimConfig};
+use crate::workload::arrival::{arrival_times, ArrivalProcess};
+use crate::workload::stream::{RequestStream, StreamConfig};
+
+use args::Args;
+
+/// CLI entry point (also used by `main.rs`).
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(run(&argv));
+}
+
+/// Run with explicit argv (testable); returns the exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", usage());
+        return 2;
+    };
+    let args = match Args::parse(rest) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n{}", usage());
+            return 2;
+        }
+    };
+    match cmd.as_str() {
+        "version" => {
+            println!("greenflow {}", crate::VERSION);
+            0
+        }
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "ablation" => cmd_ablation(&args),
+        "landscape" => cmd_landscape(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n{}", usage());
+            2
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: greenflow <serve|report|ablation|landscape|version> [--flag value ...]"
+}
+
+fn repo_root(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("repo").unwrap_or_else(|| crate::DEFAULT_REPOSITORY.to_string()))
+}
+
+fn device(args: &Args) -> DeviceProfile {
+    let name = args.get("device").unwrap_or_else(|| "rtx4000_ada".to_string());
+    DeviceProfile::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown device {name:?}, using rtx4000_ada");
+        DeviceProfile::rtx4000_ada()
+    })
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    let root = repo_root(args);
+    match crate::runtime::Repository::scan(&root) {
+        Ok(repo) => {
+            println!("repository at {}:", root.display());
+            for (name, e) in &repo.entries {
+                println!(
+                    "  {name}: family={} classes={} buckets={:?} params={} ({} bytes), delay={}µs",
+                    e.manifest.family,
+                    e.manifest.classes,
+                    e.manifest.batch_buckets,
+                    e.manifest.params.len(),
+                    e.manifest.weights_bytes(),
+                    repo.queue_delay_us(name),
+                );
+            }
+            if let Err(e) = repo.validate() {
+                eprintln!("VALIDATION FAILED: {e}");
+                return 1;
+            }
+            println!("validation: ok");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot scan repository: {e} (run `make artifacts` first)");
+            1
+        }
+    }
+}
+
+fn controller_config(args: &Args) -> ControllerConfig {
+    let policy = args
+        .get("policy")
+        .and_then(|p| WeightPolicy::by_name(&p))
+        .unwrap_or(WeightPolicy::Balanced);
+    ControllerConfig {
+        weights: policy.weights(),
+        schedule: ThresholdSchedule::Exponential {
+            tau0: args.get_f64("tau0").unwrap_or(0.2),
+            tau_inf: args.get_f64("tau-inf").unwrap_or(0.51),
+            k: args.get_f64("k").unwrap_or(2.0),
+        },
+        respond_from_cache: true,
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let root = repo_root(args);
+    let mut cfg = SystemConfig::new(root);
+    cfg.device = device(args);
+    if args.has("controller") {
+        cfg = cfg.with_controller(controller_config(args));
+    }
+    let port = args.get_f64("port").unwrap_or(8080.0) as u16;
+    let system = match ServingSystem::start(cfg) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("cannot start serving system: {e}");
+            return 1;
+        }
+    };
+    match Gateway::start(system, port, 8) {
+        Ok(gw) => {
+            println!("greenflow gateway listening on http://{}", gw.addr());
+            println!("endpoints: POST /infer  GET /metrics  GET /models  GET /health");
+            // Serve until killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot bind: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_ablation(args: &Args) -> i32 {
+    let n = args.get_f64("requests").unwrap_or(1000.0) as usize;
+    let seed = args.get_f64("seed").unwrap_or(20260710.0) as u64;
+    let mut rng = crate::util::Rng::new(seed);
+    let mut arr = ArrivalProcess::poisson(args.get_f64("rate").unwrap_or(200.0));
+    let times = arrival_times(&mut arr, n, &mut rng);
+    let reqs = RequestStream::new(StreamConfig::default(), seed ^ 1).take(&times);
+
+    let cfg = SimConfig { seed, ..SimConfig::table3_default() };
+    let std_report = simulate(&mut OpenLoop, &reqs, &cfg);
+    let mut bio = AdmissionController::new(controller_config(args));
+    let bio_report = simulate(&mut bio, &reqs, &cfg);
+
+    let mut t = crate::benchkit::Table::new(
+        "Ablation: controller impact (sim, A100 profile)",
+        &["Metric", "Standard", "Bio-Controller", "Delta"],
+    );
+    let pct = crate::util::fmt::pct_delta;
+    t.row(vec![
+        "Total Time (s)".into(),
+        format!("{:.3}", std_report.total_busy_secs),
+        format!("{:.3}", bio_report.total_busy_secs),
+        pct(std_report.total_busy_secs, bio_report.total_busy_secs),
+    ]);
+    t.row(vec![
+        "Latency/Req (ms)".into(),
+        format!("{:.2}", std_report.latency_per_req * 1e3),
+        format!("{:.2}", bio_report.latency_per_req * 1e3),
+        pct(std_report.latency_per_req, bio_report.latency_per_req),
+    ]);
+    t.row(vec![
+        "Accuracy".into(),
+        format!("{:.1}%", std_report.accuracy * 100.0),
+        format!("{:.1}%", bio_report.accuracy * 100.0),
+        format!("{:+.1} pp", (bio_report.accuracy - std_report.accuracy) * 100.0),
+    ]);
+    t.row(vec![
+        "Admission Rate".into(),
+        "100%".into(),
+        format!("{:.0}%", bio_report.admission_rate() * 100.0),
+        pct(1.0, bio_report.admission_rate()),
+    ]);
+    t.row(vec![
+        "Energy (kWh)".into(),
+        format!("{:.6}", std_report.energy_kwh),
+        format!("{:.6}", bio_report.energy_kwh),
+        pct(std_report.energy_kwh, bio_report.energy_kwh),
+    ]);
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_landscape(args: &Args) -> i32 {
+    let pts = crate::sim::landscape::sample_surface(
+        args.get_f64("samples").unwrap_or(200.0) as usize
+    );
+    println!("s,j");
+    for p in &pts {
+        println!("{:.4},{:.5}", p.s, p.j);
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn version_runs() {
+        assert_eq!(run(&sv(&["version"])), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(&sv(&["frobnicate"])), 2);
+        assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn ablation_runs_in_sim() {
+        assert_eq!(run(&sv(&["ablation", "--requests", "200"])), 0);
+    }
+
+    #[test]
+    fn landscape_emits_csv() {
+        assert_eq!(run(&sv(&["landscape", "--samples", "50"])), 0);
+    }
+
+    #[test]
+    fn report_fails_gracefully_without_repo() {
+        assert_eq!(run(&sv(&["report", "--repo", "/nonexistent"])), 1);
+    }
+
+    #[test]
+    fn report_ok_with_artifacts() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if root.join("repository.json").exists() {
+            assert_eq!(run(&sv(&["report", "--repo", root.to_str().unwrap()])), 0);
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Serving configuration: a Triton-style `config.pbtxt` parser plus typed
+//! model/server config structs.
+//!
+//! The paper's reproducibility notes (§X) require "Triton config.pbtxt
+//! under version control with explicit max_batch_size, input dtypes, and
+//! dynamic batching windows" — this module is that contract on our side.
+//! `aot.py` emits one `config.pbtxt` per model; the coordinator parses it
+//! to configure the dynamic batcher and instance groups.
+
+pub mod pbtxt;
+
+pub use pbtxt::{parse_pbtxt, PbNode, PbValue};
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("pbtxt syntax error: {0}")]
+    Syntax(String),
+    #[error("missing field {0}")]
+    Missing(&'static str),
+    #[error("invalid value for {0}: {1}")]
+    Invalid(&'static str, String),
+}
+
+/// Tensor dtype as declared in config.pbtxt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataType {
+    F32,
+    I32,
+}
+
+impl DataType {
+    fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "TYPE_FP32" => Ok(DataType::F32),
+            "TYPE_INT32" => Ok(DataType::I32),
+            other => Err(ConfigError::Invalid("data_type", other.to_string())),
+        }
+    }
+}
+
+/// One declared input/output tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DataType,
+    /// Per-item dims (batch dim excluded, Triton convention).
+    pub dims: Vec<usize>,
+}
+
+/// `dynamic_batching { ... }` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicBatching {
+    pub preferred_batch_sizes: Vec<usize>,
+    pub max_queue_delay_us: u64,
+}
+
+/// `instance_group [ ... ]` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceGroup {
+    pub count: usize,
+    pub kind: String,
+}
+
+/// Fully-parsed model serving config.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub platform: String,
+    pub max_batch_size: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub dynamic_batching: Option<DynamicBatching>,
+    pub instance_groups: Vec<InstanceGroup>,
+}
+
+impl ModelConfig {
+    /// Parse from `config.pbtxt` text.
+    pub fn from_pbtxt(text: &str) -> Result<Self, ConfigError> {
+        let root = parse_pbtxt(text).map_err(ConfigError::Syntax)?;
+
+        let name = root.get_str("name").ok_or(ConfigError::Missing("name"))?.to_string();
+        let platform = root.get_str("platform").unwrap_or("greenflow_pjrt").to_string();
+        let max_batch_size = root
+            .get_int("max_batch_size")
+            .ok_or(ConfigError::Missing("max_batch_size"))? as usize;
+
+        let tensor = |n: &PbNode| -> Result<TensorSpec, ConfigError> {
+            Ok(TensorSpec {
+                name: n.get_str("name").ok_or(ConfigError::Missing("input.name"))?.to_string(),
+                dtype: DataType::parse(
+                    n.get_ident("data_type").ok_or(ConfigError::Missing("data_type"))?,
+                )?,
+                dims: n
+                    .get_int_list("dims")
+                    .ok_or(ConfigError::Missing("dims"))?
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect(),
+            })
+        };
+
+        let inputs = root.get_msg_list("input").iter().map(|n| tensor(n)).collect::<Result<_, _>>()?;
+        let outputs =
+            root.get_msg_list("output").iter().map(|n| tensor(n)).collect::<Result<_, _>>()?;
+
+        let dynamic_batching = root.get_msg("dynamic_batching").map(|n| DynamicBatching {
+            preferred_batch_sizes: n
+                .get_int_list("preferred_batch_size")
+                .unwrap_or_default()
+                .iter()
+                .map(|&x| x as usize)
+                .collect(),
+            max_queue_delay_us: n.get_int("max_queue_delay_microseconds").unwrap_or(0) as u64,
+        });
+
+        let instance_groups = root
+            .get_msg_list("instance_group")
+            .iter()
+            .map(|n| InstanceGroup {
+                count: n.get_int("count").unwrap_or(1) as usize,
+                kind: n.get_ident("kind").unwrap_or("KIND_CPU").to_string(),
+            })
+            .collect();
+
+        Ok(ModelConfig {
+            name,
+            platform,
+            max_batch_size,
+            inputs,
+            outputs,
+            dynamic_batching,
+            instance_groups,
+        })
+    }
+
+    /// Total instance count across groups (>=1).
+    pub fn total_instances(&self) -> usize {
+        self.instance_groups.iter().map(|g| g.count).sum::<usize>().max(1)
+    }
+
+    /// Validate internal consistency (batch sizes, dims).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_batch_size == 0 {
+            return Err(ConfigError::Invalid("max_batch_size", "0".into()));
+        }
+        if self.inputs.is_empty() {
+            return Err(ConfigError::Missing("input"));
+        }
+        if let Some(db) = &self.dynamic_batching {
+            for &p in &db.preferred_batch_sizes {
+                if p == 0 || p > self.max_batch_size {
+                    return Err(ConfigError::Invalid(
+                        "preferred_batch_size",
+                        format!("{p} (max_batch_size {})", self.max_batch_size),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name: "distilbert_mini"
+platform: "greenflow_pjrt"
+max_batch_size: 8
+input [
+  {
+    name: "tokens"
+    data_type: TYPE_INT32
+    dims: [ 32 ]
+  }
+]
+output [
+  {
+    name: "logits"
+    data_type: TYPE_FP32
+    dims: [ 2 ]
+  }
+  {
+    name: "entropy"
+    data_type: TYPE_FP32
+    dims: [ 1 ]
+  }
+]
+dynamic_batching {
+  preferred_batch_size: [ 4, 8 ]
+  max_queue_delay_microseconds: 2000
+}
+instance_group [
+  {
+    count: 2
+    kind: KIND_CPU
+  }
+]
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let c = ModelConfig::from_pbtxt(SAMPLE).unwrap();
+        assert_eq!(c.name, "distilbert_mini");
+        assert_eq!(c.max_batch_size, 8);
+        assert_eq!(c.inputs.len(), 1);
+        assert_eq!(c.inputs[0].dtype, DataType::I32);
+        assert_eq!(c.inputs[0].dims, vec![32]);
+        assert_eq!(c.outputs.len(), 2);
+        let db = c.dynamic_batching.as_ref().unwrap();
+        assert_eq!(db.preferred_batch_sizes, vec![4, 8]);
+        assert_eq!(db.max_queue_delay_us, 2000);
+        assert_eq!(c.total_instances(), 2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn missing_name_fails() {
+        assert!(ModelConfig::from_pbtxt("max_batch_size: 4").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_preferred() {
+        let mut c = ModelConfig::from_pbtxt(SAMPLE).unwrap();
+        c.dynamic_batching.as_mut().unwrap().preferred_batch_sizes = vec![16];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn no_dynamic_batching_is_ok() {
+        let txt = r#"
+name: "m"
+max_batch_size: 1
+input [ { name: "x" data_type: TYPE_FP32 dims: [ 3 ] } ]
+output [ { name: "y" data_type: TYPE_FP32 dims: [ 1 ] } ]
+"#;
+        let c = ModelConfig::from_pbtxt(txt).unwrap();
+        assert!(c.dynamic_batching.is_none());
+        assert_eq!(c.total_instances(), 1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn real_artifact_config_parses_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/distilbert_mini/config.pbtxt");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let c = ModelConfig::from_pbtxt(&text).unwrap();
+            assert_eq!(c.name, "distilbert_mini");
+            c.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Tokenizer + recursive-descent parser for the protobuf text-format subset
+//! Triton uses in `config.pbtxt`:
+//!
+//! ```text
+//! name: "model"                     // scalar field (string)
+//! max_batch_size: 8                 // scalar field (int)
+//! data_type: TYPE_FP32              // scalar field (enum identifier)
+//! dims: [ 1, 2 ]                    // scalar list
+//! dynamic_batching { ... }          // nested message
+//! input [ { ... } { ... } ]         // repeated message (list form)
+//! ```
+//!
+//! Field-name/colon forms both with and without `:` before `{`/`[` are
+//! accepted, matching protobuf text-format.
+
+use std::collections::BTreeMap;
+
+/// A parsed field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PbValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// Bare identifier (enum constant like `TYPE_FP32` / `KIND_CPU`).
+    Ident(String),
+    IntList(Vec<i64>),
+    Msg(PbNode),
+    MsgList(Vec<PbNode>),
+}
+
+/// A message node: multimap of field name -> values (repeated fields keep
+/// every occurrence, in order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PbNode {
+    fields: BTreeMap<String, Vec<PbValue>>,
+}
+
+impl PbNode {
+    fn push(&mut self, key: String, v: PbValue) {
+        self.fields.entry(key).or_default().push(v);
+    }
+
+    fn first(&self, key: &str) -> Option<&PbValue> {
+        self.fields.get(key).and_then(|v| v.first())
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.first(key)? {
+            PbValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_ident(&self, key: &str) -> Option<&str> {
+        match self.first(key)? {
+            PbValue::Ident(s) => Some(s),
+            PbValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.first(key)? {
+            PbValue::Int(i) => Some(*i),
+            PbValue::Float(f) => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn get_int_list(&self, key: &str) -> Option<Vec<i64>> {
+        match self.first(key)? {
+            PbValue::IntList(v) => Some(v.clone()),
+            PbValue::Int(i) => Some(vec![*i]),
+            _ => None,
+        }
+    }
+
+    pub fn get_msg(&self, key: &str) -> Option<&PbNode> {
+        match self.first(key)? {
+            PbValue::Msg(n) => Some(n),
+            PbValue::MsgList(ns) => ns.first(),
+            _ => None,
+        }
+    }
+
+    /// All message values of a repeated field (both `f { } f { }` and
+    /// `f [ { } { } ]` forms).
+    pub fn get_msg_list(&self, key: &str) -> Vec<&PbNode> {
+        let mut out = Vec::new();
+        if let Some(vals) = self.fields.get(key) {
+            for v in vals {
+                match v {
+                    PbValue::Msg(n) => out.push(n),
+                    PbValue::MsgList(ns) => out.extend(ns.iter()),
+                    _ => {}
+                }
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Num(String),
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Colon,
+    Comma,
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>, String> {
+    let b = src.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'#' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'{' => {
+                out.push(Tok::LBrace);
+                i += 1;
+            }
+            b'}' => {
+                out.push(Tok::RBrace);
+                i += 1;
+            }
+            b'[' => {
+                out.push(Tok::LBracket);
+                i += 1;
+            }
+            b']' => {
+                out.push(Tok::RBracket);
+                i += 1;
+            }
+            b':' => {
+                out.push(Tok::Colon);
+                i += 1;
+            }
+            b',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            b'"' => {
+                i += 1;
+                let start = i;
+                while i < b.len() && b[i] != b'"' {
+                    if b[i] == b'\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                if i >= b.len() {
+                    return Err("unterminated string".into());
+                }
+                let raw = std::str::from_utf8(&b[start..i]).map_err(|e| e.to_string())?;
+                out.push(Tok::Str(raw.replace("\\\"", "\"").replace("\\\\", "\\")));
+                i += 1;
+            }
+            b'-' | b'0'..=b'9' => {
+                let start = i;
+                i += 1;
+                while i < b.len() && matches!(b[i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                {
+                    i += 1;
+                }
+                out.push(Tok::Num(
+                    std::str::from_utf8(&b[start..i]).map_err(|e| e.to_string())?.to_string(),
+                ));
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.push(Tok::Ident(
+                    std::str::from_utf8(&b[start..i]).map_err(|e| e.to_string())?.to_string(),
+                ));
+            }
+            c => return Err(format!("unexpected byte {:?} at {}", c as char, i)),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse pbtxt source into the root message node.
+pub fn parse_pbtxt(src: &str) -> Result<PbNode, String> {
+    let toks = tokenize(src)?;
+    let mut p = P { t: &toks, i: 0 };
+    let node = p.message_body(true)?;
+    if p.i != toks.len() {
+        return Err(format!("trailing tokens at {}", p.i));
+    }
+    Ok(node)
+}
+
+struct P<'a> {
+    t: &'a [Tok],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.t.get(self.i)
+    }
+
+    fn next(&mut self) -> Result<&'a Tok, String> {
+        let t = self.t.get(self.i).ok_or("unexpected end of input")?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    /// Parse fields until `}` (or EOF when `top` is true).
+    fn message_body(&mut self, top: bool) -> Result<PbNode, String> {
+        let mut node = PbNode::default();
+        loop {
+            match self.peek() {
+                None if top => return Ok(node),
+                None => return Err("unterminated message".into()),
+                Some(Tok::RBrace) if !top => {
+                    self.i += 1;
+                    return Ok(node);
+                }
+                Some(Tok::Ident(_)) => {
+                    let name = match self.next()? {
+                        Tok::Ident(s) => s.clone(),
+                        _ => unreachable!(),
+                    };
+                    let v = self.field_value()?;
+                    node.push(name, v);
+                }
+                Some(t) => return Err(format!("unexpected token {t:?}")),
+            }
+        }
+    }
+
+    fn field_value(&mut self) -> Result<PbValue, String> {
+        // optional colon
+        if matches!(self.peek(), Some(Tok::Colon)) {
+            self.i += 1;
+        }
+        match self.next()? {
+            Tok::Str(s) => Ok(PbValue::Str(s.clone())),
+            Tok::Ident(s) => Ok(PbValue::Ident(s.clone())),
+            Tok::Num(n) => Ok(parse_num(n)),
+            Tok::LBrace => Ok(PbValue::Msg(self.message_body(false)?)),
+            Tok::LBracket => self.list_value(),
+            t => Err(format!("unexpected token {t:?} as field value")),
+        }
+    }
+
+    fn list_value(&mut self) -> Result<PbValue, String> {
+        // Distinguish int lists from message lists by the first element.
+        let mut ints = Vec::new();
+        let mut msgs = Vec::new();
+        loop {
+            match self.peek().cloned() {
+                Some(Tok::RBracket) => {
+                    self.i += 1;
+                    break;
+                }
+                Some(Tok::Comma) => {
+                    self.i += 1;
+                }
+                Some(Tok::Num(n)) => {
+                    self.i += 1;
+                    match parse_num(&n) {
+                        PbValue::Int(v) => ints.push(v),
+                        PbValue::Float(f) => ints.push(f as i64),
+                        _ => unreachable!(),
+                    }
+                }
+                Some(Tok::LBrace) => {
+                    self.i += 1;
+                    msgs.push(self.message_body(false)?);
+                }
+                Some(t) => return Err(format!("unexpected token {t:?} in list")),
+                None => return Err("unterminated list".into()),
+            }
+        }
+        if !msgs.is_empty() {
+            Ok(PbValue::MsgList(msgs))
+        } else {
+            Ok(PbValue::IntList(ints))
+        }
+    }
+}
+
+fn parse_num(n: &str) -> PbValue {
+    if let Ok(i) = n.parse::<i64>() {
+        PbValue::Int(i)
+    } else {
+        PbValue::Float(n.parse::<f64>().unwrap_or(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_comments() {
+        let n = parse_pbtxt("# hello\nname: \"m\"\ncount: 3\nrate: 1.5\nkind: KIND_CPU").unwrap();
+        assert_eq!(n.get_str("name"), Some("m"));
+        assert_eq!(n.get_int("count"), Some(3));
+        assert_eq!(n.get_ident("kind"), Some("KIND_CPU"));
+    }
+
+    #[test]
+    fn int_lists() {
+        let n = parse_pbtxt("dims: [ 1, 2, 3 ]").unwrap();
+        assert_eq!(n.get_int_list("dims"), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn nested_message_with_and_without_colon() {
+        let n = parse_pbtxt("a { x: 1 }\nb: { y: 2 }").unwrap();
+        assert_eq!(n.get_msg("a").unwrap().get_int("x"), Some(1));
+        assert_eq!(n.get_msg("b").unwrap().get_int("y"), Some(2));
+    }
+
+    #[test]
+    fn repeated_message_list_form() {
+        let n = parse_pbtxt("input [ { name: \"a\" } { name: \"b\" } ]").unwrap();
+        let list = n.get_msg_list("input");
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[1].get_str("name"), Some("b"));
+    }
+
+    #[test]
+    fn repeated_field_form() {
+        let n = parse_pbtxt("g { c: 1 }\ng { c: 2 }").unwrap();
+        let list = n.get_msg_list("g");
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].get_int("c"), Some(1));
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(parse_pbtxt("a: {").is_err());
+        assert!(parse_pbtxt("[").is_err());
+        assert!(parse_pbtxt("a: \"unterminated").is_err());
+    }
+
+    #[test]
+    fn escaped_strings() {
+        let n = parse_pbtxt(r#"name: "a\"b""#).unwrap();
+        assert_eq!(n.get_str("name"), Some("a\"b"));
+    }
+}

@@ -1,0 +1,300 @@
+//! The closed-loop admission controller (paper Appendix A, Algorithm 1).
+//!
+//! Per request: compute J(x) from the live signals, compare against τ(t),
+//! admit or skip. The *closed loop* is the feedback path: the energy
+//! meter's EWMA and the congestion tracker feed the next decision's
+//! CostInputs, and every decision is logged to telemetry (MLflow analog)
+//! exactly as Algorithm 1 lines 11–12 prescribe.
+
+use crate::controller::cost::{CostInputs, CostWeights};
+use crate::controller::threshold::ThresholdSchedule;
+use crate::controller::AdmissionPolicy;
+
+/// Static configuration of the bio-controller.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    pub weights: CostWeights,
+    pub schedule: ThresholdSchedule,
+    /// Skipped requests may be answered from cache; when false they are
+    /// rejected outright (HTTP 429-style).
+    pub respond_from_cache: bool,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            weights: crate::controller::cost::WeightPolicy::Balanced.weights(),
+            schedule: ThresholdSchedule::paper_default(),
+            respond_from_cache: true,
+        }
+    }
+}
+
+/// Running statistics the controller exposes (admission rate feeds the
+/// adaptive-τ extension and the report rows).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmissionStats {
+    pub admitted: u64,
+    pub skipped: u64,
+    pub last_j: f64,
+    pub last_tau: f64,
+}
+
+impl AdmissionStats {
+    pub fn total(&self) -> u64 {
+        self.admitted + self.skipped
+    }
+
+    pub fn admission_rate(&self) -> f64 {
+        if self.total() == 0 {
+            1.0
+        } else {
+            self.admitted as f64 / self.total() as f64
+        }
+    }
+}
+
+/// The bio-inspired closed-loop controller.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: ControllerConfig,
+    stats: AdmissionStats,
+    /// Controller epoch: τ(t) is evaluated relative to this origin.
+    t0: f64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        cfg.schedule.validate().expect("invalid threshold schedule");
+        AdmissionController { cfg, stats: AdmissionStats::default(), t0: 0.0 }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(ControllerConfig::default())
+    }
+
+    /// Reset the τ(t) origin (e.g. after a deployment event); the paper's
+    /// "folding" restarts when the landscape changes.
+    pub fn restart_epoch(&mut self, now: f64) {
+        self.t0 = now;
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        self.stats
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Current threshold at absolute time `t`.
+    pub fn tau_at(&self, t: f64) -> f64 {
+        self.cfg.schedule.tau(t - self.t0)
+    }
+
+    /// Score a request without committing to a decision (used by the
+    /// landscape sketches).
+    pub fn score(&self, x: &CostInputs) -> f64 {
+        x.j(&self.cfg.weights)
+    }
+}
+
+impl AdmissionPolicy for AdmissionController {
+    fn decide(&mut self, x: &CostInputs, t: f64) -> Decision {
+        let j = x.j(&self.cfg.weights);
+        let tau = self.tau_at(t);
+        self.stats.last_j = j;
+        self.stats.last_tau = tau;
+        // Paper Eq. 2: admit iff J(x) >= tau(t).
+        if j >= tau {
+            self.stats.admitted += 1;
+            Decision::Admit { j, tau }
+        } else {
+            self.stats.skipped += 1;
+            let reason = if x.c_norm() < 0.2 {
+                SkipReason::Congestion
+            } else if x.e_norm() < 0.2 {
+                SkipReason::EnergySpike
+            } else {
+                SkipReason::LowUtility
+            };
+            Decision::Skip { j, tau, reason, cacheable: self.cfg.respond_from_cache }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "bio-controller"
+    }
+}
+
+/// A decision outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    Admit {
+        j: f64,
+        tau: f64,
+    },
+    Skip {
+        j: f64,
+        tau: f64,
+        reason: SkipReason,
+        /// Whether the skip path may answer from cache.
+        cacheable: bool,
+    },
+}
+
+impl Decision {
+    pub fn admitted(&self) -> bool {
+        matches!(self, Decision::Admit { .. })
+    }
+
+    pub fn j(&self) -> f64 {
+        match *self {
+            Decision::Admit { j, .. } | Decision::Skip { j, .. } => j,
+        }
+    }
+
+    pub fn tau(&self) -> f64 {
+        match *self {
+            Decision::Admit { tau, .. } | Decision::Skip { tau, .. } => tau,
+        }
+    }
+}
+
+/// Why a request was skipped (Table I's "costly transitions" taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkipReason {
+    /// Confident prediction: inference adds little information (§IV-A-A).
+    LowUtility,
+    /// Rolling joules/request spiked (§IV-A-B).
+    EnergySpike,
+    /// Queue/latency pressure (§IV-A-C, protects the stable basin).
+    Congestion,
+}
+
+impl SkipReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SkipReason::LowUtility => "low_utility",
+            SkipReason::EnergySpike => "energy_spike",
+            SkipReason::Congestion => "congestion",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::cost::WeightPolicy;
+
+    fn controller(schedule: ThresholdSchedule) -> AdmissionController {
+        AdmissionController::new(ControllerConfig {
+            weights: WeightPolicy::Balanced.weights(),
+            schedule,
+            respond_from_cache: true,
+        })
+    }
+
+    fn inputs(entropy_frac: f64) -> CostInputs {
+        CostInputs::from_entropy(entropy_frac * 2f64.ln(), 2f64.ln())
+    }
+
+    #[test]
+    fn admits_when_j_at_least_tau() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.5 });
+        // Idle system: E=C=1, so J = (L + 2)/3 with balanced weights.
+        let d = c.decide(&inputs(1.0), 0.0); // J = 1.0
+        assert!(d.admitted());
+        assert!((d.j() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equality_admits() {
+        // J == tau must admit (Eq. 2 is >=).
+        let mut c = controller(ThresholdSchedule::Constant { tau: 1.0 });
+        let d = c.decide(&inputs(1.0), 0.0);
+        assert!(d.admitted());
+    }
+
+    #[test]
+    fn skips_low_utility_when_tight() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.7 });
+        let d = c.decide(&inputs(0.0), 0.0); // J = 2/3 < 0.7
+        match d {
+            Decision::Skip { reason, cacheable, .. } => {
+                assert_eq!(reason, SkipReason::LowUtility);
+                assert!(cacheable);
+            }
+            _ => panic!("expected skip, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn congestion_reason_when_jammed() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.9 });
+        let mut x = inputs(0.5);
+        x.queue_depth = 64;
+        x.queue_capacity = 64;
+        match c.decide(&x, 0.0) {
+            Decision::Skip { reason, .. } => assert_eq!(reason, SkipReason::Congestion),
+            d => panic!("expected skip, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn energy_spike_reason() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.9 });
+        let mut x = inputs(0.5);
+        x.energy_ewma = 10.0;
+        x.energy_ref = 10.0;
+        match c.decide(&x, 0.0) {
+            Decision::Skip { reason, .. } => assert_eq!(reason, SkipReason::EnergySpike),
+            d => panic!("expected skip, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn threshold_tightens_with_time() {
+        // Early permissive epoch admits what the late strict epoch skips.
+        let mut c = controller(ThresholdSchedule::Exponential {
+            tau0: 0.0,
+            tau_inf: 0.9,
+            k: 0.5,
+        });
+        let x = inputs(0.2); // J = (0.2 + 2)/3 ≈ 0.733
+        assert!(c.decide(&x, 0.0).admitted(), "permissive at t=0");
+        assert!(!c.decide(&x, 100.0).admitted(), "strict at t→∞");
+    }
+
+    #[test]
+    fn stats_and_admission_rate() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.8 });
+        for i in 0..10 {
+            let frac = if i < 6 { 1.0 } else { 0.0 };
+            c.decide(&inputs(frac), 0.0);
+        }
+        let s = c.stats();
+        assert_eq!(s.admitted, 6);
+        assert_eq!(s.skipped, 4);
+        assert!((s.admission_rate() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epoch_restart_resets_tau() {
+        let mut c = controller(ThresholdSchedule::Exponential {
+            tau0: 0.1,
+            tau_inf: 0.9,
+            k: 1.0,
+        });
+        let strict = c.tau_at(100.0);
+        c.restart_epoch(100.0);
+        let fresh = c.tau_at(100.0);
+        assert!(fresh < strict);
+        assert!((fresh - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_rate_is_one() {
+        assert_eq!(AdmissionStats::default().admission_rate(), 1.0);
+    }
+}

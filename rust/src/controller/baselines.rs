@@ -1,0 +1,191 @@
+//! Ablation baselines for Table III and the weight sweeps:
+//!
+//! * [`OpenLoop`]   — the paper's "Standard" policy: admit everything.
+//! * [`StaticThreshold`] — Eq. 2 with a constant τ (no folding dynamics);
+//!   isolates the *decay* from the *thresholding*.
+//! * [`RandomDrop`] — admits a fixed fraction uniformly at random;
+//!   isolates "selective" from "fewer requests" (same admission rate as
+//!   the bio-controller but no utility awareness ⇒ larger accuracy loss).
+//! * [`Oracle`]     — admits exactly the requests whose prediction would
+//!   be wrong at skip time (upper bound on accuracy-per-joule).
+
+use crate::controller::cost::CostInputs;
+use crate::controller::{AdmissionPolicy, Decision, SkipReason};
+use crate::util::Rng;
+
+/// Admit everything (open-loop "Standard" row of Table III).
+#[derive(Debug, Default, Clone)]
+pub struct OpenLoop;
+
+impl AdmissionPolicy for OpenLoop {
+    fn decide(&mut self, x: &CostInputs, _t: f64) -> Decision {
+        Decision::Admit { j: x.j(&crate::controller::cost::WeightPolicy::Balanced.weights()), tau: 0.0 }
+    }
+
+    fn name(&self) -> &'static str {
+        "open-loop"
+    }
+}
+
+/// Constant-τ thresholding (no decay).
+#[derive(Debug, Clone)]
+pub struct StaticThreshold {
+    pub tau: f64,
+    pub weights: crate::controller::cost::CostWeights,
+}
+
+impl StaticThreshold {
+    pub fn new(tau: f64) -> Self {
+        StaticThreshold { tau, weights: crate::controller::cost::WeightPolicy::Balanced.weights() }
+    }
+}
+
+impl AdmissionPolicy for StaticThreshold {
+    fn decide(&mut self, x: &CostInputs, _t: f64) -> Decision {
+        let j = x.j(&self.weights);
+        if j >= self.tau {
+            Decision::Admit { j, tau: self.tau }
+        } else {
+            Decision::Skip { j, tau: self.tau, reason: SkipReason::LowUtility, cacheable: true }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "static-threshold"
+    }
+}
+
+/// Uniform random admission at rate `p` (utility-blind comparator).
+#[derive(Debug)]
+pub struct RandomDrop {
+    pub admit_prob: f64,
+    rng: Rng,
+}
+
+impl RandomDrop {
+    pub fn new(admit_prob: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&admit_prob));
+        RandomDrop { admit_prob, rng: Rng::new(seed) }
+    }
+}
+
+impl AdmissionPolicy for RandomDrop {
+    fn decide(&mut self, x: &CostInputs, _t: f64) -> Decision {
+        let j = x.j(&crate::controller::cost::WeightPolicy::Balanced.weights());
+        if self.rng.chance(self.admit_prob) {
+            Decision::Admit { j, tau: f64::NAN }
+        } else {
+            Decision::Skip { j, tau: f64::NAN, reason: SkipReason::LowUtility, cacheable: true }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random-drop"
+    }
+}
+
+/// Oracle: admit iff the cached/skip answer would be wrong — requires the
+/// latent confidence, so it only exists in simulation. Bounds what any
+/// admission policy could achieve.
+#[derive(Debug)]
+pub struct Oracle {
+    /// Entropy (normalised) above which the skip answer is likely wrong.
+    pub entropy_cut: f64,
+}
+
+impl Oracle {
+    pub fn new(entropy_cut: f64) -> Self {
+        Oracle { entropy_cut }
+    }
+}
+
+impl AdmissionPolicy for Oracle {
+    fn decide(&mut self, x: &CostInputs, _t: f64) -> Decision {
+        let l = x.l_norm();
+        if l >= self.entropy_cut {
+            Decision::Admit { j: l, tau: self.entropy_cut }
+        } else {
+            Decision::Skip {
+                j: l,
+                tau: self.entropy_cut,
+                reason: SkipReason::LowUtility,
+                cacheable: true,
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn x(frac: f64) -> CostInputs {
+        CostInputs::from_entropy(frac * 2f64.ln(), 2f64.ln())
+    }
+
+    #[test]
+    fn open_loop_admits_everything() {
+        let mut p = OpenLoop;
+        for i in 0..100 {
+            assert!(p.decide(&x(i as f64 / 100.0), i as f64).admitted());
+        }
+    }
+
+    #[test]
+    fn static_threshold_cuts_by_j() {
+        let mut p = StaticThreshold::new(0.8);
+        assert!(p.decide(&x(1.0), 0.0).admitted());
+        assert!(!p.decide(&x(0.0), 0.0).admitted());
+        // Time-invariant: same decision at any t.
+        assert!(!p.decide(&x(0.0), 1e6).admitted());
+    }
+
+    #[test]
+    fn random_drop_hits_target_rate() {
+        let mut p = RandomDrop::new(0.58, 7);
+        let n = 20_000;
+        let admitted = (0..n).filter(|&i| p.decide(&x(0.5), i as f64).admitted()).count();
+        let rate = admitted as f64 / n as f64;
+        assert!((rate - 0.58).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn random_drop_is_utility_blind() {
+        // Admission must be independent of entropy: compare rates.
+        let mut p = RandomDrop::new(0.5, 9);
+        let mut lo = 0;
+        let mut hi = 0;
+        for i in 0..10_000 {
+            if p.decide(&x(0.05), i as f64).admitted() {
+                lo += 1;
+            }
+            if p.decide(&x(0.95), i as f64).admitted() {
+                hi += 1;
+            }
+        }
+        assert!((lo as f64 - hi as f64).abs() / 10_000.0 < 0.03);
+    }
+
+    #[test]
+    fn oracle_splits_on_entropy() {
+        let mut p = Oracle::new(0.5);
+        assert!(p.decide(&x(0.9), 0.0).admitted());
+        assert!(!p.decide(&x(0.1), 0.0).admitted());
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let names = [
+            OpenLoop.name(),
+            StaticThreshold::new(0.5).name(),
+            RandomDrop::new(0.5, 1).name(),
+            Oracle::new(0.5).name(),
+        ];
+        let set: std::collections::BTreeSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
+    }
+}

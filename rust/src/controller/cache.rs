@@ -1,0 +1,142 @@
+//! The skip path: a response cache (Algorithm 1 line 9, "Skip or respond
+//! from cache").
+//!
+//! Keyed by a quantised input signature so near-duplicate requests hit.
+//! For cold skips the cache answers with the screener's argmax (cheap
+//! prediction) — this is why skipping confident requests costs almost no
+//! accuracy: a confident screener is almost always right, by calibration.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// Cached answer for a request signature.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CachedResponse {
+    pub label: u32,
+    pub confidence: f64,
+}
+
+/// Bounded LRU-ish response cache (FIFO eviction; the workload has no
+/// scan-resistance requirement).
+#[derive(Debug)]
+pub struct ResponseCache {
+    map: HashMap<u64, CachedResponse>,
+    order: VecDeque<u64>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ResponseCache {
+            map: HashMap::with_capacity(capacity),
+            order: VecDeque::with_capacity(capacity),
+            capacity,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Quantise an input signature: bucket the payload seed space so
+    /// similar payloads (same generator cluster) share an entry.
+    pub fn signature(model: &str, seed: u64, clusters: u64) -> u64 {
+        // FNV-1a over the model name, mixed with the seed's cluster.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in model.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h ^ (seed % clusters.max(1))
+    }
+
+    pub fn get(&mut self, sig: u64) -> Option<CachedResponse> {
+        let r = self.map.get(&sig).copied();
+        if r.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        r
+    }
+
+    pub fn put(&mut self, sig: u64, resp: CachedResponse) {
+        if self.map.len() >= self.capacity && !self.map.contains_key(&sig) {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        if self.map.insert(sig, resp).is_none() {
+            self.order.push_back(sig);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut c = ResponseCache::new(4);
+        let sig = ResponseCache::signature("m", 42, 100);
+        assert!(c.get(sig).is_none());
+        c.put(sig, CachedResponse { label: 1, confidence: 0.9 });
+        assert_eq!(c.get(sig).unwrap().label, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_bounds_size() {
+        let mut c = ResponseCache::new(3);
+        for i in 0..10u64 {
+            c.put(i, CachedResponse { label: i as u32, confidence: 1.0 });
+        }
+        assert_eq!(c.len(), 3);
+        assert!(c.get(0).is_none(), "oldest evicted");
+        assert!(c.get(9).is_some(), "newest kept");
+    }
+
+    #[test]
+    fn update_does_not_grow() {
+        let mut c = ResponseCache::new(2);
+        c.put(1, CachedResponse { label: 0, confidence: 0.5 });
+        c.put(1, CachedResponse { label: 1, confidence: 0.6 });
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(1).unwrap().label, 1);
+    }
+
+    #[test]
+    fn signature_clusters_seeds() {
+        let a = ResponseCache::signature("m", 5, 10);
+        let b = ResponseCache::signature("m", 15, 10); // same cluster (5 mod 10)
+        let c = ResponseCache::signature("m", 6, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, ResponseCache::signature("other", 5, 10));
+    }
+
+    #[test]
+    fn zero_cluster_guard() {
+        // clusters=0 must not divide by zero.
+        let _ = ResponseCache::signature("m", 5, 0);
+    }
+}

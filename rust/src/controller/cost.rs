@@ -1,0 +1,248 @@
+//! The cost functional J(x) = α·L(x) + β·E(x) + γ·C(x) (paper Eq. 1) with
+//! the weight policies of §IV-A ("performance priority → increase α, γ;
+//! ecology priority → increase β").
+//!
+//! Proxies are normalised to [0, 1] before weighting so a single τ scale
+//! works across models and devices:
+//!
+//! * `L` — entropy / ln(classes) (max-entropy ⇒ 1);
+//! * `E` — *inverted* rolling-energy headroom: low recent joules/request
+//!   means executing is cheap ⇒ contributes toward admission; an energy
+//!   spike pushes E(x)'s contribution down so "only very valuable ...
+//!   requests pass" (§IV-A-B). Encoded as `1 − min(ewma/e_ref, 1)`.
+//! * `C` — congestion headroom, likewise inverted: an idle system (short
+//!   queue, low P95) leaves C(x) near 1; congestion pushes it to 0 so
+//!   high-γ policies shed load under pressure (§IV-A-C, Table I row 4).
+
+/// Weights (α, β, γ) of Eq. 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostWeights {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+impl CostWeights {
+    pub fn new(alpha: f64, beta: f64, gamma: f64) -> Self {
+        assert!(alpha >= 0.0 && beta >= 0.0 && gamma >= 0.0, "weights must be >= 0");
+        CostWeights { alpha, beta, gamma }
+    }
+
+    /// Normalise weights to sum 1 (keeps J in [0, 1]).
+    pub fn normalised(self) -> Self {
+        let s = self.alpha + self.beta + self.gamma;
+        assert!(s > 0.0, "at least one weight must be positive");
+        CostWeights { alpha: self.alpha / s, beta: self.beta / s, gamma: self.gamma / s }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.alpha + self.beta + self.gamma
+    }
+}
+
+/// §IV-A weight presets ("policy knobs").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightPolicy {
+    /// Equal weighting.
+    Balanced,
+    /// Performance priority: raise α (utility) and γ (protect latency).
+    Performance,
+    /// Ecology priority: raise β (energy dominates admission).
+    Ecology,
+}
+
+impl WeightPolicy {
+    pub fn weights(self) -> CostWeights {
+        match self {
+            WeightPolicy::Balanced => CostWeights::new(1.0, 1.0, 1.0).normalised(),
+            WeightPolicy::Performance => CostWeights::new(2.0, 0.5, 1.5).normalised(),
+            WeightPolicy::Ecology => CostWeights::new(1.0, 2.5, 0.5).normalised(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "balanced" => Some(WeightPolicy::Balanced),
+            "performance" | "perf" => Some(WeightPolicy::Performance),
+            "ecology" | "eco" => Some(WeightPolicy::Ecology),
+            _ => None,
+        }
+    }
+}
+
+/// Raw signals for one request, before normalisation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostInputs {
+    /// Prediction entropy estimate in nats (screener or cached).
+    pub entropy: f64,
+    /// ln(number of classes) — entropy normaliser.
+    pub max_entropy: f64,
+    /// Rolling joules/request EWMA (the meter's E(x) input).
+    pub energy_ewma: f64,
+    /// Reference joules/request for normalisation (e.g. the model's
+    /// steady-state per-request energy at batch 1).
+    pub energy_ref: f64,
+    /// Current queue depth (requests waiting).
+    pub queue_depth: usize,
+    /// Queue depth considered saturated (normaliser).
+    pub queue_capacity: usize,
+    /// Recent P95 latency (s).
+    pub p95_latency: f64,
+    /// Latency SLO used to normalise P95 (s).
+    pub slo_latency: f64,
+}
+
+impl CostInputs {
+    /// Normalised utility L(x) ∈ [0, 1].
+    pub fn l_norm(&self) -> f64 {
+        if self.max_entropy <= 0.0 {
+            return 0.0;
+        }
+        (self.entropy / self.max_entropy).clamp(0.0, 1.0)
+    }
+
+    /// Normalised energy-headroom term E(x) ∈ [0, 1]
+    /// (1 = cheap to execute now, 0 = energy spike).
+    pub fn e_norm(&self) -> f64 {
+        if self.energy_ref <= 0.0 {
+            return 1.0;
+        }
+        1.0 - (self.energy_ewma / self.energy_ref).clamp(0.0, 1.0)
+    }
+
+    /// Normalised congestion-headroom term C(x) ∈ [0, 1]
+    /// (1 = idle, 0 = saturated queue or blown SLO).
+    pub fn c_norm(&self) -> f64 {
+        let q = if self.queue_capacity == 0 {
+            0.0
+        } else {
+            (self.queue_depth as f64 / self.queue_capacity as f64).clamp(0.0, 1.0)
+        };
+        let lat = if self.slo_latency <= 0.0 {
+            0.0
+        } else {
+            (self.p95_latency / self.slo_latency).clamp(0.0, 1.0)
+        };
+        // Worst of the two pressures dominates (max pressure = min headroom).
+        1.0 - q.max(lat)
+    }
+
+    /// The weighted functional J(x) (Eq. 1) over normalised proxies.
+    pub fn j(&self, w: &CostWeights) -> f64 {
+        w.alpha * self.l_norm() + w.beta * self.e_norm() + w.gamma * self.c_norm()
+    }
+
+    /// Convenience constructor for an idle system observing only entropy
+    /// (tests, landscape sketches).
+    pub fn from_entropy(entropy: f64, max_entropy: f64) -> Self {
+        CostInputs {
+            entropy,
+            max_entropy,
+            energy_ewma: 0.0,
+            energy_ref: 1.0,
+            queue_depth: 0,
+            queue_capacity: 64,
+            p95_latency: 0.0,
+            slo_latency: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(entropy: f64) -> CostInputs {
+        CostInputs::from_entropy(entropy, 2f64.ln())
+    }
+
+    #[test]
+    fn l_normalises_entropy() {
+        assert!((idle(2f64.ln()).l_norm() - 1.0).abs() < 1e-12);
+        assert_eq!(idle(0.0).l_norm(), 0.0);
+        assert_eq!(idle(10.0).l_norm(), 1.0, "clamped");
+    }
+
+    #[test]
+    fn e_headroom_inverts_spikes() {
+        let mut x = idle(0.3);
+        x.energy_ref = 10.0;
+        x.energy_ewma = 0.0;
+        assert_eq!(x.e_norm(), 1.0);
+        x.energy_ewma = 10.0;
+        assert_eq!(x.e_norm(), 0.0);
+        x.energy_ewma = 2.5;
+        assert!((x.e_norm() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c_headroom_takes_worst_pressure() {
+        let mut x = idle(0.3);
+        x.queue_depth = 32;
+        x.queue_capacity = 64;
+        x.p95_latency = 0.9;
+        x.slo_latency = 1.0;
+        // queue pressure 0.5, latency pressure 0.9 -> headroom 0.1
+        assert!((x.c_norm() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn j_is_weighted_sum() {
+        let x = idle(2f64.ln()); // L=1, E=1, C=1
+        let w = CostWeights::new(1.0, 1.0, 1.0).normalised();
+        assert!((x.j(&w) - 1.0).abs() < 1e-12);
+        let w2 = CostWeights::new(1.0, 0.0, 0.0);
+        assert!((x.j(&w2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncertain_requests_score_higher() {
+        // §IV-A-A: admit high-uncertainty, reject already-confident.
+        let w = WeightPolicy::Balanced.weights();
+        assert!(idle(0.69).j(&w) > idle(0.05).j(&w));
+    }
+
+    #[test]
+    fn congestion_lowers_j() {
+        // Table I row 4: high C(x) pressure must push J below τ.
+        let w = WeightPolicy::Balanced.weights();
+        let calm = idle(0.3);
+        let mut jammed = calm;
+        jammed.queue_depth = 64;
+        assert!(jammed.j(&w) < calm.j(&w));
+    }
+
+    #[test]
+    fn policies_order_weights_as_stated() {
+        let p = WeightPolicy::Performance.weights();
+        let e = WeightPolicy::Ecology.weights();
+        let b = WeightPolicy::Balanced.weights();
+        assert!(p.alpha > b.alpha && p.gamma > b.gamma);
+        assert!(e.beta > b.beta);
+        for w in [p, e, b] {
+            assert!((w.sum() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn policy_lookup() {
+        assert_eq!(WeightPolicy::by_name("eco"), Some(WeightPolicy::Ecology));
+        assert!(WeightPolicy::by_name("chaos").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_weights_panic() {
+        CostWeights::new(-1.0, 0.0, 0.0);
+    }
+
+    #[test]
+    fn zero_capacity_degrades_gracefully() {
+        let mut x = idle(0.1);
+        x.queue_capacity = 0;
+        x.slo_latency = 0.0;
+        assert_eq!(x.c_norm(), 1.0);
+        x.energy_ref = 0.0;
+        assert_eq!(x.e_norm(), 1.0);
+    }
+}

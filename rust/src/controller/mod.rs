@@ -1,0 +1,51 @@
+//! The paper's contribution: closed-loop, bio-inspired admission control.
+//!
+//! A request `x` is scored with the cost functional (paper Eq. 1)
+//!
+//! ```text
+//! J(x) = α·L(x) + β·E(x) + γ·C(x)
+//! ```
+//!
+//! where `L` is an uncertainty/utility proxy (softmax entropy from the
+//! screener or cache), `E` the rolling marginal energy (joules/request
+//! EWMA from [`crate::energy::EnergyMeter`]), and `C` a congestion
+//! penalty (queue depth, recent P95). It is admitted iff (Eq. 2)
+//!
+//! ```text
+//! J(x) ≥ τ(t),    τ(t) = τ∞ + (τ0 − τ∞)·e^(−kt)      (Eq. 3)
+//! ```
+//!
+//! — the protein-folding analogy of §IV-A: permissive exploration at
+//! startup (high τ₀ admits broadly while the system finds a basin), then
+//! admission tightens toward τ∞ once the serving regime stabilises,
+//! pruning low-utility work instead of chasing the costly global minimum.
+//!
+//! Note the direction: the controller **admits high-J** requests — high
+//! uncertainty means the model's answer carries information; a
+//! low-entropy request is answered from the response cache at near-zero
+//! energy (Appendix A line 9, "skip or respond from cache").
+//!
+//! Submodules: [`threshold`] (τ(t) schedules), [`cost`] (J(x) and weight
+//! policies), [`admission`] (the closed-loop controller), [`cache`]
+//! (the skip path), [`baselines`] (open-loop / static-τ / random-drop
+//! comparators for the Table III ablation).
+
+pub mod admission;
+pub mod baselines;
+pub mod cache;
+pub mod cost;
+pub mod threshold;
+
+pub use admission::{AdmissionController, ControllerConfig, Decision, SkipReason};
+pub use baselines::{OpenLoop, Oracle, RandomDrop, StaticThreshold};
+pub use cost::{CostInputs, CostWeights, WeightPolicy};
+pub use threshold::ThresholdSchedule;
+
+/// Common interface for the bio-controller and every ablation baseline.
+pub trait AdmissionPolicy: Send {
+    /// Decide whether to admit the request with signals `x` at time `t`.
+    fn decide(&mut self, x: &CostInputs, t: f64) -> Decision;
+
+    /// Human-readable policy name (report rows).
+    fn name(&self) -> &'static str;
+}

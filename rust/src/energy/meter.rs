@@ -1,0 +1,198 @@
+//! The energy meter: attributes joules to requests and maintains the
+//! rolling joules/request EWMA that the controller reads as E(x).
+//!
+//! Two attribution modes, mirroring how the paper's numbers were produced:
+//!
+//! * **Simulated** — energy = profile.exec_energy(flops): what the paper's
+//!   GPU *would* burn for that much work (plus idle leakage attributed
+//!   over wallclock). Used to report kWh/CO₂ on the paper's devices.
+//! * **Measured** — energy = wallclock × power(profile, utilization):
+//!   integrates the actual CPU execution interval. Used for §Perf where
+//!   relative changes matter.
+
+use std::sync::Mutex;
+
+use super::profile::DeviceProfile;
+use crate::stats::{Ewma, Streaming};
+
+/// One request's energy attribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyReading {
+    /// Joules attributed to this request.
+    pub joules: f64,
+    /// Rolling joules/request EWMA *after* this reading (the E(x) proxy).
+    pub ewma_joules: f64,
+}
+
+/// Attribution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeterMode {
+    /// Energy from FLOPs through the device profile roofline.
+    SimulatedFlops,
+    /// Energy from measured busy seconds at full utilization.
+    MeasuredWallclock,
+}
+
+/// Thread-safe energy accountant for one serving path.
+///
+/// A single `Mutex` is fine here: the critical section is ~100 ns and the
+/// meter is touched once per request (not per batch item).
+#[derive(Debug)]
+pub struct EnergyMeter {
+    inner: Mutex<Inner>,
+    profile: DeviceProfile,
+    mode: MeterMode,
+}
+
+#[derive(Debug)]
+struct Inner {
+    ewma: Ewma,
+    totals: Streaming,
+    total_joules: f64,
+}
+
+impl EnergyMeter {
+    /// `ewma_span`: number of requests over which E(x) forgets (paper uses
+    /// a "rolling average of joules per request").
+    pub fn new(profile: DeviceProfile, mode: MeterMode, ewma_span: f64) -> Self {
+        EnergyMeter {
+            inner: Mutex::new(Inner {
+                ewma: Ewma::with_span(ewma_span),
+                totals: Streaming::new(),
+                total_joules: 0.0,
+            }),
+            profile,
+            mode,
+        }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    pub fn mode(&self) -> MeterMode {
+        self.mode
+    }
+
+    /// Record a request execution: `flops` of attributed work over
+    /// `busy_secs` of wallclock (per-item share of its batch).
+    pub fn record(&self, flops: f64, busy_secs: f64) -> EnergyReading {
+        let joules = match self.mode {
+            MeterMode::SimulatedFlops => self.profile.exec_energy(flops),
+            MeterMode::MeasuredWallclock => self.profile.power_at(1.0) * busy_secs,
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.total_joules += joules;
+        g.totals.push(joules);
+        let ewma = g.ewma.push(joules);
+        EnergyReading { joules, ewma_joules: ewma }
+    }
+
+    /// Attribute idle leakage over a wallclock interval with no requests
+    /// (counted into totals but not into the per-request EWMA).
+    pub fn record_idle(&self, secs: f64) {
+        let joules = self.profile.power_at(0.0) * secs;
+        self.inner.lock().unwrap().total_joules += joules;
+    }
+
+    /// Current rolling joules/request (the controller's E(x) input);
+    /// `default` until the first request.
+    pub fn ewma_joules(&self, default: f64) -> f64 {
+        self.inner.lock().unwrap().ewma.get_or(default)
+    }
+
+    /// Total attributed joules so far.
+    pub fn total_joules(&self) -> f64 {
+        self.inner.lock().unwrap().total_joules
+    }
+
+    /// Total in kWh (CodeCarbon's reporting unit).
+    pub fn total_kwh(&self) -> f64 {
+        super::joules_to_kwh(self.total_joules())
+    }
+
+    /// (count, mean, std) of per-request joules.
+    pub fn per_request_stats(&self) -> (u64, f64, f64) {
+        let g = self.inner.lock().unwrap();
+        (g.totals.count(), g.totals.mean(), g.totals.std_dev())
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.ewma.reset();
+        g.totals = Streaming::new();
+        g.total_joules = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meter(mode: MeterMode) -> EnergyMeter {
+        EnergyMeter::new(DeviceProfile::rtx4000_ada(), mode, 16.0)
+    }
+
+    #[test]
+    fn simulated_mode_uses_flops() {
+        let m = meter(MeterMode::SimulatedFlops);
+        let r1 = m.record(1e9, 0.0);
+        let r2 = m.record(2e9, 0.0);
+        assert!((r2.joules / r1.joules - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_mode_uses_wallclock() {
+        let m = meter(MeterMode::MeasuredWallclock);
+        let r = m.record(0.0, 0.5);
+        let expect = DeviceProfile::rtx4000_ada().peak_watts * 0.5;
+        assert!((r.joules - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_tracks_constant_load() {
+        let m = meter(MeterMode::SimulatedFlops);
+        let mut last = 0.0;
+        for _ in 0..200 {
+            last = m.record(1e9, 0.0).ewma_joules;
+        }
+        let single = DeviceProfile::rtx4000_ada().exec_energy(1e9);
+        assert!((last - single).abs() / single < 1e-6);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let m = meter(MeterMode::SimulatedFlops);
+        for _ in 0..10 {
+            m.record(1e9, 0.0);
+        }
+        let (n, mean, std) = m.per_request_stats();
+        assert_eq!(n, 10);
+        assert!(std.abs() < 1e-12);
+        assert!((m.total_joules() - 10.0 * mean).abs() < 1e-9);
+        assert!(m.total_kwh() > 0.0);
+    }
+
+    #[test]
+    fn idle_counts_into_totals_not_ewma() {
+        let m = meter(MeterMode::SimulatedFlops);
+        m.record_idle(10.0);
+        assert!(m.total_joules() > 0.0);
+        assert_eq!(m.ewma_joules(-1.0), -1.0, "EWMA untouched by idle");
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = meter(MeterMode::SimulatedFlops);
+        m.record(1e9, 0.0);
+        m.reset();
+        assert_eq!(m.total_joules(), 0.0);
+        assert_eq!(m.per_request_stats().0, 0);
+    }
+
+    #[test]
+    fn meter_is_sync() {
+        fn is_sync<T: Sync>() {}
+        is_sync::<EnergyMeter>();
+    }
+}

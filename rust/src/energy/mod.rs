@@ -1,0 +1,43 @@
+//! Energy metering substrate — the CodeCarbon + NVML analog (DESIGN.md §2).
+//!
+//! The paper estimates per-request energy by sampling GPU power via NVML
+//! and attributing it with CodeCarbon. Without the physical GPU we keep the
+//! *interface* and the *dynamics* identical and substitute the power
+//! source:
+//!
+//! * [`profile::DeviceProfile`] — published idle/peak power and peak
+//!   FLOP/s for the paper's devices (RTX 4000 Ada, A100, RTX 4090) plus
+//!   the CPU we actually run on;
+//! * [`meter::EnergyMeter`] — integrates utilization-derived power over
+//!   measured execution intervals, maintaining the rolling joules/request
+//!   EWMA that is the controller's E(x) proxy (Appendix A, line 3);
+//! * [`sampler::PowerSampler`] — NVML-style noisy periodic power readings
+//!   for telemetry export;
+//! * [`carbon::CarbonAccountant`] — kWh -> CO₂ with a regional grid
+//!   intensity table (the paper's §VIII threat: "CO₂ estimates depend on
+//!   regional grid intensity").
+
+pub mod carbon;
+pub mod meter;
+pub mod profile;
+pub mod sampler;
+
+pub use carbon::CarbonAccountant;
+pub use meter::{EnergyMeter, EnergyReading};
+pub use profile::DeviceProfile;
+
+/// Joules -> kWh.
+pub const J_PER_KWH: f64 = 3.6e6;
+
+/// Convert joules to kWh.
+pub fn joules_to_kwh(j: f64) -> f64 {
+    j / J_PER_KWH
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn kwh_conversion() {
+        assert!((super::joules_to_kwh(3.6e6) - 1.0).abs() < 1e-12);
+    }
+}

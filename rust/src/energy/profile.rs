@@ -1,0 +1,156 @@
+//! Device power/compute profiles.
+//!
+//! Numbers are public board specifications (TGP, boost-clock FLOP/s); the
+//! energy model only needs *ratios* to be plausible — DESIGN.md §2 notes
+//! that absolute joules are testbed-bound while the controller consumes
+//! only the rolling EWMA and the report compares deltas.
+
+/// Static description of an execution device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Power draw when idle (W).
+    pub idle_watts: f64,
+    /// Power draw at full utilization (W).
+    pub peak_watts: f64,
+    /// Peak dense f32 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// Memory bandwidth (B/s) — used for roofline estimates.
+    pub mem_bw: f64,
+    /// Fraction of peak FLOP/s a well-tuned serving kernel achieves.
+    /// Calibrates simulated execution time; ~0.25–0.45 on small batches.
+    pub achievable_frac: f64,
+}
+
+impl DeviceProfile {
+    /// NVIDIA RTX 4000 Ada (the paper's abstract/eval GPU): 130 W board
+    /// power, 26.7 TFLOP/s f32, 360 GB/s.
+    pub fn rtx4000_ada() -> Self {
+        DeviceProfile {
+            name: "rtx4000_ada",
+            idle_watts: 16.0,
+            peak_watts: 130.0,
+            peak_flops: 26.7e12,
+            mem_bw: 360.0e9,
+            achievable_frac: 0.30,
+        }
+    }
+
+    /// NVIDIA A100 SXM (Table III's ablation device): 400 W, 19.5 TFLOP/s
+    /// f32 (non-tensor), 1555 GB/s.
+    pub fn a100() -> Self {
+        DeviceProfile {
+            name: "a100",
+            idle_watts: 55.0,
+            peak_watts: 400.0,
+            peak_flops: 19.5e12,
+            mem_bw: 1555.0e9,
+            achievable_frac: 0.35,
+        }
+    }
+
+    /// NVIDIA RTX 4090 (Appendix B PoC box): 450 W, 82.6 TFLOP/s f32,
+    /// 1008 GB/s.
+    pub fn rtx4090() -> Self {
+        DeviceProfile {
+            name: "rtx4090",
+            idle_watts: 22.0,
+            peak_watts: 450.0,
+            peak_flops: 82.6e12,
+            mem_bw: 1008.0e9,
+            achievable_frac: 0.30,
+        }
+    }
+
+    /// The EPYC-class CPU the reproduction actually executes on (PJRT CPU
+    /// backend). Used when metering *measured* wallclock.
+    pub fn cpu_epyc() -> Self {
+        DeviceProfile {
+            name: "cpu_epyc",
+            idle_watts: 90.0,
+            peak_watts: 280.0,
+            peak_flops: 2.0e12,
+            mem_bw: 200.0e9,
+            achievable_frac: 0.20,
+        }
+    }
+
+    /// Look up a profile by name (CLI `--device`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "rtx4000_ada" | "rtx4000ada" => Some(Self::rtx4000_ada()),
+            "a100" => Some(Self::a100()),
+            "rtx4090" => Some(Self::rtx4090()),
+            "cpu" | "cpu_epyc" => Some(Self::cpu_epyc()),
+            _ => None,
+        }
+    }
+
+    /// Power draw at a given utilization in [0, 1]: affine interpolation
+    /// between idle and peak (the first-order NVML-observed behaviour).
+    pub fn power_at(&self, utilization: f64) -> f64 {
+        let u = utilization.clamp(0.0, 1.0);
+        self.idle_watts + (self.peak_watts - self.idle_watts) * u
+    }
+
+    /// Simulated execution time for `flops` of work at a given achieved
+    /// utilization (compute roofline; the serving models are far from the
+    /// bandwidth roof at these sizes).
+    pub fn exec_time(&self, flops: f64) -> f64 {
+        flops / (self.peak_flops * self.achievable_frac)
+    }
+
+    /// Energy (J) to run `flops` of work: busy power times roofline time.
+    pub fn exec_energy(&self, flops: f64) -> f64 {
+        self.power_at(1.0) * self.exec_time(flops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(DeviceProfile::by_name("a100").unwrap().name, "a100");
+        assert_eq!(DeviceProfile::by_name("cpu").unwrap().name, "cpu_epyc");
+        assert!(DeviceProfile::by_name("tpu9000").is_none());
+    }
+
+    #[test]
+    fn power_interpolates_and_clamps() {
+        let d = DeviceProfile::rtx4000_ada();
+        assert_eq!(d.power_at(0.0), d.idle_watts);
+        assert_eq!(d.power_at(1.0), d.peak_watts);
+        assert_eq!(d.power_at(2.0), d.peak_watts);
+        let mid = d.power_at(0.5);
+        assert!(mid > d.idle_watts && mid < d.peak_watts);
+    }
+
+    #[test]
+    fn exec_time_scales_linearly() {
+        let d = DeviceProfile::a100();
+        let t1 = d.exec_time(1e9);
+        let t2 = d.exec_time(2e9);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_gpu_is_faster() {
+        let f = 1e12;
+        assert!(DeviceProfile::rtx4090().exec_time(f) < DeviceProfile::rtx4000_ada().exec_time(f));
+    }
+
+    #[test]
+    fn energy_positive_and_finite() {
+        for d in [
+            DeviceProfile::rtx4000_ada(),
+            DeviceProfile::a100(),
+            DeviceProfile::rtx4090(),
+            DeviceProfile::cpu_epyc(),
+        ] {
+            let e = d.exec_energy(4.7e6); // distilbert_mini b1
+            assert!(e.is_finite() && e > 0.0, "{}: {e}", d.name);
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! Minimal JSON parser + writer (serde is unavailable offline; DESIGN.md §6).
+//!
+//! Covers the full JSON grammar needed by `manifest.json` /
+//! `repository.json` and by telemetry export: objects, arrays, strings
+//! with escapes, numbers, booleans, null. Not intended as a general-purpose
+//! library: numbers parse to f64 (the manifests only carry ints that fit).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use thiserror::Error;
+
+/// A JSON value. Object keys are sorted (BTreeMap) so output is canonical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, Error)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character {0:?} at byte {1}")]
+    Unexpected(char, usize),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid escape at byte {0}")]
+    BadEscape(usize),
+    #[error("trailing garbage at byte {0}")]
+    Trailing(usize),
+    #[error("type error: expected {0}")]
+    Type(&'static str),
+    #[error("missing key {0:?}")]
+    Missing(String),
+}
+
+impl Value {
+    // ---------------------------------------------------------- accessors
+
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => Err(JsonError::Type("number")),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64, JsonError> {
+        Ok(self.as_f64()? as i64)
+    }
+
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(JsonError::Type("string")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value], JsonError> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => Err(JsonError::Type("array")),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>, JsonError> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            _ => Err(JsonError::Type("object")),
+        }
+    }
+
+    /// Object field access: `v.get("params")?`.
+    pub fn get(&self, key: &str) -> Result<&Value, JsonError> {
+        self.as_obj()?.get(key).ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+
+    /// Optional field access (None when absent, error when not an object).
+    pub fn opt(&self, key: &str) -> Result<Option<&Value>, JsonError> {
+        Ok(self.as_obj()?.get(key))
+    }
+
+    // ---------------------------------------------------------- writer
+
+    /// Serialise to a compact JSON string.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => write_escaped(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience constructors.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+
+pub fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+// ------------------------------------------------------------------ parser
+
+/// Parse a complete JSON document.
+pub fn parse(input: &str) -> Result<Value, JsonError> {
+    let bytes = input.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != bytes.len() {
+        return Err(JsonError::Trailing(p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8, JsonError> {
+        self.b.get(self.i).copied().ok_or(JsonError::Eof(self.i))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(JsonError::Unexpected(self.b[self.i] as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, JsonError> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(JsonError::Unexpected(c as char, self.i)),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(JsonError::Unexpected(self.b[self.i] as char, self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, JsonError> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .map(Value::Num)
+            .ok_or(JsonError::BadNumber(start))
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(JsonError::Eof(self.i));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| JsonError::BadEscape(self.i))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| JsonError::BadEscape(self.i))?;
+                            // BMP only — manifests never carry surrogate pairs.
+                            out.push(char::from_u32(cp).ok_or(JsonError::BadEscape(self.i))?);
+                            self.i += 4;
+                        }
+                        _ => return Err(JsonError::BadEscape(self.i - 1)),
+                    }
+                }
+                c => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let start = self.i - 1;
+                        if start + len > self.b.len() {
+                            return Err(JsonError::Eof(self.i));
+                        }
+                        let chunk = std::str::from_utf8(&self.b[start..start + len])
+                            .map_err(|_| JsonError::BadEscape(start))?;
+                        out.push_str(chunk);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                c => return Err(JsonError::Unexpected(c as char, self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(map));
+                }
+                c => return Err(JsonError::Unexpected(c as char, self.i)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
+        assert_eq!(parse(r#""hi""#).unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            v.get("a").unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str().unwrap(),
+            "x"
+        );
+    }
+
+    #[test]
+    fn parse_escapes() {
+        let v = parse(r#""a\nb\t\"q\" A""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\nb\t\"q\" A");
+    }
+
+    #[test]
+    fn parse_unicode_passthrough() {
+        let v = parse("\"énergie ☘\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "énergie ☘");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"name":"x","params":[{"numel":3,"shape":[1,3]}],"z":true}"#;
+        let v = parse(src).unwrap();
+        let v2 = parse(&v.to_json()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn writer_escapes() {
+        let v = Value::Str("a\"b\nc".into());
+        assert_eq!(v.to_json(), r#""a\"b\nc""#);
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        assert_eq!(Value::Num(5.0).to_json(), "5");
+        assert_eq!(Value::Num(5.5).to_json(), "5.5");
+    }
+
+    #[test]
+    fn real_manifest_parses() {
+        // Shape of what aot.py writes
+        let src = r#"{
+ "name": "screener",
+ "batch_buckets": [1, 4],
+ "hlo_files": {"1": "model.b1.hlo.txt"},
+ "params": [{"name": "embed", "shape": [512, 16], "offset": 0, "numel": 8192}]
+}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "screener");
+        assert_eq!(v.get("batch_buckets").unwrap().as_arr().unwrap()[1].as_i64().unwrap(), 4);
+        let p0 = &v.get("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p0.get("numel").unwrap().as_i64().unwrap(), 8192);
+    }
+
+    #[test]
+    fn missing_key_error() {
+        let v = parse(r#"{"a": 1}"#).unwrap();
+        assert!(matches!(v.get("b"), Err(JsonError::Missing(_))));
+    }
+}

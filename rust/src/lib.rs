@@ -1,0 +1,48 @@
+//! # greenflow — Green MLOps: closed-loop, energy-aware inference serving
+//!
+//! Reproduction of *"Green MLOps: Closed-Loop, Energy-Aware Inference with
+//! NVIDIA Triton, FastAPI, and Bio-Inspired Thresholding"* (Hamdi & Jabou,
+//! 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels (tiled GEMM,
+//!   fused softmax+entropy, fused attention, LayerNorm), validated against
+//!   pure-jnp oracles.
+//! * **Layer 2** (`python/compile/model.py`) — JAX models (`distilbert_mini`,
+//!   `resnet_tiny`, `screener`) AOT-lowered to HLO text at build time.
+//! * **Layer 3** (this crate) — the serving coordinator: the paper's
+//!   bio-inspired closed-loop admission controller ([`controller`]), the
+//!   dual-path serving stack (direct "FastAPI+ORT"-style path and a
+//!   Triton-style dynamic-batching path, [`batching`] + [`pipeline`]),
+//!   energy metering ([`energy`]), and MLflow-style telemetry
+//!   ([`telemetry`]).
+//!
+//! Python never runs on the request path: `make artifacts` exports a model
+//! repository (HLO text + weights + Triton-style `config.pbtxt`) which the
+//! [`runtime`] loads through the PJRT C API (`xla` crate).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod batching;
+pub mod benchkit;
+pub mod cli;
+pub mod configsys;
+pub mod controller;
+pub mod energy;
+pub mod json;
+pub mod models;
+pub mod pipeline;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod stats;
+pub mod telemetry;
+pub mod util;
+pub mod workload;
+
+/// Crate version reported by the CLI and the HTTP gateway.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of the AOT model repository relative to the repo root.
+pub const DEFAULT_REPOSITORY: &str = "artifacts";

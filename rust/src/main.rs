@@ -1,0 +1,1 @@
+fn main() { greenflow::cli::main(); }

@@ -1,0 +1,9 @@
+//! Model-zoo helpers: synthetic payload generation (§V "dummy inputs to
+//! remove data-loading confounds") and model-facing constants.
+
+pub mod inputgen;
+
+/// Canonical model names in the exported repository.
+pub const DISTILBERT: &str = "distilbert_mini";
+pub const RESNET: &str = "resnet_tiny";
+pub const SCREENER: &str = "screener";

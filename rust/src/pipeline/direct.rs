@@ -1,0 +1,64 @@
+//! Path A — the FastAPI + ONNX Runtime analog: no queueing, no fusion;
+//! a request becomes an immediate batch-1 execution on a dedicated
+//! engine. With `ExecMode::DeviceBuffers` the per-request H2D traffic is
+//! just the input tensor (the ORT I/O-binding discipline of §III-B).
+
+use std::path::PathBuf;
+
+use crate::runtime::engine::{ExecMode, ExecStats};
+use crate::runtime::tensor::{InputBatch, OutputBatch};
+use crate::runtime::RuntimeError;
+
+use super::worker::InstancePool;
+
+/// The direct serving path.
+pub struct DirectPath {
+    pool: InstancePool,
+}
+
+impl DirectPath {
+    /// `model_dirs`: every model this path can serve (it owns one engine
+    /// that loads them all — the "local ORT session" of the paper).
+    pub fn start(model_dirs: Vec<PathBuf>, mode: ExecMode) -> Result<Self, RuntimeError> {
+        Ok(DirectPath { pool: InstancePool::new(model_dirs, 1, mode)? })
+    }
+
+    /// Execute one batch synchronously (callers typically pass batch=1;
+    /// Table II's sequential 100-iteration loop).
+    pub fn infer(
+        &self,
+        model: &str,
+        input: InputBatch,
+    ) -> Result<(OutputBatch, ExecStats), RuntimeError> {
+        self.pool.execute(model, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inputgen;
+    use std::path::Path;
+
+    fn root() -> Option<PathBuf> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        root.join("repository.json").exists().then_some(root)
+    }
+
+    #[test]
+    fn serves_multiple_models_from_one_engine() {
+        let Some(root) = root() else { return };
+        let p = DirectPath::start(
+            vec![root.join("screener"), root.join("distilbert_mini")],
+            ExecMode::Literals,
+        )
+        .unwrap();
+        let ms = crate::runtime::ModelManifest::load(&root.join("screener")).unwrap();
+        let mb = crate::runtime::ModelManifest::load(&root.join("distilbert_mini")).unwrap();
+        let (o1, s1) = p.infer("screener", inputgen::tokens_for(&ms, &[1], 0)).unwrap();
+        let (o2, _) = p.infer("distilbert_mini", inputgen::tokens_for(&mb, &[1], 0)).unwrap();
+        assert_eq!(o1.batch, 1);
+        assert_eq!(o2.batch, 1);
+        assert_eq!(s1.bucket, 1, "direct path executes the 1-bucket");
+    }
+}

@@ -1,0 +1,28 @@
+//! The live serving pipeline: engine worker threads, the dual serving
+//! paths, and the closed-loop system that composes controller → router →
+//! path → telemetry.
+//!
+//! Thread topology (PjRtClient is not Send, so engines are thread-owned):
+//!
+//! ```text
+//!  clients ──submit()──► ServingSystem
+//!      │ controller (J(x) ≥ τ(t)?) ── skip ──► ResponseCache
+//!      │ admit
+//!      ├─ Path A (direct):   job channel ─► [instance 0: Engine]
+//!      └─ Path B (batched):  PendingQueue ─► batcher thread ─►
+//!                            round-robin ─► [instance i: Engine] ─► split
+//! ```
+//!
+//! Every reply carries exec time + energy attribution; the meter EWMA and
+//! queue depth feed back into the next admission decision — the paper's
+//! closed loop (Fig. 2).
+
+pub mod batched;
+pub mod direct;
+pub mod system;
+pub mod worker;
+
+pub use batched::BatchedPath;
+pub use direct::DirectPath;
+pub use system::{InferResult, ServingSystem, SystemConfig};
+pub use worker::{InstancePool, Job};

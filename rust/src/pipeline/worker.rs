@@ -1,0 +1,186 @@
+//! Engine worker threads and instance pools (Triton instance-group
+//! semantics: N independent execution contexts per model).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::runtime::engine::{ExecMode, ExecStats};
+use crate::runtime::tensor::{InputBatch, OutputBatch};
+use crate::runtime::{Engine, RuntimeError};
+
+/// One unit of work for an engine worker.
+pub struct Job {
+    pub model: String,
+    pub input: InputBatch,
+    /// Reply channel (bounded 1: the worker never blocks on send).
+    pub reply: mpsc::SyncSender<Result<(OutputBatch, ExecStats), RuntimeError>>,
+}
+
+enum Msg {
+    Work(Job),
+    Shutdown,
+}
+
+/// Handle to one worker thread owning a PJRT engine.
+struct Worker {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Spawn a worker that builds its own engine (Engine is not Send) and
+    /// loads the given model directories.
+    fn spawn(model_dirs: Vec<PathBuf>, mode: ExecMode) -> Result<Worker, RuntimeError> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        // Report engine construction errors back synchronously.
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(), RuntimeError>>(1);
+        let handle = std::thread::Builder::new()
+            .name("gf-engine-worker".to_string())
+            .spawn(move || {
+                let mut engine = match Engine::cpu(mode) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for dir in &model_dirs {
+                    if let Err(e) = engine.load_model(dir) {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Work(job) => {
+                            let res = engine.execute(&job.model, &job.input);
+                            let _ = job.reply.send(res);
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn worker");
+        ready_rx.recv().map_err(|_| RuntimeError::Xla("worker died during init".into()))??;
+        Ok(Worker { tx, handle: Some(handle) })
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Round-robin pool of engine workers (one Triton instance group).
+pub struct InstancePool {
+    workers: Vec<Worker>,
+    next: AtomicUsize,
+}
+
+impl InstancePool {
+    /// Spawn `count` workers, each loading `model_dirs`.
+    pub fn new(
+        model_dirs: Vec<PathBuf>,
+        count: usize,
+        mode: ExecMode,
+    ) -> Result<InstancePool, RuntimeError> {
+        assert!(count >= 1);
+        let mut workers = Vec::with_capacity(count);
+        for _ in 0..count {
+            workers.push(Worker::spawn(model_dirs.clone(), mode)?);
+        }
+        Ok(InstancePool { workers, next: AtomicUsize::new(0) })
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dispatch a job to the next instance (round-robin) without waiting.
+    pub fn dispatch(&self, job: Job) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.workers[i].tx.send(Msg::Work(job)).expect("worker alive");
+    }
+
+    /// Dispatch and block for the result (the direct-path call).
+    pub fn execute(
+        &self,
+        model: &str,
+        input: InputBatch,
+    ) -> Result<(OutputBatch, ExecStats), RuntimeError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.dispatch(Job { model: model.to_string(), input, reply });
+        rx.recv().map_err(|_| RuntimeError::Xla("worker dropped reply".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inputgen;
+    use std::path::Path;
+
+    fn repo_root() -> Option<PathBuf> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        root.join("repository.json").exists().then_some(root)
+    }
+
+    #[test]
+    fn pool_executes_jobs() {
+        let Some(root) = repo_root() else { return };
+        let pool =
+            InstancePool::new(vec![root.join("screener")], 1, ExecMode::Literals).unwrap();
+        let man = crate::runtime::ModelManifest::load(&root.join("screener")).unwrap();
+        let input = inputgen::tokens_for(&man, &[1], 0);
+        let (out, stats) = pool.execute("screener", input).unwrap();
+        assert_eq!(out.batch, 1);
+        assert_eq!(stats.bucket, 1);
+    }
+
+    #[test]
+    fn pool_round_robins_across_instances() {
+        let Some(root) = repo_root() else { return };
+        let pool =
+            InstancePool::new(vec![root.join("screener")], 2, ExecMode::Literals).unwrap();
+        assert_eq!(pool.size(), 2);
+        let man = crate::runtime::ModelManifest::load(&root.join("screener")).unwrap();
+        // Concurrent callers from multiple threads.
+        std::thread::scope(|s| {
+            for k in 0..4 {
+                let pool = &pool;
+                let man = &man;
+                s.spawn(move || {
+                    let input = inputgen::tokens_for(man, &[k], 0);
+                    let (out, _) = pool.execute("screener", input).unwrap();
+                    assert_eq!(out.batch, 1);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_model_error_propagates() {
+        let Some(root) = repo_root() else { return };
+        let pool =
+            InstancePool::new(vec![root.join("screener")], 1, ExecMode::Literals).unwrap();
+        let input = InputBatch::Tokens { data: vec![0; 32], batch: 1, per_item: 32 };
+        assert!(pool.execute("missing", input).is_err());
+    }
+
+    #[test]
+    fn bad_model_dir_fails_spawn() {
+        assert!(InstancePool::new(
+            vec![PathBuf::from("/nonexistent/model")],
+            1,
+            ExecMode::Literals
+        )
+        .is_err());
+    }
+}

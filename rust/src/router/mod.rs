@@ -1,0 +1,138 @@
+//! Dual-path routing (§VII "When Triton wins / When FastAPI+ORT wins").
+//!
+//! The router picks Path A (direct, low-latency) or Path B (batched,
+//! throughput) per request. Policies encode the paper's discussion:
+//! sporadic traffic and tight SLOs at tiny batches → direct; sustained
+//! QPS where batching amortises → batched.
+
+/// Which serving path executes a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathKind {
+    /// FastAPI + ORT analog: immediate single-request execution.
+    Direct,
+    /// Triton analog: dynamic-batching scheduler.
+    Batched,
+    /// Answered by the response cache (controller skip).
+    CacheSkip,
+}
+
+impl PathKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PathKind::Direct => "direct",
+            PathKind::Batched => "batched",
+            PathKind::CacheSkip => "cache",
+        }
+    }
+}
+
+/// Routing policy.
+#[derive(Debug, Clone)]
+pub enum RoutePolicy {
+    /// Pin everything to one path (the Table II per-framework rows).
+    Always(PathKind),
+    /// Load-adaptive: batched when the recent arrival rate crosses
+    /// `qps_threshold` (batching amortises), direct otherwise.
+    Adaptive { qps_threshold: f64 },
+}
+
+/// Router with a small arrival-rate estimator.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    /// Recent arrival instants (ring of the last N).
+    recent: std::collections::VecDeque<f64>,
+    window: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router { policy, recent: std::collections::VecDeque::new(), window: 32 }
+    }
+
+    /// Estimate recent arrival rate (req/s) from the observation window.
+    pub fn recent_qps(&self) -> f64 {
+        if self.recent.len() < 2 {
+            return 0.0;
+        }
+        let span = self.recent.back().unwrap() - self.recent.front().unwrap();
+        if span <= 0.0 {
+            return f64::INFINITY;
+        }
+        (self.recent.len() - 1) as f64 / span
+    }
+
+    /// Route a request arriving at time `t`.
+    pub fn route(&mut self, t: f64) -> PathKind {
+        self.recent.push_back(t);
+        if self.recent.len() > self.window {
+            self.recent.pop_front();
+        }
+        match &self.policy {
+            RoutePolicy::Always(p) => *p,
+            RoutePolicy::Adaptive { qps_threshold } => {
+                if self.recent_qps() >= *qps_threshold {
+                    PathKind::Batched
+                } else {
+                    PathKind::Direct
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_policy_is_constant() {
+        let mut r = Router::new(RoutePolicy::Always(PathKind::Direct));
+        for i in 0..10 {
+            assert_eq!(r.route(i as f64), PathKind::Direct);
+        }
+    }
+
+    #[test]
+    fn adaptive_picks_direct_at_low_qps() {
+        let mut r = Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0 });
+        // 1 req/s
+        for i in 0..10 {
+            assert_eq!(r.route(i as f64), PathKind::Direct);
+        }
+        assert!((r.recent_qps() - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn adaptive_switches_to_batched_under_load() {
+        let mut r = Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0 });
+        let mut last = PathKind::Direct;
+        // 1000 req/s burst
+        for i in 0..64 {
+            last = r.route(i as f64 * 0.001);
+        }
+        assert_eq!(last, PathKind::Batched);
+        assert!(r.recent_qps() > 500.0);
+    }
+
+    #[test]
+    fn adaptive_recovers_when_load_drops() {
+        let mut r = Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0 });
+        for i in 0..64 {
+            r.route(i as f64 * 0.001);
+        }
+        // now sporadic again: window refills with slow arrivals
+        let mut last = PathKind::Batched;
+        for i in 0..64 {
+            last = r.route(1.0 + i as f64);
+        }
+        assert_eq!(last, PathKind::Direct);
+    }
+
+    #[test]
+    fn path_names() {
+        assert_eq!(PathKind::Direct.as_str(), "direct");
+        assert_eq!(PathKind::Batched.as_str(), "batched");
+        assert_eq!(PathKind::CacheSkip.as_str(), "cache");
+    }
+}

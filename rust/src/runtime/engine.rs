@@ -1,0 +1,295 @@
+//! The PJRT engine: compile HLO-text artifacts once, execute many times.
+//!
+//! One `Engine` per worker thread (PjRtClient is not Send). Executables
+//! are cached per (model, batch-bucket). Weights are materialised once at
+//! load: as host literals (`ExecMode::Literals`) or pre-transferred device
+//! buffers (`ExecMode::DeviceBuffers` — the ORT I/O-binding analog, which
+//! removes the per-request host→device weight copy and is the §Perf L3
+//! optimisation).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::runtime::manifest::ModelManifest;
+use crate::runtime::tensor::{InputBatch, OutputBatch};
+use crate::runtime::RuntimeError;
+
+/// How weights are fed to the executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Host literals passed on every call (baseline; extra H2D copies).
+    Literals,
+    /// Weights live as device buffers; per-call H2D is just the input.
+    DeviceBuffers,
+}
+
+/// Execution statistics for one call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecStats {
+    /// Bucket the batch was padded to.
+    pub bucket: usize,
+    /// Wallclock seconds of the PJRT execute (including H2D/D2H).
+    pub exec_secs: f64,
+    /// Analytic FLOPs attributed to the padded batch.
+    pub flops: f64,
+}
+
+struct LoadedModel {
+    manifest: ModelManifest,
+    weight_literals: Vec<xla::Literal>,
+    weight_buffers: Option<Vec<xla::PjRtBuffer>>,
+    execs: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+/// Thread-confined PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    mode: ExecMode,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine.
+    pub fn cpu(mode: ExecMode) -> Result<Self, RuntimeError> {
+        Ok(Engine { client: xla::PjRtClient::cpu()?, mode, models: HashMap::new() })
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn loaded_models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn manifest(&self, model: &str) -> Option<&ModelManifest> {
+        self.models.get(model).map(|m| &m.manifest)
+    }
+
+    /// Load one model directory (manifest + weights + all bucket HLOs),
+    /// compiling every bucket's executable eagerly so the serve path never
+    /// pays compilation latency.
+    pub fn load_model(&mut self, dir: &Path) -> Result<(), RuntimeError> {
+        let manifest = ModelManifest::load(dir)?;
+
+        // ---- weights.bin -> one literal per parameter
+        let wpath = dir.join(&manifest.weights_file);
+        let bytes = std::fs::read(&wpath)
+            .map_err(|e| RuntimeError::Io { path: wpath.display().to_string(), source: e })?;
+        if bytes.len() != manifest.weights_bytes() {
+            return Err(RuntimeError::Manifest(format!(
+                "weights.bin is {} bytes, manifest wants {}",
+                bytes.len(),
+                manifest.weights_bytes()
+            )));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut weight_literals = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let start = p.offset / 4;
+            let slice = &floats[start..start + p.numel];
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            weight_literals.push(xla::Literal::vec1(slice).reshape(&dims)?);
+        }
+
+        // ---- optional device-buffer pre-transfer (I/O binding analog)
+        let weight_buffers = if self.mode == ExecMode::DeviceBuffers {
+            let mut bufs = Vec::with_capacity(manifest.params.len());
+            for p in &manifest.params {
+                let start = p.offset / 4;
+                let slice = &floats[start..start + p.numel];
+                bufs.push(self.client.buffer_from_host_buffer(slice, &p.shape, None)?);
+            }
+            Some(bufs)
+        } else {
+            None
+        };
+
+        // ---- compile every bucket
+        let mut execs = BTreeMap::new();
+        for (&bucket, file) in &manifest.hlo_files {
+            let hpath = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hpath.to_str().ok_or_else(|| RuntimeError::Manifest("bad path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            execs.insert(bucket, self.client.compile(&comp)?);
+        }
+
+        self.models.insert(
+            manifest.name.clone(),
+            LoadedModel { manifest, weight_literals, weight_buffers, execs },
+        );
+        Ok(())
+    }
+
+    /// Execute a batch: pick the smallest fitting bucket, pad, run,
+    /// decode (logits, probs, entropy), slice padding away.
+    pub fn execute(
+        &self,
+        model: &str,
+        input: &InputBatch,
+    ) -> Result<(OutputBatch, ExecStats), RuntimeError> {
+        let lm =
+            self.models.get(model).ok_or_else(|| RuntimeError::UnknownModel(model.to_string()))?;
+        input.check(&lm.manifest)?;
+        let batch = input.batch();
+        let bucket = lm.manifest.bucket_for(batch).ok_or_else(|| RuntimeError::BatchTooLarge {
+            model: model.to_string(),
+            requested: batch,
+            max: lm.manifest.max_bucket(),
+        })?;
+        let exe = &lm.execs[&bucket];
+        let padded = input.pad_to(bucket);
+
+        // input dims: (bucket, *shape_per_item)
+        let mut dims: Vec<i64> = vec![bucket as i64];
+        dims.extend(lm.manifest.input_shape.iter().map(|&d| d as i64));
+
+        let t0 = Instant::now();
+        let result_literal = match self.mode {
+            ExecMode::Literals => {
+                let input_lit = match &padded {
+                    InputBatch::Tokens { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+                    InputBatch::Dense { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+                };
+                let mut args: Vec<&xla::Literal> = lm.weight_literals.iter().collect();
+                args.push(&input_lit);
+                let out = exe.execute::<&xla::Literal>(&args)?;
+                out[0][0].to_literal_sync()?
+            }
+            ExecMode::DeviceBuffers => {
+                let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+                let input_buf = match &padded {
+                    InputBatch::Tokens { data, .. } => {
+                        self.client.buffer_from_host_buffer(data, &udims, None)?
+                    }
+                    InputBatch::Dense { data, .. } => {
+                        self.client.buffer_from_host_buffer(data, &udims, None)?
+                    }
+                };
+                let wb = lm.weight_buffers.as_ref().expect("DeviceBuffers mode has buffers");
+                let mut args: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+                args.push(&input_buf);
+                let out = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+                out[0][0].to_literal_sync()?
+            }
+        };
+        let exec_secs = t0.elapsed().as_secs_f64();
+
+        let (lo, pr, en) = result_literal.to_tuple3()?;
+        let out = OutputBatch {
+            batch: bucket,
+            classes: lm.manifest.classes,
+            logits: lo.to_vec::<f32>()?,
+            probs: pr.to_vec::<f32>()?,
+            entropy: en.to_vec::<f32>()?,
+        }
+        .truncate(batch);
+
+        let flops = lm.manifest.flops_per_batch.get(&bucket).copied().unwrap_or(0.0);
+        Ok((out, ExecStats { bucket, exec_secs, flops }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests against the real artifacts (skipped when `make
+    //! artifacts` has not run — CI always builds them first).
+    use super::*;
+    use crate::models::inputgen;
+
+    fn repo_dir() -> Option<std::path::PathBuf> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        root.join("repository.json").exists().then_some(root)
+    }
+
+    fn engine_with(model: &str, mode: ExecMode) -> Option<Engine> {
+        let root = repo_dir()?;
+        let mut e = Engine::cpu(mode).unwrap();
+        e.load_model(&root.join(model)).unwrap();
+        Some(e)
+    }
+
+    #[test]
+    fn screener_executes_and_decodes() {
+        let Some(e) = engine_with("screener", ExecMode::Literals) else { return };
+        let m = e.manifest("screener").unwrap().clone();
+        let input = inputgen::tokens_for(&m, &[1, 2], 42);
+        let (out, stats) = e.execute("screener", &input).unwrap();
+        assert_eq!(out.batch, 2);
+        assert_eq!(out.classes, 2);
+        assert_eq!(stats.bucket, 4, "2 rows pad into the 4-bucket");
+        // probs rows sum to 1
+        for i in 0..out.batch {
+            let s: f32 = out.probs[i * 2..(i + 1) * 2].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+            let ent = out.entropy[i];
+            assert!((0.0..=(2f32).ln() + 1e-4).contains(&ent));
+        }
+    }
+
+    #[test]
+    fn padding_does_not_change_results() {
+        let Some(e) = engine_with("screener", ExecMode::Literals) else { return };
+        let m = e.manifest("screener").unwrap().clone();
+        let one = inputgen::tokens_for(&m, &[7], 1);
+        let (o1, s1) = e.execute("screener", &one).unwrap();
+        assert_eq!(s1.bucket, 1);
+        // Same item inside a padded 4-batch must produce the same row.
+        let three = inputgen::tokens_for(&m, &[7, 8, 9], 1);
+        let (o3, s3) = e.execute("screener", &three).unwrap();
+        assert_eq!(s3.bucket, 4);
+        for c in 0..2 {
+            assert!((o1.probs[c] - o3.probs[c]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn device_buffer_mode_matches_literal_mode() {
+        let Some(el) = engine_with("screener", ExecMode::Literals) else { return };
+        let eb = engine_with("screener", ExecMode::DeviceBuffers).unwrap();
+        let m = el.manifest("screener").unwrap().clone();
+        let input = inputgen::tokens_for(&m, &[3, 4, 5, 6], 9);
+        let (ol, _) = el.execute("screener", &input).unwrap();
+        let (ob, _) = eb.execute("screener", &input).unwrap();
+        for (a, b) in ol.probs.iter().zip(&ob.probs) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(e) = engine_with("screener", ExecMode::Literals) else { return };
+        let input = InputBatch::Tokens { data: vec![0; 32], batch: 1, per_item: 32 };
+        assert!(matches!(e.execute("nope", &input), Err(RuntimeError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn batch_too_large_errors() {
+        let Some(e) = engine_with("screener", ExecMode::Literals) else { return };
+        let m = e.manifest("screener").unwrap().clone();
+        let ids: Vec<u64> = (0..9).collect();
+        let input = inputgen::tokens_for(&m, &ids, 2);
+        assert!(matches!(
+            e.execute("screener", &input),
+            Err(RuntimeError::BatchTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_input_kind_errors() {
+        let Some(e) = engine_with("screener", ExecMode::Literals) else { return };
+        let input = InputBatch::Dense { data: vec![0.0; 32], batch: 1, per_item: 32 };
+        assert!(matches!(e.execute("screener", &input), Err(RuntimeError::InputMismatch(_))));
+    }
+}

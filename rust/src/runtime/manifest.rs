@@ -1,0 +1,309 @@
+//! `manifest.json` schema: the contract between `python/compile/aot.py`
+//! and the Rust runtime (parameter table, input spec, batch buckets,
+//! FLOPs for the energy model).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::json;
+use crate::runtime::RuntimeError;
+
+/// One parameter tensor in `weights.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset in weights.bin.
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// What the model's (single) input tensor is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    /// i32 token ids in [0, vocab).
+    Tokens,
+    /// f32 dense tensor (images).
+    Dense,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub family: String,
+    pub classes: usize,
+    pub batch_buckets: Vec<usize>,
+    pub weights_file: String,
+    /// bucket -> hlo file name.
+    pub hlo_files: BTreeMap<usize, String>,
+    /// bucket -> analytic FLOPs for the whole batch.
+    pub flops_per_batch: BTreeMap<usize, f64>,
+    pub params: Vec<ParamEntry>,
+    pub input_kind: InputKind,
+    /// Per-item input shape (batch dim excluded).
+    pub input_shape: Vec<usize>,
+    /// Vocab size for token inputs.
+    pub vocab: Option<usize>,
+}
+
+impl ModelManifest {
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<Self, RuntimeError> {
+        let v = json::parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let get_str = |k: &str| -> Result<String, RuntimeError> {
+            Ok(v.get(k)
+                .and_then(|x| x.as_str().map(|s| s.to_string()))
+                .map_err(|e| RuntimeError::Manifest(format!("{k}: {e}")))?)
+        };
+
+        let name = get_str("name")?;
+        let family = get_str("family")?;
+        let weights_file = get_str("weights_file")?;
+        let classes = v
+            .get("classes")
+            .and_then(|x| x.as_i64())
+            .map_err(|e| RuntimeError::Manifest(format!("classes: {e}")))? as usize;
+
+        let batch_buckets: Vec<usize> = v
+            .get("batch_buckets")
+            .and_then(|x| x.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| RuntimeError::Manifest(format!("batch_buckets: {e}")))?
+            .iter()
+            .map(|x| x.as_i64().unwrap_or(0) as usize)
+            .collect();
+
+        let mut hlo_files = BTreeMap::new();
+        for (k, val) in v
+            .get("hlo_files")
+            .and_then(|x| x.as_obj().map(|o| o.clone()))
+            .map_err(|e| RuntimeError::Manifest(format!("hlo_files: {e}")))?
+        {
+            let bucket: usize =
+                k.parse().map_err(|_| RuntimeError::Manifest(format!("bad bucket key {k}")))?;
+            hlo_files.insert(
+                bucket,
+                val.as_str().map_err(|e| RuntimeError::Manifest(e.to_string()))?.to_string(),
+            );
+        }
+
+        let mut flops_per_batch = BTreeMap::new();
+        if let Ok(Some(fp)) = v.opt("flops_per_batch") {
+            for (k, val) in fp.as_obj().map_err(|e| RuntimeError::Manifest(e.to_string()))? {
+                if let (Ok(bucket), Ok(f)) = (k.parse::<usize>(), val.as_f64()) {
+                    flops_per_batch.insert(bucket, f);
+                }
+            }
+        }
+
+        let mut params = Vec::new();
+        for p in v
+            .get("params")
+            .and_then(|x| x.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| RuntimeError::Manifest(format!("params: {e}")))?
+        {
+            params.push(ParamEntry {
+                name: p
+                    .get("name")
+                    .and_then(|x| x.as_str().map(|s| s.to_string()))
+                    .map_err(|e| RuntimeError::Manifest(e.to_string()))?,
+                shape: p
+                    .get("shape")
+                    .and_then(|x| x.as_arr().map(|a| a.to_vec()))
+                    .map_err(|e| RuntimeError::Manifest(e.to_string()))?
+                    .iter()
+                    .map(|d| d.as_i64().unwrap_or(0) as usize)
+                    .collect(),
+                offset: p
+                    .get("offset")
+                    .and_then(|x| x.as_i64())
+                    .map_err(|e| RuntimeError::Manifest(e.to_string()))? as usize,
+                numel: p
+                    .get("numel")
+                    .and_then(|x| x.as_i64())
+                    .map_err(|e| RuntimeError::Manifest(e.to_string()))? as usize,
+            });
+        }
+
+        let input = v.get("input").map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let kind_str = input
+            .get("kind")
+            .and_then(|x| x.as_str().map(|s| s.to_string()))
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let input_kind = match kind_str.as_str() {
+            "tokens" => InputKind::Tokens,
+            _ => InputKind::Dense,
+        };
+        let input_shape: Vec<usize> = input
+            .get("shape_per_item")
+            .and_then(|x| x.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?
+            .iter()
+            .map(|d| d.as_i64().unwrap_or(0) as usize)
+            .collect();
+        let vocab = input.opt("vocab").ok().flatten().and_then(|x| x.as_i64().ok()).map(|x| x as usize);
+
+        let m = ModelManifest {
+            name,
+            family,
+            classes,
+            batch_buckets,
+            weights_file,
+            hlo_files,
+            flops_per_batch,
+            params,
+            input_kind,
+            input_shape,
+            vocab,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, RuntimeError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| RuntimeError::Io { path: path.display().to_string(), source: e })?;
+        Self::from_json(&text)
+    }
+
+    /// Internal consistency checks.
+    pub fn validate(&self) -> Result<(), RuntimeError> {
+        if self.batch_buckets.is_empty() {
+            return Err(RuntimeError::Manifest("no batch buckets".into()));
+        }
+        for b in &self.batch_buckets {
+            if !self.hlo_files.contains_key(b) {
+                return Err(RuntimeError::Manifest(format!("bucket {b} has no HLO file")));
+            }
+        }
+        let mut offset = 0usize;
+        for p in &self.params {
+            let numel: usize = p.shape.iter().product();
+            if numel != p.numel {
+                return Err(RuntimeError::Manifest(format!(
+                    "param {}: shape product {numel} != numel {}",
+                    p.name, p.numel
+                )));
+            }
+            if p.offset != offset {
+                return Err(RuntimeError::Manifest(format!(
+                    "param {}: offset {} != expected {offset}",
+                    p.name, p.offset
+                )));
+            }
+            offset += numel * 4;
+        }
+        if self.input_kind == InputKind::Tokens && self.vocab.is_none() {
+            return Err(RuntimeError::Manifest("token input requires vocab".into()));
+        }
+        Ok(())
+    }
+
+    /// Smallest bucket that fits `batch` items.
+    pub fn bucket_for(&self, batch: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().filter(|&b| b >= batch).min()
+    }
+
+    /// Largest supported batch.
+    pub fn max_bucket(&self) -> usize {
+        self.batch_buckets.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Total byte size weights.bin must have.
+    pub fn weights_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.numel * 4).sum()
+    }
+
+    /// Analytic FLOPs for one item at the given bucket (per-item share).
+    pub fn flops_per_item(&self, bucket: usize) -> f64 {
+        self.flops_per_batch.get(&bucket).map(|f| f / bucket as f64).unwrap_or(0.0)
+    }
+
+    /// Elements per input item.
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "name": "toy", "family": "transformer", "classes": 2,
+      "batch_buckets": [1, 4],
+      "weights_file": "weights.bin",
+      "hlo_files": {"1": "model.b1.hlo.txt", "4": "model.b4.hlo.txt"},
+      "flops_per_batch": {"1": 100.0, "4": 400.0},
+      "params": [
+        {"name": "embed", "shape": [8, 4], "offset": 0, "numel": 32},
+        {"name": "w", "shape": [4, 2], "offset": 128, "numel": 8}
+      ],
+      "input": {"name": "tokens", "kind": "tokens", "shape_per_item": [16],
+                "dtype": "i32", "vocab": 8}
+    }"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let m = ModelManifest::from_json(MANIFEST).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.classes, 2);
+        assert_eq!(m.batch_buckets, vec![1, 4]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.input_kind, InputKind::Tokens);
+        assert_eq!(m.vocab, Some(8));
+        assert_eq!(m.weights_bytes(), 160);
+        assert_eq!(m.input_numel(), 16);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = ModelManifest::from_json(MANIFEST).unwrap();
+        assert_eq!(m.bucket_for(1), Some(1));
+        assert_eq!(m.bucket_for(2), Some(4));
+        assert_eq!(m.bucket_for(4), Some(4));
+        assert_eq!(m.bucket_for(5), None);
+        assert_eq!(m.max_bucket(), 4);
+    }
+
+    #[test]
+    fn per_item_flops() {
+        let m = ModelManifest::from_json(MANIFEST).unwrap();
+        assert_eq!(m.flops_per_item(4), 100.0);
+        assert_eq!(m.flops_per_item(9), 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = MANIFEST.replace("\"offset\": 128", "\"offset\": 64");
+        assert!(ModelManifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_numel_mismatch() {
+        let bad = MANIFEST.replace("\"numel\": 32", "\"numel\": 31");
+        assert!(ModelManifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_bucket_hlo() {
+        let bad = MANIFEST.replace("\"batch_buckets\": [1, 4]", "\"batch_buckets\": [1, 2]");
+        assert!(ModelManifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifests_parse_if_built() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("repository.json").exists() {
+            return;
+        }
+        for m in ["distilbert_mini", "resnet_tiny", "screener"] {
+            let man = ModelManifest::load(&root.join(m)).unwrap();
+            assert_eq!(man.name, m);
+            let wsize = std::fs::metadata(root.join(m).join(&man.weights_file)).unwrap().len();
+            assert_eq!(wsize as usize, man.weights_bytes());
+        }
+    }
+}

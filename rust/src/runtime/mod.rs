@@ -1,0 +1,53 @@
+//! PJRT runtime: loads the AOT model repository (HLO text + weights +
+//! config.pbtxt) and executes models via the `xla` crate's PJRT CPU
+//! client.
+//!
+//! Threading model: `PjRtClient` is `Rc`-backed and **not** `Send`, so an
+//! [`engine::Engine`] is thread-confined. The serving pipeline gives each
+//! Triton-style *instance* its own engine on its own worker thread
+//! (exactly Triton's instance-group semantics); the direct path owns one
+//! engine behind its request loop.
+//!
+//! I/O-binding analog: weights can be pre-transferred to device buffers
+//! once at load time (`ExecMode::DeviceBuffers`) so the per-request host→
+//! device traffic is just the input tensor — the ORT "device tensors"
+//! optimisation the paper leans on (§III-B, §VII "device tensors
+//! matter").
+
+pub mod engine;
+pub mod manifest;
+pub mod repository;
+pub mod tensor;
+
+pub use engine::{Engine, ExecMode};
+pub use manifest::{InputKind, ModelManifest, ParamEntry};
+pub use repository::Repository;
+pub use tensor::{InputBatch, OutputBatch};
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("unknown model {0:?}")]
+    UnknownModel(String),
+    #[error("no batch bucket >= {requested} for model {model} (max {max})")]
+    BatchTooLarge { model: String, requested: usize, max: usize },
+    #[error("input mismatch: {0}")]
+    InputMismatch(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,144 @@
+//! Model repository: the directory layout `aot.py` exports (Triton's
+//! model-repository concept). Scans `repository.json`, loads every
+//! model's manifest + serving config without touching PJRT (so the
+//! coordinator can plan batching before spawning engine workers).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::configsys::ModelConfig;
+use crate::json;
+use crate::runtime::manifest::ModelManifest;
+use crate::runtime::RuntimeError;
+
+/// One repository entry: manifest + optional serving config.
+#[derive(Debug, Clone)]
+pub struct RepoEntry {
+    pub dir: PathBuf,
+    pub manifest: ModelManifest,
+    pub config: Option<ModelConfig>,
+}
+
+/// The scanned repository.
+#[derive(Debug, Clone)]
+pub struct Repository {
+    pub root: PathBuf,
+    pub entries: BTreeMap<String, RepoEntry>,
+}
+
+impl Repository {
+    /// Scan a repository root (reads `repository.json` for the index).
+    pub fn scan(root: &Path) -> Result<Self, RuntimeError> {
+        let idx_path = root.join("repository.json");
+        let text = std::fs::read_to_string(&idx_path)
+            .map_err(|e| RuntimeError::Io { path: idx_path.display().to_string(), source: e })?;
+        let idx = json::parse(&text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let mut entries = BTreeMap::new();
+        for name in idx
+            .get("models")
+            .and_then(|m| m.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?
+        {
+            let name = name.as_str().map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+            let dir = root.join(name);
+            let manifest = ModelManifest::load(&dir)?;
+            let config = std::fs::read_to_string(dir.join("config.pbtxt"))
+                .ok()
+                .and_then(|t| ModelConfig::from_pbtxt(&t).ok());
+            entries.insert(
+                manifest.name.clone(),
+                RepoEntry { dir, manifest, config },
+            );
+        }
+        Ok(Repository { root: root.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, model: &str) -> Result<&RepoEntry, RuntimeError> {
+        self.entries.get(model).ok_or_else(|| RuntimeError::UnknownModel(model.to_string()))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Max queue delay for the model's dynamic batcher (µs), from
+    /// config.pbtxt (0 = no batching window).
+    pub fn queue_delay_us(&self, model: &str) -> u64 {
+        self.entries
+            .get(model)
+            .and_then(|e| e.config.as_ref())
+            .and_then(|c| c.dynamic_batching.as_ref())
+            .map(|d| d.max_queue_delay_us)
+            .unwrap_or(0)
+    }
+
+    /// Validate all entries against their configs (shape/dtype discipline,
+    /// the paper's §VII "practical gotchas").
+    pub fn validate(&self) -> Result<(), RuntimeError> {
+        for (name, e) in &self.entries {
+            e.manifest.validate()?;
+            if let Some(cfg) = &e.config {
+                cfg.validate().map_err(|err| {
+                    RuntimeError::Manifest(format!("{name}: config.pbtxt invalid: {err}"))
+                })?;
+                // batch discipline: config max must be a known bucket
+                if e.manifest.bucket_for(cfg.max_batch_size).is_none() {
+                    return Err(RuntimeError::Manifest(format!(
+                        "{name}: config max_batch_size {} exceeds buckets {:?}",
+                        cfg.max_batch_size, e.manifest.batch_buckets
+                    )));
+                }
+                // shape discipline: config dims must match manifest input
+                if let Some(inp) = cfg.inputs.first() {
+                    if inp.dims != e.manifest.input_shape {
+                        return Err(RuntimeError::Manifest(format!(
+                            "{name}: config dims {:?} != manifest {:?}",
+                            inp.dims, e.manifest.input_shape
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo() -> Option<Repository> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        root.join("repository.json").exists().then(|| Repository::scan(&root).unwrap())
+    }
+
+    #[test]
+    fn scans_all_models() {
+        let Some(r) = repo() else { return };
+        assert_eq!(
+            r.model_names(),
+            vec!["distilbert_mini", "resnet_tiny", "screener"]
+        );
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn configs_are_attached() {
+        let Some(r) = repo() else { return };
+        let e = r.get("distilbert_mini").unwrap();
+        let cfg = e.config.as_ref().expect("config.pbtxt present");
+        assert_eq!(cfg.max_batch_size, 8);
+        assert_eq!(r.queue_delay_us("distilbert_mini"), 2000);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(r) = repo() else { return };
+        assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_root_errors() {
+        assert!(Repository::scan(Path::new("/nonexistent/path")).is_err());
+    }
+}

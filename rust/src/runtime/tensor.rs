@@ -1,0 +1,287 @@
+//! Typed input/output batches and the padding logic for batch bucketing.
+
+use crate::runtime::manifest::{InputKind, ModelManifest};
+use crate::runtime::RuntimeError;
+
+/// A host-side input batch for one model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InputBatch {
+    /// i32 token ids, row-major (batch, numel_per_item).
+    Tokens { data: Vec<i32>, batch: usize, per_item: usize },
+    /// f32 dense tensor, row-major (batch, numel_per_item).
+    Dense { data: Vec<f32>, batch: usize, per_item: usize },
+}
+
+impl InputBatch {
+    pub fn batch(&self) -> usize {
+        match self {
+            InputBatch::Tokens { batch, .. } | InputBatch::Dense { batch, .. } => *batch,
+        }
+    }
+
+    pub fn per_item(&self) -> usize {
+        match self {
+            InputBatch::Tokens { per_item, .. } | InputBatch::Dense { per_item, .. } => *per_item,
+        }
+    }
+
+    /// Check the batch against a manifest's input spec.
+    pub fn check(&self, m: &ModelManifest) -> Result<(), RuntimeError> {
+        let want_kind = match self {
+            InputBatch::Tokens { .. } => InputKind::Tokens,
+            InputBatch::Dense { .. } => InputKind::Dense,
+        };
+        if want_kind != m.input_kind {
+            return Err(RuntimeError::InputMismatch(format!(
+                "model {} expects {:?} input, got {:?}",
+                m.name, m.input_kind, want_kind
+            )));
+        }
+        if self.per_item() != m.input_numel() {
+            return Err(RuntimeError::InputMismatch(format!(
+                "model {} expects {} elements per item, got {}",
+                m.name,
+                m.input_numel(),
+                self.per_item()
+            )));
+        }
+        let (len, batch) = match self {
+            InputBatch::Tokens { data, batch, .. } => (data.len(), *batch),
+            InputBatch::Dense { data, batch, .. } => (data.len(), *batch),
+        };
+        if len != batch * self.per_item() {
+            return Err(RuntimeError::InputMismatch(format!(
+                "data length {} != batch {} x per_item {}",
+                len,
+                batch,
+                self.per_item()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Pad the batch up to `bucket` rows by repeating the last row
+    /// (zero-filling a token row could index embedding row 0; repeating a
+    /// real row keeps the padded compute numerically harmless and is what
+    /// Triton's batcher does with ragged fills).
+    pub fn pad_to(&self, bucket: usize) -> InputBatch {
+        assert!(bucket >= self.batch(), "bucket smaller than batch");
+        match self {
+            InputBatch::Tokens { data, batch, per_item } => {
+                let mut d = data.clone();
+                let last = data[(batch - 1) * per_item..].to_vec();
+                for _ in *batch..bucket {
+                    d.extend_from_slice(&last);
+                }
+                InputBatch::Tokens { data: d, batch: bucket, per_item: *per_item }
+            }
+            InputBatch::Dense { data, batch, per_item } => {
+                let mut d = data.clone();
+                let last = data[(batch - 1) * per_item..].to_vec();
+                for _ in *batch..bucket {
+                    d.extend_from_slice(&last);
+                }
+                InputBatch::Dense { data: d, batch: bucket, per_item: *per_item }
+            }
+        }
+    }
+
+    /// Concatenate single-item batches (the dynamic batcher's fuse step).
+    pub fn concat(items: &[InputBatch]) -> Result<InputBatch, RuntimeError> {
+        assert!(!items.is_empty());
+        let per_item = items[0].per_item();
+        match &items[0] {
+            InputBatch::Tokens { .. } => {
+                let mut data = Vec::with_capacity(items.len() * per_item);
+                let mut batch = 0;
+                for it in items {
+                    match it {
+                        InputBatch::Tokens { data: d, batch: b, per_item: p } if *p == per_item => {
+                            data.extend_from_slice(d);
+                            batch += b;
+                        }
+                        _ => {
+                            return Err(RuntimeError::InputMismatch(
+                                "heterogeneous batch items".into(),
+                            ))
+                        }
+                    }
+                }
+                Ok(InputBatch::Tokens { data, batch, per_item })
+            }
+            InputBatch::Dense { .. } => {
+                let mut data = Vec::with_capacity(items.len() * per_item);
+                let mut batch = 0;
+                for it in items {
+                    match it {
+                        InputBatch::Dense { data: d, batch: b, per_item: p } if *p == per_item => {
+                            data.extend_from_slice(d);
+                            batch += b;
+                        }
+                        _ => {
+                            return Err(RuntimeError::InputMismatch(
+                                "heterogeneous batch items".into(),
+                            ))
+                        }
+                    }
+                }
+                Ok(InputBatch::Dense { data, batch, per_item })
+            }
+        }
+    }
+}
+
+/// Decoded model outputs for a batch (padding rows already sliced away).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutputBatch {
+    pub batch: usize,
+    pub classes: usize,
+    /// (batch, classes) row-major.
+    pub logits: Vec<f32>,
+    /// (batch, classes) row-major.
+    pub probs: Vec<f32>,
+    /// (batch,) entropy in nats — the L(x) signal.
+    pub entropy: Vec<f32>,
+}
+
+impl OutputBatch {
+    /// Argmax class of item `i`.
+    pub fn predicted(&self, i: usize) -> u32 {
+        let row = &self.probs[i * self.classes..(i + 1) * self.classes];
+        let mut best = 0usize;
+        for (j, &p) in row.iter().enumerate() {
+            if p > row[best] {
+                best = j;
+            }
+        }
+        best as u32
+    }
+
+    /// Max probability (confidence) of item `i`.
+    pub fn confidence(&self, i: usize) -> f32 {
+        let row = &self.probs[i * self.classes..(i + 1) * self.classes];
+        row.iter().copied().fold(f32::MIN, f32::max)
+    }
+
+    /// Keep only the first `n` rows (drop padding).
+    pub fn truncate(mut self, n: usize) -> OutputBatch {
+        assert!(n <= self.batch);
+        self.logits.truncate(n * self.classes);
+        self.probs.truncate(n * self.classes);
+        self.entropy.truncate(n);
+        self.batch = n;
+        self
+    }
+
+    /// Split into per-item outputs (to answer fused batch members).
+    pub fn split(&self) -> Vec<OutputBatch> {
+        (0..self.batch)
+            .map(|i| OutputBatch {
+                batch: 1,
+                classes: self.classes,
+                logits: self.logits[i * self.classes..(i + 1) * self.classes].to_vec(),
+                probs: self.probs[i * self.classes..(i + 1) * self.classes].to_vec(),
+                entropy: vec![self.entropy[i]],
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens(batch: usize, per_item: usize) -> InputBatch {
+        InputBatch::Tokens {
+            data: (0..batch * per_item).map(|x| x as i32).collect(),
+            batch,
+            per_item,
+        }
+    }
+
+    #[test]
+    fn pad_repeats_last_row() {
+        let b = tokens(2, 3);
+        let p = b.pad_to(4);
+        match p {
+            InputBatch::Tokens { data, batch, .. } => {
+                assert_eq!(batch, 4);
+                assert_eq!(data, vec![0, 1, 2, 3, 4, 5, 3, 4, 5, 3, 4, 5]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn pad_noop_at_same_size() {
+        let b = tokens(2, 3);
+        assert_eq!(b.pad_to(2), b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_smaller_panics() {
+        tokens(3, 2).pad_to(2);
+    }
+
+    #[test]
+    fn concat_fuses_batches() {
+        let a = tokens(1, 3);
+        let b = tokens(2, 3);
+        let c = InputBatch::concat(&[a, b]).unwrap();
+        assert_eq!(c.batch(), 3);
+        assert_eq!(c.per_item(), 3);
+    }
+
+    #[test]
+    fn concat_rejects_mixed_kinds() {
+        let a = tokens(1, 3);
+        let b = InputBatch::Dense { data: vec![0.0; 3], batch: 1, per_item: 3 };
+        assert!(InputBatch::concat(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn output_argmax_and_confidence() {
+        let o = OutputBatch {
+            batch: 2,
+            classes: 3,
+            logits: vec![0.0; 6],
+            probs: vec![0.1, 0.7, 0.2, 0.5, 0.3, 0.2],
+            entropy: vec![0.8, 1.0],
+        };
+        assert_eq!(o.predicted(0), 1);
+        assert_eq!(o.predicted(1), 0);
+        assert!((o.confidence(0) - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncate_drops_padding() {
+        let o = OutputBatch {
+            batch: 4,
+            classes: 2,
+            logits: vec![0.0; 8],
+            probs: vec![0.5; 8],
+            entropy: vec![0.1, 0.2, 0.3, 0.4],
+        };
+        let t = o.truncate(2);
+        assert_eq!(t.batch, 2);
+        assert_eq!(t.entropy, vec![0.1, 0.2]);
+        assert_eq!(t.probs.len(), 4);
+    }
+
+    #[test]
+    fn split_gives_per_item_views() {
+        let o = OutputBatch {
+            batch: 2,
+            classes: 2,
+            logits: vec![1.0, 2.0, 3.0, 4.0],
+            probs: vec![0.3, 0.7, 0.6, 0.4],
+            entropy: vec![0.6, 0.7],
+        };
+        let parts = o.split();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].logits, vec![3.0, 4.0]);
+        assert_eq!(parts[1].entropy, vec![0.7]);
+        assert_eq!(parts[0].predicted(0), 1);
+    }
+}

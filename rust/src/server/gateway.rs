@@ -1,0 +1,212 @@
+//! The inference gateway: routes HTTP requests onto the serving system.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::json::{self, Value};
+use crate::pipeline::system::ServingSystem;
+use crate::router::PathKind;
+use crate::telemetry::MetricsRegistry;
+use crate::util::Clock;
+use crate::workload::stream::Request;
+
+use super::http::{HttpRequest, HttpResponse};
+use super::threadpool::ThreadPool;
+
+/// A running HTTP gateway bound to a local port.
+pub struct Gateway {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `127.0.0.1:port` (port 0 = ephemeral) and serve `system` on
+    /// `pool_size` connection-handler threads.
+    pub fn start(
+        system: Arc<ServingSystem>,
+        port: u16,
+        pool_size: usize,
+    ) -> std::io::Result<Gateway> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+
+        let acceptor = std::thread::Builder::new()
+            .name("gf-gateway".to_string())
+            .spawn(move || {
+                let pool = ThreadPool::new(pool_size);
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let system = system.clone();
+                            pool.execute(move || handle_connection(stream, &system));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn gateway");
+
+        Ok(Gateway { addr, stop, acceptor: Some(acceptor) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, system: &ServingSystem) {
+    let resp = match HttpRequest::parse(&stream) {
+        Ok(req) => dispatch(&req, system),
+        Err(e) => HttpResponse::error(400, &e),
+    };
+    let _ = resp.write_to(&mut stream);
+}
+
+/// Route one parsed request.
+pub fn dispatch(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => HttpResponse::ok_json(
+            json::obj(vec![
+                ("status", json::s("ok")),
+                ("version", json::s(crate::VERSION)),
+            ])
+            .to_json(),
+        ),
+        ("GET", "/metrics") => {
+            HttpResponse::ok_text(MetricsRegistry::global().render_prometheus())
+        }
+        ("GET", "/models") => {
+            let names = system
+                .repository()
+                .model_names()
+                .into_iter()
+                .map(|n| Value::Str(n))
+                .collect();
+            HttpResponse::ok_json(Value::Arr(names).to_json())
+        }
+        ("POST", "/infer") => match infer_endpoint(req, system) {
+            Ok(resp) => resp,
+            Err(msg) => HttpResponse::error(400, &msg),
+        },
+        ("POST", _) | ("GET", _) => HttpResponse::error(404, "not found"),
+        _ => HttpResponse::error(405, "method not allowed"),
+    }
+}
+
+fn infer_endpoint(req: &HttpRequest, system: &ServingSystem) -> Result<HttpResponse, String> {
+    let body = json::parse(req.body_str()?).map_err(|e| e.to_string())?;
+    let model = body.get("model").and_then(|v| v.as_str().map(|s| s.to_string())).map_err(|e| e.to_string())?;
+    let seed = body.get("seed").and_then(|v| v.as_i64()).map_err(|e| e.to_string())? as u64;
+    let path = match body.opt("path").ok().flatten().and_then(|v| v.as_str().ok()) {
+        Some("batched") => PathKind::Batched,
+        _ => PathKind::Direct,
+    };
+
+    let request = Request {
+        id: seed,
+        model,
+        arrival: system.clock().now(),
+        seed,
+        label: 0,
+        difficulty: 0.5,
+        confidence: 0.75,
+    };
+    let reg = MetricsRegistry::global();
+    reg.counter("gf_http_infer_total").inc();
+
+    match system.submit(&request, path) {
+        Ok(r) => {
+            reg.gauge("gf_last_latency_secs").set(r.latency_secs);
+            Ok(HttpResponse::ok_json(
+                json::obj(vec![
+                    ("request_id", json::num(r.request_id as f64)),
+                    ("predicted", json::num(r.predicted as f64)),
+                    ("confidence", json::num(r.confidence as f64)),
+                    ("entropy", json::num(r.entropy as f64)),
+                    ("latency_secs", json::num(r.latency_secs)),
+                    ("joules", json::num(r.joules)),
+                    ("path", json::s(r.path.as_str())),
+                ])
+                .to_json(),
+            ))
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains("backpressure") {
+                Ok(HttpResponse::error(429, &msg))
+            } else {
+                Ok(HttpResponse::error(400, &msg))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Endpoint-level tests that don't need a serving system.
+    #[test]
+    fn health_without_system_state() {
+        // dispatch needs a system only for /infer and /models; check the
+        // response shape through a fake request on /health by constructing
+        // a minimal system when artifacts exist, else skip.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("repository.json").exists() {
+            return;
+        }
+        let system =
+            ServingSystem::start(crate::pipeline::system::SystemConfig::new(root)).unwrap();
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/health".into(),
+            headers: Default::default(),
+            body: vec![],
+        };
+        let resp = dispatch(&req, &system);
+        assert_eq!(resp.status, 200);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+
+        // /models lists the repository
+        let req = HttpRequest { path: "/models".into(), ..req };
+        let resp = dispatch(&req, &system);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 3);
+
+        // unknown path 404s
+        let req = HttpRequest { path: "/nope".into(), ..req };
+        assert_eq!(dispatch(&req, &system).status, 404);
+
+        // bad body 400s
+        let req = HttpRequest {
+            method: "POST".into(),
+            path: "/infer".into(),
+            headers: Default::default(),
+            body: b"not json".to_vec(),
+        };
+        assert_eq!(dispatch(&req, &system).status, 400);
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal HTTP/1.1 request parser + response writer.
+//!
+//! Supports exactly what the gateway needs: request line, headers,
+//! Content-Length bodies. Not a general server — no chunked encoding, no
+//! keep-alive pipelining (each connection serves one request, like
+//! FastAPI under `Connection: close`).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Parse one request from a stream.
+    pub fn parse<R: Read>(stream: R) -> Result<HttpRequest, String> {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let mut parts = line.trim_end().split_whitespace();
+        let method = parts.next().ok_or("missing method")?.to_string();
+        let path = parts.next().ok_or("missing path")?.to_string();
+        let version = parts.next().ok_or("missing version")?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(format!("unsupported version {version}"));
+        }
+
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).map_err(|e| e.to_string())?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+
+        let len: usize = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if len > 16 * 1024 * 1024 {
+            return Err("body too large".into());
+        }
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+        }
+        Ok(HttpRequest { method, path, headers, body })
+    }
+
+    pub fn body_str(&self) -> Result<&str, String> {
+        std::str::from_utf8(&self.body).map_err(|e| e.to_string())
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn ok_json(body: String) -> Self {
+        HttpResponse { status: 200, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn ok_text(body: String) -> Self {
+        HttpResponse { status: 200, content_type: "text/plain; charset=utf-8", body: body.into_bytes() }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Self {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: format!("{{\"error\":{}}}", crate::json::Value::Str(msg.into()).to_json())
+                .into_bytes(),
+        }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            _ => "Internal Server Error",
+        }
+    }
+
+    /// Serialise onto a stream.
+    pub fn write_to<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"seed\": 42}\n";
+        let r = HttpRequest::parse(&raw[..]).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/infer");
+        assert_eq!(r.headers["content-length"], "13");
+        assert_eq!(r.body_str().unwrap().trim(), "{\"seed\": 42}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /health HTTP/1.0\r\n\r\n";
+        let r = HttpRequest::parse(&raw[..]).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/health");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(HttpRequest::parse(&b"NOT-HTTP\r\n\r\n"[..]).is_err());
+        assert!(HttpRequest::parse(&b"GET /x SPDY/3\r\n\r\n"[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        assert!(HttpRequest::parse(&raw[..]).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = HttpResponse::ok_json("{\"a\":1}".into());
+        let mut buf = Vec::new();
+        resp.write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 7"));
+        assert!(text.ends_with("{\"a\":1}"));
+    }
+
+    #[test]
+    fn error_response_is_json() {
+        let resp = HttpResponse::error(429, "queue full");
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("queue full"));
+        assert_eq!(resp.status, 429);
+    }
+}

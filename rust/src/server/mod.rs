@@ -1,0 +1,21 @@
+//! The HTTP gateway — the FastAPI analog (§III-B Path A's REST layer).
+//!
+//! A minimal HTTP/1.1 server on `std::net::TcpListener` with a fixed
+//! thread pool (no tokio offline; DESIGN.md §6). Endpoints:
+//!
+//! * `POST /infer`  — JSON body `{"model": "...", "seed": N}`; runs the
+//!   closed-loop submit path and returns the decision + prediction.
+//! * `GET /metrics` — Prometheus text exposition of the global registry.
+//! * `GET /health`  — liveness.
+//!
+//! The gateway exists to prove the coordinator composes into a network
+//! service; the paper's latency tables are measured in-process (as the
+//! paper measures past the HTTP layer with batch scripts).
+
+pub mod gateway;
+pub mod http;
+pub mod threadpool;
+
+pub use gateway::Gateway;
+pub use http::{HttpRequest, HttpResponse};
+pub use threadpool::ThreadPool;

@@ -1,0 +1,110 @@
+//! Fixed-size worker thread pool for connection handling.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Task),
+    Shutdown,
+}
+
+/// A basic thread pool: `execute` enqueues, workers drain.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("gf-http-{i}"))
+                    .spawn(move || loop {
+                        let msg = rx.lock().unwrap().recv();
+                        match msg {
+                            Ok(Msg::Run(task)) => task(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx, handles }
+    }
+
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue a task.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn tasks_run_concurrently() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        // Task 1 blocks until task 2 signals — only possible with 2 threads.
+        let tx1 = tx.clone();
+        let g = gate_rx.clone();
+        pool.execute(move || {
+            g.lock().unwrap().recv().unwrap();
+            tx1.send(1).unwrap();
+        });
+        pool.execute(move || {
+            gate_tx.send(()).unwrap();
+            tx.send(2).unwrap();
+        });
+        let mut got = vec![rx.recv().unwrap(), rx.recv().unwrap()];
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_size_panics() {
+        ThreadPool::new(0);
+    }
+}

@@ -1,0 +1,149 @@
+//! The stylised energy landscape of Fig. 1 / Fig. 5.
+//!
+//! A 1-D state axis `s ∈ [0, 1]` carries a multi-basin cost surface
+//! J(s): a global minimum hidden behind a high barrier plus a shallower
+//! *local* basin the controller is happy to settle in (the protein-folding
+//! story of §IV-A: a functional shape without chasing the absolute
+//! minimum). τ(t) level sets cut the surface into admit/skip regions;
+//! the benches dump these curves as CSV for the figure.
+
+use crate::controller::threshold::ThresholdSchedule;
+
+/// A sampled point of the landscape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LandscapePoint {
+    pub s: f64,
+    pub j: f64,
+}
+
+/// Gaussian well helper.
+fn well(s: f64, center: f64, depth: f64, width: f64) -> f64 {
+    -depth * (-((s - center) * (s - center)) / (2.0 * width * width)).exp()
+}
+
+/// The stylised cost surface: baseline cost 1.0, a *local* basin near
+/// s = 0.35 (depth 0.55) and the *global* minimum near s = 0.85
+/// (depth 0.8) behind a barrier at s ≈ 0.65.
+pub fn cost_surface(s: f64) -> f64 {
+    let barrier = 0.35 * (-((s - 0.65) * (s - 0.65)) / (2.0 * 0.004)).exp();
+    1.0 + well(s, 0.35, 0.55, 0.09) + well(s, 0.85, 0.80, 0.05) + barrier
+}
+
+/// Sample the surface at `n` evenly-spaced states.
+pub fn sample_surface(n: usize) -> Vec<LandscapePoint> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let s = i as f64 / (n - 1) as f64;
+            LandscapePoint { s, j: cost_surface(s) }
+        })
+        .collect()
+}
+
+/// Contiguous intervals of the state axis where J(s) <= level — the
+/// basins reachable without climbing above `level`.
+pub fn basins_below(points: &[LandscapePoint], level: f64) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    let mut start: Option<f64> = None;
+    for p in points {
+        if p.j <= level {
+            if start.is_none() {
+                start = Some(p.s);
+            }
+        } else if let Some(s0) = start.take() {
+            out.push((s0, p.s));
+        }
+    }
+    if let Some(s0) = start {
+        out.push((s0, points.last().unwrap().s));
+    }
+    out
+}
+
+/// Local minima of the sampled surface (basin floors).
+pub fn local_minima(points: &[LandscapePoint]) -> Vec<LandscapePoint> {
+    let mut out = Vec::new();
+    for w in points.windows(3) {
+        if w[1].j < w[0].j && w[1].j < w[2].j {
+            out.push(w[1]);
+        }
+    }
+    out
+}
+
+/// Fig. 1 data: τ(t) samples over `horizon` seconds.
+pub fn tau_curve(schedule: &ThresholdSchedule, horizon: f64, n: usize) -> Vec<(f64, f64)> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let t = horizon * i as f64 / (n - 1) as f64;
+            (t, schedule.tau(t))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surface_has_two_basins_and_a_barrier() {
+        let pts = sample_surface(1001);
+        let minima = local_minima(&pts);
+        assert!(minima.len() >= 2, "found {:?}", minima);
+        // global minimum deeper than local one
+        let global = minima.iter().cloned().fold(f64::INFINITY, |a, p| a.min(p.j));
+        let local = minima
+            .iter()
+            .filter(|p| (p.s - 0.35).abs() < 0.1)
+            .map(|p| p.j)
+            .next()
+            .expect("local basin near 0.35");
+        assert!(global < local, "global {global} must undercut local {local}");
+        // barrier between them exceeds both floors
+        let barrier = pts
+            .iter()
+            .filter(|p| (0.55..0.75).contains(&p.s))
+            .map(|p| p.j)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(barrier > local + 0.3);
+    }
+
+    #[test]
+    fn basins_split_at_low_levels() {
+        let pts = sample_surface(2001);
+        // At a level just above the local floor, the admit region is
+        // disconnected: the controller can sit in either basin but not walk
+        // between them.
+        let local_floor = cost_surface(0.35);
+        let regions = basins_below(&pts, local_floor + 0.1);
+        assert!(regions.len() >= 2, "{regions:?}");
+    }
+
+    #[test]
+    fn basins_merge_at_high_levels() {
+        let pts = sample_surface(2001);
+        let regions = basins_below(&pts, 10.0);
+        assert_eq!(regions.len(), 1);
+        let (a, b) = regions[0];
+        assert!(a <= 0.001 && b >= 0.999);
+    }
+
+    #[test]
+    fn tau_curve_is_monotone_for_paper_schedule() {
+        let s = ThresholdSchedule::paper_default();
+        let curve = tau_curve(&s, 60.0, 100);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+        assert_eq!(curve.len(), 100);
+        assert_eq!(curve[0].0, 0.0);
+    }
+
+    #[test]
+    fn surface_is_positive_and_bounded() {
+        for p in sample_surface(500) {
+            assert!(p.j > 0.0 && p.j < 2.0, "{p:?}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Deterministic simulation layer.
+//!
+//! Two pieces:
+//!
+//! * [`serving`] — a discrete-time simulation of the single-server serving
+//!   loop with an admission policy in front. It uses the same controller,
+//!   cost, threshold, and energy-profile code as the real pipeline but
+//!   replaces PJRT execution with the device profile's roofline time, so
+//!   ablation sweeps (Table III, weight policies, τ schedules) run tens of
+//!   thousands of requests per second deterministically — including on the
+//!   paper's A100 profile, which we obviously cannot execute on.
+//! * [`landscape`] — the stylised energy-landscape geometry behind Fig. 1
+//!   and Fig. 5 (multi-basin J surface, τ(t) level sets, admit regions).
+
+pub mod landscape;
+pub mod serving;
+
+pub use serving::{simulate, SimConfig, SimReport};

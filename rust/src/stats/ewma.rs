@@ -1,0 +1,153 @@
+//! Exponentially-weighted moving average.
+//!
+//! The paper's controller consumes two EWMAs: rolling joules/request
+//! (Appendix A line 3, "CodeCarbon+NVML rolling EWMA") and recent tail
+//! latency for the congestion proxy. Supports both per-observation decay
+//! and time-based decay (irregular sampling).
+
+/// Fixed-alpha EWMA: `v <- alpha * x + (1 - alpha) * v`.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Ewma { alpha, value: None }
+    }
+
+    /// EWMA whose step response reaches ~63% after `n` observations
+    /// (alpha = 2/(n+1), the "span" convention).
+    pub fn with_span(n: f64) -> Self {
+        assert!(n >= 1.0);
+        Ewma::new(2.0 / (n + 1.0))
+    }
+
+    /// Record an observation; returns the updated average.
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average; `default` until the first observation.
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn is_primed(&self) -> bool {
+        self.value.is_some()
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Time-decayed EWMA for irregularly-sampled series (e.g. power samples):
+/// the old value decays with `exp(-dt / tau)`.
+#[derive(Debug, Clone)]
+pub struct TimeEwma {
+    tau: f64,
+    value: Option<(f64, f64)>, // (value, last_t)
+}
+
+impl TimeEwma {
+    /// `tau`: decay time constant in seconds.
+    pub fn new(tau: f64) -> Self {
+        assert!(tau > 0.0);
+        TimeEwma { tau, value: None }
+    }
+
+    /// Record observation `x` at time `t` (seconds, monotonic).
+    pub fn push(&mut self, t: f64, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some((v, last_t)) => {
+                let dt = (t - last_t).max(0.0);
+                let w = (-dt / self.tau).exp();
+                w * v + (1.0 - w) * x
+            }
+        };
+        self.value = Some((v, t));
+        v
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.map(|(v, _)| v).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_push_sets_value() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.push(10.0), 10.0);
+    }
+
+    #[test]
+    fn converges_to_constant_input() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..100 {
+            e.push(5.0);
+        }
+        assert!((e.get_or(0.0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_response_direction() {
+        let mut e = Ewma::new(0.5);
+        e.push(0.0);
+        let v = e.push(10.0);
+        assert!((v - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn span_convention() {
+        let e = Ewma::with_span(9.0);
+        assert!((e.alpha - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_until_primed() {
+        let e = Ewma::new(0.1);
+        assert_eq!(e.get_or(42.0), 42.0);
+        assert!(!e.is_primed());
+    }
+
+    #[test]
+    fn time_ewma_full_decay_far_apart() {
+        let mut e = TimeEwma::new(0.001);
+        e.push(0.0, 1.0);
+        // 10^3 time constants later the old value is numerically gone
+        let v = e.push(1.0, 9.0);
+        assert!((v - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn time_ewma_no_decay_at_same_instant() {
+        let mut e = TimeEwma::new(1.0);
+        e.push(5.0, 1.0);
+        let v = e.push(5.0, 3.0);
+        assert!((v - 1.0).abs() < 1e-9, "w=exp(0)=1 keeps the old value");
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_alpha_panics() {
+        Ewma::new(0.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Log-bucketed latency histogram (HDR-histogram style), O(1) record and
+//! O(buckets) quantile, bounded relative error set by buckets-per-octave.
+//!
+//! This is the P95 source for the controller's congestion proxy C(x): an
+//! exact-sort quantile would be O(n log n) per decision, a reservoir loses
+//! the tail; log-bucketing keeps the tail with ~4% relative error at 16
+//! buckets/octave.
+
+/// Histogram over positive values (seconds) with geometric buckets.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Lowest representable value; everything below lands in bucket 0.
+    floor: f64,
+    /// Buckets per factor-of-two.
+    per_octave: usize,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl LatencyHistogram {
+    /// `floor`: smallest distinguishable value (e.g. 1e-6 s); `octaves`:
+    /// dynamic range in powers of two; `per_octave`: resolution.
+    pub fn new(floor: f64, octaves: usize, per_octave: usize) -> Self {
+        assert!(floor > 0.0 && octaves > 0 && per_octave > 0);
+        LatencyHistogram {
+            floor,
+            per_octave,
+            counts: vec![0; octaves * per_octave + 1],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Default config for request latencies: 1 µs floor, 30 octaves
+    /// (≈ 1 µs .. 1000 s), 16 buckets/octave (≈ 4% relative error).
+    pub fn for_latency() -> Self {
+        LatencyHistogram::new(1e-6, 30, 16)
+    }
+
+    fn bucket_of(&self, x: f64) -> usize {
+        if x <= self.floor {
+            return 0;
+        }
+        let b = ((x / self.floor).log2() * self.per_octave as f64).floor() as usize + 1;
+        b.min(self.counts.len() - 1)
+    }
+
+    /// Representative (geometric-mid) value of a bucket.
+    fn value_of(&self, b: usize) -> f64 {
+        if b == 0 {
+            return self.floor;
+        }
+        let lo = self.floor * 2f64.powf((b - 1) as f64 / self.per_octave as f64);
+        let hi = self.floor * 2f64.powf(b as f64 / self.per_octave as f64);
+        (lo * hi).sqrt()
+    }
+
+    /// Record one observation (values <= 0 clamp to the floor bucket).
+    pub fn record(&mut self, x: f64) {
+        let b = self.bucket_of(x.max(0.0));
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += x.max(0.0);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Quantile estimate (0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.value_of(b);
+            }
+        }
+        self.value_of(self.counts.len() - 1)
+    }
+
+    /// P95 shorthand (the paper's congestion signal).
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// Merge a compatible histogram (same geometry).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        assert_eq!(self.per_octave, other.per_octave);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_quantile_zero() {
+        let h = LatencyHistogram::for_latency();
+        assert_eq!(h.quantile(0.95), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value_round_trips_within_error() {
+        let mut h = LatencyHistogram::for_latency();
+        h.record(0.010); // 10 ms
+        let q = h.quantile(0.5);
+        assert!((q - 0.010).abs() / 0.010 < 0.05, "q={q}");
+    }
+
+    #[test]
+    fn quantiles_vs_exact_on_lognormal() {
+        let mut r = Rng::new(123);
+        let mut h = LatencyHistogram::for_latency();
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            let x = r.lognormal(-6.0, 0.8); // ~2.5 ms median
+            h.record(x);
+            xs.push(x);
+        }
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let approx = h.quantile(q);
+            let exact = crate::stats::quantile(&xs, q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.08, "q={q}: approx {approx} vs exact {exact} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = LatencyHistogram::for_latency();
+        for x in [0.001, 0.002, 0.003] {
+            h.record(x);
+        }
+        assert!((h.mean() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut r = Rng::new(5);
+        let mut a = LatencyHistogram::for_latency();
+        let mut b = LatencyHistogram::for_latency();
+        let mut whole = LatencyHistogram::for_latency();
+        for i in 0..5000 {
+            let x = r.lognormal(-5.0, 1.0);
+            whole.record(x);
+            if i % 2 == 0 {
+                a.record(x)
+            } else {
+                b.record(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.p95() - whole.p95()).abs() / whole.p95() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let mut h = LatencyHistogram::new(1e-6, 4, 4); // range up to 16 µs
+        h.record(10.0); // way above range
+        h.record(-1.0); // below
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut r = Rng::new(6);
+        let mut h = LatencyHistogram::for_latency();
+        for _ in 0..1000 {
+            h.record(r.lognormal(-6.0, 1.2));
+        }
+        let mut last = 0.0;
+        for i in 0..=20 {
+            let q = h.quantile(i as f64 / 20.0);
+            assert!(q >= last);
+            last = q;
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! CSV / JSON exporters for tracked runs (the paper's §X audit trail).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::json::{self, Value};
+use crate::telemetry::tracker::RunSnapshot;
+
+/// Escape one CSV field (RFC 4180: quote when it contains , " or newline).
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Render metric time-series of runs as long-form CSV:
+/// `run,metric,step,t,value`.
+pub fn metrics_csv(runs: &[RunSnapshot]) -> String {
+    let mut out = String::from("run,metric,step,t,value\n");
+    for r in runs {
+        for (metric, series) in &r.metrics {
+            for p in series {
+                out.push_str(&format!(
+                    "{},{},{},{:.6},{}\n",
+                    csv_field(&r.name),
+                    csv_field(metric),
+                    p.step,
+                    p.t,
+                    p.value
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Render params of runs as CSV: `run,param,value`.
+pub fn params_csv(runs: &[RunSnapshot]) -> String {
+    let mut out = String::from("run,param,value\n");
+    for r in runs {
+        for (k, v) in &r.params {
+            out.push_str(&format!("{},{},{}\n", csv_field(&r.name), csv_field(k), csv_field(v)));
+        }
+    }
+    out
+}
+
+/// Full JSON export of runs (params, tags, metric series).
+pub fn runs_json(runs: &[RunSnapshot]) -> String {
+    let arr = runs
+        .iter()
+        .map(|r| {
+            let metrics = r
+                .metrics
+                .iter()
+                .map(|(k, series)| {
+                    let pts = series
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("step", Value::Num(p.step as f64)),
+                                ("t", Value::Num(p.t)),
+                                ("value", Value::Num(p.value)),
+                            ])
+                        })
+                        .collect();
+                    (k.clone(), Value::Arr(pts))
+                })
+                .collect();
+            let params = r
+                .params
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::Str(v.clone())))
+                .collect();
+            let tags =
+                r.tags.iter().map(|(k, v)| (k.clone(), Value::Str(v.clone()))).collect();
+            json::obj(vec![
+                ("name", Value::Str(r.name.clone())),
+                ("params", Value::Obj(params)),
+                ("tags", Value::Obj(tags)),
+                ("metrics", Value::Obj(metrics)),
+            ])
+        })
+        .collect();
+    Value::Arr(arr).to_json()
+}
+
+/// Write string content to a file, creating parent dirs.
+pub fn write_file(path: &Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(content.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Tracker;
+
+    fn sample_runs() -> Vec<RunSnapshot> {
+        let t = Tracker::new();
+        let r = t.start_run("exp,1"); // comma in name to exercise quoting
+        r.log_param("seed", 42);
+        r.log_metric("lat", 0, 0.0, 1.5);
+        r.log_metric("lat", 1, 0.1, 2.5);
+        vec![r.snapshot()]
+    }
+
+    #[test]
+    fn csv_quoting() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn metrics_csv_shape() {
+        let csv = metrics_csv(&sample_runs());
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines[0], "run,metric,step,t,value");
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("\"exp,1\",lat,0,"));
+    }
+
+    #[test]
+    fn params_csv_shape() {
+        let csv = params_csv(&sample_runs());
+        assert!(csv.contains("seed,42"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let s = runs_json(&sample_runs());
+        let v = crate::json::parse(&s).unwrap();
+        let runs = v.as_arr().unwrap();
+        assert_eq!(runs[0].get("name").unwrap().as_str().unwrap(), "exp,1");
+        let lat = runs[0].get("metrics").unwrap().get("lat").unwrap();
+        assert_eq!(lat.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("gf_test_{}", std::process::id()));
+        let path = dir.join("a/b/c.csv");
+        write_file(&path, "x,y\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x,y\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

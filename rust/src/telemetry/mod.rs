@@ -1,0 +1,15 @@
+//! Experiment tracking — the MLflow analog (DESIGN.md §2).
+//!
+//! The paper logs latency statistics, throughput, controller state, and
+//! CodeCarbon energy into MLflow runs and exports them as CSV for audit
+//! (§X "Experiment tracking ... export as CSV for audit"). This module
+//! provides the same trail: named runs holding params, tags, metric
+//! time-series, and CSV/JSON exporters, plus a lock-free atomic metrics
+//! registry for hot-path counters.
+
+pub mod export;
+pub mod registry;
+pub mod tracker;
+
+pub use registry::MetricsRegistry;
+pub use tracker::{Run, Tracker};

@@ -1,0 +1,149 @@
+//! Lock-free metrics registry for the request hot path.
+//!
+//! §Perf requires no locks on the serve path; counters and gauges here are
+//! plain atomics. Float gauges are stored as `u64` bit patterns
+//! (`f64::to_bits`) so a single atomic store publishes them.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins float gauge.
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Named counters/gauges; registration takes a lock, reads/updates do not.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Process-wide registry (for the HTTP /metrics endpoint).
+    pub fn global() -> &'static MetricsRegistry {
+        static G: OnceLock<MetricsRegistry> = OnceLock::new();
+        G.get_or_init(MetricsRegistry::new)
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Render in Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_count() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("requests_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("requests_total").get(), 5);
+    }
+
+    #[test]
+    fn gauges_store_floats() {
+        let r = MetricsRegistry::new();
+        r.gauge("tau").set(1.25);
+        assert_eq!(r.gauge("tau").get(), 1.25);
+        r.gauge("tau").set(-0.5);
+        assert_eq!(r.gauge("tau").get(), -0.5);
+    }
+
+    #[test]
+    fn same_name_same_instance() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn concurrent_increments_exact() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("n");
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        let r = MetricsRegistry::new();
+        r.counter("a_total").add(2);
+        r.gauge("b_gauge").set(0.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("a_total 2"));
+        assert!(text.contains("b_gauge 0.5"));
+        assert!(text.contains("# TYPE a_total counter"));
+    }
+}

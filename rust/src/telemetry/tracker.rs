@@ -1,0 +1,187 @@
+//! Run tracker: MLflow-style runs with params, tags, and metric series.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// One metric observation: (step, wallclock seconds, value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricPoint {
+    pub step: u64,
+    pub t: f64,
+    pub value: f64,
+}
+
+/// A tracked run (the MLflow `Run` analog).
+#[derive(Debug, Default)]
+pub struct RunData {
+    pub name: String,
+    pub params: BTreeMap<String, String>,
+    pub tags: BTreeMap<String, String>,
+    pub metrics: BTreeMap<String, Vec<MetricPoint>>,
+}
+
+/// Handle to a run; clone-able, thread-safe.
+#[derive(Debug, Clone)]
+pub struct Run {
+    data: Arc<Mutex<RunData>>,
+}
+
+impl Run {
+    fn new(name: &str) -> Self {
+        Run {
+            data: Arc::new(Mutex::new(RunData { name: name.to_string(), ..Default::default() })),
+        }
+    }
+
+    /// Log an immutable parameter (seed, config knob, device name).
+    pub fn log_param(&self, key: &str, value: impl ToString) {
+        self.data.lock().unwrap().params.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn set_tag(&self, key: &str, value: impl ToString) {
+        self.data.lock().unwrap().tags.insert(key.to_string(), value.to_string());
+    }
+
+    /// Append one point to a metric series.
+    pub fn log_metric(&self, key: &str, step: u64, t: f64, value: f64) {
+        self.data
+            .lock()
+            .unwrap()
+            .metrics
+            .entry(key.to_string())
+            .or_default()
+            .push(MetricPoint { step, t, value });
+    }
+
+    /// Latest value of a metric, if any.
+    pub fn last_metric(&self, key: &str) -> Option<f64> {
+        self.data.lock().unwrap().metrics.get(key).and_then(|v| v.last()).map(|p| p.value)
+    }
+
+    pub fn metric_series(&self, key: &str) -> Vec<MetricPoint> {
+        self.data.lock().unwrap().metrics.get(key).cloned().unwrap_or_default()
+    }
+
+    pub fn param(&self, key: &str) -> Option<String> {
+        self.data.lock().unwrap().params.get(key).cloned()
+    }
+
+    pub fn name(&self) -> String {
+        self.data.lock().unwrap().name.clone()
+    }
+
+    /// Snapshot for export.
+    pub fn snapshot(&self) -> RunSnapshot {
+        let g = self.data.lock().unwrap();
+        RunSnapshot {
+            name: g.name.clone(),
+            params: g.params.clone(),
+            tags: g.tags.clone(),
+            metrics: g.metrics.clone(),
+        }
+    }
+}
+
+/// Immutable copy of a run used by the exporters.
+#[derive(Debug, Clone)]
+pub struct RunSnapshot {
+    pub name: String,
+    pub params: BTreeMap<String, String>,
+    pub tags: BTreeMap<String, String>,
+    pub metrics: BTreeMap<String, Vec<MetricPoint>>,
+}
+
+/// The experiment tracker: creates and retains runs.
+#[derive(Debug, Default)]
+pub struct Tracker {
+    runs: Mutex<Vec<Run>>,
+}
+
+impl Tracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new named run.
+    pub fn start_run(&self, name: &str) -> Run {
+        let run = Run::new(name);
+        self.runs.lock().unwrap().push(run.clone());
+        run
+    }
+
+    pub fn runs(&self) -> Vec<Run> {
+        self.runs.lock().unwrap().clone()
+    }
+
+    pub fn find(&self, name: &str) -> Option<Run> {
+        self.runs.lock().unwrap().iter().find(|r| r.name() == name).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_and_tags() {
+        let t = Tracker::new();
+        let r = t.start_run("exp1");
+        r.log_param("seed", 42);
+        r.set_tag("path", "triton");
+        assert_eq!(r.param("seed").as_deref(), Some("42"));
+        assert_eq!(r.snapshot().tags["path"], "triton");
+    }
+
+    #[test]
+    fn metric_series_ordering() {
+        let t = Tracker::new();
+        let r = t.start_run("exp");
+        for i in 0..5 {
+            r.log_metric("latency_ms", i, i as f64 * 0.1, 10.0 + i as f64);
+        }
+        let s = r.metric_series("latency_ms");
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[4].value, 14.0);
+        assert_eq!(r.last_metric("latency_ms"), Some(14.0));
+        assert_eq!(r.last_metric("nope"), None);
+    }
+
+    #[test]
+    fn tracker_finds_runs() {
+        let t = Tracker::new();
+        t.start_run("a");
+        t.start_run("b");
+        assert_eq!(t.runs().len(), 2);
+        assert!(t.find("a").is_some());
+        assert!(t.find("zz").is_none());
+    }
+
+    #[test]
+    fn run_handle_shared_across_clones() {
+        let t = Tracker::new();
+        let r = t.start_run("x");
+        let r2 = r.clone();
+        r.log_metric("m", 0, 0.0, 1.0);
+        assert_eq!(r2.last_metric("m"), Some(1.0));
+    }
+
+    #[test]
+    fn concurrent_logging() {
+        let t = Tracker::new();
+        let r = t.start_run("conc");
+        let handles: Vec<_> = (0..4)
+            .map(|k| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        r.log_metric("m", i, 0.0, (k * 100 + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.metric_series("m").len(), 400);
+    }
+}

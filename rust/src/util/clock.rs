@@ -1,0 +1,109 @@
+//! Clock abstraction: real monotonic time for serving, manual time for the
+//! deterministic simulator ([`crate::sim`]) and for unit-testing the
+//! controller's τ(t) decay without sleeping.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic clock measured in seconds since an arbitrary origin.
+pub trait Clock: Send + Sync {
+    /// Seconds since the clock's origin.
+    fn now(&self) -> f64;
+}
+
+/// Wall clock backed by `std::time::Instant`, origin = construction time.
+#[derive(Debug, Clone)]
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        SystemClock { origin: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+/// Manually advanced clock for simulation and tests. Time is stored as
+/// nanoseconds in an atomic so readers on other threads observe advances.
+#[derive(Debug, Clone, Default)]
+pub struct ManualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance by `dt` seconds (dt >= 0).
+    pub fn advance(&self, dt: f64) {
+        assert!(dt >= 0.0, "clock cannot go backwards");
+        self.nanos.fetch_add((dt * 1e9) as u64, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time in seconds (must not go backwards).
+    pub fn set(&self, t: f64) {
+        let target = (t * 1e9) as u64;
+        let prev = self.nanos.load(Ordering::SeqCst);
+        assert!(target >= prev, "clock cannot go backwards");
+        self.nanos.store(target, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_monotonic() {
+        let c = SystemClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.set(3.0);
+        assert!((c.now() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn manual_clock_rejects_backwards() {
+        let c = ManualClock::new();
+        c.set(2.0);
+        c.set(1.0);
+    }
+
+    #[test]
+    fn manual_clock_shared_across_clones() {
+        let c = ManualClock::new();
+        let c2 = c.clone();
+        c.advance(1.0);
+        assert!((c2.now() - 1.0).abs() < 1e-9);
+    }
+}

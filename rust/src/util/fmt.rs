@@ -1,0 +1,79 @@
+//! Human-friendly number/duration formatting for reports and bench tables.
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s).
+pub fn duration(secs: f64) -> String {
+    let abs = secs.abs();
+    if abs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if abs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if abs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Format a count with SI suffix (k/M/G).
+pub fn si(x: f64) -> String {
+    let abs = x.abs();
+    if abs >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{:.2}", x)
+    }
+}
+
+/// Fixed-width left-pad for table rendering.
+pub fn pad(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(width - s.len()), s)
+    }
+}
+
+/// Render a percentage delta as the paper prints them, e.g. `-42.0%`.
+pub fn pct_delta(before: f64, after: f64) -> String {
+    if before == 0.0 {
+        return "n/a".to_string();
+    }
+    format!("{:+.1}%", (after - before) / before * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(0.5e-9 * 2.0), "1.0 ns");
+        assert!(duration(2.5e-6).contains("µs"));
+        assert!(duration(0.125).contains("ms"));
+        assert!(duration(2.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn si_suffixes() {
+        assert_eq!(si(1500.0), "1.50 k");
+        assert_eq!(si(2_500_000.0), "2.50 M");
+        assert_eq!(si(3.0e9), "3.00 G");
+        assert_eq!(si(12.0), "12.00");
+    }
+
+    #[test]
+    fn pct() {
+        assert_eq!(pct_delta(0.50, 0.29), "-42.0%");
+        assert_eq!(pct_delta(0.0, 1.0), "n/a");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad("ab", 4), "  ab");
+        assert_eq!(pad("abcd", 2), "abcd");
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, clocks, number formatting.
+//!
+//! No external crates are available offline beyond `xla`/`anyhow`/
+//! `thiserror`, so the randomness and timing substrates the serving stack
+//! needs are built here (DESIGN.md §6).
+
+pub mod clock;
+pub mod fmt;
+pub mod rng;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+pub use rng::Rng;

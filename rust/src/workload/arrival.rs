@@ -1,0 +1,184 @@
+//! Arrival processes: Poisson, 2-state MMPP (bursty), deterministic.
+
+use crate::util::Rng;
+
+/// Iterator-style arrival process: yields the next interarrival gap (s).
+pub trait Arrival {
+    fn next_gap(&mut self, rng: &mut Rng) -> f64;
+}
+
+/// Concrete arrival process selection.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Markov-modulated Poisson with two phases (calm/burst) — the
+    /// "bursty or sustained higher QPS" regime where the paper says
+    /// Triton excels (§III-B).
+    Mmpp2 {
+        calm_rate: f64,
+        burst_rate: f64,
+        /// Mean sojourn in each phase (s).
+        calm_mean: f64,
+        burst_mean: f64,
+        /// Internal: current phase (true = burst) and remaining sojourn.
+        state: MmppState,
+    },
+    /// Fixed-gap arrivals (rate = 1/gap), for deterministic tests.
+    Uniform { gap: f64 },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MmppState {
+    burst: bool,
+    remaining: f64,
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        ArrivalProcess::Poisson { rate }
+    }
+
+    pub fn mmpp2(calm_rate: f64, burst_rate: f64, calm_mean: f64, burst_mean: f64) -> Self {
+        assert!(calm_rate > 0.0 && burst_rate > 0.0 && calm_mean > 0.0 && burst_mean > 0.0);
+        ArrivalProcess::Mmpp2 {
+            calm_rate,
+            burst_rate,
+            calm_mean,
+            burst_mean,
+            state: MmppState::default(),
+        }
+    }
+
+    pub fn uniform(gap: f64) -> Self {
+        assert!(gap >= 0.0);
+        ArrivalProcess::Uniform { gap }
+    }
+
+    /// Long-run average arrival rate (req/s).
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Mmpp2 { calm_rate, burst_rate, calm_mean, burst_mean, .. } => {
+                // time-weighted average of phase rates
+                (calm_rate * calm_mean + burst_rate * burst_mean) / (calm_mean + burst_mean)
+            }
+            ArrivalProcess::Uniform { gap } => {
+                if *gap > 0.0 {
+                    1.0 / gap
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+}
+
+impl Arrival for ArrivalProcess {
+    fn next_gap(&mut self, rng: &mut Rng) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => rng.exponential(*rate),
+            ArrivalProcess::Uniform { gap } => *gap,
+            ArrivalProcess::Mmpp2 { calm_rate, burst_rate, calm_mean, burst_mean, state } => {
+                // Initialise phase sojourn lazily.
+                if state.remaining <= 0.0 {
+                    state.remaining =
+                        rng.exponential(1.0 / if state.burst { *burst_mean } else { *calm_mean });
+                }
+                let rate = if state.burst { *burst_rate } else { *calm_rate };
+                let gap = rng.exponential(rate);
+                state.remaining -= gap;
+                if state.remaining <= 0.0 {
+                    state.burst = !state.burst;
+                }
+                gap
+            }
+        }
+    }
+}
+
+/// Materialise the first `n` arrival times (absolute seconds from 0).
+pub fn arrival_times(proc_: &mut ArrivalProcess, n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += proc_.next_gap(rng);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut p = ArrivalProcess::poisson(50.0);
+        let mut rng = Rng::new(1);
+        let times = arrival_times(&mut p, 20_000, &mut rng);
+        let rate = times.len() as f64 / times.last().unwrap();
+        assert!((rate - 50.0).abs() / 50.0 < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn uniform_gaps_exact() {
+        let mut p = ArrivalProcess::uniform(0.25);
+        let mut rng = Rng::new(2);
+        let times = arrival_times(&mut p, 4, &mut rng);
+        assert_eq!(times, vec![0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(p.mean_rate(), 4.0);
+    }
+
+    #[test]
+    fn mmpp_rate_between_phases() {
+        let mut p = ArrivalProcess::mmpp2(10.0, 200.0, 1.0, 0.2);
+        let mut rng = Rng::new(3);
+        let times = arrival_times(&mut p, 30_000, &mut rng);
+        let rate = times.len() as f64 / times.last().unwrap();
+        assert!(rate > 10.0 && rate < 200.0, "rate {rate}");
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // Coefficient of variation of interarrival gaps: Poisson -> 1,
+        // MMPP with contrasting phases -> > 1.
+        let mut rng = Rng::new(4);
+        let mut mmpp = ArrivalProcess::mmpp2(5.0, 500.0, 2.0, 0.5);
+        let mut gaps = Vec::new();
+        for _ in 0..30_000 {
+            gaps.push(mmpp.next_gap(&mut rng));
+        }
+        let cv = crate::stats::std_dev(&gaps) / crate::stats::mean(&gaps);
+        assert!(cv > 1.3, "cv {cv}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let mut p = ArrivalProcess::poisson(100.0);
+        let mut rng = Rng::new(5);
+        let times = arrival_times(&mut p, 1000, &mut rng);
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = |seed| {
+            let mut p = ArrivalProcess::mmpp2(10.0, 100.0, 1.0, 0.3);
+            let mut rng = Rng::new(seed);
+            arrival_times(&mut p, 100, &mut rng)
+        };
+        assert_eq!(gen(9), gen(9));
+        assert_ne!(gen(9), gen(10));
+    }
+
+    #[test]
+    fn mean_rate_of_mmpp_weighted() {
+        let p = ArrivalProcess::mmpp2(10.0, 100.0, 3.0, 1.0);
+        let want = (10.0 * 3.0 + 100.0 * 1.0) / 4.0;
+        assert!((p.mean_rate() - want).abs() < 1e-12);
+    }
+}

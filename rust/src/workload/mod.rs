@@ -1,0 +1,18 @@
+//! Workload substrate: arrival processes, calibrated synthetic request
+//! streams, and trace record/replay.
+//!
+//! The paper evaluates with synthetic inputs ("dummy inputs to remove
+//! data-loading confounds", §V) under batch=1 sequential iteration plus
+//! discussion of bursty production traffic. This module generates those
+//! workloads reproducibly: Poisson and MMPP (bursty) open-loop arrivals,
+//! closed-loop clients for the 100-iteration Table II runs, and a
+//! *calibrated* request stream whose confidence ≈ P(correct) — the
+//! property that makes the Table III ablation's "reject confident
+//! requests, lose <0.5pp accuracy" claim testable (DESIGN.md §2).
+
+pub mod arrival;
+pub mod stream;
+pub mod trace;
+
+pub use arrival::{Arrival, ArrivalProcess};
+pub use stream::{Request, RequestStream, StreamConfig};

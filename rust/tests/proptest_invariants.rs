@@ -1,0 +1,213 @@
+//! Property-based invariant tests over the coordinator's pure logic,
+//! using seeded random sweeps (the offline substitute for proptest:
+//! deterministic, many cases, shrink-free but reproducible by seed).
+//!
+//! Every property runs a few thousand random cases; a failure prints the
+//! case seed so it can be replayed.
+
+use greenflow::batching::policy::{BatchPlan, BatcherPolicy};
+use greenflow::controller::cost::{CostInputs, CostWeights};
+use greenflow::controller::threshold::ThresholdSchedule;
+use greenflow::controller::{AdmissionController, AdmissionPolicy, ControllerConfig};
+use greenflow::json;
+use greenflow::stats::LatencyHistogram;
+use greenflow::util::Rng;
+
+const CASES: usize = 3000;
+
+fn rand_inputs(rng: &mut Rng) -> CostInputs {
+    CostInputs {
+        entropy: rng.range(0.0, 1.0),
+        max_entropy: 2f64.ln(),
+        energy_ewma: rng.range(0.0, 2.0),
+        energy_ref: rng.range(0.1, 2.0),
+        queue_depth: rng.below(100) as usize,
+        queue_capacity: 64,
+        p95_latency: rng.range(0.0, 0.5),
+        slo_latency: 0.25,
+    }
+}
+
+#[test]
+fn prop_cost_terms_always_normalised() {
+    let mut rng = Rng::new(1);
+    for case in 0..CASES {
+        let x = rand_inputs(&mut rng);
+        for (name, v) in [("L", x.l_norm()), ("E", x.e_norm()), ("C", x.c_norm())] {
+            assert!(
+                (0.0..=1.0).contains(&v),
+                "case {case}: {name}={v} out of [0,1] for {x:?}"
+            );
+        }
+        let w = CostWeights::new(
+            rng.range(0.0, 3.0) + 1e-6,
+            rng.range(0.0, 3.0),
+            rng.range(0.0, 3.0),
+        )
+        .normalised();
+        let j = x.j(&w);
+        assert!((0.0..=1.0 + 1e-12).contains(&j), "case {case}: J={j}");
+    }
+}
+
+#[test]
+fn prop_j_monotone_in_entropy() {
+    // Fixing E and C, J must be non-decreasing in entropy (more
+    // uncertainty => more utility => more admissible).
+    let mut rng = Rng::new(2);
+    for case in 0..CASES {
+        let mut a = rand_inputs(&mut rng);
+        let mut b = a;
+        a.entropy = rng.range(0.0, 0.5);
+        b.entropy = a.entropy + rng.range(0.0, 0.2);
+        let w = CostWeights::new(1.0, 1.0, 1.0).normalised();
+        assert!(b.j(&w) >= a.j(&w) - 1e-12, "case {case}");
+    }
+}
+
+#[test]
+fn prop_threshold_exponential_bounded_and_monotone() {
+    let mut rng = Rng::new(3);
+    for case in 0..CASES {
+        let tau0 = rng.range(-1.0, 2.0);
+        let tau_inf = rng.range(-1.0, 2.0);
+        let k = rng.range(0.01, 10.0);
+        let s = ThresholdSchedule::Exponential { tau0, tau_inf, k };
+        let (lo, hi) = if tau0 <= tau_inf { (tau0, tau_inf) } else { (tau_inf, tau0) };
+        let mut prev = s.tau(0.0);
+        assert!((prev - tau0).abs() < 1e-9, "case {case}: τ(0) != τ0");
+        let mut t = 0.0;
+        for _ in 1..50 {
+            t += rng.range(0.01, 1.0);
+            let v = s.tau(t);
+            assert!(v >= lo - 1e-9 && v <= hi + 1e-9, "case {case}: τ out of bounds");
+            // monotone toward tau_inf
+            if tau0 <= tau_inf {
+                assert!(v + 1e-9 >= prev || t < 1e-12, "case {case}: not monotone");
+            } else {
+                assert!(v <= prev + 1e-9, "case {case}: not monotone");
+            }
+            prev = v;
+        }
+    }
+}
+
+#[test]
+fn prop_admission_rate_decreases_with_tau() {
+    // For the same request mix, a stricter constant τ admits a subset.
+    let mut rng = Rng::new(4);
+    for case in 0..200 {
+        let xs: Vec<CostInputs> = (0..200).map(|_| rand_inputs(&mut rng)).collect();
+        let t1 = rng.range(0.0, 0.5);
+        let t2 = t1 + rng.range(0.0, 0.5);
+        let count = |tau: f64| -> usize {
+            let mut c = AdmissionController::new(ControllerConfig {
+                weights: CostWeights::new(1.0, 1.0, 1.0).normalised(),
+                schedule: ThresholdSchedule::Constant { tau },
+                respond_from_cache: true,
+            });
+            xs.iter().filter(|x| c.decide(x, 0.0).admitted()).count()
+        };
+        assert!(count(t2) <= count(t1), "case {case}: stricter τ admitted more");
+    }
+}
+
+#[test]
+fn prop_batcher_plan_is_sound() {
+    let mut rng = Rng::new(5);
+    for case in 0..CASES {
+        let max = 1 + rng.below(16) as usize;
+        let npref = rng.below(4) as usize;
+        let preferred: Vec<usize> = (0..npref).map(|_| 1 + rng.below(20) as usize).collect();
+        let delay = rng.below(10_000);
+        let policy = BatcherPolicy::new(max, preferred, delay);
+        let queued = rng.below(40) as usize;
+        let wait = rng.below(20_000);
+        match policy.plan(queued, wait) {
+            BatchPlan::Fire { size } => {
+                assert!(size >= 1, "case {case}: fired empty batch");
+                assert!(size <= max, "case {case}: size {size} > max {max}");
+                assert!(size <= queued, "case {case}: size {size} > queued {queued}");
+            }
+            BatchPlan::Wait => {
+                // Waiting forever is only allowed while the window is open
+                // or the queue is empty.
+                assert!(
+                    queued == 0 || wait < policy.max_queue_delay_us,
+                    "case {case}: would wait past the window (queued={queued}, wait={wait})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_within_relative_error() {
+    let mut rng = Rng::new(6);
+    for case in 0..60 {
+        let mut h = LatencyHistogram::for_latency();
+        let mu = rng.range(-8.0, -2.0);
+        let sigma = rng.range(0.2, 1.5);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.lognormal(mu, sigma)).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.5, 0.9, 0.95] {
+            let approx = h.quantile(q);
+            let exact = greenflow::stats::quantile(&xs, q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.10, "case {case} q={q}: rel error {rel}");
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(7);
+    fn rand_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.chance(0.5)),
+            2 => json::Value::Num((rng.next_u64() % 1_000_000) as f64 / 10.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                json::Value::Str(
+                    (0..n).map(|_| char::from(33 + rng.below(90) as u8)).collect(),
+                )
+            }
+            4 => {
+                let n = rng.below(4) as usize;
+                json::Value::Arr((0..n).map(|_| rand_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4) as usize;
+                json::Value::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), rand_value(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    for case in 0..CASES {
+        let v = rand_value(&mut rng, 3);
+        let text = v.to_json();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} on {text}"));
+        assert_eq!(back, v, "case {case}: roundtrip mismatch on {text}");
+    }
+}
+
+#[test]
+fn prop_pbtxt_int_lists_roundtrip() {
+    let mut rng = Rng::new(8);
+    for case in 0..500 {
+        let n = rng.below(8) as usize;
+        let xs: Vec<i64> = (0..n).map(|_| rng.below(10_000) as i64).collect();
+        let src = format!(
+            "dims: [ {} ]",
+            xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+        );
+        let node = greenflow::configsys::parse_pbtxt(&src).unwrap();
+        assert_eq!(node.get_int_list("dims").unwrap(), xs, "case {case}");
+    }
+}

@@ -13,6 +13,7 @@ mod common;
 use greenflow::batching::policy::BatcherPolicy;
 use greenflow::batching::queue::PendingQueue;
 use greenflow::benchkit::{bench_fn, BenchResult};
+use greenflow::control::{Adaptive, RateWindow};
 use greenflow::controller::cost::{CostInputs, WeightPolicy};
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::{AdmissionController, AdmissionPolicy, ControllerConfig};
@@ -62,6 +63,34 @@ fn main() {
     }));
     results.push(bench_fn("histogram.p95", 100, 10_000, || {
         let _ = h.p95();
+    }));
+
+    // ---- Adaptive<T> read vs a plain field load -------------------------
+    // The control plane's promise: consumers read adaptive knobs on the
+    // hot path at (near) the cost of a plain load.
+    let plain: f64 = 0.51;
+    let adaptive = Adaptive::new(0.51f64);
+    let mut acc = 0.0f64;
+    results.push(bench_fn("plain_f64.load", 1000, iters, || {
+        acc += std::hint::black_box(plain);
+    }));
+    results.push(bench_fn("adaptive_f64.get", 1000, iters, || {
+        acc += std::hint::black_box(&adaptive).get();
+    }));
+    let adaptive_us = Adaptive::new(2000u64);
+    let mut acc_u = 0u64;
+    results.push(bench_fn("adaptive_u64.get", 1000, iters, || {
+        acc_u += std::hint::black_box(&adaptive_us).get();
+    }));
+    std::hint::black_box((acc, acc_u));
+
+    // ---- RateWindow record+rate (router hot path) -----------------------
+    let mut rw = RateWindow::new(32);
+    let mut t_rw = 0.0;
+    results.push(bench_fn("rate_window.record+rate", 1000, iters, || {
+        t_rw += 1e-4;
+        rw.record(t_rw);
+        let _ = std::hint::black_box(rw.rate());
     }));
 
     // ---- energy meter record --------------------------------------------

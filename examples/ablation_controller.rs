@@ -14,7 +14,7 @@ use greenflow::benchkit::Table;
 use greenflow::controller::baselines::{OpenLoop, Oracle, RandomDrop, StaticThreshold};
 use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
-use greenflow::controller::{AdmissionController, ControllerConfig};
+use greenflow::controller::{AdaptiveTauPolicy, AdmissionController, ControllerConfig};
 use greenflow::models;
 use greenflow::pipeline::system::{ServingSystem, SystemConfig};
 use greenflow::router::PathKind;
@@ -103,6 +103,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let bio_rep = simulate(&mut bio, &reqs, &cfg);
     let rate = bio_rep.admission_rate();
     policies.push(("bio-controller".into(), bio_rep));
+    // Adaptive-τ: the control-plane servo targeting the bio row's realised
+    // admission rate — the fixed decay schedule vs its closed-loop twin.
+    let mut adaptive = AdaptiveTauPolicy::new(bio_config(), rate, 0.05, 25);
+    policies.push((
+        format!("adaptive-τ@{:.0}%", rate * 100.0),
+        simulate(&mut adaptive, &reqs, &cfg),
+    ));
     policies.push(("static-τ".into(), simulate(&mut StaticThreshold::new(0.51), &reqs, &cfg)));
     policies.push((
         format!("random@{:.0}%", rate * 100.0),

@@ -1,14 +1,19 @@
 //! Dynamic-batching decision rule (pure logic, Triton semantics).
 
-/// Static batcher parameters (from `config.pbtxt`).
+use crate::control::Adaptive;
+
+/// Batcher parameters (seeded from `config.pbtxt`). The queue-delay
+/// window is an [`Adaptive<u64>`]: clones share the cell, so the control
+/// plane's AIMD loop can retune the delay of a live batcher thread (see
+/// [`crate::control`]) while `plan` keeps reading it at one atomic load.
 #[derive(Debug, Clone)]
 pub struct BatcherPolicy {
     pub max_batch_size: usize,
     /// Sorted ascending; empty = fire whenever anything is queued.
     pub preferred_batch_sizes: Vec<usize>,
     /// Window the oldest request may wait before a sub-preferred batch is
-    /// released anyway.
-    pub max_queue_delay_us: u64,
+    /// released anyway (µs, live-updatable).
+    max_queue_delay: Adaptive<u64>,
 }
 
 impl BatcherPolicy {
@@ -17,7 +22,22 @@ impl BatcherPolicy {
         preferred.retain(|&p| p >= 1 && p <= max_batch_size);
         preferred.sort_unstable();
         preferred.dedup();
-        BatcherPolicy { max_batch_size, preferred_batch_sizes: preferred, max_queue_delay_us }
+        BatcherPolicy {
+            max_batch_size,
+            preferred_batch_sizes: preferred,
+            max_queue_delay: Adaptive::new(max_queue_delay_us),
+        }
+    }
+
+    /// Current queue-delay window (µs).
+    pub fn max_queue_delay_us(&self) -> u64 {
+        self.max_queue_delay.get()
+    }
+
+    /// Live handle onto the delay window, for the control plane's AIMD
+    /// batch-delay loop.
+    pub fn delay_handle(&self) -> Adaptive<u64> {
+        self.max_queue_delay.handle()
     }
 
     /// No batching at all: every request is its own batch (the degenerate
@@ -55,7 +75,7 @@ impl BatcherPolicy {
                 return BatchPlan::Fire { size: largest.min(self.max_batch_size) };
             }
             // Window still open: hold for more arrivals.
-            if oldest_wait_us < self.max_queue_delay_us {
+            if oldest_wait_us < self.max_queue_delay_us() {
                 return BatchPlan::Wait;
             }
             // Window expired: release at the best fillable preferred size,
@@ -126,6 +146,48 @@ mod tests {
     }
 
     #[test]
+    fn overfull_queue_with_empty_preferred_caps_at_max() {
+        // queued > max_batch_size, no preferred sizes: fire exactly max.
+        let p = BatcherPolicy::new(4, vec![], 1000);
+        assert_eq!(p.plan(5, 0), BatchPlan::Fire { size: 4 });
+        assert_eq!(p.plan(100, 0), BatchPlan::Fire { size: 4 });
+        assert_eq!(p.plan(4, 0), BatchPlan::Fire { size: 4 });
+    }
+
+    #[test]
+    fn zero_delay_window_never_holds() {
+        // max_queue_delay_us == 0: the window is born expired, so even a
+        // single sub-preferred request releases immediately.
+        let p = BatcherPolicy::new(8, vec![4, 8], 0);
+        assert_eq!(p.plan(1, 0), BatchPlan::Fire { size: 1 });
+        assert_eq!(p.plan(5, 0), BatchPlan::Fire { size: 4 }, "best fillable preferred");
+        assert_eq!(p.plan(0, 0), BatchPlan::Wait, "empty queue still waits");
+    }
+
+    #[test]
+    fn preferred_above_max_batch_size_are_filtered() {
+        // Every preferred size exceeds max: behaves like empty preferred
+        // (fire whatever is queued, capped at max) instead of waiting for
+        // an unreachable size.
+        let p = BatcherPolicy::new(4, vec![8, 16], 5_000_000);
+        assert!(p.preferred_batch_sizes.is_empty());
+        assert_eq!(p.plan(1, 0), BatchPlan::Fire { size: 1 });
+        assert_eq!(p.plan(9, 0), BatchPlan::Fire { size: 4 });
+    }
+
+    #[test]
+    fn adaptive_delay_retunes_a_cloned_policy() {
+        // The batcher thread owns a clone; the control plane holds the
+        // handle. A retune must be visible through the clone.
+        let p = BatcherPolicy::new(8, vec![8], 10_000);
+        let on_batcher_thread = p.clone();
+        assert_eq!(on_batcher_thread.plan(3, 5_000), BatchPlan::Wait);
+        p.delay_handle().set(1_000);
+        assert_eq!(on_batcher_thread.max_queue_delay_us(), 1_000);
+        assert_eq!(on_batcher_thread.plan(3, 5_000), BatchPlan::Fire { size: 3 });
+    }
+
+    #[test]
     fn from_triton_config() {
         let cfg = crate::configsys::ModelConfig::from_pbtxt(
             r#"
@@ -142,7 +204,7 @@ dynamic_batching {
         .unwrap();
         let p = BatcherPolicy::from_config(&cfg);
         assert_eq!(p.preferred_batch_sizes, vec![4, 8]);
-        assert_eq!(p.max_queue_delay_us, 2000);
+        assert_eq!(p.max_queue_delay_us(), 2000);
     }
 
     #[test]

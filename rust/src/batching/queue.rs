@@ -106,7 +106,10 @@ impl<T> PendingQueue<T> {
                         return Some(batch);
                     }
                     // Sleep until the window would expire (or new arrivals).
-                    let remaining = policy.max_queue_delay_us.saturating_sub(oldest_us).max(1);
+                    // Re-read the adaptive delay each pass: a control-loop
+                    // retune takes effect at the next wakeup.
+                    let remaining =
+                        policy.max_queue_delay_us().saturating_sub(oldest_us).max(1);
                     let (g2, _) = self
                         .cv
                         .wait_timeout(g, Duration::from_micros(remaining))

@@ -2,17 +2,27 @@
 //!
 //! ```text
 //! greenflow serve     --repo artifacts --port 8080 [--controller] [--device a100]
+//!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
+//!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
 //! greenflow report    --repo artifacts
 //! greenflow ablation  [--requests 1000] [--tau0 0.2] [--tau-inf 0.78] [--k 2.0]
+//!                     [--adaptive-tau 0.58]
 //! greenflow landscape [--out -]
 //! greenflow version
 //! ```
+//!
+//! The `--adaptive-*` / `--energy-budget` flags boot the control plane
+//! ([`crate::control`]): background loops that retune τ, the batcher
+//! queue-delay window, and the router QPS threshold from windowed
+//! latency/energy/admission signals.
 
 pub mod args;
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::control::ControlPlaneConfig;
+use crate::controller::admission::AdaptiveTauPolicy;
 use crate::controller::baselines::OpenLoop;
 use crate::controller::cost::WeightPolicy;
 use crate::controller::threshold::ThresholdSchedule;
@@ -123,12 +133,50 @@ fn controller_config(args: &Args) -> ControllerConfig {
     }
 }
 
+/// Assemble the control-plane config from the `--adaptive-*` /
+/// `--energy-budget` flags; None when no loop was requested.
+fn control_config(args: &Args, slo: f64) -> Option<ControlPlaneConfig> {
+    let mut cfg = ControlPlaneConfig {
+        tick_secs: args.get_f64("tick-ms").unwrap_or(100.0).max(1.0) / 1e3,
+        ..ControlPlaneConfig::default()
+    };
+    if args.has("adaptive-tau") {
+        // Admission rate is a fraction: clamp so e.g. "--adaptive-tau 58"
+        // saturates at admit-all instead of wiring an unreachable setpoint.
+        cfg = cfg
+            .with_adaptive_tau(args.get_f64("adaptive-tau").unwrap_or(0.58).clamp(0.0, 1.0));
+    }
+    if args.has("adaptive-delay") {
+        cfg = cfg.with_adaptive_batch_delay(slo);
+    }
+    if args.has("adaptive-router") {
+        cfg = cfg.with_adaptive_router(slo);
+    }
+    if let Some(w) = args.get_f64("energy-budget") {
+        cfg = cfg.with_energy_budget(w);
+    }
+    cfg.any_enabled().then_some(cfg)
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let root = repo_root(args);
     let mut cfg = SystemConfig::new(root);
     cfg.device = device(args);
-    if args.has("controller") {
+    if let Some(slo) = args.get_f64("slo") {
+        cfg.slo_latency = slo;
+    }
+    let control = control_config(args, cfg.slo_latency);
+    // τ-side loops need the admission controller in front.
+    let needs_controller = args.has("controller")
+        || control
+            .as_ref()
+            .map(|c| c.adaptive_tau.is_some() || c.energy_budget.is_some())
+            .unwrap_or(false);
+    if needs_controller {
         cfg = cfg.with_controller(controller_config(args));
+    }
+    if let Some(c) = control {
+        cfg = cfg.with_control(c);
     }
     let port = args.get_f64("port").unwrap_or(8080.0) as u16;
     let system = match ServingSystem::start(cfg) {
@@ -138,10 +186,13 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     };
-    match Gateway::start(system, port, 8) {
+    match Gateway::start(system.clone(), port, 8) {
         Ok(gw) => {
             println!("greenflow gateway listening on http://{}", gw.addr());
             println!("endpoints: POST /infer  GET /metrics  GET /models  GET /health");
+            if system.control_plane_running() {
+                println!("control plane: {}", system.control_loop_names().join(", "));
+            }
             // Serve until killed.
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -166,10 +217,16 @@ fn cmd_ablation(args: &Args) -> i32 {
     let std_report = simulate(&mut OpenLoop, &reqs, &cfg);
     let mut bio = AdmissionController::new(controller_config(args));
     let bio_report = simulate(&mut bio, &reqs, &cfg);
+    // Adaptive-τ comparator: servo the admission rate to --adaptive-tau
+    // (default: the bio row's realised rate, so the rows stay comparable).
+    let target =
+        args.get_f64("adaptive-tau").unwrap_or(bio_report.admission_rate()).clamp(0.0, 1.0);
+    let mut adaptive = AdaptiveTauPolicy::new(controller_config(args), target, 0.05, 25);
+    let adaptive_report = simulate(&mut adaptive, &reqs, &cfg);
 
     let mut t = crate::benchkit::Table::new(
         "Ablation: controller impact (sim, A100 profile)",
-        &["Metric", "Standard", "Bio-Controller", "Delta"],
+        &["Metric", "Standard", "Bio-Controller", "Delta", "Adaptive-τ"],
     );
     let pct = crate::util::fmt::pct_delta;
     t.row(vec![
@@ -177,30 +234,35 @@ fn cmd_ablation(args: &Args) -> i32 {
         format!("{:.3}", std_report.total_busy_secs),
         format!("{:.3}", bio_report.total_busy_secs),
         pct(std_report.total_busy_secs, bio_report.total_busy_secs),
+        format!("{:.3}", adaptive_report.total_busy_secs),
     ]);
     t.row(vec![
         "Latency/Req (ms)".into(),
         format!("{:.2}", std_report.latency_per_req * 1e3),
         format!("{:.2}", bio_report.latency_per_req * 1e3),
         pct(std_report.latency_per_req, bio_report.latency_per_req),
+        format!("{:.2}", adaptive_report.latency_per_req * 1e3),
     ]);
     t.row(vec![
         "Accuracy".into(),
         format!("{:.1}%", std_report.accuracy * 100.0),
         format!("{:.1}%", bio_report.accuracy * 100.0),
         format!("{:+.1} pp", (bio_report.accuracy - std_report.accuracy) * 100.0),
+        format!("{:.1}%", adaptive_report.accuracy * 100.0),
     ]);
     t.row(vec![
         "Admission Rate".into(),
         "100%".into(),
         format!("{:.0}%", bio_report.admission_rate() * 100.0),
         pct(1.0, bio_report.admission_rate()),
+        format!("{:.0}% (target {:.0}%)", adaptive_report.admission_rate() * 100.0, target * 100.0),
     ]);
     t.row(vec![
         "Energy (kWh)".into(),
         format!("{:.6}", std_report.energy_kwh),
         format!("{:.6}", bio_report.energy_kwh),
         pct(std_report.energy_kwh, bio_report.energy_kwh),
+        format!("{:.6}", adaptive_report.energy_kwh),
     ]);
     print!("{}", t.render());
     0
@@ -239,6 +301,35 @@ mod tests {
     #[test]
     fn ablation_runs_in_sim() {
         assert_eq!(run(&sv(&["ablation", "--requests", "200"])), 0);
+    }
+
+    #[test]
+    fn ablation_with_explicit_adaptive_target() {
+        assert_eq!(
+            run(&sv(&["ablation", "--requests", "300", "--adaptive-tau", "0.7"])),
+            0
+        );
+    }
+
+    #[test]
+    fn control_config_from_flags() {
+        let a = Args::parse(&sv(&[
+            "--adaptive-tau",
+            "0.6",
+            "--adaptive-delay",
+            "--energy-budget",
+            "75",
+            "--tick-ms",
+            "50",
+        ]))
+        .unwrap();
+        let c = control_config(&a, 0.1).expect("loops requested");
+        assert_eq!(c.tick_secs, 0.05);
+        assert_eq!(c.adaptive_tau.as_ref().unwrap().target_admit_rate, 0.6);
+        assert_eq!(c.adaptive_batch_delay.as_ref().unwrap().slo_p95_secs, 0.1);
+        assert!(c.adaptive_router.is_none());
+        assert_eq!(c.energy_budget.as_ref().unwrap().budget_watts, 75.0);
+        assert!(control_config(&Args::parse(&[]).unwrap(), 0.1).is_none());
     }
 
     #[test]

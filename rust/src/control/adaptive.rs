@@ -1,0 +1,180 @@
+//! Act layer: `Adaptive<T>` — a shared scalar that control loops write and
+//! hot paths read at the cost of one relaxed atomic load.
+//!
+//! The handle is arc-swap-style (no external crates offline): the value is
+//! bit-packed into an `Arc<AtomicU64>`, so clones share state and a store
+//! in the control plane is immediately visible to every reader. Only
+//! `Copy` scalars that round-trip through 64 bits are supported — exactly
+//! the knobs the plane drives (τ corrections, delay µs, QPS thresholds).
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Scalars that can live inside an `AtomicU64`.
+pub trait AtomicBits: Copy {
+    fn to_bits64(self) -> u64;
+    fn from_bits64(bits: u64) -> Self;
+}
+
+impl AtomicBits for f64 {
+    fn to_bits64(self) -> u64 {
+        self.to_bits()
+    }
+
+    fn from_bits64(bits: u64) -> Self {
+        f64::from_bits(bits)
+    }
+}
+
+impl AtomicBits for u64 {
+    fn to_bits64(self) -> u64 {
+        self
+    }
+
+    fn from_bits64(bits: u64) -> Self {
+        bits
+    }
+}
+
+impl AtomicBits for u32 {
+    fn to_bits64(self) -> u64 {
+        self as u64
+    }
+
+    fn from_bits64(bits: u64) -> Self {
+        bits as u32
+    }
+}
+
+impl AtomicBits for usize {
+    fn to_bits64(self) -> u64 {
+        self as u64
+    }
+
+    fn from_bits64(bits: u64) -> Self {
+        bits as usize
+    }
+}
+
+/// A live-updatable scalar: cheap lock-free reads, controlled updates.
+///
+/// `Clone` shares the underlying cell — hand a clone to the control plane
+/// and keep one on the hot path; `set` on either side is visible to both.
+pub struct Adaptive<T: AtomicBits> {
+    bits: Arc<AtomicU64>,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T: AtomicBits> Adaptive<T> {
+    pub fn new(value: T) -> Self {
+        Adaptive { bits: Arc::new(AtomicU64::new(value.to_bits64())), _marker: PhantomData }
+    }
+
+    /// Hot-path read: a single relaxed atomic load.
+    #[inline]
+    pub fn get(&self) -> T {
+        T::from_bits64(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Publish a new value (control-plane side).
+    #[inline]
+    pub fn set(&self, value: T) {
+        self.bits.store(value.to_bits64(), Ordering::Relaxed);
+    }
+
+    /// A second handle onto the same cell (alias for `clone`, reads as
+    /// intent at wiring sites).
+    pub fn handle(&self) -> Self {
+        self.clone()
+    }
+
+    /// Whether two handles share the same underlying cell.
+    pub fn shares_cell_with(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.bits, &other.bits)
+    }
+}
+
+impl<T: AtomicBits> Clone for Adaptive<T> {
+    fn clone(&self) -> Self {
+        Adaptive { bits: self.bits.clone(), _marker: PhantomData }
+    }
+}
+
+impl<T: AtomicBits + fmt::Debug> fmt::Debug for Adaptive<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Adaptive({:?})", self.get())
+    }
+}
+
+impl<T: AtomicBits + Default> Default for Adaptive<T> {
+    fn default() -> Self {
+        Adaptive::new(T::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let a = Adaptive::new(0.51f64);
+        assert_eq!(a.get(), 0.51);
+        a.set(-3.25);
+        assert_eq!(a.get(), -3.25);
+
+        let d = Adaptive::new(2000u64);
+        assert_eq!(d.get(), 2000);
+        d.set(0);
+        assert_eq!(d.get(), 0);
+    }
+
+    #[test]
+    fn clones_share_the_cell() {
+        let a = Adaptive::new(1.0f64);
+        let b = a.clone();
+        assert!(a.shares_cell_with(&b));
+        b.set(7.5);
+        assert_eq!(a.get(), 7.5);
+        let c = Adaptive::new(1.0f64);
+        assert!(!a.shares_cell_with(&c));
+    }
+
+    #[test]
+    fn usize_and_u32_pack() {
+        let a = Adaptive::new(usize::MAX >> 1);
+        assert_eq!(a.get(), usize::MAX >> 1);
+        let b = Adaptive::new(u32::MAX);
+        assert_eq!(b.get(), u32::MAX);
+    }
+
+    #[test]
+    fn debug_prints_value() {
+        let a = Adaptive::new(42u64);
+        assert_eq!(format!("{a:?}"), "Adaptive(42)");
+    }
+
+    #[test]
+    fn read_under_concurrent_update_never_tears() {
+        // A writer cycles through a known value set; readers must only
+        // ever observe members of that set (a torn 64-bit store would
+        // produce a value outside it).
+        let values = [0.125f64, -7.5, 1e300, 0.0, 42.0];
+        let a = Adaptive::new(values[0]);
+        let writer = {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                for i in 0..50_000 {
+                    a.set(values[i % values.len()]);
+                }
+            })
+        };
+        for _ in 0..50_000 {
+            let v = a.get();
+            assert!(values.contains(&v), "torn read: {v}");
+        }
+        writer.join().unwrap();
+    }
+}

@@ -1,0 +1,290 @@
+//! Decide layer: pluggable control laws.
+//!
+//! A law maps a windowed signal (Observe) onto the next value of a knob
+//! (published through an `Adaptive<T>` handle, Act). Laws are stepped on
+//! the control tick — never on the request hot path — so they can afford
+//! branches and floating point without budget anxiety.
+
+/// One feedback law. `step` consumes the latest windowed signal and the
+/// elapsed tick interval `dt` (seconds) and returns the new output; the
+/// caller publishes it. `dt` lets time-based laws (budget pacing)
+/// integrate correctly under irregular ticks; per-decision laws may
+/// ignore it.
+pub trait ControlLaw: Send {
+    fn step(&mut self, signal: f64, dt: f64) -> f64;
+
+    /// Current output without stepping.
+    fn output(&self) -> f64;
+
+    /// Law name for telemetry gauges and reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Additive-increase / multiplicative-decrease.
+///
+/// While `signal <= setpoint` (healthy — e.g. windowed p95 under the SLO)
+/// the output creeps up by `increase` per step, probing for headroom;
+/// on violation it is cut by the factor `decrease`, backing off fast.
+/// The classic TCP-style sawtooth: used here to drive the batcher's
+/// `max_queue_delay_us` (more delay = better amortisation) subject to
+/// the latency SLO.
+#[derive(Debug, Clone)]
+pub struct Aimd {
+    pub setpoint: f64,
+    pub increase: f64,
+    pub decrease: f64,
+    pub min: f64,
+    pub max: f64,
+    value: f64,
+}
+
+impl Aimd {
+    pub fn new(
+        initial: f64,
+        setpoint: f64,
+        increase: f64,
+        decrease: f64,
+        min: f64,
+        max: f64,
+    ) -> Self {
+        assert!(increase >= 0.0, "AIMD additive step must be >= 0");
+        assert!(decrease > 0.0 && decrease < 1.0, "AIMD decrease must be in (0,1)");
+        assert!(min <= max && (min..=max).contains(&initial));
+        Aimd { setpoint, increase, decrease, min, max, value: initial }
+    }
+}
+
+impl ControlLaw for Aimd {
+    fn step(&mut self, signal: f64, _dt: f64) -> f64 {
+        self.value = if signal <= self.setpoint {
+            (self.value + self.increase).min(self.max)
+        } else {
+            (self.value * self.decrease).max(self.min)
+        };
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "aimd"
+    }
+}
+
+/// Integral setpoint tracker: `value += gain * (signal - setpoint)`,
+/// clamped to `[min, max]`.
+///
+/// The admission-rate → τ servo: admitting more than the target rate
+/// raises the τ correction (stricter), under-admitting lowers it. The
+/// per-step (not per-second) form matches the windowed-rate cadence the
+/// admission controller observes at.
+#[derive(Debug, Clone)]
+pub struct SetpointTracker {
+    pub setpoint: f64,
+    pub gain: f64,
+    pub min: f64,
+    pub max: f64,
+    value: f64,
+}
+
+impl SetpointTracker {
+    pub fn new(initial: f64, setpoint: f64, gain: f64, min: f64, max: f64) -> Self {
+        assert!(gain > 0.0);
+        assert!(min <= max && (min..=max).contains(&initial));
+        SetpointTracker { setpoint, gain, min, max, value: initial }
+    }
+}
+
+impl ControlLaw for SetpointTracker {
+    fn step(&mut self, signal: f64, _dt: f64) -> f64 {
+        self.value = (self.value + self.gain * (signal - self.setpoint)).clamp(self.min, self.max);
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "setpoint"
+    }
+}
+
+/// Energy-budget pacer: integrates (spend − budget) over wall time.
+///
+/// `signal` is the windowed power draw (W); while it exceeds `budget` the
+/// output grows toward `max` at `gain` per joule of overspend, and decays
+/// back toward `min` under budget. Wired as a *positive* τ correction:
+/// sustained overspend tightens admission until the draw returns under
+/// budget (the paper's §IV-A-B energy-spike response, held over a window
+/// instead of a single EWMA spike).
+#[derive(Debug, Clone)]
+pub struct BudgetPacer {
+    pub budget: f64,
+    pub gain: f64,
+    pub min: f64,
+    pub max: f64,
+    value: f64,
+}
+
+impl BudgetPacer {
+    pub fn new(budget: f64, gain: f64, min: f64, max: f64) -> Self {
+        assert!(budget >= 0.0 && gain > 0.0 && min <= max);
+        BudgetPacer { budget, gain, min, max, value: min }
+    }
+}
+
+impl ControlLaw for BudgetPacer {
+    fn step(&mut self, signal: f64, dt: f64) -> f64 {
+        let dt = dt.max(0.0);
+        self.value =
+            (self.value + self.gain * (signal - self.budget) * dt).clamp(self.min, self.max);
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aimd_increases_additively_while_healthy() {
+        let mut a = Aimd::new(10.0, 1.0, 2.0, 0.5, 0.0, 100.0);
+        // signal under setpoint: +2 per step
+        assert_eq!(a.step(0.5, 1.0), 12.0);
+        assert_eq!(a.step(0.9, 1.0), 14.0);
+        assert_eq!(a.step(1.0, 1.0), 16.0, "setpoint itself is healthy");
+        assert_eq!(a.output(), 16.0);
+    }
+
+    #[test]
+    fn aimd_decreases_multiplicatively_on_violation() {
+        let mut a = Aimd::new(64.0, 1.0, 2.0, 0.5, 1.0, 100.0);
+        assert_eq!(a.step(2.0, 1.0), 32.0);
+        assert_eq!(a.step(2.0, 1.0), 16.0);
+        assert_eq!(a.step(2.0, 1.0), 8.0);
+        // recovery is additive, not a jump back
+        assert_eq!(a.step(0.0, 1.0), 10.0);
+    }
+
+    #[test]
+    fn aimd_respects_bounds() {
+        let mut a = Aimd::new(9.0, 1.0, 5.0, 0.1, 2.0, 10.0);
+        assert_eq!(a.step(0.0, 1.0), 10.0, "clamped at max");
+        assert_eq!(a.step(0.0, 1.0), 10.0);
+        for _ in 0..10 {
+            a.step(9.9, 1.0);
+        }
+        assert_eq!(a.output(), 2.0, "clamped at min");
+    }
+
+    #[test]
+    fn aimd_sawtooth_stays_in_band() {
+        // Alternate healthy/violating: the sawtooth must not diverge.
+        let mut a = Aimd::new(50.0, 1.0, 1.0, 0.5, 0.0, 1000.0);
+        for i in 0..1000 {
+            a.step(if i % 4 == 0 { 2.0 } else { 0.5 }, 1.0);
+        }
+        assert!(a.output() < 20.0, "diverged: {}", a.output());
+        assert!(a.output() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn aimd_rejects_bad_decrease() {
+        Aimd::new(1.0, 1.0, 1.0, 1.5, 0.0, 10.0);
+    }
+
+    #[test]
+    fn setpoint_tracker_servos_toward_target() {
+        // Plant: admission rate falls linearly as τ correction rises.
+        let plant = |corr: f64| (0.9 - corr).clamp(0.0, 1.0);
+        let mut law = SetpointTracker::new(0.0, 0.6, 0.4, -1.0, 1.0);
+        let mut corr = 0.0;
+        for _ in 0..200 {
+            corr = law.step(plant(corr), 1.0);
+        }
+        assert!((plant(corr) - 0.6).abs() < 0.02, "rate {}", plant(corr));
+    }
+
+    #[test]
+    fn setpoint_tracker_sign_convention() {
+        let mut law = SetpointTracker::new(0.0, 0.5, 0.1, -1.0, 1.0);
+        // over-admission raises the correction (stricter τ)
+        assert!(law.step(0.9, 1.0) > 0.0);
+        // sustained under-admission drives it negative (permissive τ)
+        for _ in 0..20 {
+            law.step(0.1, 1.0);
+        }
+        assert!(law.output() < 0.0);
+    }
+
+    #[test]
+    fn setpoint_tracker_clamps() {
+        let mut law = SetpointTracker::new(0.0, 0.0, 10.0, -0.25, 0.25);
+        for _ in 0..100 {
+            law.step(1.0, 1.0);
+        }
+        assert_eq!(law.output(), 0.25);
+        for _ in 0..100 {
+            law.step(-1.0, 1.0);
+        }
+        assert_eq!(law.output(), -0.25);
+    }
+
+    #[test]
+    fn budget_pacer_rises_on_overspend_and_recovers() {
+        let mut p = BudgetPacer::new(100.0, 0.001, 0.0, 0.5);
+        assert_eq!(p.output(), 0.0, "starts at min");
+        // 150 W against a 100 W budget: +0.05/s of correction
+        for _ in 0..10 {
+            p.step(150.0, 1.0);
+        }
+        assert!((p.output() - 0.5).abs() < 1e-9, "saturates at max");
+        // back under budget: decays toward min
+        for _ in 0..5 {
+            p.step(50.0, 1.0);
+        }
+        assert!((p.output() - 0.25).abs() < 1e-9);
+        for _ in 0..100 {
+            p.step(50.0, 1.0);
+        }
+        assert_eq!(p.output(), 0.0);
+    }
+
+    #[test]
+    fn budget_pacer_scales_with_dt() {
+        let mut a = BudgetPacer::new(0.0, 1.0, 0.0, 100.0);
+        let mut b = BudgetPacer::new(0.0, 1.0, 0.0, 100.0);
+        a.step(10.0, 1.0);
+        for _ in 0..10 {
+            b.step(10.0, 0.1);
+        }
+        assert!((a.output() - b.output()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn laws_are_object_safe() {
+        let mut laws: Vec<Box<dyn ControlLaw>> = vec![
+            Box::new(Aimd::new(1.0, 1.0, 1.0, 0.5, 0.0, 10.0)),
+            Box::new(SetpointTracker::new(0.0, 0.5, 0.1, -1.0, 1.0)),
+            Box::new(BudgetPacer::new(10.0, 0.1, 0.0, 1.0)),
+        ];
+        for law in &mut laws {
+            let out = law.step(0.7, 0.1);
+            assert!(out.is_finite());
+            assert_eq!(out, law.output());
+            assert!(!law.name().is_empty());
+        }
+    }
+}

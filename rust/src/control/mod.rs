@@ -1,0 +1,70 @@
+//! The control plane: one reusable feedback substrate for every knob that
+//! should adapt to live load and energy signals.
+//!
+//! The paper's closed loop (energy EWMA → next admission decision) is one
+//! instance of a general pattern. This module factors that pattern into
+//! three layers so that "make X adaptive" becomes a one-law addition
+//! instead of a cross-cutting rewrite:
+//!
+//! ```text
+//!            ┌───────────────────────────────────────────────┐
+//!            │                 ControlPlane                  │
+//!            │            (background tick thread)           │
+//!            └───────────────────────────────────────────────┘
+//!   OBSERVE                  DECIDE                    ACT
+//! ┌───────────────┐   ┌───────────────────┐   ┌──────────────────────┐
+//! │ RateWindow    │   │ trait ControlLaw  │   │ Adaptive<T>          │
+//! │ LatencyWindow │ → │  · Aimd           │ → │  (atomic handle read │
+//! │ EnergyWindow  │   │  · SetpointTracker│   │   on the hot path)   │
+//! │ WindowedMetrics│  │  · BudgetPacer    │   │                      │
+//! └───────────────┘   └───────────────────┘   └──────────────────────┘
+//!   request events      windowed signal          τ correction,
+//!   (arrival, latency,   vs. setpoint            batcher delay µs,
+//!    joules)                                     router QPS threshold
+//! ```
+//!
+//! * **Observe** ([`window`]) — windowed metric primitives: arrival-rate
+//!   ring ([`RateWindow`]), rolling latency quantiles ([`LatencyWindow`]),
+//!   windowed power ([`EnergyWindow`]), and the lock-light
+//!   [`WindowedMetrics`] aggregator the serving pipeline feeds from its
+//!   existing telemetry/energy events.
+//! * **Decide** ([`law`]) — pluggable control laws behind the
+//!   [`ControlLaw`] trait: AIMD ([`Aimd`]), additive setpoint tracking
+//!   ([`SetpointTracker`], the admission-rate → τ servo), and
+//!   energy-budget pacing ([`BudgetPacer`]).
+//! * **Act** ([`adaptive`]) — the generic [`Adaptive<T>`] handle: an
+//!   atomic cell consumers read on the hot path at the cost of one
+//!   relaxed load (see `benches/micro_hotpath.rs` for the measurement
+//!   against a plain field load).
+//!
+//! [`plane::ControlPlane`] glues the layers together: each
+//! [`plane::ControlLoop`] pairs a signal closure (Observe), a law
+//! (Decide), and an apply closure writing an `Adaptive` handle (Act),
+//! stepped either by a background tick thread (live serving) or manually
+//! (deterministic sim and tests).
+//!
+//! Consumers wired in this crate:
+//!
+//! * [`crate::controller`] — adaptive-τ mode: a [`SetpointTracker`] servos
+//!   the τ correction toward a target admission rate; an optional
+//!   [`BudgetPacer`] adds a positive τ correction when the windowed power
+//!   draw exceeds an energy budget.
+//! * [`crate::batching`] — `BatcherPolicy::max_queue_delay_us` is an
+//!   `Adaptive<u64>` driven by AIMD on observed p95 vs the latency SLO.
+//! * [`crate::router`] — the arrival estimator is a shared [`RateWindow`]
+//!   and the QPS threshold an `Adaptive<f64>`.
+//! * [`crate::pipeline::system`] — boots the loops from a
+//!   [`ControlPlaneConfig`] and runs them on the background tick.
+
+pub mod adaptive;
+pub mod law;
+pub mod plane;
+pub mod window;
+
+pub use adaptive::{Adaptive, AtomicBits};
+pub use law::{Aimd, BudgetPacer, ControlLaw, SetpointTracker};
+pub use plane::{
+    AdaptiveDelayConfig, AdaptiveRouterConfig, AdaptiveTauConfig, ControlLoop, ControlPlane,
+    ControlPlaneConfig, EnergyBudgetConfig,
+};
+pub use window::{EnergyWindow, LatencyWindow, MetricsSnapshot, RateWindow, WindowedMetrics};

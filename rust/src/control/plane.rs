@@ -1,0 +1,395 @@
+//! The control plane: loops = (signal, law, apply), run on a background
+//! tick or stepped manually by the deterministic sim.
+//!
+//! Each [`ControlLoop`] closes one feedback circuit:
+//!
+//! ```text
+//! signal() ──▶ law.step(signal, dt) ──▶ apply(output)   [+ telemetry gauge]
+//! (Observe)        (Decide)                (Act)
+//! ```
+//!
+//! A signal closure returning a non-finite value (NaN/∞) means "no fresh
+//! observation this tick" — the loop holds its last output instead of
+//! stepping the law on garbage (e.g. no requests arrived in the window).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::law::ControlLaw;
+
+/// One closed feedback loop managed by the plane.
+pub struct ControlLoop {
+    name: String,
+    law: Box<dyn ControlLaw>,
+    signal: Box<dyn FnMut() -> f64 + Send>,
+    apply: Box<dyn FnMut(f64) + Send>,
+}
+
+impl ControlLoop {
+    pub fn new(
+        name: impl Into<String>,
+        law: Box<dyn ControlLaw>,
+        signal: Box<dyn FnMut() -> f64 + Send>,
+        apply: Box<dyn FnMut(f64) + Send>,
+    ) -> Self {
+        ControlLoop { name: name.into(), law, signal, apply }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Run one control step; returns the new output, or None when the
+    /// signal had no fresh observation.
+    pub fn step(&mut self, dt: f64) -> Option<f64> {
+        let s = (self.signal)();
+        if !s.is_finite() {
+            return None;
+        }
+        let out = self.law.step(s, dt);
+        (self.apply)(out);
+        Some(out)
+    }
+}
+
+impl std::fmt::Debug for ControlLoop {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ControlLoop")
+            .field("name", &self.name)
+            .field("law", &self.law.name())
+            .field("output", &self.law.output())
+            .finish()
+    }
+}
+
+/// Holds the loops and (optionally) the background ticker thread.
+#[derive(Debug)]
+pub struct ControlPlane {
+    loops: Arc<Mutex<Vec<ControlLoop>>>,
+    stop: Arc<AtomicBool>,
+    ticker: Option<JoinHandle<()>>,
+}
+
+impl ControlPlane {
+    pub fn new() -> Self {
+        ControlPlane {
+            loops: Arc::new(Mutex::new(Vec::new())),
+            stop: Arc::new(AtomicBool::new(false)),
+            ticker: None,
+        }
+    }
+
+    pub fn add_loop(&self, l: ControlLoop) {
+        self.loops.lock().unwrap().push(l);
+    }
+
+    pub fn loop_names(&self) -> Vec<String> {
+        self.loops.lock().unwrap().iter().map(|l| l.name().to_string()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.loops.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Step every loop once with elapsed interval `dt` seconds. The
+    /// deterministic entry point: the sim and tests drive this directly;
+    /// the background ticker calls it on a wall-clock cadence. Each
+    /// loop's latest output is published as a `gf_control_<name>` gauge.
+    pub fn tick(&self, dt: f64) {
+        step_all(&self.loops, dt);
+    }
+
+    /// Spawn the background ticker at `interval`. Idempotent-ish: calling
+    /// twice panics (one ticker per plane). Each tick passes the *measured*
+    /// elapsed time as `dt` — sleep overshoot and loop-body time must not
+    /// slow time-integrating laws like the budget pacer.
+    pub fn start(&mut self, interval: Duration) {
+        assert!(self.ticker.is_none(), "control plane already started");
+        let loops = self.loops.clone();
+        let stop = self.stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("gf-control-plane".to_string())
+            .spawn(move || {
+                let mut last = std::time::Instant::now();
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let now = std::time::Instant::now();
+                    step_all(&loops, (now - last).as_secs_f64());
+                    last = now;
+                }
+            })
+            .expect("spawn control plane ticker");
+        self.ticker = Some(handle);
+    }
+
+    pub fn running(&self) -> bool {
+        self.ticker.is_some()
+    }
+
+    /// Stop the ticker (no-op when never started).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.ticker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Default for ControlPlane {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for ControlPlane {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Step every loop and publish outputs as telemetry gauges (shared by the
+/// manual `tick` and the background ticker).
+fn step_all(loops: &Mutex<Vec<ControlLoop>>, dt: f64) {
+    let mut guard = loops.lock().unwrap();
+    for l in guard.iter_mut() {
+        if let Some(out) = l.step(dt) {
+            crate::telemetry::MetricsRegistry::global()
+                .gauge(&format!("gf_control_{}", l.name()))
+                .set(out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Configuration the serving system wires loops from.
+// ---------------------------------------------------------------------
+
+/// Adaptive-τ: servo the admission-rate toward a target by correcting
+/// τ(t) (positive correction = stricter).
+#[derive(Debug, Clone)]
+pub struct AdaptiveTauConfig {
+    pub target_admit_rate: f64,
+    /// Integral gain per control step.
+    pub gain: f64,
+    /// |correction| clamp in normalised-J units.
+    pub max_correction: f64,
+}
+
+impl Default for AdaptiveTauConfig {
+    fn default() -> Self {
+        // Target = the paper's Table III admission rate.
+        AdaptiveTauConfig { target_admit_rate: 0.58, gain: 0.05, max_correction: 1.0 }
+    }
+}
+
+/// AIMD on the batcher's queue-delay window vs the p95 SLO.
+#[derive(Debug, Clone)]
+pub struct AdaptiveDelayConfig {
+    pub slo_p95_secs: f64,
+    pub min_us: u64,
+    pub max_us: u64,
+    /// Additive µs probed per healthy tick.
+    pub increase_us: u64,
+    /// Multiplicative cut on SLO violation, in (0, 1).
+    pub decrease: f64,
+}
+
+impl Default for AdaptiveDelayConfig {
+    fn default() -> Self {
+        AdaptiveDelayConfig {
+            slo_p95_secs: 0.25,
+            min_us: 0,
+            max_us: 50_000,
+            increase_us: 200,
+            decrease: 0.5,
+        }
+    }
+}
+
+/// AIMD on the router's QPS threshold: under SLO pressure more traffic is
+/// pushed to the batched path (threshold drops), healthy ticks raise it
+/// back toward the configured ceiling.
+#[derive(Debug, Clone)]
+pub struct AdaptiveRouterConfig {
+    pub slo_p95_secs: f64,
+    pub min_qps: f64,
+    pub max_qps: f64,
+    pub increase_qps: f64,
+    pub decrease: f64,
+}
+
+impl Default for AdaptiveRouterConfig {
+    fn default() -> Self {
+        AdaptiveRouterConfig {
+            slo_p95_secs: 0.25,
+            min_qps: 5.0,
+            max_qps: 500.0,
+            increase_qps: 5.0,
+            decrease: 0.7,
+        }
+    }
+}
+
+/// Energy-budget pacing: sustained watts over `budget_watts` adds a
+/// positive τ correction until the draw returns under budget.
+#[derive(Debug, Clone)]
+pub struct EnergyBudgetConfig {
+    pub budget_watts: f64,
+    /// Correction growth per (joule/s of overspend × second).
+    pub gain: f64,
+    pub max_correction: f64,
+}
+
+impl Default for EnergyBudgetConfig {
+    fn default() -> Self {
+        EnergyBudgetConfig { budget_watts: 60.0, gain: 0.005, max_correction: 0.5 }
+    }
+}
+
+/// Which loops the serving system boots, and the tick cadence.
+#[derive(Debug, Clone)]
+pub struct ControlPlaneConfig {
+    pub tick_secs: f64,
+    pub adaptive_tau: Option<AdaptiveTauConfig>,
+    pub adaptive_batch_delay: Option<AdaptiveDelayConfig>,
+    pub adaptive_router: Option<AdaptiveRouterConfig>,
+    pub energy_budget: Option<EnergyBudgetConfig>,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> Self {
+        ControlPlaneConfig {
+            tick_secs: 0.1,
+            adaptive_tau: None,
+            adaptive_batch_delay: None,
+            adaptive_router: None,
+            energy_budget: None,
+        }
+    }
+}
+
+impl ControlPlaneConfig {
+    pub fn with_adaptive_tau(mut self, target_admit_rate: f64) -> Self {
+        self.adaptive_tau =
+            Some(AdaptiveTauConfig { target_admit_rate, ..AdaptiveTauConfig::default() });
+        self
+    }
+
+    pub fn with_adaptive_batch_delay(mut self, slo_p95_secs: f64) -> Self {
+        self.adaptive_batch_delay =
+            Some(AdaptiveDelayConfig { slo_p95_secs, ..AdaptiveDelayConfig::default() });
+        self
+    }
+
+    pub fn with_adaptive_router(mut self, slo_p95_secs: f64) -> Self {
+        self.adaptive_router =
+            Some(AdaptiveRouterConfig { slo_p95_secs, ..AdaptiveRouterConfig::default() });
+        self
+    }
+
+    pub fn with_energy_budget(mut self, budget_watts: f64) -> Self {
+        self.energy_budget =
+            Some(EnergyBudgetConfig { budget_watts, ..EnergyBudgetConfig::default() });
+        self
+    }
+
+    /// Any loop enabled?
+    pub fn any_enabled(&self) -> bool {
+        self.adaptive_tau.is_some()
+            || self.adaptive_batch_delay.is_some()
+            || self.adaptive_router.is_some()
+            || self.energy_budget.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::adaptive::Adaptive;
+    use crate::control::law::SetpointTracker;
+
+    fn rate_loop(handle: Adaptive<f64>, signal: Adaptive<f64>) -> ControlLoop {
+        let sig = move || signal.get();
+        let out = handle.clone();
+        ControlLoop::new(
+            "test",
+            Box::new(SetpointTracker::new(0.0, 0.5, 0.5, -1.0, 1.0)),
+            Box::new(sig),
+            Box::new(move |v| out.set(v)),
+        )
+    }
+
+    #[test]
+    fn manual_tick_closes_the_loop() {
+        let plane = ControlPlane::new();
+        let handle = Adaptive::new(0.0f64);
+        let signal = Adaptive::new(0.9f64);
+        plane.add_loop(rate_loop(handle.clone(), signal.clone()));
+        assert_eq!(plane.loop_names(), ["test"]);
+
+        plane.tick(0.1);
+        assert!((handle.get() - 0.2).abs() < 1e-12, "0.5 * (0.9 - 0.5)");
+        // signal at setpoint: output holds
+        signal.set(0.5);
+        plane.tick(0.1);
+        assert!((handle.get() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_signal_skips_the_step() {
+        let plane = ControlPlane::new();
+        let handle = Adaptive::new(0.0f64);
+        let signal = Adaptive::new(f64::NAN);
+        plane.add_loop(rate_loop(handle.clone(), signal.clone()));
+        plane.tick(0.1);
+        assert_eq!(handle.get(), 0.0, "no observation, no step");
+        signal.set(1.0);
+        plane.tick(0.1);
+        assert!(handle.get() > 0.0);
+    }
+
+    #[test]
+    fn background_ticker_steps_and_stops() {
+        let mut plane = ControlPlane::new();
+        let handle = Adaptive::new(0.0f64);
+        let signal = Adaptive::new(1.0f64);
+        plane.add_loop(rate_loop(handle.clone(), signal));
+        plane.start(Duration::from_millis(5));
+        assert!(plane.running());
+        // wait for at least one tick
+        let t0 = std::time::Instant::now();
+        while handle.get() == 0.0 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(handle.get() > 0.0, "ticker never stepped");
+        plane.stop();
+        assert!(!plane.running());
+        let frozen = handle.get();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(handle.get(), frozen, "stopped plane must not step");
+    }
+
+    #[test]
+    fn config_builders() {
+        let c = ControlPlaneConfig::default()
+            .with_adaptive_tau(0.6)
+            .with_adaptive_batch_delay(0.05)
+            .with_adaptive_router(0.1)
+            .with_energy_budget(75.0);
+        assert!(c.any_enabled());
+        assert_eq!(c.adaptive_tau.unwrap().target_admit_rate, 0.6);
+        assert_eq!(c.adaptive_batch_delay.unwrap().slo_p95_secs, 0.05);
+        assert_eq!(c.adaptive_router.unwrap().slo_p95_secs, 0.1);
+        assert_eq!(c.energy_budget.unwrap().budget_watts, 75.0);
+        assert!(!ControlPlaneConfig::default().any_enabled());
+    }
+}

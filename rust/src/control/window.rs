@@ -1,0 +1,398 @@
+//! Observe layer: windowed metric primitives and the lock-light aggregator
+//! that taps the serving pipeline's existing telemetry/energy events.
+//!
+//! Unlike the cumulative estimators in [`crate::stats`] (Welford moments,
+//! log-bucketed histograms), everything here *forgets*: control laws must
+//! react to the recent regime, not the whole run, or a burst at t=0 biases
+//! every later decision (the stale-feedback failure mode the sim guards
+//! against).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Arrival-rate estimator over a ring of the last `window` event instants.
+///
+/// This is the estimator `router::Router` previously hard-wired at
+/// `window: 32`, extracted so the router, the aggregator, and tests share
+/// one implementation with a configurable window.
+#[derive(Debug, Clone)]
+pub struct RateWindow {
+    times: VecDeque<f64>,
+    window: usize,
+}
+
+impl RateWindow {
+    /// `window` >= 2 (a rate needs at least two instants).
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 2, "RateWindow needs window >= 2, got {window}");
+        RateWindow { times: VecDeque::with_capacity(window + 1), window }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Record an event at time `t` (seconds, monotonic). Concurrent
+    /// recorders can race their clock reads, so a `t` earlier than the
+    /// newest entry is clamped forward — keeping the window monotone and
+    /// `rate()` finite — instead of poisoning the span.
+    pub fn record(&mut self, t: f64) {
+        let t = match self.times.back() {
+            Some(&back) if t < back => back,
+            _ => t,
+        };
+        self.times.push_back(t);
+        if self.times.len() > self.window {
+            self.times.pop_front();
+        }
+    }
+
+    /// Events per second across the observation window. 0 until two
+    /// events have been seen; +inf when the window spans zero time.
+    pub fn rate(&self) -> f64 {
+        if self.times.len() < 2 {
+            return 0.0;
+        }
+        let span = self.times.back().unwrap() - self.times.front().unwrap();
+        if span <= 0.0 {
+            return f64::INFINITY;
+        }
+        (self.times.len() - 1) as f64 / span
+    }
+
+    pub fn clear(&mut self) {
+        self.times.clear();
+    }
+}
+
+/// Rolling sample window with quantile estimation (p95 of the last N
+/// latencies, not of the whole run). Quantiles sort a copy — O(n log n)
+/// on the control tick, never on the request hot path.
+#[derive(Debug, Clone)]
+pub struct LatencyWindow {
+    samples: Vec<f64>,
+    next: usize,
+    filled: usize,
+}
+
+impl LatencyWindow {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        LatencyWindow { samples: vec![0.0; capacity], next: 0, filled: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.samples[self.next] = x;
+        self.next = (self.next + 1) % self.samples.len();
+        self.filled = (self.filled + 1).min(self.samples.len());
+    }
+
+    /// Quantile of the current window contents (0.0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.filled == 0 {
+            return 0.0;
+        }
+        crate::stats::quantile(&self.samples[..self.filled], q)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::stats::mean(&self.samples[..self.filled])
+    }
+
+    pub fn clear(&mut self) {
+        self.next = 0;
+        self.filled = 0;
+    }
+}
+
+/// Windowed power estimator: (instant, joules) pairs over a ring, read
+/// back as watts across the window span. The BudgetPacer's input.
+#[derive(Debug, Clone)]
+pub struct EnergyWindow {
+    samples: VecDeque<(f64, f64)>,
+    window: usize,
+}
+
+impl EnergyWindow {
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 2);
+        EnergyWindow { samples: VecDeque::with_capacity(window + 1), window }
+    }
+
+    /// Record `joules` attributed at time `t`. Out-of-order instants from
+    /// racing recorders are clamped forward (see [`RateWindow::record`]).
+    pub fn record(&mut self, t: f64, joules: f64) {
+        let t = match self.samples.back() {
+            Some(&(back, _)) if t < back => back,
+            _ => t,
+        };
+        self.samples.push_back((t, joules));
+        if self.samples.len() > self.window {
+            self.samples.pop_front();
+        }
+    }
+
+    /// Mean power (W) across the window: Σ joules / span. 0 until two
+    /// samples; falls back to 0 when the window spans zero time.
+    pub fn watts(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let span = self.samples.back().unwrap().0 - self.samples.front().unwrap().0;
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let total: f64 = self.samples.iter().map(|&(_, j)| j).sum();
+        total / span
+    }
+
+    /// Mean joules per event across the window.
+    pub fn mean_joules(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&(_, j)| j).sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Point-in-time view of the aggregator (one control tick's inputs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Recent arrival rate (req/s).
+    pub qps: f64,
+    /// Rolling latency quantiles over the sample window (s).
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub mean_latency: f64,
+    /// Windowed power draw (W) and per-request joules.
+    pub watts: f64,
+    pub mean_joules: f64,
+    /// Total events recorded since boot.
+    pub events: u64,
+}
+
+/// Lock-light shared aggregator: the serving pipeline calls the three
+/// `record_*` taps from its existing event sites (request arrival,
+/// latency histogram record, energy meter record); control loops read
+/// [`WindowedMetrics::snapshot`] once per tick.
+///
+/// "Lock-light": each tap takes one short `Mutex` for a ring push (~tens
+/// of ns, once per request — the same budget as the energy meter); the
+/// event counter is a plain atomic.
+#[derive(Debug)]
+pub struct WindowedMetrics {
+    arrivals: Mutex<RateWindow>,
+    latencies: Mutex<LatencyWindow>,
+    energy: Mutex<EnergyWindow>,
+    events: AtomicU64,
+}
+
+impl WindowedMetrics {
+    /// `rate_window`: instants kept for the QPS/power estimators;
+    /// `sample_window`: latency samples kept for rolling quantiles.
+    pub fn new(rate_window: usize, sample_window: usize) -> Self {
+        WindowedMetrics {
+            arrivals: Mutex::new(RateWindow::new(rate_window)),
+            latencies: Mutex::new(LatencyWindow::new(sample_window)),
+            energy: Mutex::new(EnergyWindow::new(rate_window)),
+            events: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_arrival(&self, t: f64) {
+        self.arrivals.lock().unwrap().record(t);
+        self.events.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, secs: f64) {
+        self.latencies.lock().unwrap().record(secs);
+    }
+
+    pub fn record_joules(&self, t: f64, joules: f64) {
+        self.energy.lock().unwrap().record(t, joules);
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let qps = self.arrivals.lock().unwrap().rate();
+        let (p50, p95, mean_latency) = {
+            let l = self.latencies.lock().unwrap();
+            (l.quantile(0.5), l.p95(), l.mean())
+        };
+        let (watts, mean_joules) = {
+            let e = self.energy.lock().unwrap();
+            (e.watts(), e.mean_joules())
+        };
+        MetricsSnapshot {
+            qps,
+            p50_latency: p50,
+            p95_latency: p95,
+            mean_latency,
+            watts,
+            mean_joules,
+            events: self.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Clock, ManualClock};
+
+    #[test]
+    fn rate_window_matches_synthetic_clock() {
+        // 100 req/s fed from the ManualClock must read back as 100 req/s.
+        let clock = ManualClock::new();
+        let mut w = RateWindow::new(32);
+        for _ in 0..100 {
+            clock.advance(0.01);
+            w.record(clock.now());
+        }
+        assert!((w.rate() - 100.0).abs() < 1e-6, "rate {}", w.rate());
+        assert_eq!(w.len(), 32, "ring keeps only the window");
+    }
+
+    #[test]
+    fn rate_window_forgets_old_regime() {
+        let clock = ManualClock::new();
+        let mut w = RateWindow::new(16);
+        // fast regime: 1000 req/s
+        for _ in 0..32 {
+            clock.advance(0.001);
+            w.record(clock.now());
+        }
+        assert!(w.rate() > 900.0);
+        // slow regime refills the ring: 2 req/s
+        for _ in 0..16 {
+            clock.advance(0.5);
+            w.record(clock.now());
+        }
+        assert!((w.rate() - 2.0).abs() < 0.1, "rate {}", w.rate());
+    }
+
+    #[test]
+    fn rate_window_degenerate_cases() {
+        let mut w = RateWindow::new(4);
+        assert_eq!(w.rate(), 0.0);
+        w.record(1.0);
+        assert_eq!(w.rate(), 0.0, "one sample has no rate");
+        w.record(1.0);
+        assert_eq!(w.rate(), f64::INFINITY, "zero span saturates");
+        w.clear();
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rate_window_rejects_tiny_window() {
+        RateWindow::new(1);
+    }
+
+    #[test]
+    fn out_of_order_records_are_clamped_monotone() {
+        let mut w = RateWindow::new(8);
+        w.record(1.0);
+        w.record(0.5); // racing recorder with a stale clock read
+        w.record(1.1);
+        assert!(w.rate().is_finite());
+        assert!(w.rate() > 0.0);
+
+        let mut e = EnergyWindow::new(8);
+        e.record(1.0, 2.0);
+        e.record(0.5, 2.0);
+        e.record(2.0, 2.0);
+        assert!((e.watts() - 6.0).abs() < 1e-9, "span clamps to 1.0s: {}", e.watts());
+    }
+
+    #[test]
+    fn latency_window_rolls() {
+        let mut l = LatencyWindow::new(4);
+        assert_eq!(l.quantile(0.95), 0.0);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            l.record(x);
+        }
+        assert_eq!(l.quantile(0.0), 1.0);
+        assert_eq!(l.quantile(1.0), 4.0);
+        // Overwrite the oldest: window is now [5, 2, 3, 4].
+        l.record(5.0);
+        assert_eq!(l.quantile(1.0), 5.0);
+        assert_eq!(l.quantile(0.0), 2.0, "1.0 rolled out");
+        assert_eq!(l.len(), 4);
+    }
+
+    #[test]
+    fn latency_window_partial_fill() {
+        let mut l = LatencyWindow::new(100);
+        l.record(0.25);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.p95(), 0.25);
+        assert_eq!(l.mean(), 0.25);
+    }
+
+    #[test]
+    fn energy_window_watts() {
+        let mut e = EnergyWindow::new(8);
+        assert_eq!(e.watts(), 0.0);
+        // 2 J every 0.5 s -> 4 W (first sample anchors the span).
+        for i in 0..5 {
+            e.record(i as f64 * 0.5, 2.0);
+        }
+        // Σ = 10 J over span 2.0 s = 5 W (includes the anchor's joules).
+        assert!((e.watts() - 5.0).abs() < 1e-9, "{}", e.watts());
+        assert!((e.mean_joules() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregator_snapshot() {
+        let m = WindowedMetrics::new(16, 16);
+        let clock = ManualClock::new();
+        for _ in 0..10 {
+            clock.advance(0.1);
+            m.record_arrival(clock.now());
+            m.record_latency(0.02);
+            m.record_joules(clock.now(), 0.5);
+        }
+        let s = m.snapshot();
+        assert!((s.qps - 10.0).abs() < 1e-6);
+        assert!((s.p95_latency - 0.02).abs() < 1e-12);
+        assert!((s.watts - 5.0 / 0.9).abs() < 1e-6, "watts {}", s.watts);
+        assert_eq!(s.events, 10);
+    }
+}

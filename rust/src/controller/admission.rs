@@ -6,8 +6,9 @@
 //! CostInputs, and every decision is logged to telemetry (MLflow analog)
 //! exactly as Algorithm 1 lines 11–12 prescribe.
 
+use crate::control::Adaptive;
 use crate::controller::cost::{CostInputs, CostWeights};
-use crate::controller::threshold::ThresholdSchedule;
+use crate::controller::threshold::{AdaptiveThreshold, ThresholdSchedule};
 use crate::controller::AdmissionPolicy;
 
 /// Static configuration of the bio-controller.
@@ -55,18 +56,34 @@ impl AdmissionStats {
 }
 
 /// The bio-inspired closed-loop controller.
+///
+/// The effective threshold is `schedule.τ(t − t0) + rate_correction +
+/// energy_correction`: the two corrections are [`Adaptive<f64>`] handles
+/// (0.0 unless a control loop drives them), so the static-schedule hot
+/// path pays only two relaxed atomic loads. `Clone` shares the handles —
+/// a cloned controller sees the same live corrections.
 #[derive(Debug, Clone)]
 pub struct AdmissionController {
     cfg: ControllerConfig,
     stats: AdmissionStats,
     /// Controller epoch: τ(t) is evaluated relative to this origin.
     t0: f64,
+    /// Live τ correction from the admission-rate → τ servo.
+    rate_correction: Adaptive<f64>,
+    /// Live τ correction from the energy-budget pacer.
+    energy_correction: Adaptive<f64>,
 }
 
 impl AdmissionController {
     pub fn new(cfg: ControllerConfig) -> Self {
         cfg.schedule.validate().expect("invalid threshold schedule");
-        AdmissionController { cfg, stats: AdmissionStats::default(), t0: 0.0 }
+        AdmissionController {
+            cfg,
+            stats: AdmissionStats::default(),
+            t0: 0.0,
+            rate_correction: Adaptive::new(0.0),
+            energy_correction: Adaptive::new(0.0),
+        }
     }
 
     pub fn with_defaults() -> Self {
@@ -87,9 +104,22 @@ impl AdmissionController {
         &self.cfg
     }
 
-    /// Current threshold at absolute time `t`.
+    /// Current threshold at absolute time `t`: the configured schedule
+    /// plus whatever corrections the control loops have published.
     pub fn tau_at(&self, t: f64) -> f64 {
         self.cfg.schedule.tau(t - self.t0)
+            + self.rate_correction.get()
+            + self.energy_correction.get()
+    }
+
+    /// Handle the adaptive-τ loop writes (admission-rate → τ servo).
+    pub fn rate_correction_handle(&self) -> Adaptive<f64> {
+        self.rate_correction.handle()
+    }
+
+    /// Handle the energy-budget pacer writes (positive = stricter).
+    pub fn energy_correction_handle(&self) -> Adaptive<f64> {
+        self.energy_correction.handle()
     }
 
     /// Score a request without committing to a decision (used by the
@@ -158,6 +188,85 @@ impl Decision {
         match *self {
             Decision::Admit { tau, .. } | Decision::Skip { tau, .. } => tau,
         }
+    }
+}
+
+/// The controller's adaptive-τ mode as a self-contained
+/// [`AdmissionPolicy`]: an [`AdaptiveThreshold`] servo (the §IX
+/// closed-loop τ extension) windowed over live decisions — runnable
+/// anywhere a policy is (live pipeline, sim ablation, benches).
+///
+/// Every `update_every` decisions the policy measures the admission rate
+/// over that window, feeds it to the servo, and publishes the resulting
+/// correction through the wrapped controller's
+/// [`AdmissionController::rate_correction_handle`] — the same cell the
+/// live control plane drives.
+#[derive(Debug, Clone)]
+pub struct AdaptiveTauPolicy {
+    inner: AdmissionController,
+    servo: AdaptiveThreshold,
+    update_every: u64,
+    window_total: u64,
+    window_admitted: u64,
+}
+
+impl AdaptiveTauPolicy {
+    /// `gain`: integral gain per window update; `update_every`: decisions
+    /// per observation window (>= 1).
+    pub fn new(
+        cfg: ControllerConfig,
+        target_admit_rate: f64,
+        gain: f64,
+        update_every: u64,
+    ) -> Self {
+        assert!(update_every >= 1);
+        let servo = AdaptiveThreshold::new(cfg.schedule.clone(), target_admit_rate, gain);
+        AdaptiveTauPolicy {
+            inner: AdmissionController::new(cfg),
+            servo,
+            update_every,
+            window_total: 0,
+            window_admitted: 0,
+        }
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        self.inner.stats()
+    }
+
+    pub fn target_admit_rate(&self) -> f64 {
+        self.servo.target_admit_rate()
+    }
+
+    /// The τ correction currently in force.
+    pub fn correction(&self) -> f64 {
+        self.servo.correction()
+    }
+
+    pub fn restart_epoch(&mut self, now: f64) {
+        self.inner.restart_epoch(now);
+    }
+}
+
+impl AdmissionPolicy for AdaptiveTauPolicy {
+    fn decide(&mut self, x: &CostInputs, t: f64) -> Decision {
+        let d = self.inner.decide(x, t);
+        self.window_total += 1;
+        if d.admitted() {
+            self.window_admitted += 1;
+        }
+        if self.window_total >= self.update_every {
+            let rate = self.window_admitted as f64 / self.window_total as f64;
+            self.servo.observe(rate);
+            self.inner.rate_correction_handle().set(self.servo.correction());
+            self.window_total = 0;
+            self.window_admitted = 0;
+        }
+        d
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive-tau"
     }
 }
 
@@ -296,5 +405,64 @@ mod tests {
     #[test]
     fn empty_stats_rate_is_one() {
         assert_eq!(AdmissionStats::default().admission_rate(), 1.0);
+    }
+
+    #[test]
+    fn correction_handles_shift_tau() {
+        let c = controller(ThresholdSchedule::Constant { tau: 0.5 });
+        assert_eq!(c.tau_at(0.0), 0.5);
+        c.rate_correction_handle().set(0.2);
+        c.energy_correction_handle().set(0.05);
+        assert!((c.tau_at(0.0) - 0.75).abs() < 1e-12);
+        // a clone shares the live corrections
+        let clone = c.clone();
+        c.rate_correction_handle().set(-0.1);
+        assert!((clone.tau_at(0.0) - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correction_changes_decisions() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.7 });
+        let x = inputs(0.0); // J = 2/3 with balanced weights on an idle system
+        assert!(!c.decide(&x, 0.0).admitted());
+        c.rate_correction_handle().set(-0.1); // τ_eff = 0.6
+        assert!(c.decide(&x, 0.0).admitted());
+    }
+
+    #[test]
+    fn adaptive_tau_policy_tracks_target_on_synthetic_mix() {
+        // Entropy fractions uniform in [0,1] -> J uniform in [2/3, 1]
+        // (idle system, balanced weights), so any admission rate is
+        // reachable by sliding τ. Target 30% admission.
+        let cfg = ControllerConfig {
+            weights: WeightPolicy::Balanced.weights(),
+            schedule: ThresholdSchedule::Constant { tau: 0.8 },
+            respond_from_cache: true,
+        };
+        let mut p = AdaptiveTauPolicy::new(cfg, 0.3, 0.05, 20);
+        let mut rng = crate::util::Rng::new(17);
+        for _ in 0..4000 {
+            let frac = rng.range(0.0, 1.0);
+            p.decide(&inputs(frac), 0.0);
+        }
+        // measure the steady-state rate over a fresh window
+        let before = p.stats();
+        for _ in 0..2000 {
+            let frac = rng.range(0.0, 1.0);
+            p.decide(&inputs(frac), 0.0);
+        }
+        let after = p.stats();
+        let rate = (after.admitted - before.admitted) as f64
+            / (after.total() - before.total()) as f64;
+        assert!((rate - 0.3).abs() < 0.05, "steady-state rate {rate}");
+    }
+
+    #[test]
+    fn adaptive_tau_policy_reports_name_and_correction() {
+        let mut p = AdaptiveTauPolicy::new(ControllerConfig::default(), 0.5, 0.1, 1);
+        assert_eq!(p.name(), "adaptive-tau");
+        assert_eq!(p.target_admit_rate(), 0.5);
+        p.decide(&inputs(1.0), 0.0); // admitted -> rate 1.0 -> correction up
+        assert!(p.correction() > 0.0);
     }
 }

@@ -36,10 +36,12 @@ pub mod cache;
 pub mod cost;
 pub mod threshold;
 
-pub use admission::{AdmissionController, ControllerConfig, Decision, SkipReason};
+pub use admission::{
+    AdaptiveTauPolicy, AdmissionController, ControllerConfig, Decision, SkipReason,
+};
 pub use baselines::{OpenLoop, Oracle, RandomDrop, StaticThreshold};
 pub use cost::{CostInputs, CostWeights, WeightPolicy};
-pub use threshold::ThresholdSchedule;
+pub use threshold::{AdaptiveThreshold, ThresholdSchedule};
 
 /// Common interface for the bio-controller and every ablation baseline.
 pub trait AdmissionPolicy: Send {

@@ -1,7 +1,12 @@
 //! τ(t) schedules. The paper's Eq. 3 is the exponential decay; linear and
 //! step variants are ablation comparators for the Fig. 1/Fig. 5 benches,
-//! and `Adaptive` is the §IX "future work" extension (closed-loop τ that
-//! servos on the observed admission rate).
+//! and [`AdaptiveThreshold`] is the §IX "future work" extension
+//! (closed-loop τ that servos on the observed admission rate), built on
+//! the [`crate::control`] plane's `SetpointTracker` law and `Adaptive`
+//! handle.
+
+use crate::control::law::{ControlLaw, SetpointTracker};
+use crate::control::Adaptive;
 
 /// Time-varying admission threshold.
 #[derive(Debug, Clone)]
@@ -89,30 +94,72 @@ impl ThresholdSchedule {
 }
 
 /// §IX extension: adaptive τ that servos toward a target admission rate —
-/// a simple integral controller layered on a base schedule.
+/// a [`SetpointTracker`] control law layered on a base schedule
+/// (admitting too much raises τ, too little lowers it).
+///
+/// The current correction is published through an [`Adaptive<f64>`]
+/// handle, so the hot path (or a shared [`AdmissionController`], see
+/// [`AdmissionController::rate_correction_handle`]) reads it with one
+/// atomic load while the control plane drives `observe` on its tick.
+///
+/// [`AdmissionController`]: crate::controller::AdmissionController
+/// [`AdmissionController::rate_correction_handle`]:
+///     crate::controller::AdmissionController::rate_correction_handle
 #[derive(Debug, Clone)]
 pub struct AdaptiveThreshold {
     pub base: ThresholdSchedule,
-    pub target_admit_rate: f64,
-    /// Integral gain.
-    pub ki: f64,
-    correction: f64,
+    law: SetpointTracker,
+    correction: Adaptive<f64>,
 }
 
+/// Clamp for τ corrections: J is normalised to [0, 1], so ±2 can force
+/// admit-all or skip-all from any base schedule.
+pub const MAX_TAU_CORRECTION: f64 = 2.0;
+
 impl AdaptiveThreshold {
+    /// `ki`: integral gain applied per observation.
     pub fn new(base: ThresholdSchedule, target_admit_rate: f64, ki: f64) -> Self {
         assert!((0.0..=1.0).contains(&target_admit_rate));
-        AdaptiveThreshold { base, target_admit_rate, ki, correction: 0.0 }
+        AdaptiveThreshold {
+            base,
+            law: SetpointTracker::new(
+                0.0,
+                target_admit_rate,
+                ki,
+                -MAX_TAU_CORRECTION,
+                MAX_TAU_CORRECTION,
+            ),
+            correction: Adaptive::new(0.0),
+        }
     }
 
-    /// Feed back the recently observed admission rate.
+    /// Feed back the recently observed admission rate: steps the law and
+    /// publishes the new correction.
     pub fn observe(&mut self, admit_rate: f64) {
-        // admitting too much -> raise τ; too little -> lower it.
-        self.correction += self.ki * (admit_rate - self.target_admit_rate);
+        let out = self.law.step(admit_rate, 1.0);
+        self.correction.set(out);
     }
 
     pub fn tau(&self, t: f64) -> f64 {
-        self.base.tau(t) + self.correction
+        self.base.tau(t) + self.correction.get()
+    }
+
+    pub fn target_admit_rate(&self) -> f64 {
+        self.law.setpoint
+    }
+
+    pub fn ki(&self) -> f64 {
+        self.law.gain
+    }
+
+    pub fn correction(&self) -> f64 {
+        self.correction.get()
+    }
+
+    /// Shared handle onto the live correction (hot-path readers and the
+    /// control plane both hold clones of this).
+    pub fn correction_handle(&self) -> Adaptive<f64> {
+        self.correction.handle()
     }
 }
 
@@ -210,5 +257,26 @@ mod tests {
             a.observe(0.1);
         }
         assert!(a.tau(0.0) < t0 + 0.3);
+    }
+
+    #[test]
+    fn adaptive_publishes_through_the_shared_handle() {
+        let mut a = AdaptiveThreshold::new(ThresholdSchedule::Constant { tau: 0.5 }, 0.5, 0.1);
+        let handle = a.correction_handle();
+        assert_eq!(handle.get(), 0.0);
+        a.observe(0.9); // +0.1 * 0.4
+        assert!((handle.get() - 0.04).abs() < 1e-12);
+        assert!((a.tau(0.0) - 0.54).abs() < 1e-12);
+        assert_eq!(a.target_admit_rate(), 0.5);
+        assert_eq!(a.ki(), 0.1);
+    }
+
+    #[test]
+    fn adaptive_correction_is_clamped() {
+        let mut a = AdaptiveThreshold::new(ThresholdSchedule::Constant { tau: 0.5 }, 0.0, 1.0);
+        for _ in 0..100 {
+            a.observe(1.0);
+        }
+        assert_eq!(a.correction(), MAX_TAU_CORRECTION);
     }
 }

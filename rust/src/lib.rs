@@ -16,6 +16,14 @@
 //!   energy metering ([`energy`]), and MLflow-style telemetry
 //!   ([`telemetry`]).
 //!
+//! The paper's closed loop is generalised by the [`control`] plane
+//! (Observe → Decide → Act): windowed metrics feed pluggable control laws
+//! (AIMD, setpoint tracking, energy-budget pacing) whose outputs are
+//! published through lock-free `Adaptive<T>` handles — driving the
+//! adaptive-τ admission mode, the batcher's queue-delay window, and the
+//! router's QPS threshold from one substrate. See [`control`] for the
+//! diagram and [`pipeline::system`] for the end-to-end wiring.
+//!
 //! Python never runs on the request path: `make artifacts` exports a model
 //! repository (HLO text + weights + Triton-style `config.pbtxt`) which the
 //! [`runtime`] loads through the PJRT C API (`xla` crate).
@@ -27,6 +35,7 @@ pub mod batching;
 pub mod benchkit;
 pub mod cli;
 pub mod configsys;
+pub mod control;
 pub mod controller;
 pub mod energy;
 pub mod json;

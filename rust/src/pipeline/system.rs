@@ -1,12 +1,23 @@
 //! The closed-loop serving system (paper Fig. 2): controller in front of
 //! the dual-path stack, with energy/latency feedback wired back into the
 //! next admission decision.
+//!
+//! Beyond the per-request loop, the system can boot a
+//! [`ControlPlane`](crate::control::ControlPlane) from
+//! [`ControlPlaneConfig`]: a background tick that reads the
+//! [`WindowedMetrics`] aggregator (fed from the existing latency/energy
+//! event sites) and drives the adaptive knobs — τ corrections, batcher
+//! queue-delay windows, and the router's QPS threshold — through their
+//! `Adaptive` handles.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::batching::policy::BatcherPolicy;
+use crate::control::law::{Aimd, BudgetPacer, SetpointTracker};
+use crate::control::{Adaptive, ControlLoop, ControlPlane, ControlPlaneConfig, WindowedMetrics};
 use crate::controller::cache::{CachedResponse, ResponseCache};
 use crate::controller::cost::CostInputs;
 use crate::controller::{AdmissionController, AdmissionPolicy, ControllerConfig, Decision};
@@ -14,7 +25,7 @@ use crate::energy::meter::{EnergyMeter, MeterMode};
 use crate::energy::profile::DeviceProfile;
 use crate::models;
 use crate::models::inputgen;
-use crate::router::PathKind;
+use crate::router::{PathKind, RoutePolicy, Router};
 use crate::runtime::engine::ExecMode;
 use crate::runtime::repository::Repository;
 use crate::runtime::RuntimeError;
@@ -44,6 +55,10 @@ pub struct SystemConfig {
     /// Response-cache capacity and seed-cluster count.
     pub cache_capacity: usize,
     pub cache_clusters: u64,
+    /// Policy for [`ServingSystem::submit_auto`]'s shared router.
+    pub route: RoutePolicy,
+    /// None = no background control loops (all knobs stay static).
+    pub control: Option<ControlPlaneConfig>,
 }
 
 impl SystemConfig {
@@ -59,11 +74,23 @@ impl SystemConfig {
             salt: 0,
             cache_capacity: 4096,
             cache_clusters: 256,
+            route: RoutePolicy::adaptive(50.0),
+            control: None,
         }
     }
 
     pub fn with_controller(mut self, cfg: ControllerConfig) -> Self {
         self.controller = Some(cfg);
+        self
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> Self {
+        self.route = route;
+        self
+    }
+
+    pub fn with_control(mut self, cfg: ControlPlaneConfig) -> Self {
+        self.control = Some(cfg);
         self
     }
 }
@@ -91,13 +118,17 @@ pub struct InferResult {
 
 /// The full serving system.
 pub struct ServingSystem {
+    /// Declared first so the ticker thread stops before paths shut down.
+    plane: Option<ControlPlane>,
     repo: Repository,
     direct: DirectPath,
     batched: HashMap<String, BatchedPath>,
     meter: Arc<EnergyMeter>,
     latency: Mutex<LatencyHistogram>,
-    controller: Option<Mutex<AdmissionController>>,
+    controller: Option<Arc<Mutex<AdmissionController>>>,
     cache: Mutex<ResponseCache>,
+    metrics: Arc<WindowedMetrics>,
+    router: Mutex<Router>,
     clock: SystemClock,
     cfg: SystemConfig,
 }
@@ -114,6 +145,7 @@ impl ServingSystem {
         let direct = DirectPath::start(all_dirs, cfg.exec_mode)?;
 
         let mut batched = HashMap::new();
+        let mut delay_handles: Vec<(String, Adaptive<u64>)> = Vec::new();
         for (name, entry) in &repo.entries {
             if name == models::SCREENER {
                 continue; // the screener serves inline on the direct engine
@@ -123,6 +155,7 @@ impl ServingSystem {
                 .as_ref()
                 .map(BatcherPolicy::from_config)
                 .unwrap_or_else(|| BatcherPolicy::immediate(entry.manifest.max_bucket()));
+            delay_handles.push((name.clone(), policy.delay_handle()));
             let instances = entry.config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
             batched.insert(
                 name.clone(),
@@ -138,8 +171,17 @@ impl ServingSystem {
         }
 
         let meter = Arc::new(EnergyMeter::new(cfg.device.clone(), cfg.meter_mode, 16.0));
-        let controller = cfg.controller.clone().map(|c| Mutex::new(AdmissionController::new(c)));
+        let controller = cfg
+            .controller
+            .clone()
+            .map(|c| Arc::new(Mutex::new(AdmissionController::new(c))));
+        let metrics = Arc::new(WindowedMetrics::new(64, 256));
+        let router = Router::new(cfg.route.clone());
+        let plane = cfg.control.as_ref().and_then(|pc| {
+            Self::wire_control_plane(pc, &controller, &metrics, &router, &delay_handles)
+        });
         Ok(ServingSystem {
+            plane,
             repo,
             direct,
             batched,
@@ -147,9 +189,163 @@ impl ServingSystem {
             latency: Mutex::new(LatencyHistogram::for_latency()),
             controller,
             cache: Mutex::new(ResponseCache::new(cfg.cache_capacity)),
+            metrics,
+            router: Mutex::new(router),
             clock: SystemClock::new(),
             cfg,
         })
+    }
+
+    /// Build and start the background control loops (Observe → Decide →
+    /// Act) requested by `pc`. Returns None when nothing is enabled.
+    fn wire_control_plane(
+        pc: &ControlPlaneConfig,
+        controller: &Option<Arc<Mutex<AdmissionController>>>,
+        metrics: &Arc<WindowedMetrics>,
+        router: &Router,
+        delay_handles: &[(String, Adaptive<u64>)],
+    ) -> Option<ControlPlane> {
+        if !pc.any_enabled() {
+            return None;
+        }
+        let mut plane = ControlPlane::new();
+
+        // Freshness gate shared by the latency/energy signals: windowed
+        // metrics are count-bounded, so after traffic stops they would
+        // replay the last regime's values forever. A signal only counts
+        // as observed when new events landed since the previous tick.
+        let fresh_p95 = |metrics: &Arc<WindowedMetrics>| {
+            let m = metrics.clone();
+            let mut last_events = 0u64;
+            move || {
+                let ev = m.events();
+                if ev == last_events {
+                    return f64::NAN; // stale window: hold the output
+                }
+                last_events = ev;
+                let p95 = m.snapshot().p95_latency;
+                if p95 > 0.0 {
+                    p95
+                } else {
+                    f64::NAN
+                }
+            }
+        };
+
+        // Adaptive τ: windowed admission rate → τ correction.
+        if let (Some(tc), Some(ctrl)) = (&pc.adaptive_tau, controller) {
+            let handle = ctrl.lock().unwrap().rate_correction_handle();
+            let ctrl = ctrl.clone();
+            let mut last = (0u64, 0u64); // (admitted, total) at previous tick
+            let signal = move || {
+                let s = ctrl.lock().unwrap().stats();
+                let (d_admitted, d_total) = (s.admitted - last.0, s.total() - last.1);
+                if d_total == 0 {
+                    return f64::NAN; // no decisions since the last tick
+                }
+                last = (s.admitted, s.total());
+                d_admitted as f64 / d_total as f64
+            };
+            let law = SetpointTracker::new(
+                0.0,
+                tc.target_admit_rate,
+                tc.gain,
+                -tc.max_correction,
+                tc.max_correction,
+            );
+            plane.add_loop(ControlLoop::new(
+                "tau_correction",
+                Box::new(law),
+                Box::new(signal),
+                Box::new(move |v| handle.set(v)),
+            ));
+        }
+
+        // AIMD batch delay: windowed p95 vs SLO → queue-delay window µs.
+        // One loop per model, seeded from *its own* config.pbtxt delay, so
+        // per-model tuning survives: the probe ceiling is 4× the configured
+        // window (capped by max_us), and models configured with no window
+        // (immediate policies, delay 0) are left alone — adaptivity must
+        // not introduce delay where the operator asked for none.
+        if let Some(dc) = &pc.adaptive_batch_delay {
+            for (model, handle) in delay_handles.iter().filter(|(_, h)| h.get() > 0) {
+                let configured = handle.get();
+                let max_us = dc.max_us.min(configured.saturating_mul(4)).max(dc.min_us);
+                let initial = configured.clamp(dc.min_us, max_us);
+                let law = Aimd::new(
+                    initial as f64,
+                    dc.slo_p95_secs,
+                    dc.increase_us as f64,
+                    dc.decrease,
+                    dc.min_us as f64,
+                    max_us as f64,
+                );
+                let h = handle.clone();
+                let apply = move |v: f64| h.set(v.max(0.0).round() as u64);
+                plane.add_loop(ControlLoop::new(
+                    format!("batch_delay_us.{model}"),
+                    Box::new(law),
+                    Box::new(fresh_p95(metrics)),
+                    Box::new(apply),
+                ));
+            }
+        }
+
+        // AIMD router threshold: SLO pressure shifts the direct/batched
+        // split toward the batched path (threshold drops).
+        if let Some(rc) = &pc.adaptive_router {
+            // +inf threshold means a pinned RoutePolicy: nothing to tune.
+            if router.qps_threshold().is_finite() {
+                let initial = router.qps_threshold().clamp(rc.min_qps, rc.max_qps);
+                let law = Aimd::new(
+                    initial,
+                    rc.slo_p95_secs,
+                    rc.increase_qps,
+                    rc.decrease,
+                    rc.min_qps,
+                    rc.max_qps,
+                );
+                let handle = router.qps_threshold_handle();
+                plane.add_loop(ControlLoop::new(
+                    "router_qps_threshold",
+                    Box::new(law),
+                    Box::new(fresh_p95(metrics)),
+                    Box::new(move |v| handle.set(v)),
+                ));
+            }
+        }
+
+        // Energy-budget pacing: windowed watts over budget → positive τ
+        // correction.
+        if let (Some(ec), Some(ctrl)) = (&pc.energy_budget, controller) {
+            let handle = ctrl.lock().unwrap().energy_correction_handle();
+            let m = metrics.clone();
+            let mut last_events = 0u64;
+            // Stale window ⇒ no inference ran ⇒ attributed draw is ~0 W:
+            // report that (decaying the correction) rather than replaying
+            // the last burst's watts and ratcheting τ upward while idle.
+            let signal = move || {
+                let ev = m.events();
+                if ev == last_events {
+                    return 0.0;
+                }
+                last_events = ev;
+                m.snapshot().watts
+            };
+            let law = BudgetPacer::new(ec.budget_watts, ec.gain, 0.0, ec.max_correction);
+            plane.add_loop(ControlLoop::new(
+                "energy_tau_correction",
+                Box::new(law),
+                Box::new(signal),
+                Box::new(move |v| handle.set(v)),
+            ));
+        }
+
+        if plane.is_empty() {
+            return None;
+        }
+        plane.start(Duration::from_secs_f64(pc.tick_secs.max(1e-3)));
+        Some(plane)
     }
 
     pub fn repository(&self) -> &Repository {
@@ -167,6 +363,26 @@ impl ServingSystem {
     /// Recent P95 latency (s).
     pub fn p95(&self) -> f64 {
         self.latency.lock().unwrap().p95()
+    }
+
+    /// The windowed-metrics aggregator feeding the control loops.
+    pub fn metrics(&self) -> &WindowedMetrics {
+        &self.metrics
+    }
+
+    /// Names of the running control loops (empty when no plane).
+    pub fn control_loop_names(&self) -> Vec<String> {
+        self.plane.as_ref().map(|p| p.loop_names()).unwrap_or_default()
+    }
+
+    /// Whether the background control plane is ticking.
+    pub fn control_plane_running(&self) -> bool {
+        self.plane.as_ref().map(|p| p.running()).unwrap_or(false)
+    }
+
+    /// Recent arrival rate seen by the shared router.
+    pub fn router_qps(&self) -> f64 {
+        self.router.lock().unwrap().recent_qps()
     }
 
     /// Controller admission stats (None when open loop).
@@ -193,6 +409,9 @@ impl ServingSystem {
     /// (the Table II benchmark mode).
     pub fn infer_on(&self, req: &Request, path: PathKind) -> Result<InferResult, RuntimeError> {
         let t0 = self.clock.now();
+        // Arrival is observed at entry, not completion: concurrent workers
+        // finishing out of order must not scramble the rate window.
+        self.metrics.record_arrival(t0);
         let entry = self.repo.get(&req.model)?;
         let (out, stats) = match path {
             PathKind::Direct => {
@@ -212,12 +431,14 @@ impl ServingSystem {
         };
         let latency = self.clock.now() - t0;
         self.latency.lock().unwrap().record(latency);
+        self.metrics.record_latency(latency);
         // Energy attribution: per-item share of the executed bucket, plus
         // (batched path) the scheduler wait burned at idle power — this is
         // the per-request energy premium Triton shows at batch=1 in
         // Table II while the device sits idle inside the queue window.
         let flops_item = entry.manifest.flops_per_item(stats.bucket.max(1));
         let reading = self.meter.record(flops_item, stats.exec_secs / stats.bucket.max(1) as f64);
+        self.metrics.record_joules(self.clock.now(), reading.joules);
         if path == PathKind::Batched {
             self.meter.record_idle((latency - stats.exec_secs).max(0.0));
         }
@@ -300,9 +521,16 @@ impl ServingSystem {
                 };
                 let latency = self.clock.now() - t0;
                 self.latency.lock().unwrap().record(latency);
+                // Arrival recorded here (not at submit entry) so admitted
+                // requests are not double-counted by infer_on's tap; the
+                // recorded instant is still t0, and the rate window clamps
+                // any cross-thread ordering races.
+                self.metrics.record_arrival(t0);
+                self.metrics.record_latency(latency);
                 // Energy: only the screener pass.
                 let scr_flops = scr_manifest.as_ref().map(|m| m.flops_per_item(1)).unwrap_or(0.0);
                 let reading = self.meter.record(scr_flops, scr_exec);
+                self.metrics.record_joules(self.clock.now(), reading.joules);
                 Ok(InferResult {
                     request_id: req.id,
                     predicted: label,
@@ -318,6 +546,14 @@ impl ServingSystem {
                 })
             }
         }
+    }
+
+    /// Fully closed-loop entry point: the shared router (arrival-rate
+    /// estimator + adaptive QPS threshold) picks the path, then the
+    /// admission controller decides as in [`ServingSystem::submit`].
+    pub fn submit_auto(&self, req: &Request) -> Result<InferResult, RuntimeError> {
+        let path = self.router.lock().unwrap().route(self.clock.now());
+        self.submit(req, path)
     }
 }
 
@@ -400,6 +636,54 @@ mod tests {
             assert!(res.j >= res.tau);
         }
         assert_eq!(sys.controller_stats().unwrap().admitted, 5);
+    }
+
+    #[test]
+    fn control_plane_boots_and_serves() {
+        let Some(root) = repo_root() else { return };
+        let cfg = SystemConfig::new(root)
+            .with_controller(ControllerConfig {
+                weights: crate::controller::cost::WeightPolicy::Balanced.weights(),
+                schedule: ThresholdSchedule::Constant { tau: 0.5 },
+                respond_from_cache: true,
+            })
+            .with_control(
+                crate::control::ControlPlaneConfig {
+                    tick_secs: 0.005,
+                    ..Default::default()
+                }
+                .with_adaptive_tau(0.5)
+                .with_adaptive_batch_delay(0.25)
+                .with_adaptive_router(0.25)
+                .with_energy_budget(100.0),
+            );
+        let sys = ServingSystem::start(cfg).unwrap();
+        assert!(sys.control_plane_running());
+        let names = sys.control_loop_names();
+        assert!(names.iter().any(|n| n == "tau_correction"), "{names:?}");
+        assert!(names.iter().any(|n| n == "router_qps_threshold"), "{names:?}");
+        assert!(names.iter().any(|n| n == "energy_tau_correction"), "{names:?}");
+        // batch_delay_us.<model> loops appear once per model whose config
+        // sets a nonzero queue-delay window, so their presence depends on
+        // the artifacts' config.pbtxt files — not asserted here.
+
+        for r in &requests(10, models::DISTILBERT) {
+            let res = sys.submit_auto(r).unwrap();
+            assert!(res.latency_secs >= 0.0);
+        }
+        assert!(sys.metrics().events() >= 10);
+        assert!(sys.router_qps() > 0.0);
+        // let the ticker observe the traffic at least once
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(sys.controller_stats().unwrap().total(), 10);
+    }
+
+    #[test]
+    fn no_control_config_means_no_plane() {
+        let Some(root) = repo_root() else { return };
+        let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+        assert!(!sys.control_plane_running());
+        assert!(sys.control_loop_names().is_empty());
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! throughput) per request. Policies encode the paper's discussion:
 //! sporadic traffic and tight SLOs at tiny batches → direct; sustained
 //! QPS where batching amortises → batched.
+//!
+//! The arrival estimator is a shared [`RateWindow`] (configurable window,
+//! no private ring buffer), and the adaptive policy's QPS threshold is an
+//! [`Adaptive<f64>`] handle, so the control plane can retune the
+//! direct/batched split at runtime (see [`crate::control`]).
+
+use crate::control::{Adaptive, RateWindow};
 
 /// Which serving path executes a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,52 +33,80 @@ impl PathKind {
     }
 }
 
+/// Default arrival-estimator window (the previously hard-wired ring size).
+pub const DEFAULT_ARRIVAL_WINDOW: usize = 32;
+
 /// Routing policy.
 #[derive(Debug, Clone)]
 pub enum RoutePolicy {
     /// Pin everything to one path (the Table II per-framework rows).
     Always(PathKind),
     /// Load-adaptive: batched when the recent arrival rate crosses
-    /// `qps_threshold` (batching amortises), direct otherwise.
-    Adaptive { qps_threshold: f64 },
+    /// `qps_threshold` (batching amortises), direct otherwise. `window`
+    /// sizes the arrival estimator: small = reactive, large = smooth.
+    Adaptive { qps_threshold: f64, window: usize },
 }
 
-/// Router with a small arrival-rate estimator.
+impl RoutePolicy {
+    /// Adaptive policy at the default estimator window.
+    pub fn adaptive(qps_threshold: f64) -> Self {
+        RoutePolicy::Adaptive { qps_threshold, window: DEFAULT_ARRIVAL_WINDOW }
+    }
+}
+
+/// Router over a shared arrival-rate window with a live-updatable
+/// threshold. `Clone` clones the estimator state but *shares* the
+/// threshold cell (both routers follow the same control loop).
 #[derive(Debug, Clone)]
 pub struct Router {
     policy: RoutePolicy,
-    /// Recent arrival instants (ring of the last N).
-    recent: std::collections::VecDeque<f64>,
-    window: usize,
+    arrivals: RateWindow,
+    qps_threshold: Adaptive<f64>,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Self {
-        Router { policy, recent: std::collections::VecDeque::new(), window: 32 }
+        let (window, threshold) = match &policy {
+            RoutePolicy::Always(_) => (DEFAULT_ARRIVAL_WINDOW, f64::INFINITY),
+            RoutePolicy::Adaptive { qps_threshold, window } => {
+                (*window.max(&2), *qps_threshold)
+            }
+        };
+        Router {
+            policy,
+            arrivals: RateWindow::new(window),
+            qps_threshold: Adaptive::new(threshold),
+        }
     }
 
     /// Estimate recent arrival rate (req/s) from the observation window.
     pub fn recent_qps(&self) -> f64 {
-        if self.recent.len() < 2 {
-            return 0.0;
-        }
-        let span = self.recent.back().unwrap() - self.recent.front().unwrap();
-        if span <= 0.0 {
-            return f64::INFINITY;
-        }
-        (self.recent.len() - 1) as f64 / span
+        self.arrivals.rate()
+    }
+
+    /// Arrival-estimator window size.
+    pub fn window(&self) -> usize {
+        self.arrivals.window()
+    }
+
+    /// The QPS threshold currently in force (+inf for pinned policies).
+    pub fn qps_threshold(&self) -> f64 {
+        self.qps_threshold.get()
+    }
+
+    /// Live handle onto the threshold, for the control plane's
+    /// adaptive-router loop.
+    pub fn qps_threshold_handle(&self) -> Adaptive<f64> {
+        self.qps_threshold.handle()
     }
 
     /// Route a request arriving at time `t`.
     pub fn route(&mut self, t: f64) -> PathKind {
-        self.recent.push_back(t);
-        if self.recent.len() > self.window {
-            self.recent.pop_front();
-        }
+        self.arrivals.record(t);
         match &self.policy {
             RoutePolicy::Always(p) => *p,
-            RoutePolicy::Adaptive { qps_threshold } => {
-                if self.recent_qps() >= *qps_threshold {
+            RoutePolicy::Adaptive { .. } => {
+                if self.arrivals.rate() >= self.qps_threshold.get() {
                     PathKind::Batched
                 } else {
                     PathKind::Direct
@@ -95,7 +130,7 @@ mod tests {
 
     #[test]
     fn adaptive_picks_direct_at_low_qps() {
-        let mut r = Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0 });
+        let mut r = Router::new(RoutePolicy::adaptive(50.0));
         // 1 req/s
         for i in 0..10 {
             assert_eq!(r.route(i as f64), PathKind::Direct);
@@ -105,7 +140,7 @@ mod tests {
 
     #[test]
     fn adaptive_switches_to_batched_under_load() {
-        let mut r = Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0 });
+        let mut r = Router::new(RoutePolicy::adaptive(50.0));
         let mut last = PathKind::Direct;
         // 1000 req/s burst
         for i in 0..64 {
@@ -117,7 +152,7 @@ mod tests {
 
     #[test]
     fn adaptive_recovers_when_load_drops() {
-        let mut r = Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0 });
+        let mut r = Router::new(RoutePolicy::adaptive(50.0));
         for i in 0..64 {
             r.route(i as f64 * 0.001);
         }
@@ -127,6 +162,53 @@ mod tests {
             last = r.route(1.0 + i as f64);
         }
         assert_eq!(last, PathKind::Direct);
+    }
+
+    #[test]
+    fn window_size_is_configurable() {
+        // A small window locks onto a burst within a few arrivals; a wide
+        // window still averages the burst against the calm history.
+        let mut small =
+            Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0, window: 4 });
+        let mut wide =
+            Router::new(RoutePolicy::Adaptive { qps_threshold: 50.0, window: 64 });
+        assert_eq!(small.window(), 4);
+        assert_eq!(wide.window(), 64);
+        // calm regime: 1 req/s
+        for i in 0..32 {
+            small.route(1.0 + i as f64);
+            wide.route(1.0 + i as f64);
+        }
+        // burst: 1000 req/s for 6 requests
+        let (mut s, mut w) = (PathKind::Direct, PathKind::Direct);
+        for i in 0..6 {
+            let t = 33.0 + i as f64 * 0.001;
+            s = small.route(t);
+            w = wide.route(t);
+        }
+        assert_eq!(s, PathKind::Batched, "small window reacts to the burst");
+        assert_eq!(w, PathKind::Direct, "wide window still averages the calm past");
+    }
+
+    #[test]
+    fn threshold_handle_retunes_live() {
+        let mut r = Router::new(RoutePolicy::adaptive(50.0));
+        for i in 0..64 {
+            r.route(i as f64 * 0.01); // 100 req/s
+        }
+        assert_eq!(r.route(0.65), PathKind::Batched);
+        // control loop raises the threshold above the observed rate
+        r.qps_threshold_handle().set(500.0);
+        assert_eq!(r.route(0.66), PathKind::Direct);
+        assert_eq!(r.qps_threshold(), 500.0);
+    }
+
+    #[test]
+    fn clones_share_the_threshold_cell() {
+        let r = Router::new(RoutePolicy::adaptive(50.0));
+        let r2 = r.clone();
+        r.qps_threshold_handle().set(75.0);
+        assert_eq!(r2.qps_threshold(), 75.0);
     }
 
     #[test]

@@ -119,9 +119,12 @@ fn infer_endpoint(req: &HttpRequest, system: &ServingSystem) -> Result<HttpRespo
     let body = json::parse(req.body_str()?).map_err(|e| e.to_string())?;
     let model = body.get("model").and_then(|v| v.as_str().map(|s| s.to_string())).map_err(|e| e.to_string())?;
     let seed = body.get("seed").and_then(|v| v.as_i64()).map_err(|e| e.to_string())? as u64;
+    // "auto" defers the path choice to the shared router (arrival-rate
+    // window + adaptive QPS threshold).
     let path = match body.opt("path").ok().flatten().and_then(|v| v.as_str().ok()) {
-        Some("batched") => PathKind::Batched,
-        _ => PathKind::Direct,
+        Some("batched") => Some(PathKind::Batched),
+        Some("auto") => None,
+        _ => Some(PathKind::Direct),
     };
 
     let request = Request {
@@ -136,7 +139,11 @@ fn infer_endpoint(req: &HttpRequest, system: &ServingSystem) -> Result<HttpRespo
     let reg = MetricsRegistry::global();
     reg.counter("gf_http_infer_total").inc();
 
-    match system.submit(&request, path) {
+    let result = match path {
+        Some(p) => system.submit(&request, p),
+        None => system.submit_auto(&request),
+    };
+    match result {
         Ok(r) => {
             reg.gauge("gf_last_latency_secs").set(r.latency_secs);
             Ok(HttpResponse::ok_json(

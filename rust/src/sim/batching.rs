@@ -1,0 +1,227 @@
+//! Deterministic dynamic-batcher simulation: the test bench for the
+//! control plane's AIMD queue-delay loop.
+//!
+//! Event-driven single-server model of the Triton-style scheduler:
+//! requests arrive on a trace, queue under a [`BatcherPolicy`], and fire
+//! per `plan` (preferred size reached, or the oldest request's window
+//! expired). A fired batch of `n` costs `service_base + n ·
+//! service_per_item` seconds on a serially-busy server; per-request
+//! latency is completion − arrival (queue wait + window wait + service).
+//!
+//! Because the policy's delay window is an `Adaptive<u64>`, a caller-
+//! provided tick callback can retune it *mid-simulation* — exactly what
+//! the live control plane does on its background tick, but deterministic.
+
+use crate::batching::policy::{BatchPlan, BatcherPolicy};
+use crate::control::LatencyWindow;
+use crate::stats;
+use std::collections::VecDeque;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct BatchSimConfig {
+    /// Fixed per-batch cost (dispatch + fuse/split), seconds.
+    pub service_base: f64,
+    /// Marginal per-item cost, seconds.
+    pub service_per_item: f64,
+    /// Control-tick interval (sim seconds) for the callback.
+    pub tick: f64,
+    /// Rolling-latency window handed to the callback (samples).
+    pub window: usize,
+}
+
+impl Default for BatchSimConfig {
+    fn default() -> Self {
+        BatchSimConfig { service_base: 5e-4, service_per_item: 1e-3, tick: 0.1, window: 128 }
+    }
+}
+
+/// Aggregate outcome of one run.
+#[derive(Debug, Clone)]
+pub struct BatchSimReport {
+    pub completed: usize,
+    pub batches: usize,
+    /// Mean fused batch size (1.0 = no amortisation).
+    pub mean_batch: f64,
+    /// Per-request latency stats over the whole run (s).
+    pub mean_latency: f64,
+    pub p95_latency: f64,
+    /// p95 over the trailing half only — the post-convergence regime an
+    /// adaptive delay should be judged on.
+    pub p95_tail: f64,
+    /// Delay window in force when the run ended (µs).
+    pub final_delay_us: u64,
+}
+
+/// Run `policy` over `arrivals` (sorted absolute seconds). `on_tick(now,
+/// windowed_p95)` fires every `cfg.tick` sim-seconds; retune the policy
+/// through [`BatcherPolicy::delay_handle`] from inside it to close the
+/// loop (pass `|_, _| {}` for a static run).
+pub fn simulate_batching<F: FnMut(f64, f64)>(
+    arrivals: &[f64],
+    policy: &BatcherPolicy,
+    cfg: &BatchSimConfig,
+    mut on_tick: F,
+) -> BatchSimReport {
+    assert!(arrivals.windows(2).all(|w| w[1] >= w[0]), "arrivals must be sorted");
+    let mut queue: VecDeque<f64> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut t = 0.0f64;
+    let mut t_free = 0.0f64;
+    let mut next_tick = cfg.tick;
+    let mut window = LatencyWindow::new(cfg.window);
+    let mut latencies: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut batches = 0usize;
+    let mut fused_items = 0usize;
+
+    loop {
+        // Fire everything the policy releases at the current instant.
+        while !queue.is_empty() {
+            let oldest_us = ((t - queue[0]).max(0.0) * 1e6) as u64;
+            match policy.plan(queue.len(), oldest_us) {
+                BatchPlan::Fire { size } => {
+                    let n = size.min(queue.len()).max(1);
+                    let start = t.max(t_free);
+                    let done = start + cfg.service_base + n as f64 * cfg.service_per_item;
+                    for _ in 0..n {
+                        let arrival = queue.pop_front().unwrap();
+                        let l = done - arrival;
+                        latencies.push(l);
+                        window.record(l);
+                    }
+                    t_free = done;
+                    batches += 1;
+                    fused_items += n;
+                }
+                BatchPlan::Wait => break,
+            }
+        }
+
+        if next_arrival >= arrivals.len() && queue.is_empty() {
+            break;
+        }
+
+        // Advance to the next event: arrival, window expiry, or tick.
+        let mut t_next = f64::INFINITY;
+        if let Some(&a) = arrivals.get(next_arrival) {
+            t_next = t_next.min(a);
+        }
+        if let Some(&oldest) = queue.front() {
+            // Half-µs epsilon past the expiry instant so the truncated
+            // `oldest_us` computed at the top reads >= the window and the
+            // plan fires (guards against a float-rounding stall).
+            t_next = t_next.min(oldest + (policy.max_queue_delay_us() as f64 + 0.5) * 1e-6);
+        }
+        if !queue.is_empty() || next_arrival < arrivals.len() {
+            t_next = t_next.min(next_tick);
+        }
+        debug_assert!(t_next.is_finite());
+        t = t.max(t_next);
+
+        if t >= next_tick {
+            on_tick(t, window.p95());
+            next_tick += cfg.tick;
+        }
+        if let Some(&a) = arrivals.get(next_arrival) {
+            if a <= t {
+                queue.push_back(a);
+                next_arrival += 1;
+            }
+        }
+    }
+
+    let completed = latencies.len();
+    let tail = &latencies[completed / 2..];
+    BatchSimReport {
+        completed,
+        batches,
+        mean_batch: if batches > 0 { fused_items as f64 / batches as f64 } else { 0.0 },
+        mean_latency: stats::mean(&latencies),
+        p95_latency: if completed > 0 { stats::quantile(&latencies, 0.95) } else { 0.0 },
+        p95_tail: if tail.is_empty() { 0.0 } else { stats::quantile(tail, 0.95) },
+        final_delay_us: policy.max_queue_delay_us(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::arrival::{arrival_times, ArrivalProcess};
+
+    fn sparse_arrivals(n: usize) -> Vec<f64> {
+        // ~40 req/s: too slow to fill a preferred-8 batch inside a tight
+        // window, so the delay window dominates latency.
+        let mut rng = Rng::new(11);
+        let mut arr = ArrivalProcess::poisson(40.0);
+        arrival_times(&mut arr, n, &mut rng)
+    }
+
+    #[test]
+    fn zero_delay_serves_singletons() {
+        let arrivals = sparse_arrivals(200);
+        let policy = BatcherPolicy::new(8, vec![], 0);
+        let rep = simulate_batching(&arrivals, &policy, &BatchSimConfig::default(), |_, _| {});
+        assert_eq!(rep.completed, 200);
+        assert!(rep.mean_batch < 1.5, "sparse zero-delay traffic barely fuses");
+        assert!(rep.p95_latency < 0.02, "p95 {}", rep.p95_latency);
+    }
+
+    #[test]
+    fn long_delay_window_fuses_but_costs_latency() {
+        let arrivals = sparse_arrivals(400);
+        let fast = BatcherPolicy::new(8, vec![8], 5_000); // 5 ms window
+        let slow = BatcherPolicy::new(8, vec![8], 150_000); // 150 ms window
+        let cfg = BatchSimConfig::default();
+        let fast_rep = simulate_batching(&arrivals, &fast, &cfg, |_, _| {});
+        let slow_rep = simulate_batching(&arrivals, &slow, &cfg, |_, _| {});
+        assert!(slow_rep.mean_batch > fast_rep.mean_batch, "window buys amortisation");
+        assert!(
+            slow_rep.p95_latency > fast_rep.p95_latency + 0.05,
+            "and pays for it in tail latency: {} vs {}",
+            slow_rep.p95_latency,
+            fast_rep.p95_latency
+        );
+    }
+
+    #[test]
+    fn tick_callback_can_retune_mid_run() {
+        let arrivals = sparse_arrivals(400);
+        let policy = BatcherPolicy::new(8, vec![8], 150_000);
+        let handle = policy.delay_handle();
+        let mut ticks = 0usize;
+        let rep = simulate_batching(&arrivals, &policy, &BatchSimConfig::default(), |_, _| {
+            ticks += 1;
+            handle.set(1_000); // collapse the window at the first tick
+        });
+        assert!(ticks > 0, "ticks must fire");
+        assert_eq!(rep.final_delay_us, 1_000);
+        // after the early collapse, tail latency is window-free
+        assert!(rep.p95_tail < 0.05, "tail p95 {}", rep.p95_tail);
+        assert!(rep.completed == 400);
+    }
+
+    #[test]
+    fn deterministic() {
+        let arrivals = sparse_arrivals(300);
+        let cfg = BatchSimConfig::default();
+        let a = simulate_batching(&arrivals, &BatcherPolicy::new(8, vec![8], 20_000), &cfg, |_, _| {});
+        let b = simulate_batching(&arrivals, &BatcherPolicy::new(8, vec![8], 20_000), &cfg, |_, _| {});
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.p95_latency, b.p95_latency);
+        assert_eq!(a.batches, b.batches);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let rep = simulate_batching(
+            &[],
+            &BatcherPolicy::immediate(4),
+            &BatchSimConfig::default(),
+            |_, _| {},
+        );
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.batches, 0);
+        assert_eq!(rep.p95_latency, 0.0);
+    }
+}

@@ -11,8 +11,13 @@
 //!   paper's A100 profile, which we obviously cannot execute on.
 //! * [`landscape`] — the stylised energy-landscape geometry behind Fig. 1
 //!   and Fig. 5 (multi-basin J surface, τ(t) level sets, admit regions).
+//! * [`batching`] — an event-driven model of the dynamic batcher (queue +
+//!   delay window + serially-busy server) with a control-tick callback, so
+//!   the control plane's AIMD delay loop can be exercised deterministically.
 
+pub mod batching;
 pub mod landscape;
 pub mod serving;
 
+pub use batching::{simulate_batching, BatchSimConfig, BatchSimReport};
 pub use serving::{simulate, SimConfig, SimReport};

@@ -133,7 +133,7 @@ fn prop_batcher_plan_is_sound() {
                 // Waiting forever is only allowed while the window is open
                 // or the queue is empty.
                 assert!(
-                    queued == 0 || wait < policy.max_queue_delay_us,
+                    queued == 0 || wait < policy.max_queue_delay_us(),
                     "case {case}: would wait past the window (queued={queued}, wait={wait})"
                 );
             }

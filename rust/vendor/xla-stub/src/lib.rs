@@ -1,0 +1,200 @@
+//! API-compatible stub of the `xla` (xla-rs) surface `greenflow::runtime`
+//! consumes. It type-checks and links everywhere; anything that would
+//! need a real PJRT backend (compile, execute, literal decode) returns
+//! [`Error`], which the engine maps to `RuntimeError::Xla`.
+//!
+//! Swap in real PJRT by pointing the workspace's `xla` path dependency at
+//! an xla-rs checkout — the engine code is written against the genuine
+//! API shape (see `rust/src/runtime/engine.rs`).
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Error surfaced by every stubbed operation.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(op: &str) -> Error {
+    Error::new(format!("{op}: PJRT backend unavailable (xla stub build)"))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor literal (stores nothing beyond its shape here).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    len: usize,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { len: data.len(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.len {
+            return Err(Error::new(format!(
+                "reshape: {} elements into {:?}",
+                self.len, dims
+            )));
+        }
+        Ok(Literal { len: self.len, dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.len
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), Error> {
+        Err(unavailable("Literal::to_tuple3"))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        // Validate the artifact exists so missing-repository errors stay
+        // accurate, then admit we cannot parse it without a backend.
+        if !std::path::Path::new(path).exists() {
+            return Err(Error::new(format!("hlo file not found: {path}")));
+        }
+        Ok(HloModuleProto { _private: () })
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client. Mirrors xla-rs threading semantics: `Rc`-backed, not
+/// `Send` — engines stay thread-confined exactly as with the real crate.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _not_send: PhantomData })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shapes_roundtrip() {
+        let l = Literal::vec1(&[1.0f32; 12]);
+        assert_eq!(l.element_count(), 12);
+        let r = l.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.dims(), &[3, 4]);
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn backend_ops_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub");
+        assert!(client.buffer_from_host_buffer(&[0i32; 4], &[4], None).is_err());
+        let l = Literal::vec1(&[0.0f32; 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.to_tuple3().is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_is_reported() {
+        let e = HloModuleProto::from_text_file("/nonexistent/model.hlo").unwrap_err();
+        assert!(e.to_string().contains("not found"));
+    }
+}

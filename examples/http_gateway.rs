@@ -1,40 +1,18 @@
-//! HTTP gateway demo: boot the closed-loop system behind the FastAPI-analog
-//! REST layer, then act as its own client over real TCP.
+//! HTTP gateway demo: boot the closed-loop system behind the v2
+//! inference protocol, then act as its own client over one real TCP
+//! keep-alive connection.
 //!
 //! ```bash
 //! cargo run --release --example http_gateway
 //! ```
 
-use std::io::{Read, Write};
-use std::net::TcpStream;
 use std::sync::Arc;
 
 use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::ControllerConfig;
 use greenflow::pipeline::system::{ServingSystem, SystemConfig};
-use greenflow::server::Gateway;
-
-fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
-    let mut s = TcpStream::connect(addr).unwrap();
-    write!(
-        s,
-        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    )
-    .unwrap();
-    let mut out = String::new();
-    s.read_to_string(&mut out).unwrap();
-    out
-}
-
-fn get(addr: std::net::SocketAddr, path: &str) -> String {
-    let mut s = TcpStream::connect(addr).unwrap();
-    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
-    let mut out = String::new();
-    s.read_to_string(&mut out).unwrap();
-    out
-}
+use greenflow::server::{Gateway, HttpClient};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let repo = std::env::var("GF_REPO").unwrap_or_else(|_| "artifacts".to_string());
@@ -45,18 +23,47 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     });
     let system = Arc::new(ServingSystem::start(cfg)?);
     let gw = Gateway::start(system, 0, 4)?; // ephemeral port
-    let addr = gw.addr();
-    println!("gateway up at http://{addr}\n");
+    println!("gateway up at http://{}\n", gw.addr());
 
-    println!("GET /health\n{}\n", get(addr, "/health").lines().last().unwrap_or(""));
-    println!("GET /models\n{}\n", get(addr, "/models").lines().last().unwrap_or(""));
+    // Every request below rides the same keep-alive connection.
+    let mut client = HttpClient::connect(gw.addr())?;
 
-    for seed in [1u64, 2, 3, 4] {
-        let body = format!("{{\"model\": \"distilbert_mini\", \"seed\": {seed}}}");
-        let resp = post(addr, "/infer", &body);
-        println!("POST /infer seed={seed}\n{}\n", resp.lines().last().unwrap_or(""));
+    for path in ["/v2/health/ready", "/v2/models", "/v2/models/distilbert_mini"] {
+        let resp = client.get(path)?;
+        println!("GET {path} -> {}\n{}\n", resp.status, resp.body_str().unwrap_or(""));
     }
 
-    println!("GET /metrics\n{}", get(addr, "/metrics").lines().skip(7).collect::<Vec<_>>().join("\n"));
+    // One batch infer: four items, one response, outputs in order.
+    let body = r#"{"inputs": [{"seed": 1}, {"seed": 2}, {"seed": 3}, {"seed": 4}],
+                   "parameters": {"path": "auto", "timeout_ms": 5000}}"#;
+    let resp = client.post_json("/v2/models/distilbert_mini/infer", body)?;
+    println!(
+        "POST /v2/models/distilbert_mini/infer -> {}\n{}\n",
+        resp.status,
+        resp.body_str().unwrap_or("")
+    );
+
+    // Legacy shim, still on the same socket.
+    let resp =
+        client.post_json("/infer", r#"{"model": "distilbert_mini", "seed": 9}"#)?;
+    println!(
+        "POST /infer (legacy shim) -> {}\n{}\n",
+        resp.status,
+        resp.body_str().unwrap_or("")
+    );
+
+    let resp = client.get("/v2/admission/stats")?;
+    println!("GET /v2/admission/stats\n{}\n", resp.body_str().unwrap_or(""));
+
+    let resp = client.get("/metrics")?;
+    println!(
+        "GET /metrics (gateway lines)\n{}",
+        resp.body_str()
+            .unwrap_or("")
+            .lines()
+            .filter(|l| l.contains("gf_http") || l.contains("gf_gateway"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
     Ok(())
 }

@@ -4,12 +4,19 @@
 //! greenflow serve     --repo artifacts --port 8080 [--controller] [--device a100]
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
+//!                     [--serve-bench N [--model distilbert_mini]]
 //! greenflow report    --repo artifacts
 //! greenflow ablation  [--requests 1000] [--tau0 0.2] [--tau-inf 0.78] [--k 2.0]
 //!                     [--adaptive-tau 0.58]
 //! greenflow landscape [--out -]
 //! greenflow version
 //! ```
+//!
+//! `--serve-bench N` boots the gateway on an ephemeral port (unless
+//! `--port` pins one), fires `N` v2 infer round-trips over a single
+//! keep-alive connection through [`crate::server::HttpClient`], prints
+//! the round-trip throughput, and exits — the self-contained
+//! load-generator smoke the v2 protocol was rebuilt for.
 //!
 //! The `--adaptive-*` / `--energy-budget` flags boot the control plane
 //! ([`crate::control`]): background loops that retune τ, the batcher
@@ -178,7 +185,10 @@ fn cmd_serve(args: &Args) -> i32 {
     if let Some(c) = control {
         cfg = cfg.with_control(c);
     }
-    let port = args.get_f64("port").unwrap_or(8080.0) as u16;
+    let bench_n = args.get_f64("serve-bench").map(|n| n.max(1.0) as usize);
+    // Bench mode defaults to an ephemeral port so it never collides.
+    let default_port = if bench_n.is_some() { 0.0 } else { 8080.0 };
+    let port = args.get_f64("port").unwrap_or(default_port) as u16;
     let system = match ServingSystem::start(cfg) {
         Ok(s) => Arc::new(s),
         Err(e) => {
@@ -187,11 +197,24 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     match Gateway::start(system.clone(), port, 8) {
-        Ok(gw) => {
+        Ok(mut gw) => {
             println!("greenflow gateway listening on http://{}", gw.addr());
-            println!("endpoints: POST /infer  GET /metrics  GET /models  GET /health");
+            println!(
+                "v2: GET /v2/health/live|ready  GET /v2/models[/{{name}}]  \
+                 POST /v2/models/{{name}}/infer  GET /v2/control/loops  \
+                 GET /v2/admission/stats"
+            );
+            println!("legacy: POST /infer  GET /metrics  GET /models  GET /health");
             if system.control_plane_running() {
                 println!("control plane: {}", system.control_loop_names().join(", "));
+            }
+            if let Some(n) = bench_n {
+                let model = args
+                    .get("model")
+                    .unwrap_or_else(|| crate::models::DISTILBERT.to_string());
+                let code = serve_bench(gw.addr(), n, &model);
+                gw.shutdown();
+                return code;
             }
             // Serve until killed.
             loop {
@@ -203,6 +226,56 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Round-trip bench: N v2 infers over one keep-alive connection.
+fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str) -> i32 {
+    let mut client = match crate::server::HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("serve-bench: cannot connect: {e}");
+            return 1;
+        }
+    };
+    let path = format!("/v2/models/{model}/infer");
+    let t0 = std::time::Instant::now();
+    let (mut ok, mut err) = (0usize, 0usize);
+    for seed in 0..n {
+        match client.post_json(&path, &format!("{{\"seed\": {seed}}}")) {
+            Ok(resp) => {
+                if resp.status == 200 {
+                    ok += 1;
+                } else {
+                    err += 1;
+                }
+                // The server rotates connections after 100k requests
+                // (Connection: close); reconnect instead of dying on
+                // the next write.
+                if !resp.keep_alive() && seed + 1 < n {
+                    client = match crate::server::HttpClient::connect(addr) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            eprintln!("serve-bench: reconnect failed: {e}");
+                            return 1;
+                        }
+                    };
+                }
+            }
+            Err(e) => {
+                eprintln!("serve-bench: transport error after {} round-trips: {e}", ok + err);
+                return 1;
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "serve-bench: {n} round-trips on one keep-alive connection in {:.3} s \
+         ({:.0} req/s, {:.1} µs/req), {ok} ok / {err} error responses",
+        secs,
+        n as f64 / secs,
+        secs / n as f64 * 1e6,
+    );
+    0
 }
 
 fn cmd_ablation(args: &Args) -> i32 {
@@ -348,5 +421,24 @@ mod tests {
         if root.join("repository.json").exists() {
             assert_eq!(run(&sv(&["report", "--repo", root.to_str().unwrap()])), 0);
         }
+    }
+
+    #[test]
+    fn serve_bench_round_trips_with_artifacts() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("repository.json").exists() {
+            return;
+        }
+        // Ephemeral port, 10 round-trips over one keep-alive connection.
+        assert_eq!(
+            run(&sv(&[
+                "serve",
+                "--repo",
+                root.to_str().unwrap(),
+                "--serve-bench",
+                "10",
+            ])),
+            0
+        );
     }
 }

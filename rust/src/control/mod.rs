@@ -65,6 +65,6 @@ pub use adaptive::{Adaptive, AtomicBits};
 pub use law::{Aimd, BudgetPacer, ControlLaw, SetpointTracker};
 pub use plane::{
     AdaptiveDelayConfig, AdaptiveRouterConfig, AdaptiveTauConfig, ControlLoop, ControlPlane,
-    ControlPlaneConfig, EnergyBudgetConfig,
+    ControlPlaneConfig, EnergyBudgetConfig, LoopState,
 };
 pub use window::{EnergyWindow, LatencyWindow, MetricsSnapshot, RateWindow, WindowedMetrics};

@@ -54,6 +54,16 @@ impl ControlLoop {
     }
 }
 
+/// Introspection view of one loop (the `/v2/control/loops` endpoint).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopState {
+    pub name: String,
+    /// The law driving it ("aimd", "setpoint", "budget").
+    pub law: String,
+    /// The law's current output (what the `Adaptive` handle last saw).
+    pub output: f64,
+}
+
 impl std::fmt::Debug for ControlLoop {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ControlLoop")
@@ -87,6 +97,21 @@ impl ControlPlane {
 
     pub fn loop_names(&self) -> Vec<String> {
         self.loops.lock().unwrap().iter().map(|l| l.name().to_string()).collect()
+    }
+
+    /// Snapshot every loop's (name, law, current output) for
+    /// introspection endpoints and reports.
+    pub fn loop_states(&self) -> Vec<LoopState> {
+        self.loops
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|l| LoopState {
+                name: l.name().to_string(),
+                law: l.law.name().to_string(),
+                output: l.law.output(),
+            })
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -342,6 +367,21 @@ mod tests {
         signal.set(0.5);
         plane.tick(0.1);
         assert!((handle.get() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loop_states_reflect_outputs() {
+        let plane = ControlPlane::new();
+        let handle = Adaptive::new(0.0f64);
+        let signal = Adaptive::new(0.9f64);
+        plane.add_loop(rate_loop(handle.clone(), signal));
+        let before = plane.loop_states();
+        assert_eq!(before.len(), 1);
+        assert_eq!(before[0].name, "test");
+        assert_eq!(before[0].law, "setpoint");
+        plane.tick(0.1);
+        let after = plane.loop_states();
+        assert!((after[0].output - handle.get()).abs() < 1e-12);
     }
 
     #[test]

@@ -115,7 +115,7 @@ impl BatchedPath {
     pub fn infer(&self, seed: u64) -> Result<(OutputBatch, ExecStats), RuntimeError> {
         let (reply, rx) = mpsc::sync_channel(1);
         self.queue.push(Item { seed, reply }).map_err(|e| match e {
-            EnqueueError::Full => RuntimeError::Xla("queue full (backpressure)".into()),
+            EnqueueError::Full => RuntimeError::Backpressure(self.model.clone()),
             EnqueueError::Closed => RuntimeError::Xla("path shut down".into()),
         })?;
         rx.recv().map_err(|_| RuntimeError::Xla("reply dropped".into()))?
@@ -129,7 +129,7 @@ impl BatchedPath {
     {
         let (reply, rx) = mpsc::sync_channel(1);
         self.queue.push(Item { seed, reply }).map_err(|e| match e {
-            EnqueueError::Full => RuntimeError::Xla("queue full (backpressure)".into()),
+            EnqueueError::Full => RuntimeError::Backpressure(self.model.clone()),
             EnqueueError::Closed => RuntimeError::Xla("path shut down".into()),
         })?;
         Ok(rx)

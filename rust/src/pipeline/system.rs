@@ -31,7 +31,7 @@ use crate::runtime::repository::Repository;
 use crate::runtime::RuntimeError;
 use crate::stats::LatencyHistogram;
 use crate::util::{Clock, SystemClock};
-use crate::workload::stream::Request;
+use crate::workload::stream::{Priority, Request};
 
 use super::batched::BatchedPath;
 use super::direct::DirectPath;
@@ -92,6 +92,31 @@ impl SystemConfig {
     pub fn with_control(mut self, cfg: ControlPlaneConfig) -> Self {
         self.control = Some(cfg);
         self
+    }
+}
+
+/// Per-submission options the v2 protocol carries (deadline + priority).
+/// The zero value (`Default`) reproduces plain `submit` semantics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SubmitOptions {
+    /// Absolute deadline on the system clock ([`ServingSystem::clock`]
+    /// seconds). Expired at entry → the request is refused without work;
+    /// expired at completion → the result is discarded as
+    /// [`RuntimeError::DeadlineExceeded`] (the client has given up).
+    pub deadline: Option<f64>,
+    /// Milliseconds the caller granted (kept for the error payload).
+    pub timeout_ms: u64,
+    pub priority: Priority,
+}
+
+impl SubmitOptions {
+    /// Build from a relative timeout: deadline = now + timeout_ms.
+    pub fn with_timeout(now: f64, timeout_ms: u64, priority: Priority) -> Self {
+        SubmitOptions {
+            deadline: Some(now + timeout_ms as f64 / 1e3),
+            timeout_ms,
+            priority,
+        }
     }
 }
 
@@ -375,6 +400,21 @@ impl ServingSystem {
         self.plane.as_ref().map(|p| p.loop_names()).unwrap_or_default()
     }
 
+    /// Introspection snapshot of every control loop (name, law, output).
+    pub fn control_loop_states(&self) -> Vec<crate::control::LoopState> {
+        self.plane.as_ref().map(|p| p.loop_states()).unwrap_or_default()
+    }
+
+    /// Scheduler queue capacity per batched path (the C(x) normaliser).
+    pub fn queue_capacity(&self) -> usize {
+        self.cfg.queue_capacity
+    }
+
+    /// Whether a model is servable on the batched path (has a batcher).
+    pub fn has_batched_path(&self, model: &str) -> bool {
+        self.batched.contains_key(model)
+    }
+
     /// Whether the background control plane is ticking.
     pub fn control_plane_running(&self) -> bool {
         self.plane.as_ref().map(|p| p.running()).unwrap_or(false)
@@ -383,6 +423,11 @@ impl ServingSystem {
     /// Recent arrival rate seen by the shared router.
     pub fn router_qps(&self) -> f64 {
         self.router.lock().unwrap().recent_qps()
+    }
+
+    /// The router's QPS threshold currently in force (+inf when pinned).
+    pub fn router_qps_threshold(&self) -> f64 {
+        self.router.lock().unwrap().qps_threshold()
     }
 
     /// Controller admission stats (None when open loop).
@@ -555,6 +600,90 @@ impl ServingSystem {
         let path = self.router.lock().unwrap().route(self.clock.now());
         self.submit(req, path)
     }
+
+    /// The v2-protocol entry point: `submit`/`submit_auto` semantics plus
+    /// per-request deadline and priority.
+    ///
+    /// * `prefer = None` routes through the shared router (auto).
+    /// * Deadline: checked before any work (an already-expired request is
+    ///   refused for free) and again at completion — a result the caller
+    ///   can no longer use is reported as `DeadlineExceeded`, and the
+    ///   paper's accounting still charges the joules it burned.
+    /// * Priority: `High` bypasses the admission controller (the request
+    ///   is always executed); `Low` is shed with `Backpressure` once the
+    ///   model's scheduler queue passes ~80% occupancy, before it can
+    ///   displace normal work.
+    pub fn submit_opts(
+        &self,
+        req: &Request,
+        prefer: Option<PathKind>,
+        opts: &SubmitOptions,
+    ) -> Result<InferResult, RuntimeError> {
+        let t0 = self.clock.now();
+        // Elapsed is measured from when the budget started (deadline −
+        // timeout), not from this call's entry: a later batch item that
+        // arrives here already expired must not report "0 ms elapsed".
+        let deadline_err = |now: f64| {
+            let start = opts
+                .deadline
+                .map(|d| d - opts.timeout_ms as f64 / 1e3)
+                .unwrap_or(t0);
+            RuntimeError::DeadlineExceeded {
+                elapsed_ms: ((now - start).max(0.0) * 1e3).round() as u64,
+                timeout_ms: opts.timeout_ms,
+            }
+        };
+        if let Some(d) = opts.deadline {
+            if t0 >= d {
+                return Err(deadline_err(t0));
+            }
+        }
+        if opts.priority == Priority::Low {
+            // Low-priority shed: refuse before enqueueing once the queue
+            // sits above 4/5 of capacity (cheap head-room guard).
+            let depth = self.queue_depth(&req.model);
+            if depth * 5 >= self.cfg.queue_capacity * 4 {
+                return Err(RuntimeError::Backpressure(req.model.clone()));
+            }
+        }
+        let mut path = match prefer {
+            Some(p) => p,
+            None => self.router.lock().unwrap().route(t0),
+        };
+        // A model with no batcher cannot serve the batched path: pinning
+        // "batched" there is a client error (not MODEL_NOT_FOUND — the
+        // model exists), and the model-blind auto router falls back to
+        // direct.
+        if path == PathKind::Batched && !self.batched.contains_key(&req.model) {
+            // A model missing from the repository entirely is still
+            // UnknownModel, not a claim about its (nonexistent) paths.
+            self.repo.get(&req.model)?;
+            if prefer.is_some() {
+                return Err(RuntimeError::InputMismatch(format!(
+                    "model {:?} has no batched path",
+                    req.model
+                )));
+            }
+            path = PathKind::Direct;
+        }
+        let result = if opts.priority == Priority::High {
+            // High priority bypasses the admission skip entirely.
+            self.infer_on(req, path)
+        } else {
+            self.submit(req, path)
+        };
+        match (result, opts.deadline) {
+            (Ok(r), Some(d)) => {
+                let now = self.clock.now();
+                if now > d {
+                    Err(deadline_err(now))
+                } else {
+                    Ok(r)
+                }
+            }
+            (r, _) => r,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -676,6 +805,51 @@ mod tests {
         // let the ticker observe the traffic at least once
         std::thread::sleep(std::time::Duration::from_millis(30));
         assert_eq!(sys.controller_stats().unwrap().total(), 10);
+    }
+
+    #[test]
+    fn submit_opts_honors_deadline_and_priority() {
+        let Some(root) = repo_root() else { return };
+        // Strict constant τ so Normal-priority requests mostly skip.
+        let cfg = SystemConfig::new(root).with_controller(ControllerConfig {
+            weights: crate::controller::cost::WeightPolicy::Balanced.weights(),
+            schedule: ThresholdSchedule::Constant { tau: 0.95 },
+            respond_from_cache: true,
+        });
+        let sys = ServingSystem::start(cfg).unwrap();
+        let reqs = requests(4, models::DISTILBERT);
+
+        // Already-expired deadline: refused before any work.
+        let expired = SubmitOptions {
+            deadline: Some(0.0),
+            timeout_ms: 0,
+            priority: Priority::Normal,
+        };
+        let err = sys.submit_opts(&reqs[0], Some(PathKind::Direct), &expired).unwrap_err();
+        assert!(matches!(err, RuntimeError::DeadlineExceeded { .. }), "{err}");
+
+        // High priority bypasses the admission skip even under strict τ.
+        let high = SubmitOptions { priority: Priority::High, ..Default::default() };
+        let r = sys.submit_opts(&reqs[1], Some(PathKind::Direct), &high).unwrap();
+        assert_ne!(r.path, PathKind::CacheSkip);
+
+        // A generous deadline passes through (auto-routed).
+        let opts = SubmitOptions::with_timeout(sys.clock().now(), 30_000, Priority::Normal);
+        assert!(sys.submit_opts(&reqs[2], None, &opts).is_ok());
+
+        // Default options reproduce submit() semantics.
+        let dflt = SubmitOptions::default();
+        assert!(sys.submit_opts(&reqs[3], Some(PathKind::Direct), &dflt).is_ok());
+
+        // Pinning "batched" on a model with no batcher is an input error
+        // (the model exists — it must not read as MODEL_NOT_FOUND).
+        if !sys.has_batched_path(models::SCREENER) {
+            let req = Request::external(99, models::SCREENER, 1, sys.clock().now());
+            let err = sys
+                .submit_opts(&req, Some(PathKind::Batched), &SubmitOptions::default())
+                .unwrap_err();
+            assert!(matches!(err, RuntimeError::InputMismatch(_)), "{err}");
+        }
     }
 
     #[test]

@@ -31,6 +31,16 @@ impl PathKind {
             PathKind::CacheSkip => "cache",
         }
     }
+
+    /// Parse a client-requestable path name. `CacheSkip` is an outcome,
+    /// not a request, so only "direct" and "batched" parse.
+    pub fn parse(s: &str) -> Option<PathKind> {
+        match s {
+            "direct" => Some(PathKind::Direct),
+            "batched" => Some(PathKind::Batched),
+            _ => None,
+        }
+    }
 }
 
 /// Default arrival-estimator window (the previously hard-wired ring size).
@@ -216,5 +226,13 @@ mod tests {
         assert_eq!(PathKind::Direct.as_str(), "direct");
         assert_eq!(PathKind::Batched.as_str(), "batched");
         assert_eq!(PathKind::CacheSkip.as_str(), "cache");
+    }
+
+    #[test]
+    fn path_parse_accepts_requestable_paths_only() {
+        assert_eq!(PathKind::parse("direct"), Some(PathKind::Direct));
+        assert_eq!(PathKind::parse("batched"), Some(PathKind::Batched));
+        assert_eq!(PathKind::parse("cache"), None);
+        assert_eq!(PathKind::parse("auto"), None);
     }
 }

@@ -44,6 +44,10 @@ pub enum RuntimeError {
     BatchTooLarge { model: String, requested: usize, max: usize },
     #[error("input mismatch: {0}")]
     InputMismatch(String),
+    #[error("queue full (backpressure) for model {0:?}")]
+    Backpressure(String),
+    #[error("deadline exceeded: {elapsed_ms} ms elapsed against a {timeout_ms} ms budget")]
+    DeadlineExceeded { elapsed_ms: u64, timeout_ms: u64 },
 }
 
 impl From<xla::Error> for RuntimeError {

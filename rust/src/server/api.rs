@@ -1,0 +1,527 @@
+//! The v2 inference protocol: typed request/response/error structs with
+//! stable JSON encodings and HTTP mappings (KServe/Triton-inspired).
+//!
+//! The gateway's route handlers parse bodies into these types, run the
+//! serving system, and serialise the results back — no ad-hoc JSON
+//! plumbing inside handlers. Error codes are part of the contract
+//! (`docs/API.md`): clients dispatch on `error.code`, not on prose.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::json::{self, Value};
+use crate::pipeline::system::InferResult;
+use crate::router::PathKind;
+use crate::runtime::repository::RepoEntry;
+use crate::runtime::RuntimeError;
+use crate::workload::stream::Priority;
+
+use super::http::HttpResponse;
+
+/// Most items accepted in one batch-infer body.
+pub const MAX_BATCH_ITEMS: usize = 64;
+
+/// Seeds are JSON numbers; above 2^53 an f64 silently loses integers.
+const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+
+/// Stable v2 error codes with their HTTP mappings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadRequest,
+    NotFound,
+    ModelNotFound,
+    Unsupported,
+    PayloadTooLarge,
+    Backpressure,
+    DeadlineExceeded,
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "BAD_REQUEST",
+            ErrorCode::NotFound => "NOT_FOUND",
+            ErrorCode::ModelNotFound => "MODEL_NOT_FOUND",
+            ErrorCode::Unsupported => "UNSUPPORTED",
+            ErrorCode::PayloadTooLarge => "PAYLOAD_TOO_LARGE",
+            ErrorCode::Backpressure => "BACKPRESSURE",
+            ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
+            ErrorCode::Internal => "INTERNAL",
+        }
+    }
+
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ErrorCode::BadRequest => 400,
+            ErrorCode::NotFound | ErrorCode::ModelNotFound => 404,
+            ErrorCode::Unsupported => 405,
+            ErrorCode::PayloadTooLarge => 413,
+            ErrorCode::Backpressure => 429,
+            ErrorCode::DeadlineExceeded => 504,
+            ErrorCode::Internal => 500,
+        }
+    }
+}
+
+/// A protocol-level error: code + human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ApiError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::BadRequest, message)
+    }
+
+    /// Map a serving-system error onto the protocol.
+    pub fn from_runtime(e: &RuntimeError) -> Self {
+        let code = match e {
+            RuntimeError::UnknownModel(_) => ErrorCode::ModelNotFound,
+            RuntimeError::Backpressure(_) => ErrorCode::Backpressure,
+            RuntimeError::DeadlineExceeded { .. } => ErrorCode::DeadlineExceeded,
+            RuntimeError::BatchTooLarge { .. } | RuntimeError::InputMismatch(_) => {
+                ErrorCode::BadRequest
+            }
+            RuntimeError::Io { .. } | RuntimeError::Manifest(_) | RuntimeError::Xla(_) => {
+                ErrorCode::Internal
+            }
+        };
+        ApiError { code, message: e.to_string() }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![(
+            "error",
+            json::obj(vec![
+                ("code", json::s(self.code.as_str())),
+                ("message", json::s(&self.message)),
+            ]),
+        )])
+    }
+
+    pub fn to_response(&self) -> HttpResponse {
+        HttpResponse::json(self.code.http_status(), self.to_json().to_json())
+    }
+}
+
+/// Which serving path the client asked for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PathChoice {
+    /// Defer to the shared router (arrival window + adaptive threshold).
+    #[default]
+    Auto,
+    Pinned(PathKind),
+}
+
+impl PathChoice {
+    pub fn parse(s: &str) -> Option<PathChoice> {
+        if s == "auto" {
+            return Some(PathChoice::Auto);
+        }
+        PathKind::parse(s).map(PathChoice::Pinned)
+    }
+
+    /// The `prefer` argument for `ServingSystem::submit_opts`.
+    pub fn prefer(&self) -> Option<PathKind> {
+        match self {
+            PathChoice::Auto => None,
+            PathChoice::Pinned(p) => Some(*p),
+        }
+    }
+}
+
+/// Parsed `/v2/models/{name}/infer` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Model name (from the route path, not the body).
+    pub model: String,
+    /// Payload seeds, one per batch item, in order.
+    pub seeds: Vec<u64>,
+    /// Optional client correlation id, echoed back verbatim.
+    pub client_id: Option<String>,
+    pub path: PathChoice,
+    /// Relative deadline; None = no deadline.
+    pub timeout_ms: Option<u64>,
+    pub priority: Priority,
+}
+
+/// Parse a JSON number as an exact non-negative integer seed (shared with
+/// the legacy `/infer` shim, which fixes the old silent `as u64` wrap of
+/// negative seeds).
+pub fn parse_seed(v: &Value) -> Result<u64, ApiError> {
+    let n = v
+        .as_f64()
+        .map_err(|_| ApiError::bad_request("seed must be a number"))?;
+    if !n.is_finite() || n.fract() != 0.0 {
+        return Err(ApiError::bad_request(format!("seed must be an integer, got {n}")));
+    }
+    if n < 0.0 {
+        return Err(ApiError::bad_request(format!(
+            "seed must be non-negative, got {n}"
+        )));
+    }
+    if n >= MAX_EXACT_INT {
+        return Err(ApiError::bad_request(format!("seed {n} exceeds 2^53")));
+    }
+    Ok(n as u64)
+}
+
+/// Parse a JSON number as a non-negative integer (timeout_ms).
+fn parse_u64(v: &Value, what: &str) -> Result<u64, ApiError> {
+    let n = v
+        .as_f64()
+        .map_err(|_| ApiError::bad_request(format!("{what} must be a number")))?;
+    if !n.is_finite() || n.fract() != 0.0 || n < 0.0 || n >= MAX_EXACT_INT {
+        return Err(ApiError::bad_request(format!(
+            "{what} must be a non-negative integer, got {n}"
+        )));
+    }
+    Ok(n as u64)
+}
+
+impl InferRequest {
+    /// Parse a v2 infer body. Accepted shapes:
+    ///
+    /// ```json
+    /// {"inputs": [{"seed": 7}, {"seed": 9}],
+    ///  "id": "client-42",
+    ///  "parameters": {"path": "auto", "timeout_ms": 250, "priority": "high"}}
+    /// ```
+    ///
+    /// plus the single-item shorthand `{"seed": 7, ...}` the legacy
+    /// `/infer` shim also uses. Bare numbers are accepted inside
+    /// `inputs` (`"inputs": [7, 9]`).
+    pub fn from_json(model: &str, v: &Value) -> Result<InferRequest, ApiError> {
+        let obj = v
+            .as_obj()
+            .map_err(|_| ApiError::bad_request("body must be a JSON object"))?;
+
+        let mut seeds = Vec::new();
+        if let Some(inputs) = obj.get("inputs") {
+            let arr = inputs
+                .as_arr()
+                .map_err(|_| ApiError::bad_request("\"inputs\" must be an array"))?;
+            if arr.is_empty() {
+                return Err(ApiError::bad_request("\"inputs\" must not be empty"));
+            }
+            if arr.len() > MAX_BATCH_ITEMS {
+                return Err(ApiError::bad_request(format!(
+                    "batch of {} items exceeds the {MAX_BATCH_ITEMS}-item cap",
+                    arr.len()
+                )));
+            }
+            for item in arr {
+                let seed_val = match item {
+                    Value::Obj(_) => item
+                        .get("seed")
+                        .map_err(|_| ApiError::bad_request("each input needs a \"seed\""))?,
+                    _ => item,
+                };
+                seeds.push(parse_seed(seed_val)?);
+            }
+        } else if let Some(seed) = obj.get("seed") {
+            seeds.push(parse_seed(seed)?);
+        } else {
+            return Err(ApiError::bad_request("body needs \"inputs\" or \"seed\""));
+        }
+
+        let client_id = match obj.get("id") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(_) => return Err(ApiError::bad_request("\"id\" must be a string")),
+            None => None,
+        };
+
+        // Parameters live in "parameters". Only "path" is also accepted
+        // at the top level (legacy-shim parity) — timeout_ms/priority are
+        // parameters-only, so no undocumented API surface is minted.
+        let params = match obj.get("parameters") {
+            Some(p) => Some(p.as_obj().map_err(|_| {
+                ApiError::bad_request("\"parameters\" must be an object")
+            })?),
+            None => None,
+        };
+        let param = |key: &str| params.and_then(|p| p.get(key));
+
+        let path = match param("path").or_else(|| obj.get("path")) {
+            Some(Value::Str(s)) => PathChoice::parse(s)
+                .ok_or_else(|| ApiError::bad_request(format!("unknown path {s:?}")))?,
+            Some(_) => return Err(ApiError::bad_request("\"path\" must be a string")),
+            None => PathChoice::Auto,
+        };
+        let timeout_ms = match param("timeout_ms") {
+            Some(v) => Some(parse_u64(v, "timeout_ms")?),
+            None => None,
+        };
+        let priority = match param("priority") {
+            Some(Value::Str(s)) => Priority::parse(s)
+                .ok_or_else(|| ApiError::bad_request(format!("unknown priority {s:?}")))?,
+            Some(_) => return Err(ApiError::bad_request("\"priority\" must be a string")),
+            None => Priority::Normal,
+        };
+
+        Ok(InferRequest {
+            model: model.to_string(),
+            seeds,
+            client_id,
+            path,
+            timeout_ms,
+            priority,
+        })
+    }
+}
+
+/// Server-assigned monotonic request id (never the payload seed — ids
+/// from concurrent clients must not collide).
+pub fn next_request_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One item's serialised outcome inside a batch response.
+pub fn item_json(seed: u64, r: &InferResult) -> Value {
+    let mut fields = vec![
+        ("seed", json::num(seed as f64)),
+        ("predicted", json::num(r.predicted as f64)),
+        ("confidence", json::num(r.confidence as f64)),
+        ("entropy", json::num(r.entropy as f64)),
+        ("latency_secs", json::num(r.latency_secs)),
+        ("joules", json::num(r.joules)),
+        ("path", json::s(r.path.as_str())),
+    ];
+    if r.j.is_finite() && r.tau.is_finite() {
+        fields.push(("j", json::num(r.j)));
+        fields.push(("tau", json::num(r.tau)));
+    }
+    json::obj(fields)
+}
+
+/// The v2 infer response: per-item outputs in request order under one
+/// server-assigned id.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub request_id: u64,
+    pub model: String,
+    pub client_id: Option<String>,
+    pub outputs: Vec<Value>,
+}
+
+impl InferResponse {
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("request_id", json::num(self.request_id as f64)),
+            ("model_name", json::s(&self.model)),
+            ("outputs", Value::Arr(self.outputs.clone())),
+        ];
+        if let Some(id) = &self.client_id {
+            fields.push(("id", json::s(id)));
+        }
+        json::obj(fields)
+    }
+
+    pub fn to_response(&self) -> HttpResponse {
+        HttpResponse::ok_json(self.to_json().to_json())
+    }
+}
+
+/// `/v2/models/{name}` metadata: manifest + serving config + live queue
+/// state (the batching decisions arXiv 2402.07585 calls the green-serving
+/// levers, made inspectable).
+pub fn model_metadata_json(
+    entry: &RepoEntry,
+    queue_depth: usize,
+    queue_capacity: usize,
+    batched_path: bool,
+) -> Value {
+    let m = &entry.manifest;
+    let buckets: Vec<Value> = m.batch_buckets.iter().map(|&b| json::num(b as f64)).collect();
+    let platform = entry
+        .config
+        .as_ref()
+        .map(|c| c.platform.clone())
+        .unwrap_or_else(|| "greenflow_pjrt".to_string());
+    let max_batch = entry
+        .config
+        .as_ref()
+        .map(|c| c.max_batch_size)
+        .unwrap_or_else(|| m.max_bucket());
+    let dynamic_batching = match entry.config.as_ref().and_then(|c| c.dynamic_batching.as_ref()) {
+        Some(d) => json::obj(vec![
+            (
+                "preferred_batch_sizes",
+                Value::Arr(d.preferred_batch_sizes.iter().map(|&b| json::num(b as f64)).collect()),
+            ),
+            ("max_queue_delay_us", json::num(d.max_queue_delay_us as f64)),
+        ]),
+        None => Value::Null,
+    };
+    let instances = entry.config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
+    json::obj(vec![
+        ("name", json::s(&m.name)),
+        ("platform", json::s(&platform)),
+        ("family", json::s(&m.family)),
+        ("classes", json::num(m.classes as f64)),
+        (
+            "input_kind",
+            json::s(match m.input_kind {
+                crate::runtime::InputKind::Tokens => "tokens",
+                crate::runtime::InputKind::Dense => "dense",
+            }),
+        ),
+        ("batch_buckets", Value::Arr(buckets)),
+        ("max_batch_size", json::num(max_batch as f64)),
+        ("dynamic_batching", dynamic_batching),
+        ("instances", json::num(instances as f64)),
+        ("batched_path", Value::Bool(batched_path)),
+        (
+            "queue",
+            json::obj(vec![
+                ("depth", json::num(queue_depth as f64)),
+                ("capacity", json::num(queue_capacity as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_map_to_http() {
+        assert_eq!(ErrorCode::Backpressure.http_status(), 429);
+        assert_eq!(ErrorCode::ModelNotFound.http_status(), 404);
+        assert_eq!(ErrorCode::DeadlineExceeded.http_status(), 504);
+        assert_eq!(ErrorCode::PayloadTooLarge.http_status(), 413);
+        assert_eq!(ErrorCode::BadRequest.as_str(), "BAD_REQUEST");
+    }
+
+    #[test]
+    fn runtime_errors_map_to_codes() {
+        let e = ApiError::from_runtime(&RuntimeError::Backpressure("m".into()));
+        assert_eq!(e.code, ErrorCode::Backpressure);
+        let e = ApiError::from_runtime(&RuntimeError::UnknownModel("m".into()));
+        assert_eq!(e.code, ErrorCode::ModelNotFound);
+        let e = ApiError::from_runtime(&RuntimeError::DeadlineExceeded {
+            elapsed_ms: 5,
+            timeout_ms: 1,
+        });
+        assert_eq!(e.code, ErrorCode::DeadlineExceeded);
+        let e = ApiError::from_runtime(&RuntimeError::Xla("boom".into()));
+        assert_eq!(e.code, ErrorCode::Internal);
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let resp = ApiError::new(ErrorCode::Backpressure, "queue full").to_response();
+        assert_eq!(resp.status, 429);
+        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("error").unwrap().get("code").unwrap().as_str().unwrap(), "BACKPRESSURE");
+    }
+
+    #[test]
+    fn parses_batch_body() {
+        let v = json::parse(
+            r#"{"inputs": [{"seed": 7}, {"seed": 9}, 11],
+                "id": "c-1",
+                "parameters": {"path": "batched", "timeout_ms": 250, "priority": "high"}}"#,
+        )
+        .unwrap();
+        let r = InferRequest::from_json("distilbert_mini", &v).unwrap();
+        assert_eq!(r.seeds, vec![7, 9, 11]);
+        assert_eq!(r.client_id.as_deref(), Some("c-1"));
+        assert_eq!(r.path, PathChoice::Pinned(PathKind::Batched));
+        assert_eq!(r.timeout_ms, Some(250));
+        assert_eq!(r.priority, Priority::High);
+    }
+
+    #[test]
+    fn parses_single_item_shorthand() {
+        let v = json::parse(r#"{"seed": 42, "path": "direct"}"#).unwrap();
+        let r = InferRequest::from_json("m", &v).unwrap();
+        assert_eq!(r.seeds, vec![42]);
+        assert_eq!(r.path, PathChoice::Pinned(PathKind::Direct));
+        assert_eq!(r.timeout_ms, None);
+        assert_eq!(r.priority, Priority::Normal);
+    }
+
+    #[test]
+    fn rejects_negative_and_fractional_seeds() {
+        for body in [
+            r#"{"seed": -3}"#,
+            r#"{"seed": 1.5}"#,
+            r#"{"seed": "x"}"#,
+            r#"{"inputs": [{"seed": -1}]}"#,
+            r#"{"inputs": [1e300]}"#,
+        ] {
+            let v = json::parse(body).unwrap();
+            let e = InferRequest::from_json("m", &v).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{body}");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_oversized_and_malformed_batches() {
+        let v = json::parse(r#"{"inputs": []}"#).unwrap();
+        assert!(InferRequest::from_json("m", &v).is_err());
+
+        let big: Vec<String> = (0..(MAX_BATCH_ITEMS + 1)).map(|i| i.to_string()).collect();
+        let v = json::parse(&format!("{{\"inputs\": [{}]}}", big.join(","))).unwrap();
+        assert!(InferRequest::from_json("m", &v).is_err());
+
+        let v = json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(InferRequest::from_json("m", &v).is_err());
+
+        let v = json::parse(r#"{"seed": 1, "parameters": {"priority": "urgent"}}"#).unwrap();
+        assert!(InferRequest::from_json("m", &v).is_err());
+
+        let v = json::parse(r#"{"seed": 1, "parameters": {"path": "cache"}}"#).unwrap();
+        assert!(InferRequest::from_json("m", &v).is_err());
+    }
+
+    #[test]
+    fn timeout_and_priority_are_parameters_only() {
+        // Top-level "timeout_ms"/"priority" are not part of the protocol
+        // and must be ignored, not honored.
+        let v = json::parse(r#"{"seed": 1, "timeout_ms": 0, "priority": "low"}"#).unwrap();
+        let r = InferRequest::from_json("m", &v).unwrap();
+        assert_eq!(r.timeout_ms, None);
+        assert_eq!(r.priority, Priority::Normal);
+
+        // A non-object "parameters" is a 400, not silently dropped.
+        let v = json::parse(r#"{"seed": 1, "parameters": 7}"#).unwrap();
+        assert!(InferRequest::from_json("m", &v).is_err());
+    }
+
+    #[test]
+    fn request_ids_are_monotonic_and_unique() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn infer_response_serialises_outputs_in_order() {
+        let resp = InferResponse {
+            request_id: 7,
+            model: "m".into(),
+            client_id: Some("c".into()),
+            outputs: vec![
+                json::obj(vec![("seed", json::num(1.0))]),
+                json::obj(vec![("seed", json::num(2.0))]),
+            ],
+        };
+        let v = resp.to_json();
+        assert_eq!(v.get("request_id").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "c");
+        let outs = v.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].get("seed").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(outs[1].get("seed").unwrap().as_i64().unwrap(), 2);
+    }
+}

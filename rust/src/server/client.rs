@@ -1,0 +1,224 @@
+//! Minimal in-process HTTP/1.1 client with keep-alive.
+//!
+//! Exists so the CLI's `--serve-bench` round-trip mode and the
+//! integration tests can drive the gateway over a real socket —
+//! including connection reuse — without hand-rolling request strings
+//! everywhere. One connection per client; requests are sequential.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::json::{self, Value};
+
+/// A parsed HTTP response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn body_str(&self) -> Result<&str, String> {
+        std::str::from_utf8(&self.body).map_err(|e| e.to_string())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Value, String> {
+        json::parse(self.body_str()?).map_err(|e| e.to_string())
+    }
+
+    /// Case-insensitive header lookup (names are lowercased at parse).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// Whether the server will keep the connection open.
+    pub fn keep_alive(&self) -> bool {
+        self.header("connection").map(|v| v.eq_ignore_ascii_case("keep-alive")).unwrap_or(false)
+    }
+}
+
+/// A keep-alive HTTP/1.1 client over one TCP connection.
+#[derive(Debug)]
+pub struct HttpClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect to a server (e.g. `Gateway::addr()`).
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpClient { stream, reader })
+    }
+
+    /// `GET path` on the shared connection.
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse, String> {
+        self.request("GET", path, &[], None)
+    }
+
+    /// `POST path` with a JSON body on the shared connection.
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<ClientResponse, String> {
+        self.request(
+            "POST",
+            path,
+            &[("Content-Type", "application/json")],
+            Some(body.as_bytes()),
+        )
+    }
+
+    /// Issue one request and block for its response. The connection is
+    /// reused across calls (keep-alive) until the server closes it.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> Result<ClientResponse, String> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: localhost\r\n");
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", body.map_or(0, |b| b.len())));
+        self.stream.write_all(head.as_bytes()).map_err(|e| e.to_string())?;
+        if let Some(b) = body {
+            self.stream.write_all(b).map_err(|e| e.to_string())?;
+        }
+        self.stream.flush().map_err(|e| e.to_string())?;
+        self.read_response()
+    }
+
+    fn read_line(&mut self) -> Result<String, String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("connection closed by server".into());
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    fn read_response(&mut self) -> Result<ClientResponse, String> {
+        // Status line: HTTP/1.1 <code> <reason...>
+        let status_line = self.read_line()?;
+        let mut parts = status_line.split_whitespace();
+        let version = parts.next().ok_or("empty status line")?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(format!("bad status line {status_line:?}"));
+        }
+        let status: u16 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("bad status in {status_line:?}"))?;
+
+        let mut headers = BTreeMap::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+
+        let len: usize = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .ok_or("response without Content-Length")?;
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            self.reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+        }
+        Ok(ClientResponse { status, headers, body })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Serve `responses` verbatim on one accepted connection, reading one
+    /// request (headers + Content-Length body) before each write.
+    fn canned_server(responses: Vec<String>) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for resp in responses {
+                // Drain one request.
+                let mut content_length = 0usize;
+                loop {
+                    let mut line = String::new();
+                    if reader.read_line(&mut line).unwrap() == 0 {
+                        return;
+                    }
+                    let line = line.trim_end();
+                    if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+                        content_length = v.trim().parse().unwrap();
+                    }
+                    if line.is_empty() {
+                        break;
+                    }
+                }
+                let mut body = vec![0u8; content_length];
+                if content_length > 0 {
+                    reader.read_exact(&mut body).unwrap();
+                }
+                stream.write_all(resp.as_bytes()).unwrap();
+            }
+        });
+        addr
+    }
+
+    fn resp(status: &str, keep_alive: bool, body: &str) -> String {
+        format!(
+            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+            body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )
+    }
+
+    #[test]
+    fn get_parses_status_headers_and_body() {
+        let addr = canned_server(vec![resp("200 OK", false, "{\"a\":1}")]);
+        let mut c = HttpClient::connect(addr).unwrap();
+        let r = c.get("/x").unwrap();
+        assert_eq!(r.status, 200);
+        assert!(!r.keep_alive());
+        assert_eq!(r.json().unwrap().get("a").unwrap().as_i64().unwrap(), 1);
+    }
+
+    #[test]
+    fn keep_alive_reuses_one_connection() {
+        let addr = canned_server(vec![
+            resp("200 OK", true, "{\"n\":1}"),
+            resp("429 Too Many Requests", true, "{\"n\":2}"),
+            resp("200 OK", false, "{\"n\":3}"),
+        ]);
+        let mut c = HttpClient::connect(addr).unwrap();
+        for (expect_status, n) in [(200u16, 1i64), (429, 2), (200, 3)] {
+            let r = c.post_json("/x", "{\"seed\": 1}").unwrap();
+            assert_eq!(r.status, expect_status);
+            assert_eq!(r.json().unwrap().get("n").unwrap().as_i64().unwrap(), n);
+        }
+        // Server sent Connection: close on the last response and stopped.
+        assert!(c.get("/x").is_err());
+    }
+
+    #[test]
+    fn server_vanishing_is_an_error_not_a_hang() {
+        let addr = canned_server(vec![]);
+        let mut c = HttpClient::connect(addr).unwrap();
+        assert!(c.get("/x").is_err());
+    }
+}

@@ -1,30 +1,91 @@
 //! The inference gateway: routes HTTP requests onto the serving system.
+//!
+//! Serves the **v2 protocol** (KServe/Triton-style, typed in
+//! [`super::api`]) plus thin legacy shims:
+//!
+//! * `GET  /v2`                        — server metadata
+//! * `GET  /v2/health/live|ready`      — liveness / readiness
+//! * `GET  /v2/models`                 — model index
+//! * `GET  /v2/models/{name}`         — model metadata + live queue state
+//! * `POST /v2/models/{name}/infer`   — single or batch inference with
+//!   `timeout_ms` deadlines and `priority`
+//! * `GET  /v2/control/loops`          — control-plane introspection
+//! * `GET  /v2/admission/stats`        — admission-controller stats
+//! * legacy: `POST /infer`, `GET /health`, `GET /models`, `GET /metrics`
+//!
+//! Connections are HTTP/1.1 **keep-alive**: one thread runs a request
+//! loop per connection until the peer closes, sends
+//! `Connection: close`, or idles past [`KEEP_ALIVE_IDLE`]. Live
+//! connections are capped at `pool_size × 16`; over the cap, new
+//! connections get an immediate 503.
 
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::io::{BufReader, Read};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::json::{self, Value};
-use crate::pipeline::system::ServingSystem;
+use crate::pipeline::system::{InferResult, ServingSystem, SubmitOptions};
 use crate::router::PathKind;
 use crate::telemetry::MetricsRegistry;
 use crate::util::Clock;
 use crate::workload::stream::Request;
 
+use super::api::{self, ApiError, ErrorCode, InferRequest, InferResponse, PathChoice};
 use super::http::{HttpRequest, HttpResponse};
-use super::threadpool::ThreadPool;
+
+/// Idle keep-alive connections are closed after this long without a new
+/// request, freeing their thread.
+pub const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(5);
+
+/// Hard cap on requests served per connection (rotation guard).
+const MAX_REQUESTS_PER_CONNECTION: usize = 100_000;
+
+/// Concurrent connections per unit of `pool_size` (keep-alive holds a
+/// thread per connection, so the cap must be well above the old
+/// one-request-per-thread pool size).
+const CONNECTIONS_PER_POOL_UNIT: usize = 16;
+
+/// Live-connection registry: per-connection socket handles (so
+/// `shutdown` can force blocked reads to return) plus the live count
+/// the acceptor enforces the connection cap against.
+#[derive(Default)]
+struct ConnTable {
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    active: AtomicUsize,
+}
+
+/// Deregisters a connection when its thread exits, however it exits
+/// (panic included).
+struct ConnGuard {
+    table: Arc<ConnTable>,
+    id: u64,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.table.conns.lock().unwrap().remove(&self.id);
+        self.table.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// A running HTTP gateway bound to a local port.
 pub struct Gateway {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    table: Arc<ConnTable>,
 }
 
 impl Gateway {
-    /// Bind `127.0.0.1:port` (port 0 = ephemeral) and serve `system` on
-    /// `pool_size` connection-handler threads.
+    /// Bind `127.0.0.1:port` (port 0 = ephemeral) and serve `system`.
+    /// Keep-alive holds one thread per live connection, so `pool_size`
+    /// scales the concurrent-connection cap (`pool_size × 16`); over the
+    /// cap new connections get an immediate 503 — a fixed pool would let
+    /// `pool_size` long-lived clients starve everyone else.
     pub fn start(
         system: Arc<ServingSystem>,
         port: u16,
@@ -32,40 +93,90 @@ impl Gateway {
     ) -> std::io::Result<Gateway> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let table = Arc::new(ConnTable::default());
+        let table2 = table.clone();
+        let max_connections = pool_size.max(1) * CONNECTIONS_PER_POOL_UNIT;
 
+        // Blocking accept; shutdown() wakes it with a self-connect. No
+        // polling sleep on the accept path (the old 2 ms WouldBlock nap
+        // capped accept throughput at ~500 conn/s).
         let acceptor = std::thread::Builder::new()
             .name("gf-gateway".to_string())
             .spawn(move || {
-                let pool = ThreadPool::new(pool_size);
-                while !stop2.load(Ordering::SeqCst) {
+                let mut next_conn_id = 0u64;
+                loop {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            if stop2.load(Ordering::SeqCst) {
+                                break; // the shutdown self-connect
+                            }
+                            if table2.active.load(Ordering::SeqCst) >= max_connections {
+                                MetricsRegistry::global()
+                                    .counter("gf_gateway_conn_limit_total")
+                                    .inc();
+                                let _ = HttpResponse::error(503, "connection limit reached")
+                                    .write_to_with(&stream, false);
+                                continue; // drop closes it
+                            }
+                            let id = next_conn_id;
+                            next_conn_id += 1;
+                            table2.active.fetch_add(1, Ordering::SeqCst);
+                            if let Ok(clone) = stream.try_clone() {
+                                table2.conns.lock().unwrap().insert(id, clone);
+                            }
+                            let guard = ConnGuard { table: table2.clone(), id };
                             let system = system.clone();
-                            pool.execute(move || handle_connection(stream, &system));
+                            // If the spawn fails the closure (and guard)
+                            // is dropped with the error, undoing the count.
+                            let _ = std::thread::Builder::new()
+                                .name("gf-http-conn".to_string())
+                                .spawn(move || {
+                                    let _guard = guard;
+                                    serve_connection(stream, |req| dispatch(req, &system));
+                                });
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        Err(_) => {
+                            MetricsRegistry::global()
+                                .counter("gf_gateway_accept_errors")
+                                .inc();
+                            if stop2.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            // Transient accept errors (EMFILE, aborted
+                            // handshakes) must not spin the core.
+                            std::thread::sleep(Duration::from_millis(20));
                         }
-                        Err(_) => break,
                     }
                 }
             })
             .expect("spawn gateway");
 
-        Ok(Gateway { addr, stop, acceptor: Some(acceptor) })
+        Ok(Gateway { addr, stop, acceptor: Some(acceptor), table })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// Stop accepting, then quiesce: force every live connection's
+    /// blocked read to return (socket shutdown) and wait — bounded — for
+    /// the handler threads to exit, so callers can assume no request is
+    /// still being served afterwards.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept so the acceptor observes `stop`.
+        let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
+        }
+        for conn in self.table.conns.lock().unwrap().values() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while self.table.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 }
@@ -76,144 +187,459 @@ impl Drop for Gateway {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, system: &ServingSystem) {
-    let resp = match HttpRequest::parse(&stream) {
-        Ok(req) => dispatch(&req, system),
-        Err(e) => HttpResponse::error(400, &e),
-    };
-    let _ = resp.write_to(&mut stream);
+/// Serve one connection with HTTP/1.1 keep-alive: parse → handle → write,
+/// looping until close. Generic over the handler so tests (and future
+/// servers) can drive the connection loop without a `ServingSystem`.
+pub fn serve_connection<H>(mut stream: TcpStream, mut handler: H)
+where
+    H: FnMut(&HttpRequest) -> HttpResponse,
+{
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let reg = MetricsRegistry::global();
+    for served in 0..MAX_REQUESTS_PER_CONNECTION {
+        match HttpRequest::read_from(&mut reader) {
+            Ok(req) => {
+                reg.counter("gf_http_requests_total").inc();
+                if served > 0 {
+                    reg.counter("gf_http_keepalive_reuse_total").inc();
+                }
+                // Only methods we answer with deterministic framing stay
+                // keep-alive. A HEAD client must not read a body (RFC
+                // 9110), so our bodied 405 would desync every later
+                // exchange on the socket — answer it, then close.
+                let keep = req.keep_alive()
+                    && served + 1 < MAX_REQUESTS_PER_CONNECTION
+                    && matches!(req.method.as_str(), "GET" | "POST");
+                let resp = handler(&req);
+                if resp.write_to_with(&mut stream, keep).is_err() || !keep {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Clean close (or idle timeout) gets no response; parse
+                // failures get their status (400/413/417/431) and a
+                // close (to_response is None only for ConnectionClosed).
+                if let Some(resp) = e.to_response() {
+                    let _ = resp.write_to_with(&mut stream, false);
+                    // Drain what the peer is still sending (bounded)
+                    // before closing: a close with unread bytes queued
+                    // RSTs the socket, which can discard the error
+                    // response we just wrote (a 413 mid-upload would
+                    // read as "connection reset", not a clean status).
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+                    let _ = stream.shutdown(Shutdown::Write);
+                    let mut sink = [0u8; 8192];
+                    let t0 = Instant::now();
+                    while t0.elapsed() < Duration::from_millis(750) {
+                        match reader.read(&mut sink) {
+                            Ok(0) | Err(_) => break,
+                            Ok(_) => {}
+                        }
+                    }
+                }
+                break;
+            }
+        }
+    }
 }
 
-/// Route one parsed request.
+/// Route one parsed request (the handler behind every connection).
 pub fn dispatch(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => HttpResponse::ok_json(
+    let resp = route(req, system);
+    // Echo the client's correlation id onto every response.
+    match req.header("x-request-id") {
+        Some(id) => resp.with_header("X-Request-Id", id),
+        None => resp,
+    }
+}
+
+fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        // ---------------------------------------------------------- v2
+        ("GET", ["v2"]) => HttpResponse::ok_json(
+            json::obj(vec![
+                ("name", json::s("greenflow")),
+                ("version", json::s(crate::VERSION)),
+                (
+                    "extensions",
+                    Value::Arr(vec![
+                        json::s("batch_infer"),
+                        json::s("deadlines"),
+                        json::s("priority"),
+                        json::s("control_introspection"),
+                    ]),
+                ),
+            ])
+            .to_json(),
+        ),
+        ("GET", ["v2", "health", "live"]) => {
+            HttpResponse::ok_json(json::obj(vec![("live", Value::Bool(true))]).to_json())
+        }
+        ("GET", ["v2", "health", "ready"]) => {
+            let models = system.repository().model_names().len();
+            HttpResponse::ok_json(
+                json::obj(vec![
+                    ("ready", Value::Bool(models > 0)),
+                    ("models", json::num(models as f64)),
+                ])
+                .to_json(),
+            )
+        }
+        ("GET", ["v2", "models"]) => {
+            let names: Vec<Value> = system
+                .repository()
+                .model_names()
+                .into_iter()
+                .map(Value::Str)
+                .collect();
+            HttpResponse::ok_json(json::obj(vec![("models", Value::Arr(names))]).to_json())
+        }
+        ("GET", ["v2", "models", name]) => match system.repository().get(name) {
+            Ok(entry) => HttpResponse::ok_json(
+                api::model_metadata_json(
+                    entry,
+                    system.queue_depth(name),
+                    system.queue_capacity(),
+                    system.has_batched_path(name),
+                )
+                .to_json(),
+            ),
+            Err(e) => ApiError::from_runtime(&e).to_response(),
+        },
+        ("POST", ["v2", "models", name, "infer"]) => match v2_infer(name, req, system) {
+            Ok(resp) => resp,
+            Err(e) => e.to_response(),
+        },
+        ("GET", ["v2", "control", "loops"]) => control_loops(system),
+        ("GET", ["v2", "admission", "stats"]) => admission_stats(system),
+
+        // ------------------------------------------------------ legacy
+        ("GET", ["health"]) => HttpResponse::ok_json(
             json::obj(vec![
                 ("status", json::s("ok")),
                 ("version", json::s(crate::VERSION)),
             ])
             .to_json(),
         ),
-        ("GET", "/metrics") => {
+        ("GET", ["metrics"]) => {
             HttpResponse::ok_text(MetricsRegistry::global().render_prometheus())
         }
-        ("GET", "/models") => {
+        ("GET", ["models"]) => {
             let names = system
                 .repository()
                 .model_names()
                 .into_iter()
-                .map(|n| Value::Str(n))
+                .map(Value::Str)
                 .collect();
             HttpResponse::ok_json(Value::Arr(names).to_json())
         }
-        ("POST", "/infer") => match infer_endpoint(req, system) {
+        ("POST", ["infer"]) => match legacy_infer(req, system) {
             Ok(resp) => resp,
-            Err(msg) => HttpResponse::error(400, &msg),
+            Err(e) => e.to_response(),
         },
-        ("POST", _) | ("GET", _) => HttpResponse::error(404, "not found"),
-        _ => HttpResponse::error(405, "method not allowed"),
+
+        ("GET", _) | ("POST", _) => {
+            ApiError::new(ErrorCode::NotFound, format!("no route {}", req.path)).to_response()
+        }
+        _ => ApiError::new(
+            ErrorCode::Unsupported,
+            format!("method {} not allowed", req.method),
+        )
+        .to_response(),
     }
 }
 
-fn infer_endpoint(req: &HttpRequest, system: &ServingSystem) -> Result<HttpResponse, String> {
-    let body = json::parse(req.body_str()?).map_err(|e| e.to_string())?;
-    let model = body.get("model").and_then(|v| v.as_str().map(|s| s.to_string())).map_err(|e| e.to_string())?;
-    let seed = body.get("seed").and_then(|v| v.as_i64()).map_err(|e| e.to_string())? as u64;
-    // "auto" defers the path choice to the shared router (arrival-rate
-    // window + adaptive QPS threshold).
-    let path = match body.opt("path").ok().flatten().and_then(|v| v.as_str().ok()) {
-        Some("batched") => Some(PathKind::Batched),
-        Some("auto") => None,
-        _ => Some(PathKind::Direct),
-    };
-
-    let request = Request {
-        id: seed,
-        model,
-        arrival: system.clock().now(),
-        seed,
-        label: 0,
-        difficulty: 0.5,
-        confidence: 0.75,
-    };
+/// Run a typed infer request through the serving system. Items execute
+/// sequentially in body order; the first failure aborts the batch and
+/// becomes the response status (all-or-error semantics).
+fn run_infer(
+    ir: &InferRequest,
+    system: &ServingSystem,
+) -> Result<(u64, Vec<(u64, InferResult)>), ApiError> {
+    // Model existence first: MODEL_NOT_FOUND beats any submit error.
+    system.repository().get(&ir.model).map_err(|e| ApiError::from_runtime(&e))?;
     let reg = MetricsRegistry::global();
-    reg.counter("gf_http_infer_total").inc();
-
-    let result = match path {
-        Some(p) => system.submit(&request, p),
-        None => system.submit_auto(&request),
+    let request_id = api::next_request_id();
+    let now = system.clock().now();
+    // One deadline for the whole batch: it bounds the client's wait, not
+    // each item's share of it.
+    let opts = match ir.timeout_ms {
+        Some(ms) => SubmitOptions::with_timeout(now, ms, ir.priority),
+        None => SubmitOptions { priority: ir.priority, ..SubmitOptions::default() },
     };
-    match result {
-        Ok(r) => {
-            reg.gauge("gf_last_latency_secs").set(r.latency_secs);
-            Ok(HttpResponse::ok_json(
-                json::obj(vec![
-                    ("request_id", json::num(r.request_id as f64)),
-                    ("predicted", json::num(r.predicted as f64)),
-                    ("confidence", json::num(r.confidence as f64)),
-                    ("entropy", json::num(r.entropy as f64)),
-                    ("latency_secs", json::num(r.latency_secs)),
-                    ("joules", json::num(r.joules)),
-                    ("path", json::s(r.path.as_str())),
-                ])
-                .to_json(),
-            ))
-        }
-        Err(e) => {
-            let msg = e.to_string();
-            if msg.contains("backpressure") {
-                Ok(HttpResponse::error(429, &msg))
-            } else {
-                Ok(HttpResponse::error(400, &msg))
+    let mut results = Vec::with_capacity(ir.seeds.len());
+    for &seed in &ir.seeds {
+        reg.counter("gf_http_infer_total").inc();
+        let request = Request::external(
+            api::next_request_id(),
+            ir.model.clone(),
+            seed,
+            system.clock().now(),
+        );
+        match system.submit_opts(&request, ir.path.prefer(), &opts) {
+            Ok(r) => {
+                reg.gauge("gf_last_latency_secs").set(r.latency_secs);
+                results.push((seed, r));
+            }
+            Err(e) => {
+                let api_err = ApiError::from_runtime(&e);
+                match api_err.code {
+                    ErrorCode::Backpressure => {
+                        reg.counter("gf_http_backpressure_total").inc()
+                    }
+                    ErrorCode::DeadlineExceeded => {
+                        reg.counter("gf_http_deadline_exceeded_total").inc()
+                    }
+                    _ => {}
+                }
+                return Err(api_err);
             }
         }
     }
+    Ok((request_id, results))
+}
+
+fn v2_infer(
+    model: &str,
+    req: &HttpRequest,
+    system: &ServingSystem,
+) -> Result<HttpResponse, ApiError> {
+    let body = req.body_str().map_err(ApiError::bad_request)?;
+    let v = json::parse(body).map_err(|e| ApiError::bad_request(e.to_string()))?;
+    let ir = InferRequest::from_json(model, &v)?;
+    let (request_id, results) = run_infer(&ir, system)?;
+    let outputs = results.iter().map(|(seed, r)| api::item_json(*seed, r)).collect();
+    Ok(InferResponse {
+        request_id,
+        model: ir.model,
+        client_id: ir.client_id,
+        outputs,
+    }
+    .to_response())
+}
+
+/// Legacy `POST /infer` shim: `{"model": ..., "seed": N, "path": ...}` →
+/// one-item v2 infer, re-serialised in the old flat shape. Unknown path
+/// strings still mean "direct" (historic leniency); negative or
+/// fractional seeds are now 400s instead of silently wrapping.
+fn legacy_infer(req: &HttpRequest, system: &ServingSystem) -> Result<HttpResponse, ApiError> {
+    let body = req.body_str().map_err(ApiError::bad_request)?;
+    let v = json::parse(body).map_err(|e| ApiError::bad_request(e.to_string()))?;
+    let model = v
+        .get("model")
+        .ok()
+        .and_then(|m| m.as_str().ok())
+        .ok_or_else(|| ApiError::bad_request("body needs a \"model\" string"))?
+        .to_string();
+    let seed = api::parse_seed(
+        v.get("seed").map_err(|_| ApiError::bad_request("body needs a \"seed\""))?,
+    )?;
+    let path = match v.opt("path").ok().flatten().and_then(|p| p.as_str().ok()) {
+        Some("batched") => PathChoice::Pinned(PathKind::Batched),
+        Some("auto") => PathChoice::Auto,
+        _ => PathChoice::Pinned(PathKind::Direct),
+    };
+    let ir = InferRequest {
+        model,
+        seeds: vec![seed],
+        client_id: None,
+        path,
+        timeout_ms: None,
+        priority: Default::default(),
+    };
+    let (request_id, results) = run_infer(&ir, system)?;
+    let (_, r) = &results[0];
+    Ok(HttpResponse::ok_json(
+        json::obj(vec![
+            ("request_id", json::num(request_id as f64)),
+            ("predicted", json::num(r.predicted as f64)),
+            ("confidence", json::num(r.confidence as f64)),
+            ("entropy", json::num(r.entropy as f64)),
+            ("latency_secs", json::num(r.latency_secs)),
+            ("joules", json::num(r.joules)),
+            ("path", json::s(r.path.as_str())),
+        ])
+        .to_json(),
+    ))
+}
+
+/// Zero out non-finite values (NaN/∞ are not JSON).
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// `GET /v2/control/loops`: the PR-1 control plane over HTTP — every
+/// loop's law + current output, router state, and the windowed-metrics
+/// snapshot the loops observe.
+fn control_loops(system: &ServingSystem) -> HttpResponse {
+    let loops: Vec<Value> = system
+        .control_loop_states()
+        .iter()
+        .map(|s| {
+            json::obj(vec![
+                ("name", json::s(&s.name)),
+                ("law", json::s(&s.law)),
+                ("output", json::num(finite(s.output))),
+            ])
+        })
+        .collect();
+    let snap = system.metrics().snapshot();
+    let threshold = system.router_qps_threshold();
+    let router = json::obj(vec![
+        ("recent_qps", json::num(finite(system.router_qps()))),
+        (
+            "qps_threshold",
+            if threshold.is_finite() { json::num(threshold) } else { Value::Null },
+        ),
+    ]);
+    let window = json::obj(vec![
+        ("qps", json::num(finite(snap.qps))),
+        ("p50_latency", json::num(finite(snap.p50_latency))),
+        ("p95_latency", json::num(finite(snap.p95_latency))),
+        ("watts", json::num(finite(snap.watts))),
+        ("events", json::num(snap.events as f64)),
+    ]);
+    HttpResponse::ok_json(
+        json::obj(vec![
+            ("running", Value::Bool(system.control_plane_running())),
+            ("loops", Value::Arr(loops)),
+            ("router", router),
+            ("window", window),
+        ])
+        .to_json(),
+    )
+}
+
+/// `GET /v2/admission/stats`: the closed-loop controller's counters,
+/// plus the gateway's own refusal counters (typed view of the same
+/// series `/metrics` exposes; `counter_value` reads without minting
+/// zero-valued series).
+fn admission_stats(system: &ServingSystem) -> HttpResponse {
+    let reg = MetricsRegistry::global();
+    let count = |name: &str| json::num(reg.counter_value(name).unwrap_or(0) as f64);
+    // "items", not "requests": one batch body bumps the counter once
+    // per input item.
+    let gateway = json::obj(vec![
+        ("infer_items", count("gf_http_infer_total")),
+        ("backpressure_responses", count("gf_http_backpressure_total")),
+        ("deadline_exceeded_responses", count("gf_http_deadline_exceeded_total")),
+    ]);
+    let body = match system.controller_stats() {
+        Some(s) => json::obj(vec![
+            ("enabled", Value::Bool(true)),
+            ("admitted", json::num(s.admitted as f64)),
+            ("skipped", json::num(s.skipped as f64)),
+            ("total", json::num(s.total() as f64)),
+            ("admission_rate", json::num(finite(s.admission_rate()))),
+            ("last_j", json::num(finite(s.last_j))),
+            ("last_tau", json::num(finite(s.last_tau))),
+            ("gateway", gateway),
+        ]),
+        None => json::obj(vec![("enabled", Value::Bool(false)), ("gateway", gateway)]),
+    };
+    HttpResponse::ok_json(body.to_json())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    // Endpoint-level tests that don't need a serving system.
+    fn get(path: &str) -> HttpRequest {
+        HttpRequest { path: path.into(), ..HttpRequest::default() }
+    }
+
+    fn post(path: &str, body: &[u8]) -> HttpRequest {
+        HttpRequest {
+            method: "POST".into(),
+            path: path.into(),
+            body: body.to_vec(),
+            ..HttpRequest::default()
+        }
+    }
+
+    fn body_json(resp: &HttpResponse) -> Value {
+        json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    // Endpoint-level tests over a real system (skipped without artifacts).
     #[test]
-    fn health_without_system_state() {
-        // dispatch needs a system only for /infer and /models; check the
-        // response shape through a fake request on /health by constructing
-        // a minimal system when artifacts exist, else skip.
+    fn dispatch_covers_v2_and_legacy_routes() {
         let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !root.join("repository.json").exists() {
             return;
         }
         let system =
             ServingSystem::start(crate::pipeline::system::SystemConfig::new(root)).unwrap();
-        let req = HttpRequest {
-            method: "GET".into(),
-            path: "/health".into(),
-            headers: Default::default(),
-            body: vec![],
-        };
-        let resp = dispatch(&req, &system);
+
+        // legacy /health keeps its shape
+        let resp = dispatch(&get("/health"), &system);
         assert_eq!(resp.status, 200);
-        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
-        assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(body_json(&resp).get("status").unwrap().as_str().unwrap(), "ok");
 
-        // /models lists the repository
-        let req = HttpRequest { path: "/models".into(), ..req };
+        // v2 health
+        assert_eq!(dispatch(&get("/v2/health/live"), &system).status, 200);
+        let ready = dispatch(&get("/v2/health/ready"), &system);
+        assert!(body_json(&ready).get("ready").unwrap() == &Value::Bool(true));
+
+        // legacy /models is a bare array; v2 wraps it
+        let legacy = dispatch(&get("/models"), &system);
+        assert_eq!(body_json(&legacy).as_arr().unwrap().len(), 3);
+        let v2 = dispatch(&get("/v2/models"), &system);
+        assert_eq!(body_json(&v2).get("models").unwrap().as_arr().unwrap().len(), 3);
+
+        // model metadata carries batching config + queue state
+        let meta = dispatch(&get("/v2/models/distilbert_mini"), &system);
+        assert_eq!(meta.status, 200);
+        let v = body_json(&meta);
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "distilbert_mini");
+        assert!(v.get("queue").unwrap().get("capacity").unwrap().as_i64().unwrap() > 0);
+
+        // unknown model → MODEL_NOT_FOUND
+        let missing = dispatch(&get("/v2/models/nope"), &system);
+        assert_eq!(missing.status, 404);
+        assert_eq!(
+            body_json(&missing).get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+            "MODEL_NOT_FOUND"
+        );
+
+        // introspection endpoints exist without a control plane
+        let loops = dispatch(&get("/v2/control/loops"), &system);
+        assert_eq!(loops.status, 200);
+        assert_eq!(body_json(&loops).get("running").unwrap(), &Value::Bool(false));
+        let adm = dispatch(&get("/v2/admission/stats"), &system);
+        assert_eq!(body_json(&adm).get("enabled").unwrap(), &Value::Bool(false));
+
+        // unknown path 404s; bad method 405s
+        assert_eq!(dispatch(&get("/nope"), &system).status, 404);
+        let del = HttpRequest { method: "DELETE".into(), ..get("/v2/models") };
+        assert_eq!(dispatch(&del, &system).status, 405);
+
+        // bad body 400s on both protocols
+        assert_eq!(dispatch(&post("/infer", b"not json"), &system).status, 400);
+        assert_eq!(
+            dispatch(&post("/v2/models/distilbert_mini/infer", b"not json"), &system).status,
+            400
+        );
+
+        // negative seed no longer wraps silently
+        let neg = post("/infer", br#"{"model": "distilbert_mini", "seed": -5}"#);
+        assert_eq!(dispatch(&neg, &system).status, 400);
+
+        // X-Request-Id echo
+        let mut req = get("/health");
+        req.headers.insert("x-request-id".into(), "rid-9".into());
         let resp = dispatch(&req, &system);
-        let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
-        assert_eq!(v.as_arr().unwrap().len(), 3);
-
-        // unknown path 404s
-        let req = HttpRequest { path: "/nope".into(), ..req };
-        assert_eq!(dispatch(&req, &system).status, 404);
-
-        // bad body 400s
-        let req = HttpRequest {
-            method: "POST".into(),
-            path: "/infer".into(),
-            headers: Default::default(),
-            body: b"not json".to_vec(),
-        };
-        assert_eq!(dispatch(&req, &system).status, 400);
+        assert!(resp
+            .extra_headers
+            .iter()
+            .any(|(k, v)| k == "X-Request-Id" && v == "rid-9"));
     }
 }

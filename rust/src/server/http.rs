@@ -1,12 +1,74 @@
 //! Minimal HTTP/1.1 request parser + response writer.
 //!
-//! Supports exactly what the gateway needs: request line, headers,
-//! Content-Length bodies. Not a general server — no chunked encoding, no
-//! keep-alive pipelining (each connection serves one request, like
-//! FastAPI under `Connection: close`).
+//! Supports what the gateway needs to serve real load-generator traffic:
+//! request line, headers (count/size-capped), Content-Length bodies, and
+//! HTTP/1.1 **keep-alive** — a connection serves many sequential requests
+//! until the peer (or a `Connection: close` header) ends it. No chunked
+//! encoding, no TLS, no pipelining of concurrent requests.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
+
+/// Request body cap (16 MiB). Bodies declaring more are refused with 413
+/// before any body byte is read.
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Per-line cap for the request line and each header line.
+pub const MAX_HEADER_LINE_BYTES: u64 = 8 * 1024;
+
+/// Maximum number of header lines per request.
+pub const MAX_HEADER_COUNT: usize = 100;
+
+/// Why a request could not be parsed. The server maps each variant onto
+/// a status code ([`HttpParseError::to_response`]); `ConnectionClosed` is
+/// the clean end of a keep-alive connection and gets no response at all.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpParseError {
+    /// Peer closed (or went idle past the read timeout) before sending
+    /// the first byte of a request — the normal end of keep-alive.
+    ConnectionClosed,
+    /// Declared Content-Length exceeds [`MAX_BODY_BYTES`] → 413.
+    BodyTooLarge(usize),
+    /// Header section exceeds the line/count caps → 431.
+    HeadersTooLarge,
+    /// `Expect: 100-continue` (unsupported — we never send the interim
+    /// 100) → 417, so the client retries without the expectation
+    /// instead of stalling against the idle timeout.
+    ExpectationFailed,
+    /// Anything else unparseable → 400.
+    Malformed(String),
+}
+
+impl std::fmt::Display for HttpParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpParseError::ConnectionClosed => write!(f, "connection closed"),
+            HttpParseError::BodyTooLarge(n) => {
+                write!(f, "body of {n} bytes exceeds the {MAX_BODY_BYTES}-byte cap")
+            }
+            HttpParseError::HeadersTooLarge => write!(f, "header section too large"),
+            HttpParseError::ExpectationFailed => {
+                write!(f, "expectations (100-continue) are not supported")
+            }
+            HttpParseError::Malformed(m) => write!(f, "malformed request: {m}"),
+        }
+    }
+}
+
+impl HttpParseError {
+    /// The error response owed to the peer (None for a clean close).
+    pub fn to_response(&self) -> Option<HttpResponse> {
+        match self {
+            HttpParseError::ConnectionClosed => None,
+            HttpParseError::BodyTooLarge(_) => Some(HttpResponse::error(413, &self.to_string())),
+            HttpParseError::HeadersTooLarge => Some(HttpResponse::error(431, &self.to_string())),
+            HttpParseError::ExpectationFailed => {
+                Some(HttpResponse::error(417, &self.to_string()))
+            }
+            HttpParseError::Malformed(_) => Some(HttpResponse::error(400, &self.to_string())),
+        }
+    }
+}
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone, PartialEq)]
@@ -15,51 +77,176 @@ pub struct HttpRequest {
     pub path: String,
     pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
+    /// Minor HTTP version (`HTTP/1.<minor>`): keep-alive is the default
+    /// for 1.1, opt-in for 1.0.
+    pub minor_version: u8,
+}
+
+impl Default for HttpRequest {
+    fn default() -> Self {
+        HttpRequest {
+            method: "GET".to_string(),
+            path: "/".to_string(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+            minor_version: 1,
+        }
+    }
+}
+
+/// Read one capped line (excluding the trailing `\r\n`/`\n`) from a
+/// buffered reader. `Ok(None)` = clean EOF before any byte.
+fn read_line_capped<R: BufRead>(reader: &mut R) -> Result<Option<String>, HttpParseError> {
+    let mut buf = Vec::new();
+    let n = (&mut *reader)
+        .take(MAX_HEADER_LINE_BYTES)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| match e.kind() {
+            // Idle keep-alive connection hit the socket read timeout.
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                HttpParseError::ConnectionClosed
+            }
+            _ => HttpParseError::Malformed(e.to_string()),
+        })?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        // The cap truncated the line (or the peer died mid-line).
+        return if n as u64 >= MAX_HEADER_LINE_BYTES {
+            Err(HttpParseError::HeadersTooLarge)
+        } else {
+            Err(HttpParseError::Malformed("truncated line".into()))
+        };
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| HttpParseError::Malformed("non-utf8 line".into()))
 }
 
 impl HttpRequest {
-    /// Parse one request from a stream.
-    pub fn parse<R: Read>(stream: R) -> Result<HttpRequest, String> {
+    /// Parse one request from a stream (one-shot convenience; keep-alive
+    /// servers hold a single `BufReader` and call [`Self::read_from`]).
+    pub fn parse<R: Read>(stream: R) -> Result<HttpRequest, HttpParseError> {
         let mut reader = BufReader::new(stream);
-        let mut line = String::new();
-        reader.read_line(&mut line).map_err(|e| e.to_string())?;
-        let mut parts = line.trim_end().split_whitespace();
-        let method = parts.next().ok_or("missing method")?.to_string();
-        let path = parts.next().ok_or("missing path")?.to_string();
-        let version = parts.next().ok_or("missing version")?;
-        if !version.starts_with("HTTP/1.") {
-            return Err(format!("unsupported version {version}"));
+        Self::read_from(&mut reader)
+    }
+
+    /// Read the next request off a persistent buffered reader.
+    pub fn read_from<R: BufRead>(reader: &mut R) -> Result<HttpRequest, HttpParseError> {
+        let line = match read_line_capped(reader)? {
+            Some(l) => l,
+            None => return Err(HttpParseError::ConnectionClosed),
+        };
+        if line.is_empty() {
+            return Err(HttpParseError::Malformed("empty request line".into()));
         }
+        let mut parts = line.split_whitespace();
+        let missing = |what: &'static str| HttpParseError::Malformed(format!("missing {what}"));
+        let method = parts.next().ok_or_else(|| missing("method"))?.to_string();
+        let path = parts.next().ok_or_else(|| missing("path"))?.to_string();
+        let version = parts.next().ok_or_else(|| missing("version"))?;
+        let minor_version = match version {
+            "HTTP/1.1" => 1,
+            "HTTP/1.0" => 0,
+            v => return Err(HttpParseError::Malformed(format!("unsupported version {v}"))),
+        };
 
         let mut headers = BTreeMap::new();
+        let mut header_lines = 0usize;
         loop {
-            let mut h = String::new();
-            reader.read_line(&mut h).map_err(|e| e.to_string())?;
-            let h = h.trim_end();
+            let h = match read_line_capped(reader)? {
+                Some(h) => h,
+                None => return Err(HttpParseError::Malformed("eof inside headers".into())),
+            };
             if h.is_empty() {
                 break;
             }
+            // Count *lines read*, not map entries: duplicate names and
+            // colon-less junk must not stream past the cap forever.
+            header_lines += 1;
+            if header_lines > MAX_HEADER_COUNT {
+                return Err(HttpParseError::HeadersTooLarge);
+            }
             if let Some((k, v)) = h.split_once(':') {
-                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if let Some(old) = headers.insert(k.clone(), v.clone()) {
+                    // Conflicting repeated Content-Length values are a
+                    // framing attack (RFC 9112 §6.3) — refuse rather
+                    // than silently last-wins.
+                    if k == "content-length" && old != v {
+                        return Err(HttpParseError::Malformed(
+                            "conflicting content-length headers".into(),
+                        ));
+                    }
+                }
             }
         }
 
-        let len: usize = headers
-            .get("content-length")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0);
-        if len > 16 * 1024 * 1024 {
-            return Err("body too large".into());
+        // We never emit the interim `100 Continue`: answering 417 at
+        // once beats letting an expectant client stall against the idle
+        // timeout (clients retry without the Expect header).
+        if headers.contains_key("expect") {
+            return Err(HttpParseError::ExpectationFailed);
+        }
+
+        // Body framing must be exact on a keep-alive connection: a
+        // mis-framed body desyncs every later request on the socket
+        // (request smuggling). Chunked bodies are not supported, and a
+        // Content-Length we cannot parse is never silently treated as 0.
+        if headers.contains_key("transfer-encoding") {
+            return Err(HttpParseError::Malformed(
+                "transfer-encoding is not supported".into(),
+            ));
+        }
+        let len: usize = match headers.get("content-length").map(|v| v.trim()) {
+            None => 0,
+            Some(v) => match v.parse() {
+                Ok(n) => n,
+                // All-digit values too big for usize are an oversized
+                // body (413), not a malformed request.
+                Err(_) if !v.is_empty() && v.bytes().all(|b| b.is_ascii_digit()) => {
+                    return Err(HttpParseError::BodyTooLarge(usize::MAX));
+                }
+                Err(_) => {
+                    return Err(HttpParseError::Malformed(format!(
+                        "bad content-length {v:?}"
+                    )));
+                }
+            },
+        };
+        if len > MAX_BODY_BYTES {
+            return Err(HttpParseError::BodyTooLarge(len));
         }
         let mut body = vec![0u8; len];
         if len > 0 {
-            reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+            reader
+                .read_exact(&mut body)
+                .map_err(|e| HttpParseError::Malformed(e.to_string()))?;
         }
-        Ok(HttpRequest { method, path, headers, body })
+        Ok(HttpRequest { method, path, headers, body, minor_version })
     }
 
     pub fn body_str(&self) -> Result<&str, String> {
         std::str::from_utf8(&self.body).map_err(|e| e.to_string())
+    }
+
+    /// A case-insensitive header lookup (names are lowercased at parse).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange:
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 closes unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.headers.get("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v == "close" => false,
+            Some(v) if v == "keep-alive" => true,
+            _ => self.minor_version >= 1,
+        }
     }
 }
 
@@ -69,15 +256,36 @@ pub struct HttpResponse {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra headers appended verbatim (e.g. the `X-Request-Id` echo).
+    pub extra_headers: Vec<(String, String)>,
 }
 
 impl HttpResponse {
     pub fn ok_json(body: String) -> Self {
-        HttpResponse { status: 200, content_type: "application/json", body: body.into_bytes() }
+        HttpResponse {
+            status: 200,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+        }
     }
 
     pub fn ok_text(body: String) -> Self {
-        HttpResponse { status: 200, content_type: "text/plain; charset=utf-8", body: body.into_bytes() }
+        HttpResponse {
+            status: 200,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn json(status: u16, body: String) -> Self {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+        }
     }
 
     pub fn error(status: u16, msg: &str) -> Self {
@@ -86,31 +294,76 @@ impl HttpResponse {
             content_type: "application/json",
             body: format!("{{\"error\":{}}}", crate::json::Value::Str(msg.into()).to_json())
                 .into_bytes(),
+            extra_headers: Vec::new(),
         }
     }
 
-    fn status_text(&self) -> &'static str {
-        match self.status {
+    /// Append a response header.
+    pub fn with_header(mut self, name: &str, value: &str) -> Self {
+        self.extra_headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// Canonical reason phrase; unknown codes fall back per status class
+    /// instead of lying with "Internal Server Error".
+    pub fn status_text(status: u16) -> &'static str {
+        match status {
             200 => "OK",
+            201 => "Created",
+            202 => "Accepted",
+            204 => "No Content",
+            301 => "Moved Permanently",
+            302 => "Found",
+            304 => "Not Modified",
             400 => "Bad Request",
+            401 => "Unauthorized",
+            403 => "Forbidden",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            409 => "Conflict",
+            410 => "Gone",
+            413 => "Payload Too Large",
+            414 => "URI Too Long",
+            415 => "Unsupported Media Type",
+            417 => "Expectation Failed",
+            422 => "Unprocessable Entity",
             429 => "Too Many Requests",
-            _ => "Internal Server Error",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            501 => "Not Implemented",
+            502 => "Bad Gateway",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
+            s if (200..300).contains(&s) => "OK",
+            s if (300..400).contains(&s) => "Redirect",
+            s if (400..500).contains(&s) => "Client Error",
+            _ => "Server Error",
         }
     }
 
-    /// Serialise onto a stream.
-    pub fn write_to<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+    /// Serialise onto a stream, closing after the exchange.
+    pub fn write_to<W: Write>(&self, w: W) -> std::io::Result<()> {
+        self.write_to_with(w, false)
+    }
+
+    /// Serialise onto a stream with an explicit keep-alive decision.
+    pub fn write_to_with<W: Write>(&self, mut w: W, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
-            self.status_text(),
+            Self::status_text(self.status),
             self.content_type,
-            self.body.len()
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
         )?;
-        w.write_all(&self.body)
+        for (name, value) in &self.extra_headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
     }
 }
 
@@ -126,6 +379,8 @@ mod tests {
         assert_eq!(r.path, "/infer");
         assert_eq!(r.headers["content-length"], "13");
         assert_eq!(r.body_str().unwrap().trim(), "{\"seed\": 42}");
+        assert_eq!(r.minor_version, 1);
+        assert!(r.keep_alive(), "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
@@ -135,6 +390,16 @@ mod tests {
         assert_eq!(r.method, "GET");
         assert_eq!(r.path, "/health");
         assert!(r.body.is_empty());
+        assert_eq!(r.minor_version, 0);
+        assert!(!r.keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn connection_header_overrides_version_default() {
+        let close = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!HttpRequest::parse(&close[..]).unwrap().keep_alive());
+        let keep = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        assert!(HttpRequest::parse(&keep[..]).unwrap().keep_alive());
     }
 
     #[test]
@@ -144,9 +409,137 @@ mod tests {
     }
 
     #[test]
+    fn clean_eof_is_connection_closed() {
+        assert_eq!(
+            HttpRequest::parse(&b""[..]).unwrap_err(),
+            HttpParseError::ConnectionClosed
+        );
+    }
+
+    #[test]
     fn rejects_truncated_body() {
         let raw = b"POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
-        assert!(HttpRequest::parse(&raw[..]).is_err());
+        assert!(matches!(
+            HttpRequest::parse(&raw[..]),
+            Err(HttpParseError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_body_is_413_not_parse_noise() {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err = HttpRequest::parse(raw.as_bytes()).unwrap_err();
+        assert!(matches!(err, HttpParseError::BodyTooLarge(_)));
+        assert_eq!(err.to_response().unwrap().status, 413);
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADER_COUNT + 1) {
+            raw.push_str(&format!("X-H-{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        let err = HttpRequest::parse(raw.as_bytes()).unwrap_err();
+        assert_eq!(err, HttpParseError::HeadersTooLarge);
+        assert_eq!(err.to_response().unwrap().status, 431);
+    }
+
+    #[test]
+    fn conflicting_content_lengths_are_rejected() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 10\r\n\r\nhellohello";
+        assert!(matches!(
+            HttpRequest::parse(&raw[..]),
+            Err(HttpParseError::Malformed(_))
+        ));
+        // Identical repeats are harmless and allowed.
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello";
+        assert_eq!(HttpRequest::parse(&raw[..]).unwrap().body, b"hello");
+    }
+
+    #[test]
+    fn expect_100_continue_is_417_not_a_stall() {
+        let raw = b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 5\r\n\r\n";
+        let err = HttpRequest::parse(&raw[..]).unwrap_err();
+        assert_eq!(err, HttpParseError::ExpectationFailed);
+        assert_eq!(err.to_response().unwrap().status, 417);
+        assert_eq!(HttpResponse::status_text(417), "Expectation Failed");
+    }
+
+    #[test]
+    fn body_framing_is_never_guessed() {
+        // Chunked transfer would desync keep-alive framing → 400.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        assert!(matches!(
+            HttpRequest::parse(&raw[..]),
+            Err(HttpParseError::Malformed(_))
+        ));
+
+        // Content-Length overflowing usize is an oversized body (413),
+        // not "no body".
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n";
+        let err = HttpRequest::parse(&raw[..]).unwrap_err();
+        assert!(matches!(err, HttpParseError::BodyTooLarge(_)));
+        assert_eq!(err.to_response().unwrap().status, 413);
+
+        // Garbage Content-Length is malformed (400), never 0.
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: banana\r\n\r\n";
+        assert!(matches!(
+            HttpRequest::parse(&raw[..]),
+            Err(HttpParseError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_or_colonless_header_flood_still_hits_the_cap() {
+        // Same name every line: the map stays at len 1, but the line
+        // count must still trip the 431.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for _ in 0..(MAX_HEADER_COUNT + 1) {
+            raw.push_str("X-Dup: v\r\n");
+        }
+        raw.push_str("\r\n");
+        assert_eq!(
+            HttpRequest::parse(raw.as_bytes()).unwrap_err(),
+            HttpParseError::HeadersTooLarge
+        );
+
+        // Colon-less lines never reach the map at all.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for _ in 0..(MAX_HEADER_COUNT + 1) {
+            raw.push_str("junk-line-without-colon\r\n");
+        }
+        raw.push_str("\r\n");
+        assert_eq!(
+            HttpRequest::parse(raw.as_bytes()).unwrap_err(),
+            HttpParseError::HeadersTooLarge
+        );
+    }
+
+    #[test]
+    fn overlong_header_line_is_431() {
+        let raw = format!(
+            "GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n",
+            "a".repeat(MAX_HEADER_LINE_BYTES as usize)
+        );
+        let err = HttpRequest::parse(raw.as_bytes()).unwrap_err();
+        assert_eq!(err, HttpParseError::HeadersTooLarge);
+    }
+
+    #[test]
+    fn two_requests_on_one_reader() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut reader = BufReader::new(&raw[..]);
+        let a = HttpRequest::read_from(&mut reader).unwrap();
+        assert_eq!(a.path, "/a");
+        assert!(a.keep_alive());
+        let b = HttpRequest::read_from(&mut reader).unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(!b.keep_alive());
+        assert_eq!(
+            HttpRequest::read_from(&mut reader).unwrap_err(),
+            HttpParseError::ConnectionClosed
+        );
     }
 
     #[test]
@@ -157,7 +550,33 @@ mod tests {
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains("Content-Length: 7"));
+        assert!(text.contains("Connection: close"));
         assert!(text.ends_with("{\"a\":1}"));
+    }
+
+    #[test]
+    fn keep_alive_response_headers() {
+        let resp = HttpResponse::ok_json("{}".into()).with_header("X-Request-Id", "abc");
+        let mut buf = Vec::new();
+        resp.write_to_with(&mut buf, true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Connection: keep-alive"));
+        assert!(text.contains("X-Request-Id: abc"));
+    }
+
+    #[test]
+    fn status_text_covers_the_map() {
+        assert_eq!(HttpResponse::status_text(200), "OK");
+        assert_eq!(HttpResponse::status_text(401), "Unauthorized");
+        assert_eq!(HttpResponse::status_text(413), "Payload Too Large");
+        assert_eq!(HttpResponse::status_text(422), "Unprocessable Entity");
+        assert_eq!(HttpResponse::status_text(429), "Too Many Requests");
+        assert_eq!(HttpResponse::status_text(503), "Service Unavailable");
+        assert_eq!(HttpResponse::status_text(504), "Gateway Timeout");
+        // class fallbacks, not a blanket 500 phrase
+        assert_eq!(HttpResponse::status_text(418), "Client Error");
+        assert_eq!(HttpResponse::status_text(599), "Server Error");
+        assert_eq!(HttpResponse::status_text(226), "OK");
     }
 
     #[test]

@@ -1,21 +1,29 @@
-//! The HTTP gateway — the FastAPI analog (§III-B Path A's REST layer).
+//! The HTTP serving layer — the FastAPI analog (§III-B Path A's REST
+//! layer), grown into a typed **v2 inference protocol** modeled on
+//! KServe/Triton.
 //!
-//! A minimal HTTP/1.1 server on `std::net::TcpListener` with a fixed
-//! thread pool (no tokio offline; DESIGN.md §6). Endpoints:
+//! A minimal HTTP/1.1 keep-alive server on `std::net::TcpListener`,
+//! one thread per live connection under a capped count (no tokio
+//! offline; DESIGN.md §6). Layers:
 //!
-//! * `POST /infer`  — JSON body `{"model": "...", "seed": N}`; runs the
-//!   closed-loop submit path and returns the decision + prediction.
-//! * `GET /metrics` — Prometheus text exposition of the global registry.
-//! * `GET /health`  — liveness.
+//! * [`http`]    — request parsing (header caps, 413/431 mapping) and
+//!   response writing with keep-alive.
+//! * [`api`]     — the typed protocol: request/response/error structs,
+//!   stable error codes (`BACKPRESSURE`, `MODEL_NOT_FOUND`,
+//!   `DEADLINE_EXCEEDED`, …) and their HTTP mappings.
+//! * [`gateway`] — the route table (`/v2/...` + legacy shims), the
+//!   keep-alive connection loop, and the blocking acceptor.
+//! * [`client`]  — a small in-process HTTP/1.1 client for the CLI's
+//!   `--serve-bench` round-trip mode and the integration tests.
 //!
-//! The gateway exists to prove the coordinator composes into a network
-//! service; the paper's latency tables are measured in-process (as the
-//! paper measures past the HTTP layer with batch scripts).
+//! See `docs/API.md` for the wire contract.
 
+pub mod api;
+pub mod client;
 pub mod gateway;
 pub mod http;
-pub mod threadpool;
 
-pub use gateway::Gateway;
-pub use http::{HttpRequest, HttpResponse};
-pub use threadpool::ThreadPool;
+pub use api::{ApiError, ErrorCode, InferRequest, InferResponse};
+pub use client::{ClientResponse, HttpClient};
+pub use gateway::{dispatch, serve_connection, Gateway};
+pub use http::{HttpParseError, HttpRequest, HttpResponse};

@@ -72,6 +72,12 @@ impl MetricsRegistry {
         self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// Read a counter without registering it (None if never created) —
+    /// introspection endpoints must not mint zero-valued series.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.counters.lock().unwrap().get(name).map(|c| c.get())
+    }
+
     /// Render in Prometheus text exposition format.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
@@ -105,6 +111,15 @@ mod tests {
         assert_eq!(r.gauge("tau").get(), 1.25);
         r.gauge("tau").set(-0.5);
         assert_eq!(r.gauge("tau").get(), -0.5);
+    }
+
+    #[test]
+    fn value_reads_do_not_register() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.counter_value("ghost"), None);
+        assert!(!r.render_prometheus().contains("ghost"));
+        r.counter("real").add(3);
+        assert_eq!(r.counter_value("real"), Some(3));
     }
 
     #[test]

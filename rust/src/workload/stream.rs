@@ -12,6 +12,38 @@
 
 use crate::util::Rng;
 
+/// Scheduling priority an external client attaches to a request (the v2
+/// protocol's `parameters.priority`). `High` work bypasses the admission
+/// skip (always executed), `Low` work is the first shed under queue
+/// pressure; `Normal` follows the closed loop unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Parse the wire name ("low" | "normal" | "high").
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
 /// One inference request as seen by the coordinator.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
@@ -34,6 +66,23 @@ pub struct Request {
 }
 
 impl Request {
+    /// A request arriving from outside (HTTP gateway, CLI bench): only the
+    /// payload seed is known, so the latent calibration fields take their
+    /// neutral midpoints (difficulty 0.5, confidence 0.75, label 0). The
+    /// serving path re-estimates confidence via the screener anyway; `id`
+    /// must be a server-assigned monotonic id, never the seed itself.
+    pub fn external(id: u64, model: impl Into<String>, seed: u64, arrival: f64) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            arrival,
+            seed,
+            label: 0,
+            difficulty: 0.5,
+            confidence: 0.75,
+        }
+    }
+
     /// Shannon entropy (nats) of a binary prediction at this confidence —
     /// the latent L(x) the screener estimates.
     pub fn entropy(&self) -> f64 {
@@ -214,6 +263,27 @@ mod tests {
         assert_eq!(binary_entropy(1.0), 0.0);
         assert!((binary_entropy(0.5) - 0.5f64.ln().abs() * 2.0 * 0.5).abs() < 1e-12);
         assert!(binary_entropy(0.5) > binary_entropy(0.9));
+    }
+
+    #[test]
+    fn priority_parses_wire_names() {
+        assert_eq!(Priority::parse("low"), Some(Priority::Low));
+        assert_eq!(Priority::parse("normal"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("high"), Some(Priority::High));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.as_str(), "high");
+    }
+
+    #[test]
+    fn external_requests_use_neutral_latents() {
+        let r = Request::external(9, "m", 1234, 0.5);
+        assert_eq!(r.id, 9);
+        assert_eq!(r.seed, 1234);
+        assert_eq!(r.model, "m");
+        assert_eq!(r.arrival, 0.5);
+        assert_eq!(r.difficulty, 0.5);
+        assert_eq!(r.confidence, 0.75);
     }
 
     #[test]

@@ -148,6 +148,9 @@ fn gateway_serves_http_round_trips() {
     let gw = Gateway::start(sys, 0, 2).unwrap();
     let addr = gw.addr();
 
+    // Raw one-shot clients: `Connection: close` keeps each exchange a
+    // single round-trip (keep-alive reuse is covered by
+    // integration_gateway.rs).
     let send = |req: String| -> String {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(req.as_bytes()).unwrap();
@@ -156,13 +159,13 @@ fn gateway_serves_http_round_trips() {
         out
     };
 
-    let health = send("GET /health HTTP/1.1\r\nHost: x\r\n\r\n".into());
+    let health = send("GET /health HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n".into());
     assert!(health.starts_with("HTTP/1.1 200"), "{health}");
     assert!(health.contains("\"status\":\"ok\""));
 
     let body = r#"{"model": "distilbert_mini", "seed": 7}"#;
     let infer = send(format!(
-        "POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+        "POST /infer HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{}",
         body.len(),
         body
     ));
@@ -170,10 +173,13 @@ fn gateway_serves_http_round_trips() {
     assert!(infer.contains("\"predicted\":"));
     assert!(infer.contains("\"path\":\"direct\""));
 
-    let missing = send("GET /nope HTTP/1.1\r\nHost: x\r\n\r\n".into());
+    let missing = send("GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n".into());
     assert!(missing.starts_with("HTTP/1.1 404"));
 
-    let bad = send("POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: 3\r\n\r\nxyz".into());
+    let bad = send(
+        "POST /infer HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Length: 3\r\n\r\nxyz"
+            .into(),
+    );
     assert!(bad.starts_with("HTTP/1.1 400"));
 }
 

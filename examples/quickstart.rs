@@ -14,10 +14,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let repo = std::env::var("GF_REPO").unwrap_or_else(|_| "artifacts".to_string());
     println!("booting greenflow from {repo}/ ...");
     let system = ServingSystem::start(SystemConfig::new(repo.into()))?;
-    println!(
-        "loaded models: {:?}",
-        system.repository().model_names()
-    );
+    println!("loaded models: {:?}", system.model_names());
 
     let mut stream = RequestStream::new(
         StreamConfig { model: models::DISTILBERT.to_string(), ..Default::default() },

@@ -2,9 +2,12 @@
 //!
 //! ```text
 //! greenflow serve     --repo artifacts --port 8080 [--controller] [--device a100]
+//!                     [--model-control explicit|none]
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
 //!                     [--serve-bench N [--model distilbert_mini]]
+//! greenflow repo      <index|load|unload> [--addr 127.0.0.1:8080]
+//!                     [--model NAME] [--version N]
 //! greenflow report    --repo artifacts
 //! greenflow ablation  [--requests 1000] [--tau0 0.2] [--tau-inf 0.78] [--k 2.0]
 //!                     [--adaptive-tau 0.58]
@@ -22,6 +25,11 @@
 //! ([`crate::control`]): background loops that retune τ, the batcher
 //! queue-delay window, and the router QPS threshold from windowed
 //! latency/energy/admission signals.
+//!
+//! `--model-control explicit` starts the server with nothing loaded;
+//! `greenflow repo load/unload --model NAME [--version N]` then drives
+//! the running server's `/v2/repository` lifecycle API over HTTP
+//! (`repo index` prints every model's per-version state).
 
 pub mod args;
 
@@ -55,6 +63,10 @@ pub fn run(argv: &[String]) -> i32 {
         eprintln!("{}", usage());
         return 2;
     };
+    if cmd == "repo" {
+        // `repo` takes a positional operation before its flags.
+        return cmd_repo(rest);
+    }
     let args = match Args::parse(rest) {
         Ok(a) => a,
         Err(e) => {
@@ -79,7 +91,7 @@ pub fn run(argv: &[String]) -> i32 {
 }
 
 fn usage() -> &'static str {
-    "usage: greenflow <serve|report|ablation|landscape|version> [--flag value ...]"
+    "usage: greenflow <serve|repo|report|ablation|landscape|version> [--flag value ...]"
 }
 
 fn repo_root(args: &Args) -> PathBuf {
@@ -165,12 +177,93 @@ fn control_config(args: &Args, slo: f64) -> Option<ControlPlaneConfig> {
     cfg.any_enabled().then_some(cfg)
 }
 
+/// `greenflow repo <index|load|unload>`: drive a running server's
+/// `/v2/repository` lifecycle API over one HTTP round-trip.
+fn cmd_repo(rest: &[String]) -> i32 {
+    const REPO_USAGE: &str = "usage: greenflow repo <index|load|unload> \
+                              [--addr 127.0.0.1:8080] [--model NAME] [--version N]";
+    let Some((op, flags)) = rest.split_first() else {
+        eprintln!("{REPO_USAGE}");
+        return 2;
+    };
+    let args = match Args::parse(flags) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n{REPO_USAGE}");
+            return 2;
+        }
+    };
+    let addr_str = args.get("addr").unwrap_or_else(|| "127.0.0.1:8080".to_string());
+    let addr: std::net::SocketAddr = match addr_str.parse() {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("invalid --addr {addr_str:?} (want host:port)");
+            return 2;
+        }
+    };
+    let (path, body) = match op.as_str() {
+        "index" => ("/v2/repository/index".to_string(), "{}".to_string()),
+        "load" | "unload" => {
+            let Some(model) = args.get("model") else {
+                eprintln!("repo {op} needs --model\n{REPO_USAGE}");
+                return 2;
+            };
+            let body = match args.get_f64("version") {
+                Some(v) if v >= 1.0 && v.fract() == 0.0 => {
+                    format!("{{\"parameters\": {{\"version\": {}}}}}", v as u64)
+                }
+                Some(_) => {
+                    eprintln!("--version must be a positive integer");
+                    return 2;
+                }
+                None => "{}".to_string(),
+            };
+            (format!("/v2/repository/models/{model}/{op}"), body)
+        }
+        other => {
+            eprintln!("unknown repo operation {other:?}\n{REPO_USAGE}");
+            return 2;
+        }
+    };
+    let mut client = match crate::server::HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot connect to {addr}: {e} (is `greenflow serve` running?)");
+            return 1;
+        }
+    };
+    match client.post_json(&path, &body) {
+        Ok(resp) => {
+            println!("{}", resp.body_str().unwrap_or_default());
+            if resp.status == 200 {
+                0
+            } else {
+                eprintln!("HTTP {}", resp.status);
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("transport error: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let root = repo_root(args);
     let mut cfg = SystemConfig::new(root);
     cfg.device = device(args);
     if let Some(slo) = args.get_f64("slo") {
         cfg.slo_latency = slo;
+    }
+    if let Some(mc) = args.get("model-control") {
+        match crate::pipeline::system::ModelControl::parse(&mc) {
+            Some(m) => cfg.model_control = m,
+            None => {
+                eprintln!("unknown --model-control {mc:?} (want explicit|none)");
+                return 2;
+            }
+        }
     }
     let control = control_config(args, cfg.slo_latency);
     // τ-side loops need the admission controller in front.
@@ -200,11 +293,20 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(mut gw) => {
             println!("greenflow gateway listening on http://{}", gw.addr());
             println!(
-                "v2: GET /v2/health/live|ready  GET /v2/models[/{{name}}]  \
-                 POST /v2/models/{{name}}/infer  GET /v2/control/loops  \
+                "v2: GET /v2/health/live|ready  GET /v2/models[/{{name}}[/versions/{{v}}]]  \
+                 POST /v2/models/{{name}}[/versions/{{v}}]/infer  GET /v2/control/loops  \
                  GET /v2/admission/stats"
             );
+            println!(
+                "repository: POST /v2/repository/index  \
+                 POST /v2/repository/models/{{name}}/load|unload"
+            );
             println!("legacy: POST /infer  GET /metrics  GET /models  GET /health");
+            println!(
+                "models: {} of {} registered loaded (load more with `greenflow repo`)",
+                system.ready_models(),
+                system.model_names().len(),
+            );
             if system.control_plane_running() {
                 println!("control plane: {}", system.control_loop_names().join(", "));
             }
@@ -369,6 +471,22 @@ mod tests {
     fn unknown_command_fails() {
         assert_eq!(run(&sv(&["frobnicate"])), 2);
         assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn repo_subcommand_validates_arguments() {
+        // Missing operation / unknown operation / missing --model are
+        // usage errors before any connection is attempted.
+        assert_eq!(run(&sv(&["repo"])), 2);
+        assert_eq!(run(&sv(&["repo", "frobnicate"])), 2);
+        assert_eq!(run(&sv(&["repo", "load"])), 2);
+        assert_eq!(run(&sv(&["repo", "load", "--model", "m", "--version", "0"])), 2);
+        assert_eq!(run(&sv(&["repo", "index", "--addr", "not-an-addr"])), 2);
+    }
+
+    #[test]
+    fn serve_rejects_unknown_model_control() {
+        assert_eq!(run(&sv(&["serve", "--model-control", "frobnicate"])), 2);
     }
 
     #[test]

@@ -63,6 +63,75 @@ pub struct InstanceGroup {
     pub kind: String,
 }
 
+/// `version_policy { ... }` block (Triton semantics): which numbered
+/// version directories serve when the model loads without an explicit
+/// version. Absent from the config, the registry defaults to
+/// `Latest { num: 1 }` — serve only the newest version.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VersionPolicy {
+    /// The `num` highest version numbers present on disk.
+    Latest { num: usize },
+    /// Every version present on disk.
+    All,
+    /// Exactly these versions (loading errors if one is missing).
+    Specific { versions: Vec<u64> },
+}
+
+impl Default for VersionPolicy {
+    fn default() -> Self {
+        VersionPolicy::Latest { num: 1 }
+    }
+}
+
+impl VersionPolicy {
+    /// Select the serving set from the available version numbers
+    /// (sorted ascending). `Specific` returns its configured list
+    /// verbatim — the caller validates existence so a missing version
+    /// is a load error, not a silent no-op.
+    pub fn select(&self, available: &[u64]) -> Vec<u64> {
+        match self {
+            VersionPolicy::Latest { num } => {
+                let n = (*num).min(available.len());
+                available[available.len() - n..].to_vec()
+            }
+            VersionPolicy::All => available.to_vec(),
+            VersionPolicy::Specific { versions } => versions.clone(),
+        }
+    }
+
+    fn parse(n: &PbNode) -> Result<VersionPolicy, ConfigError> {
+        if let Some(l) = n.get_msg("latest") {
+            let num = l.get_int("num_versions").unwrap_or(1);
+            if num < 1 {
+                return Err(ConfigError::Invalid(
+                    "version_policy.latest.num_versions",
+                    num.to_string(),
+                ));
+            }
+            return Ok(VersionPolicy::Latest { num: num as usize });
+        }
+        if n.get_msg("all").is_some() {
+            return Ok(VersionPolicy::All);
+        }
+        if let Some(s) = n.get_msg("specific") {
+            let raw = s.get_int_list("versions").unwrap_or_default();
+            if raw.is_empty() || raw.iter().any(|&v| v < 1) {
+                return Err(ConfigError::Invalid(
+                    "version_policy.specific.versions",
+                    format!("{raw:?}"),
+                ));
+            }
+            return Ok(VersionPolicy::Specific {
+                versions: raw.iter().map(|&v| v as u64).collect(),
+            });
+        }
+        Err(ConfigError::Invalid(
+            "version_policy",
+            "expected latest { num_versions: N } / all {} / specific { versions: [..] }".into(),
+        ))
+    }
+}
+
 /// Fully-parsed model serving config.
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
@@ -73,6 +142,8 @@ pub struct ModelConfig {
     pub outputs: Vec<TensorSpec>,
     pub dynamic_batching: Option<DynamicBatching>,
     pub instance_groups: Vec<InstanceGroup>,
+    /// None = registry default (`latest { num_versions: 1 }`).
+    pub version_policy: Option<VersionPolicy>,
 }
 
 impl ModelConfig {
@@ -124,6 +195,11 @@ impl ModelConfig {
             })
             .collect();
 
+        let version_policy = match root.get_msg("version_policy") {
+            Some(n) => Some(VersionPolicy::parse(n)?),
+            None => None,
+        };
+
         Ok(ModelConfig {
             name,
             platform,
@@ -132,6 +208,7 @@ impl ModelConfig {
             outputs,
             dynamic_batching,
             instance_groups,
+            version_policy,
         })
     }
 
@@ -241,6 +318,60 @@ output [ { name: "y" data_type: TYPE_FP32 dims: [ 1 ] } ]
         assert!(c.dynamic_batching.is_none());
         assert_eq!(c.total_instances(), 1);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn version_policy_parses_all_forms() {
+        let base = "name: \"m\"\nmax_batch_size: 1\n\
+                    input [ { name: \"x\" data_type: TYPE_FP32 dims: [ 3 ] } ]\n";
+
+        let c = ModelConfig::from_pbtxt(base).unwrap();
+        assert_eq!(c.version_policy, None);
+
+        let c = ModelConfig::from_pbtxt(
+            &format!("{base}version_policy {{ latest {{ num_versions: 2 }} }}"),
+        )
+        .unwrap();
+        assert_eq!(c.version_policy, Some(VersionPolicy::Latest { num: 2 }));
+
+        let c = ModelConfig::from_pbtxt(&format!("{base}version_policy {{ all {{ }} }}"))
+            .unwrap();
+        assert_eq!(c.version_policy, Some(VersionPolicy::All));
+
+        let c = ModelConfig::from_pbtxt(
+            &format!("{base}version_policy {{ specific {{ versions: [ 1, 3 ] }} }}"),
+        )
+        .unwrap();
+        assert_eq!(
+            c.version_policy,
+            Some(VersionPolicy::Specific { versions: vec![1, 3] })
+        );
+
+        // Malformed policies are config errors, never silent defaults.
+        assert!(ModelConfig::from_pbtxt(&format!("{base}version_policy {{ }}")).is_err());
+        assert!(ModelConfig::from_pbtxt(
+            &format!("{base}version_policy {{ latest {{ num_versions: 0 }} }}")
+        )
+        .is_err());
+        assert!(ModelConfig::from_pbtxt(
+            &format!("{base}version_policy {{ specific {{ versions: [ 0 ] }} }}")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn version_policy_selection() {
+        let avail = [1u64, 2, 5];
+        assert_eq!(VersionPolicy::default().select(&avail), vec![5]);
+        assert_eq!(VersionPolicy::Latest { num: 2 }.select(&avail), vec![2, 5]);
+        assert_eq!(VersionPolicy::Latest { num: 9 }.select(&avail), vec![1, 2, 5]);
+        assert_eq!(VersionPolicy::All.select(&avail), vec![1, 2, 5]);
+        assert_eq!(
+            VersionPolicy::Specific { versions: vec![2, 7] }.select(&avail),
+            vec![2, 7],
+            "existence is validated by the caller"
+        );
+        assert!(VersionPolicy::default().select(&[]).is_empty());
     }
 
     #[test]

@@ -95,6 +95,17 @@ impl ControlPlane {
         self.loops.lock().unwrap().push(l);
     }
 
+    /// Remove a loop by name (models detach their per-path loops on
+    /// unload); returns whether one was present. The loop's signal and
+    /// apply closures are dropped with it, releasing anything they
+    /// captured (e.g. a version handle keeping engine threads alive).
+    pub fn remove_loop(&self, name: &str) -> bool {
+        let mut g = self.loops.lock().unwrap();
+        let before = g.len();
+        g.retain(|l| l.name() != name);
+        g.len() != before
+    }
+
     pub fn loop_names(&self) -> Vec<String> {
         self.loops.lock().unwrap().iter().map(|l| l.name().to_string()).collect()
     }
@@ -395,6 +406,20 @@ mod tests {
         signal.set(1.0);
         plane.tick(0.1);
         assert!(handle.get() > 0.0);
+    }
+
+    #[test]
+    fn remove_loop_detaches_by_name() {
+        let plane = ControlPlane::new();
+        let handle = Adaptive::new(0.0f64);
+        let signal = Adaptive::new(0.9f64);
+        plane.add_loop(rate_loop(handle.clone(), signal.clone()));
+        assert!(plane.remove_loop("test"));
+        assert!(plane.is_empty());
+        assert!(!plane.remove_loop("test"), "second removal is a no-op");
+        // A removed loop no longer steps.
+        plane.tick(0.1);
+        assert_eq!(handle.get(), 0.0);
     }
 
     #[test]

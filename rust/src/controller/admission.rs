@@ -57,11 +57,13 @@ impl AdmissionStats {
 
 /// The bio-inspired closed-loop controller.
 ///
-/// The effective threshold is `schedule.τ(t − t0) + rate_correction +
-/// energy_correction`: the two corrections are [`Adaptive<f64>`] handles
-/// (0.0 unless a control loop drives them), so the static-schedule hot
-/// path pays only two relaxed atomic loads. `Clone` shares the handles —
-/// a cloned controller sees the same live corrections.
+/// The effective threshold is `schedule.τ(t − t0) + rate_correction`
+/// (an [`Adaptive<f64>`] handle, 0.0 unless the adaptive-τ loop drives
+/// it — one relaxed atomic load on the hot path), plus any per-call
+/// bias passed to [`AdmissionController::decide_biased`] — how the
+/// per-model energy-budget pacers tighten one model's admission.
+/// `Clone` shares the handle — a cloned controller sees the same live
+/// correction.
 #[derive(Debug, Clone)]
 pub struct AdmissionController {
     cfg: ControllerConfig,
@@ -70,8 +72,6 @@ pub struct AdmissionController {
     t0: f64,
     /// Live τ correction from the admission-rate → τ servo.
     rate_correction: Adaptive<f64>,
-    /// Live τ correction from the energy-budget pacer.
-    energy_correction: Adaptive<f64>,
 }
 
 impl AdmissionController {
@@ -82,7 +82,6 @@ impl AdmissionController {
             stats: AdmissionStats::default(),
             t0: 0.0,
             rate_correction: Adaptive::new(0.0),
-            energy_correction: Adaptive::new(0.0),
         }
     }
 
@@ -105,11 +104,11 @@ impl AdmissionController {
     }
 
     /// Current threshold at absolute time `t`: the configured schedule
-    /// plus whatever corrections the control loops have published.
+    /// plus whatever correction the adaptive-τ loop has published.
+    /// Per-model energy-budget biases ride in per call via
+    /// [`AdmissionController::decide_biased`], not through shared state.
     pub fn tau_at(&self, t: f64) -> f64 {
-        self.cfg.schedule.tau(t - self.t0)
-            + self.rate_correction.get()
-            + self.energy_correction.get()
+        self.cfg.schedule.tau(t - self.t0) + self.rate_correction.get()
     }
 
     /// Handle the adaptive-τ loop writes (admission-rate → τ servo).
@@ -117,22 +116,19 @@ impl AdmissionController {
         self.rate_correction.handle()
     }
 
-    /// Handle the energy-budget pacer writes (positive = stricter).
-    pub fn energy_correction_handle(&self) -> Adaptive<f64> {
-        self.energy_correction.handle()
-    }
-
     /// Score a request without committing to a decision (used by the
     /// landscape sketches).
     pub fn score(&self, x: &CostInputs) -> f64 {
         x.j(&self.cfg.weights)
     }
-}
 
-impl AdmissionPolicy for AdmissionController {
-    fn decide(&mut self, x: &CostInputs, t: f64) -> Decision {
+    /// Decide with an extra per-call τ bias on top of the schedule and
+    /// the global corrections — how per-model energy-budget pacers
+    /// tighten one model's admission without fighting over the shared
+    /// correction cell (positive bias = stricter).
+    pub fn decide_biased(&mut self, x: &CostInputs, t: f64, tau_bias: f64) -> Decision {
         let j = x.j(&self.cfg.weights);
-        let tau = self.tau_at(t);
+        let tau = self.tau_at(t) + tau_bias;
         self.stats.last_j = j;
         self.stats.last_tau = tau;
         // Paper Eq. 2: admit iff J(x) >= tau(t).
@@ -150,6 +146,12 @@ impl AdmissionPolicy for AdmissionController {
             };
             Decision::Skip { j, tau, reason, cacheable: self.cfg.respond_from_cache }
         }
+    }
+}
+
+impl AdmissionPolicy for AdmissionController {
+    fn decide(&mut self, x: &CostInputs, t: f64) -> Decision {
+        self.decide_biased(x, t, 0.0)
     }
 
     fn name(&self) -> &'static str {
@@ -408,16 +410,26 @@ mod tests {
     }
 
     #[test]
-    fn correction_handles_shift_tau() {
+    fn correction_handle_shifts_tau() {
         let c = controller(ThresholdSchedule::Constant { tau: 0.5 });
         assert_eq!(c.tau_at(0.0), 0.5);
         c.rate_correction_handle().set(0.2);
-        c.energy_correction_handle().set(0.05);
-        assert!((c.tau_at(0.0) - 0.75).abs() < 1e-12);
-        // a clone shares the live corrections
+        assert!((c.tau_at(0.0) - 0.7).abs() < 1e-12);
+        // a clone shares the live correction
         let clone = c.clone();
         c.rate_correction_handle().set(-0.1);
-        assert!((clone.tau_at(0.0) - 0.45).abs() < 1e-12);
+        assert!((clone.tau_at(0.0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_call_bias_shifts_the_threshold() {
+        let mut c = controller(ThresholdSchedule::Constant { tau: 0.5 });
+        let x = inputs(0.0); // J = 2/3 on an idle system
+        assert!(c.decide_biased(&x, 0.0, 0.0).admitted());
+        // A per-model energy pacer pushing +0.3 makes the same request skip.
+        let d = c.decide_biased(&x, 0.0, 0.3);
+        assert!(!d.admitted());
+        assert!((d.tau() - 0.8).abs() < 1e-12, "bias rides on τ: {}", d.tau());
     }
 
     #[test]

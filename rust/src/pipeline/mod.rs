@@ -16,6 +16,11 @@
 //! Every reply carries exec time + energy attribution; the meter EWMA and
 //! queue depth feed back into the next admission decision — the paper's
 //! closed loop (Fig. 2).
+//!
+//! Paths are owned per **model version**: [`system::VersionHandle`]
+//! bundles one version's direct engine + batched path, attached and
+//! detached at runtime by the `/v2/repository` lifecycle API (see
+//! [`crate::runtime::registry`]).
 
 pub mod batched;
 pub mod direct;
@@ -24,5 +29,5 @@ pub mod worker;
 
 pub use batched::BatchedPath;
 pub use direct::DirectPath;
-pub use system::{InferResult, ServingSystem, SystemConfig};
+pub use system::{InferResult, ModelControl, ServingSystem, SubmitOptions, SystemConfig};
 pub use worker::{InstancePool, Job};

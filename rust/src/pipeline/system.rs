@@ -2,32 +2,54 @@
 //! the dual-path stack, with energy/latency feedback wired back into the
 //! next admission decision.
 //!
+//! Since the lifecycle redesign the system serves from an atomically
+//! swapped **snapshot** of per-model, per-version handles instead of a
+//! boot-time repository scan: [`crate::runtime::registry::ModelRegistry`]
+//! owns the `Unloaded → Loading → Ready → Unloading` state machines and
+//! this module owns the resources — each `Ready` version gets its own
+//! direct engine and (screener excepted) batched path, attached by
+//! [`ServingSystem::load_model`] and detached by
+//! [`ServingSystem::unload_model`] without restarting the server. The
+//! hot path resolves `Arc<VersionHandle>`s from the snapshot (one brief
+//! uncontended read-lock, never held across inference); in-flight
+//! requests keep their handle's engines alive through the `Arc` itself,
+//! so an unload drains naturally — new requests see a typed
+//! [`RuntimeError::ModelUnavailable`] (HTTP 503) the moment the swap
+//! lands.
+//!
 //! Beyond the per-request loop, the system can boot a
 //! [`ControlPlane`](crate::control::ControlPlane) from
 //! [`ControlPlaneConfig`]: a background tick that reads the
-//! [`WindowedMetrics`] aggregator (fed from the existing latency/energy
-//! event sites) and drives the adaptive knobs — τ corrections, batcher
-//! queue-delay windows, and the router's QPS threshold — through their
-//! `Adaptive` handles.
+//! [`WindowedMetrics`] aggregator and drives the adaptive knobs — τ
+//! corrections, batcher queue-delay windows, the router's QPS threshold,
+//! and one energy-budget pacer **per loaded batched path**
+//! (`energy_budget.<model>/<version>`), each attached and detached with
+//! its version.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::batching::policy::BatcherPolicy;
+use crate::configsys::ModelConfig;
 use crate::control::law::{Aimd, BudgetPacer, SetpointTracker};
-use crate::control::{Adaptive, ControlLoop, ControlPlane, ControlPlaneConfig, WindowedMetrics};
+use crate::control::{
+    Adaptive, ControlLoop, ControlPlane, ControlPlaneConfig, EnergyWindow, WindowedMetrics,
+};
 use crate::controller::cache::{CachedResponse, ResponseCache};
 use crate::controller::cost::CostInputs;
-use crate::controller::{AdmissionController, AdmissionPolicy, ControllerConfig, Decision};
+use crate::controller::{AdmissionController, ControllerConfig, Decision};
 use crate::energy::meter::{EnergyMeter, MeterMode};
 use crate::energy::profile::DeviceProfile;
 use crate::models;
 use crate::models::inputgen;
 use crate::router::{PathKind, RoutePolicy, Router};
-use crate::runtime::engine::ExecMode;
-use crate::runtime::repository::Repository;
+use crate::runtime::engine::{ExecMode, ExecStats};
+use crate::runtime::manifest::ModelManifest;
+use crate::runtime::registry::{LoadStats, ModelRegistry, VersionInfo};
+use crate::runtime::tensor::OutputBatch;
 use crate::runtime::RuntimeError;
 use crate::stats::LatencyHistogram;
 use crate::util::{Clock, SystemClock};
@@ -35,6 +57,32 @@ use crate::workload::stream::{Priority, Request};
 
 use super::batched::BatchedPath;
 use super::direct::DirectPath;
+
+/// How long an unload waits for in-flight requests to finish before
+/// letting the last request thread tear the paths down on its own.
+const UNLOAD_DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Model-control mode (Triton's `--model-control-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ModelControl {
+    /// Load every model's policy versions at boot; the repository API
+    /// can still swap versions afterwards.
+    #[default]
+    None,
+    /// Start with nothing loaded; models serve only after an explicit
+    /// `POST /v2/repository/models/{name}/load`.
+    Explicit,
+}
+
+impl ModelControl {
+    pub fn parse(s: &str) -> Option<ModelControl> {
+        match s {
+            "none" => Some(ModelControl::None),
+            "explicit" => Some(ModelControl::Explicit),
+            _ => None,
+        }
+    }
+}
 
 /// System configuration.
 #[derive(Debug, Clone)]
@@ -59,6 +107,8 @@ pub struct SystemConfig {
     pub route: RoutePolicy,
     /// None = no background control loops (all knobs stay static).
     pub control: Option<ControlPlaneConfig>,
+    /// Whether models load at boot or only via the repository API.
+    pub model_control: ModelControl,
 }
 
 impl SystemConfig {
@@ -76,6 +126,7 @@ impl SystemConfig {
             cache_clusters: 256,
             route: RoutePolicy::adaptive(50.0),
             control: None,
+            model_control: ModelControl::None,
         }
     }
 
@@ -93,10 +144,16 @@ impl SystemConfig {
         self.control = Some(cfg);
         self
     }
+
+    pub fn with_model_control(mut self, mc: ModelControl) -> Self {
+        self.model_control = mc;
+        self
+    }
 }
 
-/// Per-submission options the v2 protocol carries (deadline + priority).
-/// The zero value (`Default`) reproduces plain `submit` semantics.
+/// Per-submission options the v2 protocol carries (deadline, priority,
+/// target version). The zero value (`Default`) reproduces plain
+/// `submit` semantics on the default (highest ready) version.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SubmitOptions {
     /// Absolute deadline on the system clock ([`ServingSystem::clock`]
@@ -107,6 +164,9 @@ pub struct SubmitOptions {
     /// Milliseconds the caller granted (kept for the error payload).
     pub timeout_ms: u64,
     pub priority: Priority,
+    /// Pin a specific model version (`/v2/models/{m}/versions/{v}/infer`);
+    /// None = the highest ready version.
+    pub version: Option<u64>,
 }
 
 impl SubmitOptions {
@@ -116,6 +176,7 @@ impl SubmitOptions {
             deadline: Some(now + timeout_ms as f64 / 1e3),
             timeout_ms,
             priority,
+            version: None,
         }
     }
 }
@@ -141,13 +202,129 @@ pub struct InferResult {
     pub tau: f64,
 }
 
+/// One `Ready` model version's attached serving resources. In-flight
+/// requests hold an `Arc` clone, so the engines and batcher threads
+/// survive an unload until the last request completes — that `Arc`
+/// refcount *is* the drain mechanism.
+pub struct VersionHandle {
+    model: String,
+    version: u64,
+    manifest: ModelManifest,
+    config: Option<ModelConfig>,
+    direct: DirectPath,
+    batched: Option<BatchedPath>,
+    stats: LoadStats,
+    /// Batcher queue-delay handle, kept for control-loop attach.
+    delay_handle: Option<Adaptive<u64>>,
+    /// Per-model windowed energy (feeds the `energy_budget.<model>/<v>`
+    /// pacer) and its freshness counter.
+    energy: Mutex<EnergyWindow>,
+    energy_events: AtomicU64,
+    /// τ bias the per-model pacer writes; read per decision.
+    energy_correction: Adaptive<f64>,
+}
+
+impl VersionHandle {
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    pub fn config(&self) -> Option<&ModelConfig> {
+        self.config.as_ref()
+    }
+
+    pub fn load_stats(&self) -> LoadStats {
+        self.stats
+    }
+
+    pub fn has_batched(&self) -> bool {
+        self.batched.is_some()
+    }
+
+    /// Current scheduler-queue depth (0 for batcher-less models).
+    pub fn queue_depth(&self) -> usize {
+        self.batched.as_ref().map(|b| b.queue_depth()).unwrap_or(0)
+    }
+}
+
+/// Immutable serving view: model → version → handle. Swapped whole on
+/// every load/unload; readers clone the `Arc` once and never block a
+/// writer during inference.
+#[derive(Default, Clone)]
+struct Snapshot {
+    models: BTreeMap<String, BTreeMap<u64, Arc<VersionHandle>>>,
+}
+
+impl Snapshot {
+    fn resolve(&self, model: &str, version: Option<u64>) -> Option<Arc<VersionHandle>> {
+        let versions = self.models.get(model)?;
+        match version {
+            Some(v) => versions.get(&v).cloned(),
+            // Default version = highest ready (Triton's "latest").
+            None => versions.values().next_back().cloned(),
+        }
+    }
+}
+
+/// The deadline error, with elapsed measured from when the budget
+/// started (deadline − timeout), not from the current call's entry: a
+/// later batch item that arrives already expired must not report
+/// "0 ms elapsed".
+fn deadline_error(opts: &SubmitOptions, fallback_start: f64, now: f64) -> RuntimeError {
+    let start = opts
+        .deadline
+        .map(|d| d - opts.timeout_ms as f64 / 1e3)
+        .unwrap_or(fallback_start);
+    RuntimeError::DeadlineExceeded {
+        elapsed_ms: ((now - start).max(0.0) * 1e3).round() as u64,
+        timeout_ms: opts.timeout_ms,
+    }
+}
+
+/// Freshness-gated windowed-p95 signal: NaN (hold the loop output)
+/// until new events landed since the previous tick — count-bounded
+/// windows would otherwise replay the last regime forever after
+/// traffic stops.
+fn fresh_p95(metrics: &Arc<WindowedMetrics>) -> Box<dyn FnMut() -> f64 + Send> {
+    let m = metrics.clone();
+    let mut last_events = 0u64;
+    Box::new(move || {
+        let ev = m.events();
+        if ev == last_events {
+            return f64::NAN;
+        }
+        last_events = ev;
+        let p95 = m.snapshot().p95_latency;
+        if p95 > 0.0 {
+            p95
+        } else {
+            f64::NAN
+        }
+    })
+}
+
+/// Outcome of the per-request admission pass (screener → J(x) vs τ(t)).
+enum AdmitOutcome {
+    /// Execute on the serving path; carry (j, τ) for the result.
+    Execute { j: f64, tau: f64 },
+    /// Answered without inference (cache / screener argmax).
+    Skip { result: InferResult },
+}
+
 /// The full serving system.
 pub struct ServingSystem {
     /// Declared first so the ticker thread stops before paths shut down.
     plane: Option<ControlPlane>,
-    repo: Repository,
-    direct: DirectPath,
-    batched: HashMap<String, BatchedPath>,
+    registry: ModelRegistry,
+    snapshot: RwLock<Arc<Snapshot>>,
     meter: Arc<EnergyMeter>,
     latency: Mutex<LatencyHistogram>,
     controller: Option<Arc<Mutex<AdmissionController>>>,
@@ -159,42 +336,12 @@ pub struct ServingSystem {
 }
 
 impl ServingSystem {
-    /// Boot the system: scan the repository, start the direct path (all
-    /// models on one engine) and one batched path per servable model
-    /// (batcher policy + instance count from its config.pbtxt).
+    /// Boot the system: scan the repository into the registry, start the
+    /// global control loops, then (unless `ModelControl::Explicit`) load
+    /// every model's policy versions. A boot-time load failure aborts
+    /// the start — a half-up default-mode server would silently 503.
     pub fn start(cfg: SystemConfig) -> Result<Self, RuntimeError> {
-        let repo = Repository::scan(&cfg.repo_root)?;
-        repo.validate()?;
-
-        let all_dirs: Vec<PathBuf> = repo.entries.values().map(|e| e.dir.clone()).collect();
-        let direct = DirectPath::start(all_dirs, cfg.exec_mode)?;
-
-        let mut batched = HashMap::new();
-        let mut delay_handles: Vec<(String, Adaptive<u64>)> = Vec::new();
-        for (name, entry) in &repo.entries {
-            if name == models::SCREENER {
-                continue; // the screener serves inline on the direct engine
-            }
-            let policy = entry
-                .config
-                .as_ref()
-                .map(BatcherPolicy::from_config)
-                .unwrap_or_else(|| BatcherPolicy::immediate(entry.manifest.max_bucket()));
-            delay_handles.push((name.clone(), policy.delay_handle()));
-            let instances = entry.config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
-            batched.insert(
-                name.clone(),
-                BatchedPath::start(
-                    entry.dir.clone(),
-                    policy,
-                    instances,
-                    cfg.queue_capacity,
-                    cfg.exec_mode,
-                    cfg.salt,
-                )?,
-            );
-        }
-
+        let registry = ModelRegistry::scan(&cfg.repo_root)?;
         let meter = Arc::new(EnergyMeter::new(cfg.device.clone(), cfg.meter_mode, 16.0));
         let controller = cfg
             .controller
@@ -202,14 +349,14 @@ impl ServingSystem {
             .map(|c| Arc::new(Mutex::new(AdmissionController::new(c))));
         let metrics = Arc::new(WindowedMetrics::new(64, 256));
         let router = Router::new(cfg.route.clone());
-        let plane = cfg.control.as_ref().and_then(|pc| {
-            Self::wire_control_plane(pc, &controller, &metrics, &router, &delay_handles)
-        });
-        Ok(ServingSystem {
+        let plane = cfg
+            .control
+            .as_ref()
+            .and_then(|pc| Self::wire_global_loops(pc, &controller, &metrics, &router));
+        let sys = ServingSystem {
             plane,
-            repo,
-            direct,
-            batched,
+            registry,
+            snapshot: RwLock::new(Arc::new(Snapshot::default())),
             meter,
             latency: Mutex::new(LatencyHistogram::for_latency()),
             controller,
@@ -218,44 +365,29 @@ impl ServingSystem {
             router: Mutex::new(router),
             clock: SystemClock::new(),
             cfg,
-        })
+        };
+        if sys.cfg.model_control == ModelControl::None {
+            for name in sys.registry.model_names() {
+                sys.load_model(&name, None)?;
+            }
+        }
+        Ok(sys)
     }
 
-    /// Build and start the background control loops (Observe → Decide →
-    /// Act) requested by `pc`. Returns None when nothing is enabled.
-    fn wire_control_plane(
+    /// Build and start the background control plane with the *global*
+    /// loops (τ servo, router threshold). Per-model loops (batcher
+    /// AIMD, energy-budget pacers) attach per loaded version — the
+    /// plane ticks even while empty so later loads find it running.
+    fn wire_global_loops(
         pc: &ControlPlaneConfig,
         controller: &Option<Arc<Mutex<AdmissionController>>>,
         metrics: &Arc<WindowedMetrics>,
         router: &Router,
-        delay_handles: &[(String, Adaptive<u64>)],
     ) -> Option<ControlPlane> {
         if !pc.any_enabled() {
             return None;
         }
         let mut plane = ControlPlane::new();
-
-        // Freshness gate shared by the latency/energy signals: windowed
-        // metrics are count-bounded, so after traffic stops they would
-        // replay the last regime's values forever. A signal only counts
-        // as observed when new events landed since the previous tick.
-        let fresh_p95 = |metrics: &Arc<WindowedMetrics>| {
-            let m = metrics.clone();
-            let mut last_events = 0u64;
-            move || {
-                let ev = m.events();
-                if ev == last_events {
-                    return f64::NAN; // stale window: hold the output
-                }
-                last_events = ev;
-                let p95 = m.snapshot().p95_latency;
-                if p95 > 0.0 {
-                    p95
-                } else {
-                    f64::NAN
-                }
-            }
-        };
 
         // Adaptive τ: windowed admission rate → τ correction.
         if let (Some(tc), Some(ctrl)) = (&pc.adaptive_tau, controller) {
@@ -286,36 +418,6 @@ impl ServingSystem {
             ));
         }
 
-        // AIMD batch delay: windowed p95 vs SLO → queue-delay window µs.
-        // One loop per model, seeded from *its own* config.pbtxt delay, so
-        // per-model tuning survives: the probe ceiling is 4× the configured
-        // window (capped by max_us), and models configured with no window
-        // (immediate policies, delay 0) are left alone — adaptivity must
-        // not introduce delay where the operator asked for none.
-        if let Some(dc) = &pc.adaptive_batch_delay {
-            for (model, handle) in delay_handles.iter().filter(|(_, h)| h.get() > 0) {
-                let configured = handle.get();
-                let max_us = dc.max_us.min(configured.saturating_mul(4)).max(dc.min_us);
-                let initial = configured.clamp(dc.min_us, max_us);
-                let law = Aimd::new(
-                    initial as f64,
-                    dc.slo_p95_secs,
-                    dc.increase_us as f64,
-                    dc.decrease,
-                    dc.min_us as f64,
-                    max_us as f64,
-                );
-                let h = handle.clone();
-                let apply = move |v: f64| h.set(v.max(0.0).round() as u64);
-                plane.add_loop(ControlLoop::new(
-                    format!("batch_delay_us.{model}"),
-                    Box::new(law),
-                    Box::new(fresh_p95(metrics)),
-                    Box::new(apply),
-                ));
-            }
-        }
-
         // AIMD router threshold: SLO pressure shifts the direct/batched
         // split toward the batched path (threshold drops).
         if let Some(rc) = &pc.adaptive_router {
@@ -334,47 +436,297 @@ impl ServingSystem {
                 plane.add_loop(ControlLoop::new(
                     "router_qps_threshold",
                     Box::new(law),
-                    Box::new(fresh_p95(metrics)),
+                    fresh_p95(metrics),
                     Box::new(move |v| handle.set(v)),
                 ));
             }
         }
 
-        // Energy-budget pacing: windowed watts over budget → positive τ
-        // correction.
-        if let (Some(ec), Some(ctrl)) = (&pc.energy_budget, controller) {
-            let handle = ctrl.lock().unwrap().energy_correction_handle();
-            let m = metrics.clone();
-            let mut last_events = 0u64;
-            // Stale window ⇒ no inference ran ⇒ attributed draw is ~0 W:
-            // report that (decaying the correction) rather than replaying
-            // the last burst's watts and ratcheting τ upward while idle.
-            let signal = move || {
-                let ev = m.events();
-                if ev == last_events {
-                    return 0.0;
-                }
-                last_events = ev;
-                m.snapshot().watts
-            };
-            let law = BudgetPacer::new(ec.budget_watts, ec.gain, 0.0, ec.max_correction);
-            plane.add_loop(ControlLoop::new(
-                "energy_tau_correction",
-                Box::new(law),
-                Box::new(signal),
-                Box::new(move |v| handle.set(v)),
-            ));
-        }
-
-        if plane.is_empty() {
-            return None;
-        }
         plane.start(Duration::from_secs_f64(pc.tick_secs.max(1e-3)));
         Some(plane)
     }
 
-    pub fn repository(&self) -> &Repository {
-        &self.repo
+    /// Attach the per-version control loops (batcher-delay AIMD, the
+    /// per-model energy-budget pacer) for a freshly loaded handle.
+    fn attach_loops(&self, handle: &Arc<VersionHandle>) {
+        let (Some(plane), Some(pc)) = (&self.plane, &self.cfg.control) else {
+            return;
+        };
+        let key = format!("{}/{}", handle.model, handle.version);
+
+        // AIMD batch delay, seeded from *this* version's configured
+        // window (probe ceiling 4× the configured window, capped by
+        // max_us); models configured with no window are left alone —
+        // adaptivity must not introduce delay where the operator asked
+        // for none.
+        if let (Some(dc), Some(delay)) = (&pc.adaptive_batch_delay, &handle.delay_handle) {
+            let configured = delay.get();
+            if configured > 0 {
+                let max_us = dc.max_us.min(configured.saturating_mul(4)).max(dc.min_us);
+                let initial = configured.clamp(dc.min_us, max_us);
+                let law = Aimd::new(
+                    initial as f64,
+                    dc.slo_p95_secs,
+                    dc.increase_us as f64,
+                    dc.decrease,
+                    dc.min_us as f64,
+                    max_us as f64,
+                );
+                let h = delay.clone();
+                plane.add_loop(ControlLoop::new(
+                    format!("batch_delay_us.{key}"),
+                    Box::new(law),
+                    fresh_p95(&self.metrics),
+                    Box::new(move |v| h.set(v.max(0.0).round() as u64)),
+                ));
+            }
+        }
+
+        // One BudgetPacer per batched path (PR-4: replaces the single
+        // global pacer): watches this model's windowed watts, writes
+        // this model's τ bias. A stale window means the model ran
+        // nothing ⇒ report ~0 W so the correction decays while idle.
+        if let Some(ec) = &pc.energy_budget {
+            if handle.batched.is_some() {
+                let law = BudgetPacer::new(ec.budget_watts, ec.gain, 0.0, ec.max_correction);
+                let sig = handle.clone();
+                let mut last_events = 0u64;
+                let signal = move || {
+                    let ev = sig.energy_events.load(Ordering::Relaxed);
+                    if ev == last_events {
+                        return 0.0;
+                    }
+                    last_events = ev;
+                    sig.energy.lock().unwrap().watts()
+                };
+                let out = handle.energy_correction.handle();
+                plane.add_loop(ControlLoop::new(
+                    format!("energy_budget.{key}"),
+                    Box::new(law),
+                    Box::new(signal),
+                    Box::new(move |v| out.set(v)),
+                ));
+            }
+        }
+    }
+
+    fn detach_loops(&self, handle: &VersionHandle) {
+        if let Some(plane) = &self.plane {
+            let key = format!("{}/{}", handle.model, handle.version);
+            plane.remove_loop(&format!("batch_delay_us.{key}"));
+            plane.remove_loop(&format!("energy_budget.{key}"));
+        }
+    }
+
+    // ------------------------------------------------------ lifecycle
+
+    /// Load a model: explicit `version`, or the config's version policy.
+    /// Returns the newly loaded version numbers (empty when everything
+    /// targeted was already `Ready`). On failure the registry records
+    /// `Failed{reason}` for the version that broke and the error is
+    /// returned (earlier versions in the same request stay loaded).
+    pub fn load_model(&self, model: &str, version: Option<u64>) -> Result<Vec<u64>, RuntimeError> {
+        let targets = self.registry.begin_load(model, version)?;
+        let mut loaded = Vec::with_capacity(targets.len());
+        for (i, info) in targets.iter().enumerate() {
+            match self.attach_version(model, info) {
+                Ok(()) => loaded.push(info.version),
+                Err(e) => {
+                    self.registry.finish_load(model, info.version, Err(e.to_string()));
+                    // Sibling versions never attempted must not stay
+                    // stranded in Loading (which reads as "busy" to
+                    // every later load/unload) — put them back.
+                    for rest in &targets[i + 1..] {
+                        self.registry.abort_load(model, rest.version);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Unload a model version (or every ready version when `None`):
+    /// swap it out of the serving snapshot (new requests get
+    /// `ModelUnavailable` immediately), detach its control loops, then
+    /// wait — bounded — for in-flight requests to drain before the
+    /// engines shut down.
+    pub fn unload_model(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<Vec<u64>, RuntimeError> {
+        let targets = self.registry.begin_unload(model, version)?;
+        for &v in &targets {
+            let handle = {
+                let mut guard = self.snapshot.write().unwrap();
+                let mut next = (**guard).clone();
+                let h = next.models.get_mut(model).and_then(|m| m.remove(&v));
+                if next.models.get(model).is_some_and(|m| m.is_empty()) {
+                    next.models.remove(model);
+                }
+                *guard = Arc::new(next);
+                h
+            };
+            if let Some(handle) = handle {
+                self.detach_loops(&handle);
+                // In-flight requests hold their own Arc clone; once the
+                // count reaches 1 the engines are idle and this drop
+                // joins their threads. Past the timeout the last request
+                // thread pays the teardown instead — either way no new
+                // request can reach the version.
+                let deadline = Instant::now() + UNLOAD_DRAIN_TIMEOUT;
+                while Arc::strong_count(&handle) > 1 && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                drop(handle);
+            }
+            self.registry.finish_unload(model, v);
+        }
+        Ok(targets)
+    }
+
+    /// Spin up one version's engines and swap it into the snapshot.
+    fn attach_version(&self, model: &str, info: &VersionInfo) -> Result<(), RuntimeError> {
+        let t0 = Instant::now();
+        let manifest = ModelManifest::load(&info.dir)?;
+        if manifest.name != model {
+            return Err(RuntimeError::Manifest(format!(
+                "{}: manifest name {:?} does not match model {:?}",
+                info.dir.display(),
+                manifest.name,
+                model
+            )));
+        }
+        let config = self.registry.config(model)?;
+        if let Some(c) = &config {
+            // Shape/dtype discipline (the paper's §VII "practical
+            // gotchas"), enforced at load so a bad config is a typed
+            // 400, not a runtime surprise.
+            c.validate().map_err(|e| RuntimeError::InvalidConfig {
+                model: model.to_string(),
+                reason: e.to_string(),
+            })?;
+            if manifest.bucket_for(c.max_batch_size).is_none() {
+                return Err(RuntimeError::InvalidConfig {
+                    model: model.to_string(),
+                    reason: format!(
+                        "config max_batch_size {} exceeds buckets {:?}",
+                        c.max_batch_size, manifest.batch_buckets
+                    ),
+                });
+            }
+            if let Some(inp) = c.inputs.first() {
+                if inp.dims != manifest.input_shape {
+                    return Err(RuntimeError::InvalidConfig {
+                        model: model.to_string(),
+                        reason: format!(
+                            "config dims {:?} != manifest {:?}",
+                            inp.dims, manifest.input_shape
+                        ),
+                    });
+                }
+            }
+        }
+
+        let direct = DirectPath::start(vec![info.dir.clone()], self.cfg.exec_mode)?;
+        let mut delay_handle = None;
+        let batched = if model == models::SCREENER {
+            None // the screener serves inline on its direct engine
+        } else {
+            let policy = config
+                .as_ref()
+                .map(BatcherPolicy::from_config)
+                .unwrap_or_else(|| BatcherPolicy::immediate(manifest.max_bucket()));
+            delay_handle = Some(policy.delay_handle());
+            let instances = config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
+            Some(BatchedPath::start(
+                info.dir.clone(),
+                policy,
+                instances,
+                self.cfg.queue_capacity,
+                self.cfg.exec_mode,
+                self.cfg.salt,
+            )?)
+        };
+
+        let load_secs = t0.elapsed().as_secs_f64();
+        let stats = LoadStats {
+            load_secs,
+            weight_bytes: manifest.weights_bytes() as u64,
+            // Estimated compile + weight-transfer energy: full draw on
+            // the metered device over the load interval.
+            est_load_joules: self.meter.profile().power_at(1.0) * load_secs,
+        };
+        let handle = Arc::new(VersionHandle {
+            model: model.to_string(),
+            version: info.version,
+            manifest,
+            config,
+            direct,
+            batched,
+            stats,
+            delay_handle,
+            energy: Mutex::new(EnergyWindow::new(64)),
+            energy_events: AtomicU64::new(0),
+            energy_correction: Adaptive::new(0.0),
+        });
+        {
+            let mut guard = self.snapshot.write().unwrap();
+            let mut next = (**guard).clone();
+            next.models
+                .entry(model.to_string())
+                .or_default()
+                .insert(info.version, handle.clone());
+            *guard = Arc::new(next);
+        }
+        self.attach_loops(&handle);
+        self.registry.finish_load(model, info.version, Ok(stats));
+        Ok(())
+    }
+
+    /// Resolve a servable handle. Distinguishes a model that is not in
+    /// the repository at all (`UnknownModel` → 404) from one with no
+    /// ready version matching the request (`ModelUnavailable` → 503).
+    fn resolve(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<Arc<VersionHandle>, RuntimeError> {
+        let snap = self.snapshot.read().unwrap().clone();
+        match snap.resolve(model, version) {
+            Some(h) => Ok(h),
+            None if self.registry.has_model(model) => {
+                Err(RuntimeError::ModelUnavailable { model: model.to_string() })
+            }
+            None => Err(RuntimeError::UnknownModel(model.to_string())),
+        }
+    }
+
+    // -------------------------------------------------- introspection
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// Every registered model name (loaded or not).
+    pub fn model_names(&self) -> Vec<String> {
+        self.registry.model_names()
+    }
+
+    /// Number of models with at least one ready version.
+    pub fn ready_models(&self) -> usize {
+        self.snapshot.read().unwrap().models.len()
+    }
+
+    /// The serving handle for a model version, if ready (None = default
+    /// version).
+    pub fn version_handle(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Option<Arc<VersionHandle>> {
+        self.snapshot.read().unwrap().resolve(model, version)
     }
 
     pub fn meter(&self) -> &EnergyMeter {
@@ -410,9 +762,9 @@ impl ServingSystem {
         self.cfg.queue_capacity
     }
 
-    /// Whether a model is servable on the batched path (has a batcher).
+    /// Whether a model's default version is servable on the batched path.
     pub fn has_batched_path(&self, model: &str) -> bool {
-        self.batched.contains_key(model)
+        self.version_handle(model, None).map(|h| h.has_batched()).unwrap_or(false)
     }
 
     /// Whether the background control plane is ticking.
@@ -445,45 +797,74 @@ impl ServingSystem {
         }
     }
 
-    /// Scheduler queue depth of a model's batched path.
+    /// Scheduler queue depth of a model's default-version batched path.
     pub fn queue_depth(&self, model: &str) -> usize {
-        self.batched.get(model).map(|p| p.queue_depth()).unwrap_or(0)
+        self.version_handle(model, None).map(|h| h.queue_depth()).unwrap_or(0)
     }
+
+    // -------------------------------------------------------- serving
 
     /// Execute a request on an explicit path, bypassing the controller
     /// (the Table II benchmark mode).
     pub fn infer_on(&self, req: &Request, path: PathKind) -> Result<InferResult, RuntimeError> {
+        let handle = self.resolve(&req.model, None)?;
+        self.infer_on_handle(&handle, req, path)
+    }
+
+    fn infer_on_handle(
+        &self,
+        handle: &Arc<VersionHandle>,
+        req: &Request,
+        path: PathKind,
+    ) -> Result<InferResult, RuntimeError> {
         let t0 = self.clock.now();
         // Arrival is observed at entry, not completion: concurrent workers
         // finishing out of order must not scramble the rate window.
         self.metrics.record_arrival(t0);
-        let entry = self.repo.get(&req.model)?;
         let (out, stats) = match path {
             PathKind::Direct => {
-                let input = inputgen::batch_for(&entry.manifest, &[req.seed], self.cfg.salt);
-                self.direct.infer(&req.model, input)?
+                let input = inputgen::batch_for(&handle.manifest, &[req.seed], self.cfg.salt);
+                handle.direct.infer(&req.model, input)?
             }
             PathKind::Batched => {
-                let p = self
-                    .batched
-                    .get(&req.model)
-                    .ok_or_else(|| RuntimeError::UnknownModel(req.model.clone()))?;
+                let p = handle.batched.as_ref().ok_or_else(|| {
+                    RuntimeError::InputMismatch(format!(
+                        "model {:?} has no batched path",
+                        req.model
+                    ))
+                })?;
                 p.infer(req.seed)?
             }
             PathKind::CacheSkip => {
                 return Err(RuntimeError::InputMismatch("cannot force cache path".into()))
             }
         };
+        self.finish_exec(handle, req, path, t0, &out, &stats)
+    }
+
+    /// Shared post-execution accounting: latency histogram + windowed
+    /// metrics, per-item energy attribution (plus the batched path's
+    /// scheduler wait burned at idle power — the per-request energy
+    /// premium Triton shows at batch=1 in Table II), and this handle's
+    /// own energy window for its budget pacer.
+    fn finish_exec(
+        &self,
+        handle: &Arc<VersionHandle>,
+        req: &Request,
+        path: PathKind,
+        t0: f64,
+        out: &OutputBatch,
+        stats: &ExecStats,
+    ) -> Result<InferResult, RuntimeError> {
         let latency = self.clock.now() - t0;
         self.latency.lock().unwrap().record(latency);
         self.metrics.record_latency(latency);
-        // Energy attribution: per-item share of the executed bucket, plus
-        // (batched path) the scheduler wait burned at idle power — this is
-        // the per-request energy premium Triton shows at batch=1 in
-        // Table II while the device sits idle inside the queue window.
-        let flops_item = entry.manifest.flops_per_item(stats.bucket.max(1));
+        let flops_item = handle.manifest.flops_per_item(stats.bucket.max(1));
         let reading = self.meter.record(flops_item, stats.exec_secs / stats.bucket.max(1) as f64);
-        self.metrics.record_joules(self.clock.now(), reading.joules);
+        let now = self.clock.now();
+        self.metrics.record_joules(now, reading.joules);
+        handle.energy.lock().unwrap().record(now, reading.joules);
+        handle.energy_events.fetch_add(1, Ordering::Relaxed);
         if path == PathKind::Batched {
             self.meter.record_idle((latency - stats.exec_secs).max(0.0));
         }
@@ -502,63 +883,62 @@ impl ServingSystem {
         })
     }
 
-    /// The closed-loop entry point (Fig. 2): screener → J(x) vs τ(t) →
-    /// route or answer from cache.
-    pub fn submit(&self, req: &Request, prefer: PathKind) -> Result<InferResult, RuntimeError> {
-        let Some(ctrl) = &self.controller else {
-            return self.infer_on(req, prefer);
-        };
-        let t0 = self.clock.now();
-
-        // 1. Cheap L(x) estimate: screener pass on the direct engine.
-        let entry = self.repo.get(&req.model)?;
-        let scr_manifest = self.repo.get(models::SCREENER).ok().map(|e| e.manifest.clone());
-        let (scr_entropy, scr_pred, scr_conf, scr_exec) = match &scr_manifest {
-            Some(m) if entry.manifest.input_kind == crate::runtime::InputKind::Tokens => {
-                let input = inputgen::batch_for(m, &[req.seed], self.cfg.salt);
-                let (o, s) = self.direct.infer(models::SCREENER, input)?;
-                (o.entropy[0] as f64, o.predicted(0), o.confidence(0), s.exec_secs)
+    /// The admission pass (Fig. 2 / Algorithm 1): screener pass for a
+    /// cheap L(x) estimate, assemble CostInputs from the live feedback
+    /// signals, compare J(x) against τ(t) + this model's energy-pacer
+    /// bias. A Skip is answered (and fully accounted) here.
+    fn admission_decision(
+        &self,
+        ctrl: &Arc<Mutex<AdmissionController>>,
+        handle: &Arc<VersionHandle>,
+        req: &Request,
+        t0: f64,
+    ) -> Result<AdmitOutcome, RuntimeError> {
+        // 1. Cheap L(x) estimate: screener pass on its direct engine
+        // (resolved from the live snapshot — an unloaded screener falls
+        // back to the request's latent-confidence entropy).
+        let screener = self.version_handle(models::SCREENER, None);
+        let (scr_entropy, scr_pred, scr_conf, scr_exec, scr_flops) = match &screener {
+            Some(s) if handle.manifest.input_kind == crate::runtime::InputKind::Tokens => {
+                let input = inputgen::batch_for(&s.manifest, &[req.seed], self.cfg.salt);
+                let (o, st) = s.direct.infer(models::SCREENER, input)?;
+                (
+                    o.entropy[0] as f64,
+                    o.predicted(0),
+                    o.confidence(0),
+                    st.exec_secs,
+                    s.manifest.flops_per_item(1),
+                )
             }
-            // Vision path has no screener model: use the latent-confidence
-            // entropy the request carries (cache-estimate stand-in).
-            _ => (req.entropy(), req.label, req.confidence as f32, 0.0),
+            // Vision path (or no screener loaded): use the latent-
+            // confidence entropy the request carries.
+            _ => (req.entropy(), req.label, req.confidence as f32, 0.0, 0.0),
         };
 
         // 2. Assemble CostInputs from the live feedback signals.
-        // Spike reference = 2x nominal per-request joules: the steady state
-        // sits at e_norm ~= 0.5 and a genuine energy spike drives it to 0.
-        let energy_ref = 2.0 * self.cfg.device.exec_energy(entry.manifest.flops_per_item(1));
+        // Spike reference = 2x nominal per-request joules: the steady
+        // state sits at e_norm ~= 0.5 and a genuine energy spike drives
+        // it to 0.
+        let energy_ref = 2.0 * self.cfg.device.exec_energy(handle.manifest.flops_per_item(1));
         let x = CostInputs {
             entropy: scr_entropy,
-            max_entropy: (entry.manifest.classes as f64).ln(),
+            max_entropy: (handle.manifest.classes as f64).ln(),
             energy_ewma: self.meter.ewma_joules(0.0),
             energy_ref,
-            queue_depth: self.queue_depth(&req.model),
+            queue_depth: handle.queue_depth(),
             queue_capacity: self.cfg.queue_capacity,
             p95_latency: self.p95(),
             slo_latency: self.cfg.slo_latency,
         };
 
-        // 3. Decide.
-        let decision = ctrl.lock().unwrap().decide(&x, t0);
+        // 3. Decide, biased by this model's energy-budget pacer.
+        let bias = handle.energy_correction.get();
+        let decision = ctrl.lock().unwrap().decide_biased(&x, t0, bias);
         match decision {
-            Decision::Admit { j, tau } => {
-                let mut r = self.infer_on(req, prefer)?;
-                r.j = j;
-                r.tau = tau;
-                // populate cache so future skips can answer
-                let sig =
-                    ResponseCache::signature(&req.model, req.seed, self.cfg.cache_clusters);
-                self.cache.lock().unwrap().put(
-                    sig,
-                    CachedResponse { label: r.predicted, confidence: r.confidence as f64 },
-                );
-                Ok(r)
-            }
+            Decision::Admit { j, tau } => Ok(AdmitOutcome::Execute { j, tau }),
             Decision::Skip { j, tau, .. } => {
                 // Answer from cache / screener argmax (Algorithm 1 line 9).
-                let sig =
-                    ResponseCache::signature(&req.model, req.seed, self.cfg.cache_clusters);
+                let sig = ResponseCache::signature(&req.model, req.seed, self.cfg.cache_clusters);
                 let cached = self.cache.lock().unwrap().get(sig);
                 let (label, conf) = match cached {
                     Some(c) => (c.label, c.confidence as f32),
@@ -567,29 +947,64 @@ impl ServingSystem {
                 let latency = self.clock.now() - t0;
                 self.latency.lock().unwrap().record(latency);
                 // Arrival recorded here (not at submit entry) so admitted
-                // requests are not double-counted by infer_on's tap; the
-                // recorded instant is still t0, and the rate window clamps
-                // any cross-thread ordering races.
+                // requests are not double-counted by the exec path's tap;
+                // the recorded instant is still t0, and the rate window
+                // clamps any cross-thread ordering races.
                 self.metrics.record_arrival(t0);
                 self.metrics.record_latency(latency);
                 // Energy: only the screener pass.
-                let scr_flops = scr_manifest.as_ref().map(|m| m.flops_per_item(1)).unwrap_or(0.0);
                 let reading = self.meter.record(scr_flops, scr_exec);
                 self.metrics.record_joules(self.clock.now(), reading.joules);
-                Ok(InferResult {
-                    request_id: req.id,
-                    predicted: label,
-                    confidence: conf,
-                    entropy: scr_entropy as f32,
-                    latency_secs: latency,
-                    exec_secs: scr_exec,
-                    bucket: 0,
-                    joules: reading.joules,
-                    path: PathKind::CacheSkip,
-                    j,
-                    tau,
+                Ok(AdmitOutcome::Skip {
+                    result: InferResult {
+                        request_id: req.id,
+                        predicted: label,
+                        confidence: conf,
+                        entropy: scr_entropy as f32,
+                        latency_secs: latency,
+                        exec_secs: scr_exec,
+                        bucket: 0,
+                        joules: reading.joules,
+                        path: PathKind::CacheSkip,
+                        j,
+                        tau,
+                    },
                 })
             }
+        }
+    }
+
+    /// The closed-loop entry point (Fig. 2): screener → J(x) vs τ(t) →
+    /// route or answer from cache.
+    pub fn submit(&self, req: &Request, prefer: PathKind) -> Result<InferResult, RuntimeError> {
+        let handle = self.resolve(&req.model, None)?;
+        self.submit_handle(&handle, req, prefer)
+    }
+
+    fn submit_handle(
+        &self,
+        handle: &Arc<VersionHandle>,
+        req: &Request,
+        prefer: PathKind,
+    ) -> Result<InferResult, RuntimeError> {
+        let Some(ctrl) = &self.controller else {
+            return self.infer_on_handle(handle, req, prefer);
+        };
+        let t0 = self.clock.now();
+        match self.admission_decision(ctrl, handle, req, t0)? {
+            AdmitOutcome::Execute { j, tau } => {
+                let mut r = self.infer_on_handle(handle, req, prefer)?;
+                r.j = j;
+                r.tau = tau;
+                // populate cache so future skips can answer
+                let sig = ResponseCache::signature(&req.model, req.seed, self.cfg.cache_clusters);
+                self.cache.lock().unwrap().put(
+                    sig,
+                    CachedResponse { label: r.predicted, confidence: r.confidence as f64 },
+                );
+                Ok(r)
+            }
+            AdmitOutcome::Skip { result } => Ok(result),
         }
     }
 
@@ -601,88 +1016,195 @@ impl ServingSystem {
         self.submit(req, path)
     }
 
-    /// The v2-protocol entry point: `submit`/`submit_auto` semantics plus
-    /// per-request deadline and priority.
-    ///
-    /// * `prefer = None` routes through the shared router (auto).
-    /// * Deadline: checked before any work (an already-expired request is
-    ///   refused for free) and again at completion — a result the caller
-    ///   can no longer use is reported as `DeadlineExceeded`, and the
-    ///   paper's accounting still charges the joules it burned.
-    /// * Priority: `High` bypasses the admission controller (the request
-    ///   is always executed); `Low` is shed with `Backpressure` once the
-    ///   model's scheduler queue passes ~80% occupancy, before it can
-    ///   displace normal work.
+    /// The v2-protocol single-request entry point: `submit`/`submit_auto`
+    /// semantics plus per-request deadline, priority, and target version
+    /// (one-item view of [`ServingSystem::submit_batch`]).
     pub fn submit_opts(
         &self,
         req: &Request,
         prefer: Option<PathKind>,
         opts: &SubmitOptions,
     ) -> Result<InferResult, RuntimeError> {
+        let mut results = self.submit_batch(std::slice::from_ref(req), prefer, opts)?;
+        results.pop().ok_or_else(|| RuntimeError::Xla("empty batch".into()))
+    }
+
+    /// The v2-protocol batch entry point. Semantics:
+    ///
+    /// * One routing decision and one deadline for the whole body (the
+    ///   deadline bounds the client's wait, not each item's share).
+    /// * `Priority::High` bypasses the admission controller; `Low` is
+    ///   shed with `Backpressure` once the target queue passes ~80%
+    ///   occupancy; `Normal` runs per-item admission (the screener runs
+    ///   per item).
+    /// * All-or-error: the first failure aborts and becomes the result.
+    /// * **Coalescing:** a multi-item body on the batched path enqueues
+    ///   every admitted item via `BatchedPath::submit` *before*
+    ///   collecting any reply, so the dynamic batcher can fuse them
+    ///   into one bucket instead of paying the queue delay per item.
+    pub fn submit_batch(
+        &self,
+        reqs: &[Request],
+        prefer: Option<PathKind>,
+        opts: &SubmitOptions,
+    ) -> Result<Vec<InferResult>, RuntimeError> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
         let t0 = self.clock.now();
-        // Elapsed is measured from when the budget started (deadline −
-        // timeout), not from this call's entry: a later batch item that
-        // arrives here already expired must not report "0 ms elapsed".
-        let deadline_err = |now: f64| {
-            let start = opts
-                .deadline
-                .map(|d| d - opts.timeout_ms as f64 / 1e3)
-                .unwrap_or(t0);
-            RuntimeError::DeadlineExceeded {
-                elapsed_ms: ((now - start).max(0.0) * 1e3).round() as u64,
-                timeout_ms: opts.timeout_ms,
-            }
-        };
         if let Some(d) = opts.deadline {
             if t0 >= d {
-                return Err(deadline_err(t0));
+                return Err(deadline_error(opts, t0, t0));
             }
         }
-        if opts.priority == Priority::Low {
-            // Low-priority shed: refuse before enqueueing once the queue
-            // sits above 4/5 of capacity (cheap head-room guard).
-            let depth = self.queue_depth(&req.model);
-            if depth * 5 >= self.cfg.queue_capacity * 4 {
-                return Err(RuntimeError::Backpressure(req.model.clone()));
-            }
-        }
+        let model = &reqs[0].model;
+        let handle = self.resolve(model, opts.version)?;
+
         let mut path = match prefer {
             Some(p) => p,
             None => self.router.lock().unwrap().route(t0),
         };
         // A model with no batcher cannot serve the batched path: pinning
         // "batched" there is a client error (not MODEL_NOT_FOUND — the
-        // model exists), and the model-blind auto router falls back to
-        // direct.
-        if path == PathKind::Batched && !self.batched.contains_key(&req.model) {
-            // A model missing from the repository entirely is still
-            // UnknownModel, not a claim about its (nonexistent) paths.
-            self.repo.get(&req.model)?;
+        // model exists and is loaded), and the model-blind auto router
+        // falls back to direct.
+        if path == PathKind::Batched && handle.batched.is_none() {
             if prefer.is_some() {
                 return Err(RuntimeError::InputMismatch(format!(
-                    "model {:?} has no batched path",
-                    req.model
+                    "model {model:?} has no batched path"
                 )));
             }
             path = PathKind::Direct;
         }
-        let result = if opts.priority == Priority::High {
-            // High priority bypasses the admission skip entirely.
-            self.infer_on(req, path)
-        } else {
-            self.submit(req, path)
-        };
-        match (result, opts.deadline) {
-            (Ok(r), Some(d)) => {
+        if opts.priority == Priority::Low {
+            // Low-priority shed: refuse before enqueueing once the queue
+            // sits above 4/5 of capacity (cheap head-room guard).
+            let depth = handle.queue_depth();
+            if depth * 5 >= self.cfg.queue_capacity * 4 {
+                return Err(RuntimeError::Backpressure(model.clone()));
+            }
+        }
+        let bypass_admission = opts.priority == Priority::High || self.controller.is_none();
+
+        // Single item, direct path, or batcher-less model: the plain
+        // sequential route.
+        if reqs.len() < 2 || path != PathKind::Batched {
+            let mut out = Vec::with_capacity(reqs.len());
+            for req in reqs {
+                if let Some(d) = opts.deadline {
+                    let now = self.clock.now();
+                    if now >= d {
+                        return Err(deadline_error(opts, t0, now));
+                    }
+                }
+                let r = if bypass_admission {
+                    self.infer_on_handle(&handle, req, path)?
+                } else {
+                    self.submit_handle(&handle, req, path)?
+                };
+                out.push(r);
+            }
+            if let Some(d) = opts.deadline {
                 let now = self.clock.now();
                 if now > d {
-                    Err(deadline_err(now))
-                } else {
-                    Ok(r)
+                    return Err(deadline_error(opts, t0, now));
                 }
             }
-            (r, _) => r,
+            return Ok(out);
         }
+
+        let batched = handle.batched.as_ref().expect("batched path checked above");
+
+        // Phase A — per-item admission (screener runs per item; skips
+        // answer immediately from cache).
+        enum ItemPlan {
+            Skip(InferResult),
+            Exec { j: f64, tau: f64 },
+        }
+        let mut plans = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            // Nothing is enqueued yet, so a deadline that expires during
+            // the per-item screener passes still refuses the whole body
+            // for free (same contract as the sequential path).
+            if let Some(d) = opts.deadline {
+                let now = self.clock.now();
+                if now >= d {
+                    return Err(deadline_error(opts, t0, now));
+                }
+            }
+            if bypass_admission {
+                plans.push(ItemPlan::Exec { j: f64::NAN, tau: f64::NAN });
+            } else {
+                let ctrl = self.controller.as_ref().expect("checked above");
+                match self.admission_decision(ctrl, &handle, req, self.clock.now())? {
+                    AdmitOutcome::Execute { j, tau } => plans.push(ItemPlan::Exec { j, tau }),
+                    AdmitOutcome::Skip { result } => plans.push(ItemPlan::Skip(result)),
+                }
+            }
+        }
+
+        // Phase B — enqueue every admitted item before collecting any
+        // reply, so one body fuses into shared buckets. An enqueue
+        // failure (backpressure) aborts the batch; receivers already
+        // enqueued are dropped and their replies discarded by the
+        // batcher (all-or-error contract).
+        type Reply = mpsc::Receiver<Result<(OutputBatch, ExecStats), RuntimeError>>;
+        let mut pending: Vec<Option<(f64, Reply)>> = Vec::with_capacity(reqs.len());
+        for (req, plan) in reqs.iter().zip(&plans) {
+            match plan {
+                ItemPlan::Skip(_) => pending.push(None),
+                ItemPlan::Exec { .. } => {
+                    let t_item = self.clock.now();
+                    self.metrics.record_arrival(t_item);
+                    let rx = batched.submit(req.seed)?;
+                    pending.push(Some((t_item, rx)));
+                }
+            }
+        }
+
+        // Phase C — collect replies in request order and account each
+        // item exactly as a lone batched execution would be.
+        let mut out = Vec::with_capacity(reqs.len());
+        for ((req, plan), slot) in reqs.iter().zip(plans).zip(pending) {
+            match (plan, slot) {
+                (ItemPlan::Skip(result), _) => out.push(result),
+                (ItemPlan::Exec { j, tau }, Some((t_item, rx))) => {
+                    let (ob, stats) =
+                        rx.recv().map_err(|_| RuntimeError::Xla("reply dropped".into()))??;
+                    let mut r =
+                        self.finish_exec(&handle, req, PathKind::Batched, t_item, &ob, &stats)?;
+                    r.j = j;
+                    r.tau = tau;
+                    if r.j.is_finite() {
+                        // Controller-admitted work populates the cache so
+                        // future skips can answer (same as `submit`).
+                        let sig = ResponseCache::signature(
+                            &req.model,
+                            req.seed,
+                            self.cfg.cache_clusters,
+                        );
+                        self.cache.lock().unwrap().put(
+                            sig,
+                            CachedResponse {
+                                label: r.predicted,
+                                confidence: r.confidence as f64,
+                            },
+                        );
+                    }
+                    out.push(r);
+                }
+                (ItemPlan::Exec { .. }, None) => {
+                    unreachable!("exec plans always enqueue a receiver")
+                }
+            }
+        }
+        if let Some(d) = opts.deadline {
+            let now = self.clock.now();
+            if now > d {
+                return Err(deadline_error(opts, t0, now));
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -722,6 +1244,18 @@ mod tests {
         }
         assert!(sys.meter().total_joules() > 0.0);
         assert!(sys.p95() > 0.0);
+    }
+
+    #[test]
+    fn default_mode_loads_every_model_at_boot() {
+        let Some(root) = repo_root() else { return };
+        let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+        assert_eq!(sys.ready_models(), sys.model_names().len());
+        let h = sys.version_handle(models::DISTILBERT, None).expect("loaded");
+        assert_eq!(h.version(), 1, "flat layout serves as version 1");
+        assert!(h.load_stats().load_secs > 0.0);
+        assert!(h.load_stats().weight_bytes > 0);
+        assert!(h.load_stats().est_load_joules > 0.0);
     }
 
     #[test]
@@ -791,10 +1325,15 @@ mod tests {
         let names = sys.control_loop_names();
         assert!(names.iter().any(|n| n == "tau_correction"), "{names:?}");
         assert!(names.iter().any(|n| n == "router_qps_threshold"), "{names:?}");
-        assert!(names.iter().any(|n| n == "energy_tau_correction"), "{names:?}");
-        // batch_delay_us.<model> loops appear once per model whose config
-        // sets a nonzero queue-delay window, so their presence depends on
-        // the artifacts' config.pbtxt files — not asserted here.
+        // The energy budget is per batched path now (one pacer per
+        // loaded model version), keyed energy_budget.<model>/<version>.
+        assert!(
+            names.iter().any(|n| n.starts_with("energy_budget.")),
+            "{names:?}"
+        );
+        // batch_delay_us.<model>/<v> loops appear once per version whose
+        // config sets a nonzero queue-delay window, so their presence
+        // depends on the artifacts' config.pbtxt files — not asserted.
 
         for r in &requests(10, models::DISTILBERT) {
             let res = sys.submit_auto(r).unwrap();
@@ -805,6 +1344,72 @@ mod tests {
         // let the ticker observe the traffic at least once
         std::thread::sleep(std::time::Duration::from_millis(30));
         assert_eq!(sys.controller_stats().unwrap().total(), 10);
+    }
+
+    #[test]
+    fn per_model_loops_detach_on_unload() {
+        let Some(root) = repo_root() else { return };
+        let cfg = SystemConfig::new(root).with_control(
+            crate::control::ControlPlaneConfig { tick_secs: 0.005, ..Default::default() }
+                .with_energy_budget(100.0),
+        );
+        let sys = ServingSystem::start(cfg).unwrap();
+        let loop_name = format!("energy_budget.{}/1", models::DISTILBERT);
+        assert!(sys.control_loop_names().contains(&loop_name));
+        sys.unload_model(models::DISTILBERT, None).unwrap();
+        assert!(!sys.control_loop_names().contains(&loop_name));
+        sys.load_model(models::DISTILBERT, None).unwrap();
+        assert!(sys.control_loop_names().contains(&loop_name));
+    }
+
+    #[test]
+    fn unload_makes_model_unavailable_and_reload_restores() {
+        let Some(root) = repo_root() else { return };
+        let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+        let reqs = requests(2, models::DISTILBERT);
+        assert!(sys.infer_on(&reqs[0], PathKind::Direct).is_ok());
+
+        let unloaded = sys.unload_model(models::DISTILBERT, None).unwrap();
+        assert_eq!(unloaded, vec![1]);
+        let err = sys.infer_on(&reqs[0], PathKind::Direct).unwrap_err();
+        assert!(
+            matches!(err, RuntimeError::ModelUnavailable { .. }),
+            "unloaded model must 503, got {err}"
+        );
+        // A model that was never in the repository is still 404 material.
+        let ghost = Request::external(7, "ghost", 1, sys.clock().now());
+        assert!(matches!(
+            sys.infer_on(&ghost, PathKind::Direct).unwrap_err(),
+            RuntimeError::UnknownModel(_)
+        ));
+
+        let loaded = sys.load_model(models::DISTILBERT, None).unwrap();
+        assert_eq!(loaded, vec![1]);
+        let r = sys.infer_on(&reqs[1], PathKind::Direct).unwrap();
+        assert!(r.latency_secs > 0.0);
+    }
+
+    #[test]
+    fn submit_batch_coalesces_into_shared_buckets() {
+        let Some(root) = repo_root() else { return };
+        let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+        let reqs = requests(16, models::DISTILBERT);
+        let results = sys
+            .submit_batch(&reqs, Some(PathKind::Batched), &SubmitOptions::default())
+            .unwrap();
+        assert_eq!(results.len(), 16);
+        for (req, r) in reqs.iter().zip(&results) {
+            assert_eq!(r.request_id, req.id, "results stay in request order");
+            assert_eq!(r.path, PathKind::Batched);
+        }
+        // The regression this guards: 16 items enqueued before any reply
+        // is collected must fuse into multi-item buckets, not execute as
+        // 16 singletons.
+        assert!(
+            results.iter().any(|r| r.bucket >= 2),
+            "no multi-item bucket formed: {:?}",
+            results.iter().map(|r| r.bucket).collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -822,8 +1427,7 @@ mod tests {
         // Already-expired deadline: refused before any work.
         let expired = SubmitOptions {
             deadline: Some(0.0),
-            timeout_ms: 0,
-            priority: Priority::Normal,
+            ..SubmitOptions::default()
         };
         let err = sys.submit_opts(&reqs[0], Some(PathKind::Direct), &expired).unwrap_err();
         assert!(matches!(err, RuntimeError::DeadlineExceeded { .. }), "{err}");
@@ -840,6 +1444,15 @@ mod tests {
         // Default options reproduce submit() semantics.
         let dflt = SubmitOptions::default();
         assert!(sys.submit_opts(&reqs[3], Some(PathKind::Direct), &dflt).is_ok());
+
+        // Pinning an explicit version works and a missing one is a 503.
+        let versioned = SubmitOptions { version: Some(1), ..Default::default() };
+        assert!(sys.submit_opts(&reqs[3], Some(PathKind::Direct), &versioned).is_ok());
+        let missing = SubmitOptions { version: Some(99), ..Default::default() };
+        let err = sys
+            .submit_opts(&reqs[3], Some(PathKind::Direct), &missing)
+            .unwrap_err();
+        assert!(matches!(err, RuntimeError::ModelUnavailable { .. }), "{err}");
 
         // Pinning "batched" on a model with no batcher is an input error
         // (the model exists — it must not read as MODEL_NOT_FOUND).

@@ -16,11 +16,13 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod registry;
 pub mod repository;
 pub mod tensor;
 
 pub use engine::{Engine, ExecMode};
 pub use manifest::{InputKind, ModelManifest, ParamEntry};
+pub use registry::{LoadStats, ModelRegistry, ModelState, VersionView};
 pub use repository::Repository;
 pub use tensor::{InputBatch, OutputBatch};
 
@@ -48,6 +50,19 @@ pub enum RuntimeError {
     Backpressure(String),
     #[error("deadline exceeded: {elapsed_ms} ms elapsed against a {timeout_ms} ms budget")]
     DeadlineExceeded { elapsed_ms: u64, timeout_ms: u64 },
+    /// The model is registered but no version matching the request is
+    /// in `Ready` state (unloaded, still loading, or failed) — the
+    /// typed 503 the v2 protocol reports as `MODEL_UNAVAILABLE`.
+    #[error("model {model:?} has no loaded version to serve")]
+    ModelUnavailable { model: String },
+    /// A present-but-malformed `config.pbtxt`: loading must fail loudly
+    /// (HTTP 400), never silently serve with defaults.
+    #[error("model {model:?}: invalid config.pbtxt: {reason}")]
+    InvalidConfig { model: String, reason: String },
+    /// An invalid lifecycle operation (unloading a model that is not
+    /// loaded, loading a version that is mid-transition, ...).
+    #[error("model {model:?}: {reason}")]
+    Lifecycle { model: String, reason: String },
 }
 
 impl From<xla::Error> for RuntimeError {

@@ -1,0 +1,744 @@
+//! Dynamic model registry: per-model, per-version lifecycle state
+//! machines behind the `/v2/repository` control API (the Triton
+//! explicit model-control mode, arXiv 2403.17574's "model-lifecycle
+//! management" design decision).
+//!
+//! The registry owns *facts and state* — which numbered versions exist
+//! on disk, what lifecycle state each is in, what loading cost — while
+//! [`crate::pipeline::system`] owns the *resources* (engines, batcher
+//! threads) attached to `Ready` versions and the atomically-swapped
+//! serving snapshot the hot path reads. Transitions:
+//!
+//! ```text
+//! Unloaded ──begin_load──▶ Loading ──finish_load(Ok)──▶ Ready
+//!     ▲                       │                           │
+//!     │                       └─finish_load(Err)─▶ Failed{reason}
+//!     │                                               (begin_load retries)
+//!     └──finish_unload─── Unloading ◀──begin_unload──────┘
+//! ```
+//!
+//! Repository layout: `repository.json` names the models; each model
+//! directory either holds numbered version subdirectories
+//! (`<model>/<N>/manifest.json`, Triton layout) or is itself version 1
+//! (the flat layout `aot.py` has always exported). `config.pbtxt`
+//! stays at the model root and applies to every version; a
+//! present-but-malformed config is recorded as a parse error and fails
+//! any load of that model — never silently defaulted (the old
+//! `Repository::scan` `ok()/ok()` bug).
+//!
+//! Every state transition publishes the `gf_model_state.<model>.<v>`
+//! gauge ([`ModelState::code`]); loads additionally publish
+//! `gf_model_load_seconds.<model>.<v>` and bump the
+//! `gf_model_loads_total` / `gf_model_load_failures_total` /
+//! `gf_model_unloads_total` counters.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::configsys::{ModelConfig, VersionPolicy};
+use crate::json;
+use crate::runtime::RuntimeError;
+use crate::telemetry::MetricsRegistry;
+
+/// Lifecycle state of one model version.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelState {
+    Unloaded,
+    Loading,
+    Ready,
+    Unloading,
+    Failed { reason: String },
+}
+
+impl ModelState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelState::Unloaded => "UNLOADED",
+            ModelState::Loading => "LOADING",
+            ModelState::Ready => "READY",
+            ModelState::Unloading => "UNLOADING",
+            ModelState::Failed { .. } => "FAILED",
+        }
+    }
+
+    /// Numeric code published as the `gf_model_state.<model>.<v>` gauge.
+    pub fn code(&self) -> f64 {
+        match self {
+            ModelState::Unloaded => 0.0,
+            ModelState::Loading => 1.0,
+            ModelState::Ready => 2.0,
+            ModelState::Unloading => 3.0,
+            ModelState::Failed { .. } => -1.0,
+        }
+    }
+}
+
+/// One discovered version's on-disk identity (what a loader needs).
+#[derive(Debug, Clone)]
+pub struct VersionInfo {
+    pub version: u64,
+    pub dir: PathBuf,
+}
+
+/// What loading a version cost (reported by `/v2/models/{name}` — the
+/// compile + weight-transfer energy a restartless swap avoids re-paying).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadStats {
+    /// Wallclock seconds from load start to Ready (engine spawn +
+    /// per-bucket compilation + weight materialisation).
+    pub load_secs: f64,
+    /// Bytes of weights materialised.
+    pub weight_bytes: u64,
+    /// Estimated joules burned loading (device profile at full draw
+    /// over `load_secs`).
+    pub est_load_joules: f64,
+}
+
+/// Introspection view of one version (the `/v2/repository/index` row).
+#[derive(Debug, Clone)]
+pub struct VersionView {
+    pub version: u64,
+    pub state: ModelState,
+    pub stats: Option<LoadStats>,
+}
+
+#[derive(Debug)]
+struct VersionSlot {
+    dir: PathBuf,
+    state: ModelState,
+    stats: Option<LoadStats>,
+}
+
+#[derive(Debug)]
+struct ModelSlot {
+    /// The model's root directory (rescanned on every load so version
+    /// directories and config fixes deployed after boot are seen).
+    dir: PathBuf,
+    config: Option<ModelConfig>,
+    /// Parse error from a present-but-malformed config.pbtxt.
+    config_err: Option<String>,
+    policy: VersionPolicy,
+    versions: BTreeMap<u64, VersionSlot>,
+}
+
+/// The registry: models discovered from `repository.json` with their
+/// per-version lifecycle state. All methods are `&self` (one internal
+/// mutex) so the gateway's concurrent load/unload handlers serialise
+/// on state transitions without holding any lock during actual
+/// engine work.
+#[derive(Debug)]
+pub struct ModelRegistry {
+    root: PathBuf,
+    slots: Mutex<BTreeMap<String, ModelSlot>>,
+}
+
+impl ModelRegistry {
+    /// Scan a repository root. Discovers models and versions and parses
+    /// configs; nothing is loaded (every version starts `Unloaded`).
+    pub fn scan(root: &Path) -> Result<Self, RuntimeError> {
+        let idx_path = root.join("repository.json");
+        let text = std::fs::read_to_string(&idx_path)
+            .map_err(|e| RuntimeError::Io { path: idx_path.display().to_string(), source: e })?;
+        let idx = json::parse(&text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let mut slots = BTreeMap::new();
+        for name_v in idx
+            .get("models")
+            .and_then(|m| m.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?
+        {
+            let name = name_v
+                .as_str()
+                .map_err(|e| RuntimeError::Manifest(e.to_string()))?
+                .to_string();
+            let dir = root.join(&name);
+            // An index entry must have at least one loadable version.
+            discover_versions(&dir)?;
+            let mut slot = ModelSlot {
+                dir,
+                config: None,
+                config_err: None,
+                policy: VersionPolicy::default(),
+                versions: BTreeMap::new(),
+            };
+            refresh_slot(&name, &mut slot);
+            slots.insert(name, slot);
+        }
+        Ok(ModelRegistry { root: root.to_path_buf(), slots: Mutex::new(slots) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Every registered model name (loaded or not), sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        self.slots.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn has_model(&self, model: &str) -> bool {
+        self.slots.lock().unwrap().contains_key(model)
+    }
+
+    /// The model's parsed config; `Err(InvalidConfig)` when the file is
+    /// present but malformed, `Ok(None)` when absent.
+    pub fn config(&self, model: &str) -> Result<Option<ModelConfig>, RuntimeError> {
+        let g = self.slots.lock().unwrap();
+        let slot = g
+            .get(model)
+            .ok_or_else(|| RuntimeError::UnknownModel(model.to_string()))?;
+        if let Some(reason) = &slot.config_err {
+            return Err(RuntimeError::InvalidConfig {
+                model: model.to_string(),
+                reason: reason.clone(),
+            });
+        }
+        Ok(slot.config.clone())
+    }
+
+    /// Per-version introspection for one model.
+    pub fn views(&self, model: &str) -> Result<Vec<VersionView>, RuntimeError> {
+        let g = self.slots.lock().unwrap();
+        let slot = g
+            .get(model)
+            .ok_or_else(|| RuntimeError::UnknownModel(model.to_string()))?;
+        Ok(slot
+            .versions
+            .iter()
+            .map(|(&version, vs)| VersionView {
+                version,
+                state: vs.state.clone(),
+                stats: vs.stats,
+            })
+            .collect())
+    }
+
+    /// The whole repository: (model, per-version views), sorted by name.
+    pub fn index(&self) -> Vec<(String, Vec<VersionView>)> {
+        let g = self.slots.lock().unwrap();
+        g.iter()
+            .map(|(name, slot)| {
+                (
+                    name.clone(),
+                    slot.versions
+                        .iter()
+                        .map(|(&version, vs)| VersionView {
+                            version,
+                            state: vs.state.clone(),
+                            stats: vs.stats,
+                        })
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    /// Start loading: marks the target versions `Loading` and returns
+    /// their on-disk info for the caller to attach engines to. With no
+    /// explicit version the model's version policy picks the set.
+    /// Already-`Ready` versions are skipped (idempotent load); a version
+    /// mid-transition is a `Lifecycle` error; a malformed config fails
+    /// every targeted version with `Failed{reason}`.
+    pub fn begin_load(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<Vec<VersionInfo>, RuntimeError> {
+        let mut g = self.slots.lock().unwrap();
+        let slot = g
+            .get_mut(model)
+            .ok_or_else(|| RuntimeError::UnknownModel(model.to_string()))?;
+        // Re-read the model directory so versions and config fixes
+        // deployed after boot are loadable without a restart (the whole
+        // point of the lifecycle API). fs reads under the registry lock
+        // are fine: this is a control-plane op, never the serve path.
+        refresh_slot(model, slot);
+
+        let available: Vec<u64> = slot.versions.keys().copied().collect();
+        let targets: Vec<u64> = match version {
+            Some(v) => vec![v],
+            None => slot.policy.select(&available),
+        };
+        for &v in &targets {
+            if !slot.versions.contains_key(&v) {
+                return Err(RuntimeError::Lifecycle {
+                    model: model.to_string(),
+                    reason: format!("unknown version {v} (available: {available:?})"),
+                });
+            }
+        }
+        if targets.is_empty() {
+            return Err(RuntimeError::Lifecycle {
+                model: model.to_string(),
+                reason: "version policy selects no versions".to_string(),
+            });
+        }
+
+        if let Some(reason) = slot.config_err.clone() {
+            for &v in &targets {
+                set_state(model, v, slot, ModelState::Failed { reason: reason.clone() });
+            }
+            MetricsRegistry::global().counter("gf_model_load_failures_total").inc();
+            return Err(RuntimeError::InvalidConfig { model: model.to_string(), reason });
+        }
+
+        // Validate before mutating: a busy sibling must not leave other
+        // targets half-marked.
+        for &v in &targets {
+            match &slot.versions[&v].state {
+                ModelState::Loading | ModelState::Unloading => {
+                    return Err(RuntimeError::Lifecycle {
+                        model: model.to_string(),
+                        reason: format!(
+                            "version {v} is busy ({})",
+                            slot.versions[&v].state.as_str()
+                        ),
+                    });
+                }
+                _ => {}
+            }
+        }
+        let mut out = Vec::new();
+        for &v in &targets {
+            if slot.versions[&v].state == ModelState::Ready {
+                continue; // already serving
+            }
+            set_state(model, v, slot, ModelState::Loading);
+            out.push(VersionInfo { version: v, dir: slot.versions[&v].dir.clone() });
+        }
+        Ok(out)
+    }
+
+    /// Abandon a load begun with [`ModelRegistry::begin_load`] without
+    /// recording a failure: `Loading → Unloaded`. Used for sibling
+    /// versions that were never attempted because an earlier one in the
+    /// same request failed — leaving them `Loading` would brick them
+    /// (every later load/unload sees "busy").
+    pub fn abort_load(&self, model: &str, version: u64) {
+        let mut g = self.slots.lock().unwrap();
+        let Some(slot) = g.get_mut(model) else { return };
+        let loading = slot
+            .versions
+            .get(&version)
+            .map(|vs| vs.state == ModelState::Loading)
+            .unwrap_or(false);
+        if loading {
+            set_state(model, version, slot, ModelState::Unloaded);
+        }
+    }
+
+    /// Complete a load begun with [`ModelRegistry::begin_load`].
+    pub fn finish_load(&self, model: &str, version: u64, result: Result<LoadStats, String>) {
+        let mut g = self.slots.lock().unwrap();
+        let Some(slot) = g.get_mut(model) else { return };
+        if !slot.versions.contains_key(&version) {
+            return;
+        }
+        let reg = MetricsRegistry::global();
+        match result {
+            Ok(stats) => {
+                slot.versions.get_mut(&version).unwrap().stats = Some(stats);
+                set_state(model, version, slot, ModelState::Ready);
+                reg.gauge(&format!("gf_model_load_seconds.{model}.{version}"))
+                    .set(stats.load_secs);
+                reg.counter("gf_model_loads_total").inc();
+            }
+            Err(reason) => {
+                set_state(model, version, slot, ModelState::Failed { reason });
+                reg.counter("gf_model_load_failures_total").inc();
+            }
+        }
+    }
+
+    /// Start unloading: `Ready` → `Unloading` for the explicit version,
+    /// or every ready version when none is given. Unloading a model with
+    /// nothing loaded is a `Lifecycle` error (nothing to detach).
+    pub fn begin_unload(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<Vec<u64>, RuntimeError> {
+        let mut g = self.slots.lock().unwrap();
+        let slot = g
+            .get_mut(model)
+            .ok_or_else(|| RuntimeError::UnknownModel(model.to_string()))?;
+        let targets: Vec<u64> = match version {
+            Some(v) => {
+                let vs = slot.versions.get(&v).ok_or_else(|| RuntimeError::Lifecycle {
+                    model: model.to_string(),
+                    reason: format!("unknown version {v}"),
+                })?;
+                if vs.state != ModelState::Ready {
+                    return Err(RuntimeError::Lifecycle {
+                        model: model.to_string(),
+                        reason: format!("version {v} is not loaded ({})", vs.state.as_str()),
+                    });
+                }
+                vec![v]
+            }
+            None => slot
+                .versions
+                .iter()
+                .filter(|(_, vs)| vs.state == ModelState::Ready)
+                .map(|(&v, _)| v)
+                .collect(),
+        };
+        if targets.is_empty() {
+            return Err(RuntimeError::Lifecycle {
+                model: model.to_string(),
+                reason: "no loaded versions".to_string(),
+            });
+        }
+        for &v in &targets {
+            set_state(model, v, slot, ModelState::Unloading);
+        }
+        Ok(targets)
+    }
+
+    /// Complete an unload begun with [`ModelRegistry::begin_unload`].
+    pub fn finish_unload(&self, model: &str, version: u64) {
+        let mut g = self.slots.lock().unwrap();
+        let Some(slot) = g.get_mut(model) else { return };
+        if !slot.versions.contains_key(&version) {
+            return;
+        }
+        slot.versions.get_mut(&version).unwrap().stats = None;
+        set_state(model, version, slot, ModelState::Unloaded);
+        MetricsRegistry::global().counter("gf_model_unloads_total").inc();
+    }
+}
+
+fn set_state(model: &str, version: u64, slot: &mut ModelSlot, state: ModelState) {
+    publish_state(model, version, &state);
+    slot.versions.get_mut(&version).unwrap().state = state;
+}
+
+/// Re-read a model's on-disk facts: config.pbtxt (including its parse
+/// error and version policy) and the set of version directories. New
+/// numbered versions appear as `Unloaded`; directories that vanished
+/// are dropped only while `Unloaded` (a loaded version keeps serving
+/// until explicitly unloaded, Triton-style).
+fn refresh_slot(model: &str, slot: &mut ModelSlot) {
+    let (config, config_err) = match std::fs::read_to_string(slot.dir.join("config.pbtxt")) {
+        Ok(text) => match ModelConfig::from_pbtxt(&text) {
+            Ok(c) => (Some(c), None),
+            Err(e) => (None, Some(e.to_string())),
+        },
+        // config.pbtxt is optional; only a *present* broken one is an
+        // error state.
+        Err(_) => (None, None),
+    };
+    slot.policy = config
+        .as_ref()
+        .and_then(|c| c.version_policy.clone())
+        .unwrap_or_default();
+    slot.config = config;
+    slot.config_err = config_err;
+
+    if let Ok(found) = discover_versions(&slot.dir) {
+        let on_disk: Vec<u64> = found.iter().map(|i| i.version).collect();
+        for info in found {
+            if !slot.versions.contains_key(&info.version) {
+                publish_state(model, info.version, &ModelState::Unloaded);
+                slot.versions.insert(
+                    info.version,
+                    VersionSlot { dir: info.dir, state: ModelState::Unloaded, stats: None },
+                );
+            }
+        }
+        slot.versions
+            .retain(|v, vs| on_disk.contains(v) || vs.state != ModelState::Unloaded);
+    }
+}
+
+fn publish_state(model: &str, version: u64, state: &ModelState) {
+    MetricsRegistry::global()
+        .gauge(&format!("gf_model_state.{model}.{version}"))
+        .set(state.code());
+}
+
+/// Numbered version subdirectories (`<model>/<N>/manifest.json`); a flat
+/// layout (manifest at the model root) is version 1. A model with
+/// neither is a scan error — an index entry must be loadable.
+fn discover_versions(dir: &Path) -> Result<Vec<VersionInfo>, RuntimeError> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if !p.is_dir() {
+                continue;
+            }
+            let Some(v) = p
+                .file_name()
+                .and_then(|n| n.to_str())
+                .and_then(|n| n.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            if v >= 1 && p.join("manifest.json").exists() {
+                out.push(VersionInfo { version: v, dir: p });
+            }
+        }
+    }
+    if out.is_empty() {
+        if dir.join("manifest.json").exists() {
+            out.push(VersionInfo { version: 1, dir: dir.to_path_buf() });
+        } else {
+            return Err(RuntimeError::Manifest(format!(
+                "{}: no versions (no manifest.json at the model root or under \
+                 numbered version directories)",
+                dir.display()
+            )));
+        }
+    }
+    out.sort_by_key(|i| i.version);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write one version's artifact set (manifest + weights + HLO text).
+    fn write_version_files(dir: &Path, name: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = format!(
+            "{{\"name\": {name:?}, \"family\": \"toy\", \"classes\": 2,
+               \"batch_buckets\": [1],
+               \"weights_file\": \"weights.bin\",
+               \"hlo_files\": {{\"1\": \"model.b1.hlo.txt\"}},
+               \"params\": [{{\"name\": \"w\", \"shape\": [2, 2],
+                             \"offset\": 0, \"numel\": 4}}],
+               \"input\": {{\"name\": \"tokens\", \"kind\": \"tokens\",
+                           \"shape_per_item\": [4], \"dtype\": \"i32\",
+                           \"vocab\": 8}}}}"
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join("weights.bin"), [0u8; 16]).unwrap();
+        std::fs::write(dir.join("model.b1.hlo.txt"), "HloModule toy").unwrap();
+    }
+
+    /// Build a throwaway repository on disk: `(name, versions, config)`
+    /// per model; `versions` empty = flat layout.
+    fn synth_repo(models: &[(&str, &[u64], Option<&str>)]) -> PathBuf {
+        let root = std::env::temp_dir().join(format!(
+            "gf-registry-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let names: Vec<String> =
+            models.iter().map(|(n, _, _)| format!("{n:?}")).collect();
+        std::fs::write(
+            root.join("repository.json"),
+            format!("{{\"models\": [{}]}}", names.join(", ")),
+        )
+        .unwrap();
+        for (name, versions, config) in models {
+            let dir = root.join(name);
+            std::fs::create_dir_all(&dir).unwrap();
+            if versions.is_empty() {
+                write_version_files(&dir, name);
+            } else {
+                for v in *versions {
+                    write_version_files(&dir.join(v.to_string()), name);
+                }
+            }
+            if let Some(cfg) = config {
+                std::fs::write(dir.join("config.pbtxt"), cfg).unwrap();
+            }
+        }
+        root
+    }
+
+    const GOOD_CONFIG: &str = "name: \"versioned\"\nmax_batch_size: 1\n\
+        input [ { name: \"tokens\" data_type: TYPE_INT32 dims: [ 4 ] } ]\n\
+        version_policy { latest { num_versions: 2 } }\n";
+
+    #[test]
+    fn scans_flat_and_versioned_layouts() {
+        let root = synth_repo(&[
+            ("flat", &[], None),
+            ("versioned", &[1, 2, 5], Some(GOOD_CONFIG)),
+        ]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+        assert_eq!(reg.model_names(), vec!["flat", "versioned"]);
+        let flat = reg.views("flat").unwrap();
+        assert_eq!(flat.len(), 1);
+        assert_eq!(flat[0].version, 1);
+        assert_eq!(flat[0].state, ModelState::Unloaded);
+        let v: Vec<u64> =
+            reg.views("versioned").unwrap().iter().map(|x| x.version).collect();
+        assert_eq!(v, vec![1, 2, 5]);
+        assert!(reg.views("nope").is_err());
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn load_unload_state_machine() {
+        let root = synth_repo(&[("versioned", &[1, 2, 5], Some(GOOD_CONFIG))]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+
+        // Policy (latest 2) picks versions 2 and 5.
+        let targets = reg.begin_load("versioned", None).unwrap();
+        let vs: Vec<u64> = targets.iter().map(|t| t.version).collect();
+        assert_eq!(vs, vec![2, 5]);
+        assert_eq!(reg.views("versioned").unwrap()[1].state, ModelState::Loading);
+
+        // A version mid-load is busy.
+        let err = reg.begin_load("versioned", Some(2)).unwrap_err();
+        assert!(matches!(err, RuntimeError::Lifecycle { .. }), "{err}");
+
+        let stats = LoadStats { load_secs: 0.5, weight_bytes: 16, est_load_joules: 9.0 };
+        reg.finish_load("versioned", 2, Ok(stats));
+        reg.finish_load("versioned", 5, Err("compile exploded".into()));
+        let views = reg.views("versioned").unwrap();
+        assert_eq!(views[1].state, ModelState::Ready);
+        assert_eq!(views[1].stats, Some(stats));
+        assert!(matches!(
+            &views[2].state,
+            ModelState::Failed { reason } if reason.contains("exploded")
+        ));
+
+        // Re-loading an already-Ready version is an idempotent no-op;
+        // Failed versions retry.
+        let retry = reg.begin_load("versioned", None).unwrap();
+        assert_eq!(retry.len(), 1);
+        assert_eq!(retry[0].version, 5);
+        reg.finish_load("versioned", 5, Ok(stats));
+
+        // Unload everything ready.
+        let unloading = reg.begin_unload("versioned", None).unwrap();
+        assert_eq!(unloading, vec![2, 5]);
+        for v in unloading {
+            reg.finish_unload("versioned", v);
+        }
+        assert!(reg
+            .views("versioned")
+            .unwrap()
+            .iter()
+            .all(|v| v.state == ModelState::Unloaded));
+        // Nothing loaded → unload errors.
+        assert!(matches!(
+            reg.begin_unload("versioned", None),
+            Err(RuntimeError::Lifecycle { .. })
+        ));
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn explicit_version_bypasses_policy_and_unknown_versions_error() {
+        let root = synth_repo(&[("versioned", &[1, 2, 5], Some(GOOD_CONFIG))]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+        let targets = reg.begin_load("versioned", Some(1)).unwrap();
+        assert_eq!(targets.len(), 1);
+        assert_eq!(targets[0].version, 1);
+        assert!(matches!(
+            reg.begin_load("versioned", Some(9)),
+            Err(RuntimeError::Lifecycle { .. })
+        ));
+        assert!(matches!(
+            reg.begin_load("nope", None),
+            Err(RuntimeError::UnknownModel(_))
+        ));
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn malformed_config_fails_load_loudly() {
+        let root = synth_repo(&[("flat", &[], Some("max_batch_size: {{{ garbage"))]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+        assert!(matches!(
+            reg.config("flat"),
+            Err(RuntimeError::InvalidConfig { .. })
+        ));
+        let err = reg.begin_load("flat", None).unwrap_err();
+        assert!(matches!(err, RuntimeError::InvalidConfig { .. }), "{err}");
+        assert!(matches!(
+            &reg.views("flat").unwrap()[0].state,
+            ModelState::Failed { .. }
+        ));
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn load_rescans_versions_and_config_deployed_after_boot() {
+        let root =
+            synth_repo(&[("versioned", &[1], Some("max_batch_size: {{{ garbage"))]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+        // Broken config at boot: load fails loudly.
+        assert!(matches!(
+            reg.begin_load("versioned", None),
+            Err(RuntimeError::InvalidConfig { .. })
+        ));
+        // Operator fixes the config and deploys version 2 on the live
+        // server — the next load sees both without a restart.
+        std::fs::write(
+            root.join("versioned").join("config.pbtxt"),
+            GOOD_CONFIG, // policy: latest 2
+        )
+        .unwrap();
+        write_version_files(&root.join("versioned").join("2"), "versioned");
+        let targets = reg.begin_load("versioned", None).unwrap();
+        let vs: Vec<u64> = targets.iter().map(|t| t.version).collect();
+        assert_eq!(vs, vec![1, 2], "policy latest-2 over the rescanned set");
+        let views: Vec<u64> =
+            reg.views("versioned").unwrap().iter().map(|v| v.version).collect();
+        assert_eq!(views, vec![1, 2]);
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn abort_load_reverts_loading_to_unloaded() {
+        let root = synth_repo(&[("versioned", &[1, 2, 5], Some(GOOD_CONFIG))]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+        let targets = reg.begin_load("versioned", None).unwrap(); // [2, 5]
+        assert_eq!(targets.len(), 2);
+        // Version 2's attach failed; version 5 was never attempted and
+        // must not stay bricked in Loading.
+        reg.finish_load("versioned", 2, Err("engine spawn failed".into()));
+        reg.abort_load("versioned", 5);
+        let views = reg.views("versioned").unwrap();
+        assert!(matches!(&views[1].state, ModelState::Failed { .. }));
+        assert_eq!(views[2].state, ModelState::Unloaded);
+        // Both are loadable again.
+        let retry = reg.begin_load("versioned", None).unwrap();
+        assert_eq!(retry.len(), 2);
+        // abort_load never clobbers a non-Loading state.
+        reg.finish_load("versioned", 2, Ok(LoadStats::default()));
+        reg.abort_load("versioned", 2);
+        assert_eq!(reg.views("versioned").unwrap()[1].state, ModelState::Ready);
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn model_without_manifest_is_a_scan_error() {
+        let root = synth_repo(&[("flat", &[], None)]);
+        std::fs::remove_file(root.join("flat").join("manifest.json")).unwrap();
+        assert!(ModelRegistry::scan(&root).is_err());
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn state_gauges_track_transitions() {
+        // Unique model name: the gauge namespace is process-global and
+        // other tests in this module also mint a "flat" model.
+        let root = synth_repo(&[("gauge_probe", &[], None)]);
+        let reg = ModelRegistry::scan(&root).unwrap();
+        let gauge = || {
+            MetricsRegistry::global()
+                .gauge("gf_model_state.gauge_probe.1")
+                .get()
+        };
+        assert_eq!(gauge(), ModelState::Unloaded.code());
+        reg.begin_load("gauge_probe", None).unwrap();
+        assert_eq!(gauge(), ModelState::Loading.code());
+        reg.finish_load("gauge_probe", 1, Ok(LoadStats::default()));
+        assert_eq!(gauge(), ModelState::Ready.code());
+        reg.begin_unload("gauge_probe", None).unwrap();
+        reg.finish_unload("gauge_probe", 1);
+        assert_eq!(gauge(), ModelState::Unloaded.code());
+        let _ = std::fs::remove_dir_all(root);
+    }
+}

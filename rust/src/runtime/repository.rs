@@ -2,6 +2,11 @@
 //! model-repository concept). Scans `repository.json`, loads every
 //! model's manifest + serving config without touching PJRT (so the
 //! coordinator can plan batching before spawning engine workers).
+//!
+//! This is the *static* flat-layout view used by `greenflow report`
+//! and the offline benches. The serving system itself runs on the
+//! dynamic, versioned [`super::registry::ModelRegistry`], which adds
+//! numbered version directories and the load/unload lifecycle.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -42,9 +47,19 @@ impl Repository {
             let name = name.as_str().map_err(|e| RuntimeError::Manifest(e.to_string()))?;
             let dir = root.join(name);
             let manifest = ModelManifest::load(&dir)?;
-            let config = std::fs::read_to_string(dir.join("config.pbtxt"))
-                .ok()
-                .and_then(|t| ModelConfig::from_pbtxt(&t).ok());
+            // config.pbtxt is optional, but a *present* malformed one is
+            // an error — silently serving with defaults would hide a
+            // corrupt deployment (the lifecycle API reports the same
+            // condition as a load `Failed{reason}` / HTTP 400).
+            let config = match std::fs::read_to_string(dir.join("config.pbtxt")) {
+                Ok(text) => Some(ModelConfig::from_pbtxt(&text).map_err(|e| {
+                    RuntimeError::InvalidConfig {
+                        model: name.to_string(),
+                        reason: e.to_string(),
+                    }
+                })?),
+                Err(_) => None,
+            };
             entries.insert(
                 manifest.name.clone(),
                 RepoEntry { dir, manifest, config },
@@ -140,5 +155,38 @@ mod tests {
     #[test]
     fn missing_root_errors() {
         assert!(Repository::scan(Path::new("/nonexistent/path")).is_err());
+    }
+
+    #[test]
+    fn malformed_config_is_a_scan_error_not_a_silent_default() {
+        let root = std::env::temp_dir().join(format!(
+            "gf-repo-scan-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let dir = root.join("toy");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(root.join("repository.json"), r#"{"models": ["toy"]}"#).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"name": "toy", "family": "t", "classes": 2,
+                "batch_buckets": [1], "weights_file": "weights.bin",
+                "hlo_files": {"1": "m.hlo.txt"},
+                "params": [{"name": "w", "shape": [2], "offset": 0, "numel": 2}],
+                "input": {"name": "tokens", "kind": "tokens",
+                          "shape_per_item": [4], "dtype": "i32", "vocab": 4}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("config.pbtxt"), "name: \"toy\" max_batch_size: {{{").unwrap();
+        let err = Repository::scan(&root).unwrap_err();
+        assert!(
+            matches!(err, RuntimeError::InvalidConfig { .. }),
+            "corrupt config must fail the scan, got {err}"
+        );
+        // Removing the corrupt file makes the same repository scan fine.
+        std::fs::remove_file(dir.join("config.pbtxt")).unwrap();
+        assert!(Repository::scan(&root).is_ok());
+        let _ = std::fs::remove_dir_all(root);
     }
 }

@@ -9,9 +9,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::json::{self, Value};
-use crate::pipeline::system::InferResult;
+use crate::pipeline::system::{InferResult, VersionHandle};
 use crate::router::PathKind;
-use crate::runtime::repository::RepoEntry;
+use crate::runtime::registry::{ModelState, VersionView};
 use crate::runtime::RuntimeError;
 use crate::workload::stream::Priority;
 
@@ -29,6 +29,9 @@ pub enum ErrorCode {
     BadRequest,
     NotFound,
     ModelNotFound,
+    /// The model exists in the repository but has no ready version
+    /// matching the request (unloaded / loading / failed).
+    ModelUnavailable,
     Unsupported,
     PayloadTooLarge,
     Backpressure,
@@ -42,6 +45,7 @@ impl ErrorCode {
             ErrorCode::BadRequest => "BAD_REQUEST",
             ErrorCode::NotFound => "NOT_FOUND",
             ErrorCode::ModelNotFound => "MODEL_NOT_FOUND",
+            ErrorCode::ModelUnavailable => "MODEL_UNAVAILABLE",
             ErrorCode::Unsupported => "UNSUPPORTED",
             ErrorCode::PayloadTooLarge => "PAYLOAD_TOO_LARGE",
             ErrorCode::Backpressure => "BACKPRESSURE",
@@ -54,6 +58,7 @@ impl ErrorCode {
         match self {
             ErrorCode::BadRequest => 400,
             ErrorCode::NotFound | ErrorCode::ModelNotFound => 404,
+            ErrorCode::ModelUnavailable => 503,
             ErrorCode::Unsupported => 405,
             ErrorCode::PayloadTooLarge => 413,
             ErrorCode::Backpressure => 429,
@@ -83,11 +88,13 @@ impl ApiError {
     pub fn from_runtime(e: &RuntimeError) -> Self {
         let code = match e {
             RuntimeError::UnknownModel(_) => ErrorCode::ModelNotFound,
+            RuntimeError::ModelUnavailable { .. } => ErrorCode::ModelUnavailable,
             RuntimeError::Backpressure(_) => ErrorCode::Backpressure,
             RuntimeError::DeadlineExceeded { .. } => ErrorCode::DeadlineExceeded,
-            RuntimeError::BatchTooLarge { .. } | RuntimeError::InputMismatch(_) => {
-                ErrorCode::BadRequest
-            }
+            RuntimeError::BatchTooLarge { .. }
+            | RuntimeError::InputMismatch(_)
+            | RuntimeError::InvalidConfig { .. }
+            | RuntimeError::Lifecycle { .. } => ErrorCode::BadRequest,
             RuntimeError::Io { .. } | RuntimeError::Manifest(_) | RuntimeError::Xla(_) => {
                 ErrorCode::Internal
             }
@@ -149,6 +156,10 @@ pub struct InferRequest {
     /// Relative deadline; None = no deadline.
     pub timeout_ms: Option<u64>,
     pub priority: Priority,
+    /// Explicit model version (from the
+    /// `/v2/models/{name}/versions/{v}/infer` route, never the body);
+    /// None = the highest ready version.
+    pub version: Option<u64>,
 }
 
 /// Parse a JSON number as an exact non-negative integer seed (shared with
@@ -272,6 +283,7 @@ impl InferRequest {
             path,
             timeout_ms,
             priority,
+            version: None,
         })
     }
 }
@@ -283,7 +295,9 @@ pub fn next_request_id() -> u64 {
     NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
-/// One item's serialised outcome inside a batch response.
+/// One item's serialised outcome inside a batch response. `bucket` is
+/// the batch bucket the execution fused into (0 for cache answers) —
+/// how clients observe multi-item bodies coalescing.
 pub fn item_json(seed: u64, r: &InferResult) -> Value {
     let mut fields = vec![
         ("seed", json::num(seed as f64)),
@@ -293,6 +307,7 @@ pub fn item_json(seed: u64, r: &InferResult) -> Value {
         ("latency_secs", json::num(r.latency_secs)),
         ("joules", json::num(r.joules)),
         ("path", json::s(r.path.as_str())),
+        ("bucket", json::num(r.bucket as f64)),
     ];
     if r.j.is_finite() && r.tau.is_finite() {
         fields.push(("j", json::num(r.j)));
@@ -329,28 +344,59 @@ impl InferResponse {
     }
 }
 
-/// `/v2/models/{name}` metadata: manifest + serving config + live queue
-/// state (the batching decisions arXiv 2402.07585 calls the green-serving
-/// levers, made inspectable).
+/// One version's lifecycle row (`/v2/repository/index` and the
+/// `versions` array of `/v2/models/{name}`): state, failure reason, and
+/// the load stats the green-serving argument cares about (compile time
+/// + weight bytes + estimated load energy — what a live swap avoids
+/// re-paying versus a restart).
+pub fn version_view_json(v: &VersionView) -> Value {
+    let mut fields = vec![
+        ("version", json::num(v.version as f64)),
+        ("state", json::s(v.state.as_str())),
+    ];
+    if let ModelState::Failed { reason } = &v.state {
+        fields.push(("reason", json::s(reason)));
+    }
+    if let Some(s) = &v.stats {
+        fields.push((
+            "load",
+            json::obj(vec![
+                ("seconds", json::num(s.load_secs)),
+                ("weight_bytes", json::num(s.weight_bytes as f64)),
+                ("est_joules", json::num(s.est_load_joules)),
+            ]),
+        ));
+    }
+    json::obj(fields)
+}
+
+/// `/v2/models/{name}` metadata: per-version lifecycle state plus — when
+/// a version is ready to serve — manifest + serving config + live queue
+/// state (the batching decisions arXiv 2402.07585 calls the
+/// green-serving levers, made inspectable).
 pub fn model_metadata_json(
-    entry: &RepoEntry,
-    queue_depth: usize,
+    name: &str,
+    handle: Option<&VersionHandle>,
+    views: &[VersionView],
     queue_capacity: usize,
-    batched_path: bool,
 ) -> Value {
-    let m = &entry.manifest;
+    let versions: Vec<Value> = views.iter().map(version_view_json).collect();
+    let Some(h) = handle else {
+        // Registered but nothing ready: lifecycle state only.
+        return json::obj(vec![
+            ("name", json::s(name)),
+            ("ready", Value::Bool(false)),
+            ("versions", Value::Arr(versions)),
+        ]);
+    };
+    let m = h.manifest();
+    let config = h.config();
     let buckets: Vec<Value> = m.batch_buckets.iter().map(|&b| json::num(b as f64)).collect();
-    let platform = entry
-        .config
-        .as_ref()
+    let platform = config
         .map(|c| c.platform.clone())
         .unwrap_or_else(|| "greenflow_pjrt".to_string());
-    let max_batch = entry
-        .config
-        .as_ref()
-        .map(|c| c.max_batch_size)
-        .unwrap_or_else(|| m.max_bucket());
-    let dynamic_batching = match entry.config.as_ref().and_then(|c| c.dynamic_batching.as_ref()) {
+    let max_batch = config.map(|c| c.max_batch_size).unwrap_or_else(|| m.max_bucket());
+    let dynamic_batching = match config.and_then(|c| c.dynamic_batching.as_ref()) {
         Some(d) => json::obj(vec![
             (
                 "preferred_batch_sizes",
@@ -360,9 +406,12 @@ pub fn model_metadata_json(
         ]),
         None => Value::Null,
     };
-    let instances = entry.config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
+    let instances = config.map(|c| c.total_instances()).unwrap_or(1);
     json::obj(vec![
-        ("name", json::s(&m.name)),
+        ("name", json::s(name)),
+        ("ready", Value::Bool(true)),
+        ("version", json::num(h.version() as f64)),
+        ("versions", Value::Arr(versions)),
         ("platform", json::s(&platform)),
         ("family", json::s(&m.family)),
         ("classes", json::num(m.classes as f64)),
@@ -377,11 +426,11 @@ pub fn model_metadata_json(
         ("max_batch_size", json::num(max_batch as f64)),
         ("dynamic_batching", dynamic_batching),
         ("instances", json::num(instances as f64)),
-        ("batched_path", Value::Bool(batched_path)),
+        ("batched_path", Value::Bool(h.has_batched())),
         (
             "queue",
             json::obj(vec![
-                ("depth", json::num(queue_depth as f64)),
+                ("depth", json::num(h.queue_depth() as f64)),
                 ("capacity", json::num(queue_capacity as f64)),
             ]),
         ),
@@ -396,9 +445,11 @@ mod tests {
     fn error_codes_map_to_http() {
         assert_eq!(ErrorCode::Backpressure.http_status(), 429);
         assert_eq!(ErrorCode::ModelNotFound.http_status(), 404);
+        assert_eq!(ErrorCode::ModelUnavailable.http_status(), 503);
         assert_eq!(ErrorCode::DeadlineExceeded.http_status(), 504);
         assert_eq!(ErrorCode::PayloadTooLarge.http_status(), 413);
         assert_eq!(ErrorCode::BadRequest.as_str(), "BAD_REQUEST");
+        assert_eq!(ErrorCode::ModelUnavailable.as_str(), "MODEL_UNAVAILABLE");
     }
 
     #[test]
@@ -414,6 +465,19 @@ mod tests {
         assert_eq!(e.code, ErrorCode::DeadlineExceeded);
         let e = ApiError::from_runtime(&RuntimeError::Xla("boom".into()));
         assert_eq!(e.code, ErrorCode::Internal);
+        // Lifecycle errors: unavailable = 503, misuse / bad config = 400.
+        let e = ApiError::from_runtime(&RuntimeError::ModelUnavailable { model: "m".into() });
+        assert_eq!(e.code, ErrorCode::ModelUnavailable);
+        let e = ApiError::from_runtime(&RuntimeError::InvalidConfig {
+            model: "m".into(),
+            reason: "bad".into(),
+        });
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        let e = ApiError::from_runtime(&RuntimeError::Lifecycle {
+            model: "m".into(),
+            reason: "not loaded".into(),
+        });
+        assert_eq!(e.code, ErrorCode::BadRequest);
     }
 
     #[test]

@@ -6,9 +6,13 @@
 //! * `GET  /v2`                        — server metadata
 //! * `GET  /v2/health/live|ready`      — liveness / readiness
 //! * `GET  /v2/models`                 — model index
-//! * `GET  /v2/models/{name}`         — model metadata + live queue state
-//! * `POST /v2/models/{name}/infer`   — single or batch inference with
-//!   `timeout_ms` deadlines and `priority`
+//! * `GET  /v2/models/{name}[/versions/{v}]` — metadata + per-version
+//!   lifecycle state + live queue state
+//! * `POST /v2/models/{name}[/versions/{v}]/infer` — single or batch
+//!   inference with `timeout_ms` deadlines and `priority`
+//! * `POST /v2/repository/index`       — repository-wide version states
+//! * `POST /v2/repository/models/{name}/load|unload` — model lifecycle
+//!   control (optional `{"parameters": {"version": N}}` body)
 //! * `GET  /v2/control/loops`          — control-plane introspection
 //! * `GET  /v2/admission/stats`        — admission-controller stats
 //! * legacy: `POST /infer`, `GET /health`, `GET /models`, `GET /metrics`
@@ -280,40 +284,43 @@ fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
             HttpResponse::ok_json(json::obj(vec![("live", Value::Bool(true))]).to_json())
         }
         ("GET", ["v2", "health", "ready"]) => {
-            let models = system.repository().model_names().len();
+            // Ready = at least one model has a Ready version to serve.
+            let ready = system.ready_models();
             HttpResponse::ok_json(
                 json::obj(vec![
-                    ("ready", Value::Bool(models > 0)),
-                    ("models", json::num(models as f64)),
+                    ("ready", Value::Bool(ready > 0)),
+                    ("models", json::num(ready as f64)),
                 ])
                 .to_json(),
             )
         }
         ("GET", ["v2", "models"]) => {
-            let names: Vec<Value> = system
-                .repository()
-                .model_names()
-                .into_iter()
-                .map(Value::Str)
-                .collect();
+            let names: Vec<Value> =
+                system.model_names().into_iter().map(Value::Str).collect();
             HttpResponse::ok_json(json::obj(vec![("models", Value::Arr(names))]).to_json())
         }
-        ("GET", ["v2", "models", name]) => match system.repository().get(name) {
-            Ok(entry) => HttpResponse::ok_json(
-                api::model_metadata_json(
-                    entry,
-                    system.queue_depth(name),
-                    system.queue_capacity(),
-                    system.has_batched_path(name),
-                )
-                .to_json(),
-            ),
-            Err(e) => ApiError::from_runtime(&e).to_response(),
+        ("GET", ["v2", "models", name]) => model_metadata(name, None, system),
+        ("GET", ["v2", "models", name, "versions", v]) => match parse_version(v) {
+            Ok(ver) => model_metadata(name, Some(ver), system),
+            Err(e) => e.to_response(),
         },
-        ("POST", ["v2", "models", name, "infer"]) => match v2_infer(name, req, system) {
+        ("POST", ["v2", "models", name, "infer"]) => match v2_infer(name, None, req, system) {
             Ok(resp) => resp,
             Err(e) => e.to_response(),
         },
+        ("POST", ["v2", "models", name, "versions", v, "infer"]) => {
+            match parse_version(v).and_then(|ver| v2_infer(name, Some(ver), req, system)) {
+                Ok(resp) => resp,
+                Err(e) => e.to_response(),
+            }
+        }
+        ("GET" | "POST", ["v2", "repository", "index"]) => repository_index(system),
+        ("POST", ["v2", "repository", "models", name, op @ ("load" | "unload")]) => {
+            match repository_control(name, op, req, system) {
+                Ok(resp) => resp,
+                Err(e) => e.to_response(),
+            }
+        }
         ("GET", ["v2", "control", "loops"]) => control_loops(system),
         ("GET", ["v2", "admission", "stats"]) => admission_stats(system),
 
@@ -329,12 +336,7 @@ fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
             HttpResponse::ok_text(MetricsRegistry::global().render_prometheus())
         }
         ("GET", ["models"]) => {
-            let names = system
-                .repository()
-                .model_names()
-                .into_iter()
-                .map(Value::Str)
-                .collect();
+            let names = system.model_names().into_iter().map(Value::Str).collect();
             HttpResponse::ok_json(Value::Arr(names).to_json())
         }
         ("POST", ["infer"]) => match legacy_infer(req, system) {
@@ -353,64 +355,80 @@ fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
     }
 }
 
-/// Run a typed infer request through the serving system. Items execute
-/// sequentially in body order; the first failure aborts the batch and
-/// becomes the response status (all-or-error semantics).
+/// Run a typed infer request through the serving system as one batch:
+/// the whole body goes down [`ServingSystem::submit_batch`], which
+/// coalesces multi-item bodies into shared batcher buckets (admission
+/// still runs per item) and keeps the all-or-error contract — the
+/// first failure aborts the batch and becomes the response status.
 fn run_infer(
     ir: &InferRequest,
     system: &ServingSystem,
 ) -> Result<(u64, Vec<(u64, InferResult)>), ApiError> {
     // Model existence first: MODEL_NOT_FOUND beats any submit error.
-    system.repository().get(&ir.model).map_err(|e| ApiError::from_runtime(&e))?;
+    if !system.registry().has_model(&ir.model) {
+        return Err(ApiError::new(
+            ErrorCode::ModelNotFound,
+            format!("unknown model {:?}", ir.model),
+        ));
+    }
     let reg = MetricsRegistry::global();
     let request_id = api::next_request_id();
     let now = system.clock().now();
     // One deadline for the whole batch: it bounds the client's wait, not
     // each item's share of it.
     let opts = match ir.timeout_ms {
-        Some(ms) => SubmitOptions::with_timeout(now, ms, ir.priority),
-        None => SubmitOptions { priority: ir.priority, ..SubmitOptions::default() },
+        Some(ms) => SubmitOptions {
+            version: ir.version,
+            ..SubmitOptions::with_timeout(now, ms, ir.priority)
+        },
+        None => SubmitOptions {
+            priority: ir.priority,
+            version: ir.version,
+            ..SubmitOptions::default()
+        },
     };
-    let mut results = Vec::with_capacity(ir.seeds.len());
-    for &seed in &ir.seeds {
-        reg.counter("gf_http_infer_total").inc();
-        let request = Request::external(
-            api::next_request_id(),
-            ir.model.clone(),
-            seed,
-            system.clock().now(),
-        );
-        match system.submit_opts(&request, ir.path.prefer(), &opts) {
-            Ok(r) => {
-                reg.gauge("gf_last_latency_secs").set(r.latency_secs);
-                results.push((seed, r));
+    reg.counter("gf_http_infer_total").add(ir.seeds.len() as u64);
+    let requests: Vec<Request> = ir
+        .seeds
+        .iter()
+        .map(|&seed| {
+            Request::external(api::next_request_id(), ir.model.clone(), seed, now)
+        })
+        .collect();
+    match system.submit_batch(&requests, ir.path.prefer(), &opts) {
+        Ok(results) => {
+            if let Some(last) = results.last() {
+                reg.gauge("gf_last_latency_secs").set(last.latency_secs);
             }
-            Err(e) => {
-                let api_err = ApiError::from_runtime(&e);
-                match api_err.code {
-                    ErrorCode::Backpressure => {
-                        reg.counter("gf_http_backpressure_total").inc()
-                    }
-                    ErrorCode::DeadlineExceeded => {
-                        reg.counter("gf_http_deadline_exceeded_total").inc()
-                    }
-                    _ => {}
+            Ok((request_id, ir.seeds.iter().copied().zip(results).collect()))
+        }
+        Err(e) => {
+            let api_err = ApiError::from_runtime(&e);
+            match api_err.code {
+                ErrorCode::Backpressure => reg.counter("gf_http_backpressure_total").inc(),
+                ErrorCode::DeadlineExceeded => {
+                    reg.counter("gf_http_deadline_exceeded_total").inc()
                 }
-                return Err(api_err);
+                ErrorCode::ModelUnavailable => {
+                    reg.counter("gf_http_model_unavailable_total").inc()
+                }
+                _ => {}
             }
+            Err(api_err)
         }
     }
-    Ok((request_id, results))
 }
 
 fn v2_infer(
     model: &str,
+    version: Option<u64>,
     req: &HttpRequest,
     system: &ServingSystem,
 ) -> Result<HttpResponse, ApiError> {
     let body = req.body_str().map_err(ApiError::bad_request)?;
     let v = json::parse(body).map_err(|e| ApiError::bad_request(e.to_string()))?;
-    let ir = InferRequest::from_json(model, &v)?;
+    let mut ir = InferRequest::from_json(model, &v)?;
+    ir.version = version;
     let (request_id, results) = run_infer(&ir, system)?;
     let outputs = results.iter().map(|(seed, r)| api::item_json(*seed, r)).collect();
     Ok(InferResponse {
@@ -420,6 +438,110 @@ fn v2_infer(
         outputs,
     }
     .to_response())
+}
+
+/// Parse a `{v}` route segment as a version number.
+fn parse_version(v: &str) -> Result<u64, ApiError> {
+    v.parse::<u64>().map_err(|_| {
+        ApiError::bad_request(format!("version must be a positive integer, got {v:?}"))
+    })
+}
+
+/// `GET /v2/models/{name}[/versions/{v}]`: per-version lifecycle state,
+/// plus full manifest/config metadata when the requested (or default)
+/// version is ready.
+fn model_metadata(name: &str, version: Option<u64>, system: &ServingSystem) -> HttpResponse {
+    let views = match system.registry().views(name) {
+        Ok(v) => v,
+        Err(e) => return ApiError::from_runtime(&e).to_response(),
+    };
+    let views: Vec<_> = match version {
+        Some(v) => views.into_iter().filter(|x| x.version == v).collect(),
+        None => views,
+    };
+    if views.is_empty() {
+        return ApiError::new(
+            ErrorCode::NotFound,
+            format!("model {name:?} has no version {}", version.unwrap_or_default()),
+        )
+        .to_response();
+    }
+    let handle = system.version_handle(name, version);
+    HttpResponse::ok_json(
+        api::model_metadata_json(name, handle.as_deref(), &views, system.queue_capacity())
+            .to_json(),
+    )
+}
+
+/// `POST /v2/repository/index`: every registered model with per-version
+/// lifecycle state and load stats (Triton's repository-index API).
+fn repository_index(system: &ServingSystem) -> HttpResponse {
+    let models: Vec<Value> = system
+        .registry()
+        .index()
+        .iter()
+        .map(|(name, views)| {
+            json::obj(vec![
+                ("name", json::s(name)),
+                (
+                    "versions",
+                    Value::Arr(views.iter().map(api::version_view_json).collect()),
+                ),
+            ])
+        })
+        .collect();
+    HttpResponse::ok_json(json::obj(vec![("models", Value::Arr(models))]).to_json())
+}
+
+/// `POST /v2/repository/models/{name}/load|unload` with an optional
+/// `{"parameters": {"version": N}}` body (no body / `{}` = the model's
+/// version policy on load, every ready version on unload).
+fn repository_control(
+    name: &str,
+    op: &str,
+    req: &HttpRequest,
+    system: &ServingSystem,
+) -> Result<HttpResponse, ApiError> {
+    let version = if req.body.is_empty() {
+        None
+    } else {
+        let body = req.body_str().map_err(ApiError::bad_request)?;
+        let v = json::parse(body).map_err(|e| ApiError::bad_request(e.to_string()))?;
+        let obj = v
+            .as_obj()
+            .map_err(|_| ApiError::bad_request("body must be a JSON object"))?;
+        match obj.get("parameters") {
+            Some(p) => {
+                let params = p
+                    .as_obj()
+                    .map_err(|_| ApiError::bad_request("\"parameters\" must be an object"))?;
+                match params.get("version") {
+                    Some(v) => Some(api::parse_seed(v).map_err(|_| {
+                        ApiError::bad_request("version must be a non-negative integer")
+                    })?),
+                    None => None,
+                }
+            }
+            None => None,
+        }
+    };
+    let result = match op {
+        "load" => system.load_model(name, version),
+        _ => system.unload_model(name, version),
+    };
+    match result {
+        Ok(versions) => {
+            let arr: Vec<Value> = versions.iter().map(|&v| json::num(v as f64)).collect();
+            Ok(HttpResponse::ok_json(
+                json::obj(vec![
+                    ("model", json::s(name)),
+                    (if op == "load" { "loaded" } else { "unloaded" }, Value::Arr(arr)),
+                ])
+                .to_json(),
+            ))
+        }
+        Err(e) => Err(ApiError::from_runtime(&e)),
+    }
 }
 
 /// Legacy `POST /infer` shim: `{"model": ..., "seed": N, "path": ...}` →
@@ -450,6 +572,7 @@ fn legacy_infer(req: &HttpRequest, system: &ServingSystem) -> Result<HttpRespons
         path,
         timeout_ms: None,
         priority: Default::default(),
+        version: None,
     };
     let (request_id, results) = run_infer(&ir, system)?;
     let (_, r) = &results[0];
@@ -531,6 +654,7 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
         ("infer_items", count("gf_http_infer_total")),
         ("backpressure_responses", count("gf_http_backpressure_total")),
         ("deadline_exceeded_responses", count("gf_http_deadline_exceeded_total")),
+        ("model_unavailable_responses", count("gf_http_model_unavailable_total")),
     ]);
     let body = match system.controller_stats() {
         Some(s) => json::obj(vec![

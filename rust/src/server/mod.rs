@@ -11,7 +11,8 @@
 //! * [`api`]     — the typed protocol: request/response/error structs,
 //!   stable error codes (`BACKPRESSURE`, `MODEL_NOT_FOUND`,
 //!   `DEADLINE_EXCEEDED`, …) and their HTTP mappings.
-//! * [`gateway`] — the route table (`/v2/...` + legacy shims), the
+//! * [`gateway`] — the route table (`/v2/...` including the
+//!   `/v2/repository` model-lifecycle surface, plus legacy shims), the
 //!   keep-alive connection loop, and the blocking acceptor.
 //! * [`client`]  — a small in-process HTTP/1.1 client for the CLI's
 //!   `--serve-bench` round-trip mode and the integration tests.

@@ -1,0 +1,370 @@
+//! Versioned model lifecycle over the live gateway.
+//!
+//! The first half runs everywhere (hermetic stub builds included): an
+//! **explicit-control** server over a synthetic on-disk repository,
+//! exercising the `/v2/repository` surface — index, per-version state,
+//! typed `MODEL_UNAVAILABLE` 503s, corrupt-config 400s, and
+//! `Failed{reason}` reporting (under the xla stub every engine load
+//! fails at compile, which is exactly the failure path these tests
+//! pin down). The second half needs real artifacts + a real PJRT
+//! backend and drives the acceptance round-trip: load → infer →
+//! unload mid-traffic → 503 → reload → infer, all on one keep-alive
+//! connection with no server restart.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use greenflow::json::Value;
+use greenflow::models;
+use greenflow::pipeline::system::{ModelControl, ServingSystem, SystemConfig};
+use greenflow::runtime::ModelState;
+use greenflow::server::{Gateway, HttpClient};
+use greenflow::telemetry::MetricsRegistry;
+
+// ---------------------------------------------------------------------
+// Synthetic repository (stub-safe: no engine ever has to execute).
+// ---------------------------------------------------------------------
+
+/// Write one model version's artifact set (manifest + weights + HLO
+/// text) into `dir`. Shapes are internally consistent so everything up
+/// to engine compilation succeeds.
+fn write_version(dir: &std::path::Path, name: &str) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            "{{\"name\": {name:?}, \"family\": \"toy\", \"classes\": 2,
+               \"batch_buckets\": [1, 4],
+               \"weights_file\": \"weights.bin\",
+               \"hlo_files\": {{\"1\": \"model.b1.hlo.txt\", \"4\": \"model.b4.hlo.txt\"}},
+               \"params\": [{{\"name\": \"w\", \"shape\": [4, 2], \"offset\": 0, \"numel\": 8}}],
+               \"input\": {{\"name\": \"tokens\", \"kind\": \"tokens\",
+                           \"shape_per_item\": [16], \"dtype\": \"i32\", \"vocab\": 8}}}}"
+        ),
+    )
+    .unwrap();
+    std::fs::write(dir.join("weights.bin"), [0u8; 32]).unwrap();
+    std::fs::write(dir.join("model.b1.hlo.txt"), "HloModule toy_b1").unwrap();
+    std::fs::write(dir.join("model.b4.hlo.txt"), "HloModule toy_b4").unwrap();
+}
+
+/// Build a throwaway repository: `alpha` with numbered versions 1 and 2
+/// and a valid config (policy: latest 1), `broken` flat with a corrupt
+/// config.pbtxt.
+fn synth_repo() -> PathBuf {
+    let root = std::env::temp_dir().join(format!(
+        "gf-lifecycle-test-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    std::fs::write(root.join("repository.json"), r#"{"models": ["alpha", "broken"]}"#)
+        .unwrap();
+    write_version(&root.join("alpha").join("1"), "alpha");
+    write_version(&root.join("alpha").join("2"), "alpha");
+    std::fs::write(
+        root.join("alpha").join("config.pbtxt"),
+        "name: \"alpha\"\nmax_batch_size: 4\n\
+         input [ { name: \"tokens\" data_type: TYPE_INT32 dims: [ 16 ] } ]\n\
+         output [ { name: \"logits\" data_type: TYPE_FP32 dims: [ 2 ] } ]\n\
+         dynamic_batching { preferred_batch_size: [ 4 ] max_queue_delay_microseconds: 1000 }\n\
+         version_policy { latest { num_versions: 1 } }\n",
+    )
+    .unwrap();
+    write_version(&root.join("broken"), "broken");
+    std::fs::write(root.join("broken").join("config.pbtxt"), "max_batch_size: {{{ garbage")
+        .unwrap();
+    root
+}
+
+fn error_code(v: &Value) -> String {
+    v.get("error")
+        .and_then(|e| e.get("code"))
+        .and_then(|c| c.as_str().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+/// Find a model's entry in a `/v2/repository/index` body.
+fn index_versions(index: &Value, model: &str) -> Vec<(i64, String)> {
+    index
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|m| m.get("name").unwrap().as_str().unwrap() == model)
+        .unwrap_or_else(|| panic!("model {model} missing from index"))
+        .get("versions")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| {
+            (
+                v.get("version").unwrap().as_i64().unwrap(),
+                v.get("state").unwrap().as_str().unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn explicit_mode_lifecycle_over_live_gateway() {
+    let root = synth_repo();
+    let cfg = SystemConfig::new(root.clone()).with_model_control(ModelControl::Explicit);
+    let sys = Arc::new(ServingSystem::start(cfg).expect("explicit mode boots empty"));
+    assert_eq!(sys.ready_models(), 0);
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+    // Not ready: nothing is loaded yet.
+    let ready = client.get("/v2/health/ready").unwrap().json().unwrap();
+    assert_eq!(ready.get("ready").unwrap(), &Value::Bool(false));
+
+    // The repository index still knows every model and version.
+    let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+    assert_eq!(
+        index_versions(&index, "alpha"),
+        vec![(1, "UNLOADED".to_string()), (2, "UNLOADED".to_string())]
+    );
+    assert_eq!(index_versions(&index, "broken"), vec![(1, "UNLOADED".to_string())]);
+
+    // Inference against an unloaded model is a typed 503; an unknown
+    // model stays a 404.
+    let resp = client.post_json("/v2/models/alpha/infer", r#"{"seed": 1}"#).unwrap();
+    assert_eq!(resp.status, 503, "{:?}", resp.body_str());
+    assert_eq!(error_code(&resp.json().unwrap()), "MODEL_UNAVAILABLE");
+    let resp = client.post_json("/v2/models/nope/infer", r#"{"seed": 1}"#).unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp.json().unwrap()), "MODEL_NOT_FOUND");
+
+    // Metadata for an unloaded model reports lifecycle state only.
+    let meta = client.get("/v2/models/alpha").unwrap().json().unwrap();
+    assert_eq!(meta.get("ready").unwrap(), &Value::Bool(false));
+    assert_eq!(meta.get("versions").unwrap().as_arr().unwrap().len(), 2);
+    let meta = client.get("/v2/models/alpha/versions/2").unwrap().json().unwrap();
+    assert_eq!(meta.get("versions").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(client.get("/v2/models/alpha/versions/9").unwrap().status, 404);
+    assert_eq!(client.get("/v2/models/alpha/versions/frob").unwrap().status, 400);
+
+    // Lifecycle misuse is typed: unloading something never loaded is a
+    // 400, as is loading an unknown version; unknown models 404.
+    let resp = client.post_json("/v2/repository/models/alpha/unload", "{}").unwrap();
+    assert_eq!(resp.status, 400, "{:?}", resp.body_str());
+    let resp = client
+        .post_json(
+            "/v2/repository/models/alpha/load",
+            r#"{"parameters": {"version": 9}}"#,
+        )
+        .unwrap();
+    assert_eq!(resp.status, 400);
+    let resp = client.post_json("/v2/repository/models/nope/load", "{}").unwrap();
+    assert_eq!(resp.status, 404);
+
+    // A corrupt config.pbtxt fails the load loudly (400 + Failed state),
+    // never serving with silent defaults.
+    let resp = client.post_json("/v2/repository/models/broken/load", "{}").unwrap();
+    assert_eq!(resp.status, 400, "{:?}", resp.body_str());
+    assert_eq!(error_code(&resp.json().unwrap()), "BAD_REQUEST");
+    let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+    assert_eq!(index_versions(&index, "broken")[0].1, "FAILED");
+    assert_eq!(
+        MetricsRegistry::global().gauge("gf_model_state.broken.1").get(),
+        ModelState::Failed { reason: String::new() }.code(),
+    );
+
+    // Loading alpha targets version 2 (policy: latest 1). Under the
+    // hermetic xla stub — and with these synthetic HLO files under any
+    // backend — engine compilation fails, so the load must surface a
+    // typed error and a Failed{reason} state instead of a half-up model.
+    let resp = client.post_json("/v2/repository/models/alpha/load", "{}").unwrap();
+    if resp.status == 200 {
+        // A backend that really compiled it: version 2 serves.
+        let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+        assert!(index_versions(&index, "alpha").contains(&(2, "READY".to_string())));
+    } else {
+        assert_eq!(resp.status, 500, "{:?}", resp.body_str());
+        let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+        assert_eq!(
+            index_versions(&index, "alpha"),
+            vec![(1, "UNLOADED".to_string()), (2, "FAILED".to_string())]
+        );
+        // The index carries the failure reason for operators.
+        let body = client.post_json("/v2/repository/index", "{}").unwrap();
+        assert!(body.body_str().unwrap().contains("reason"), "{:?}", body.body_str());
+        // Still a 503 for clients, and still not ready.
+        let resp = client.post_json("/v2/models/alpha/infer", r#"{"seed": 1}"#).unwrap();
+        assert_eq!(resp.status, 503);
+    }
+
+    drop(client);
+    drop(gw);
+    let _ = std::fs::remove_dir_all(root);
+}
+
+// ---------------------------------------------------------------------
+// Full round-trip (needs real artifacts + a real PJRT backend).
+// ---------------------------------------------------------------------
+
+fn repo_root() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("repository.json").exists().then_some(root)
+}
+
+/// The artifact-gated tests both boot systems over the same models, and
+/// `gf_model_state.<model>.<v>` gauges are process-global — serialise
+/// them so one test's boot cannot race the other's state assertions.
+static GATED: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn lifecycle_round_trip_over_live_gateway() {
+    let Some(root) = repo_root() else { return };
+    let _serial = GATED.lock().unwrap_or_else(|e| e.into_inner());
+    let sys = Arc::new(ServingSystem::start(SystemConfig::new(root)).unwrap());
+    let gw = Gateway::start(sys, 0, 8).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+    let model = models::DISTILBERT;
+    let infer_path = format!("/v2/models/{model}/infer");
+    // Direct-pinned so concurrent traffic can only see 200 or 503.
+    let traffic_body = r#"{"seed": 3, "parameters": {"path": "direct"}}"#;
+
+    // Loaded at boot: plain and version-qualified infer both work.
+    let resp = client.post_json(&infer_path, r#"{"seed": 1}"#).unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    let resp = client
+        .post_json(&format!("/v2/models/{model}/versions/1/infer"), r#"{"seed": 2}"#)
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let saw_ok = Arc::new(AtomicBool::new(false));
+    let addr = gw.addr();
+    std::thread::scope(|s| {
+        // Traffic riding through the unload/reload: every response must
+        // be a clean 200 or a typed 503 — never a 500, never a hang.
+        // Self-deadlined so an assertion failure on the main thread
+        // cannot wedge the scope join.
+        for _ in 0..4 {
+            let stop = stop.clone();
+            let saw_ok = saw_ok.clone();
+            s.spawn(move || {
+                let Ok(mut c) = HttpClient::connect(addr) else { return };
+                let path = format!("/v2/models/{}/infer", models::DISTILBERT);
+                let deadline = Instant::now() + Duration::from_secs(20);
+                while !stop.load(Ordering::SeqCst) && Instant::now() < deadline {
+                    match c.post_json(&path, traffic_body) {
+                        Ok(resp) if resp.status == 200 => {
+                            saw_ok.store(true, Ordering::SeqCst);
+                        }
+                        Ok(resp) if resp.status == 503 => {
+                            assert_eq!(
+                                error_code(&resp.json().unwrap()),
+                                "MODEL_UNAVAILABLE"
+                            );
+                        }
+                        Ok(resp) => panic!(
+                            "unexpected status {} mid-lifecycle: {:?}",
+                            resp.status,
+                            resp.body_str()
+                        ),
+                        Err(_) => break, // server rotated the connection
+                    }
+                }
+            });
+        }
+
+        // --- unload on the same keep-alive connection
+        let resp = client
+            .post_json(&format!("/v2/repository/models/{model}/unload"), "{}")
+            .unwrap();
+        assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+        let v = resp.json().unwrap();
+        assert_eq!(
+            v.get("unloaded").unwrap().as_arr().unwrap().len(),
+            1,
+            "flat layout has exactly version 1"
+        );
+
+        // State is visible everywhere: metadata, index, gauge.
+        let meta = client.get(&format!("/v2/models/{model}")).unwrap().json().unwrap();
+        assert_eq!(meta.get("ready").unwrap(), &Value::Bool(false));
+        let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+        assert_eq!(index_versions(&index, model), vec![(1, "UNLOADED".to_string())]);
+        assert_eq!(
+            MetricsRegistry::global()
+                .gauge(&format!("gf_model_state.{model}.1"))
+                .get(),
+            ModelState::Unloaded.code(),
+        );
+
+        // Subsequent inference is the typed 503.
+        let resp = client.post_json(&infer_path, r#"{"seed": 5}"#).unwrap();
+        assert_eq!(resp.status, 503, "{:?}", resp.body_str());
+        assert_eq!(error_code(&resp.json().unwrap()), "MODEL_UNAVAILABLE");
+
+        // --- reload, still the same connection, no restart
+        let resp = client
+            .post_json(&format!("/v2/repository/models/{model}/load"), "{}")
+            .unwrap();
+        assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+        let meta = client.get(&format!("/v2/models/{model}")).unwrap().json().unwrap();
+        assert_eq!(meta.get("ready").unwrap(), &Value::Bool(true));
+        let versions = meta.get("versions").unwrap().as_arr().unwrap();
+        assert_eq!(versions[0].get("state").unwrap().as_str().unwrap(), "READY");
+        // Load stats rode along (compile seconds + weight bytes + energy).
+        assert!(
+            versions[0].get("load").unwrap().get("seconds").unwrap().as_f64().unwrap() > 0.0
+        );
+        assert_eq!(
+            MetricsRegistry::global()
+                .gauge(&format!("gf_model_state.{model}.1"))
+                .get(),
+            ModelState::Ready.code(),
+        );
+
+        let resp = client.post_json(&infer_path, r#"{"seed": 6}"#).unwrap();
+        assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+
+        stop.store(true, Ordering::SeqCst);
+    });
+    assert!(saw_ok.load(Ordering::SeqCst), "traffic threads must have served work");
+}
+
+#[test]
+fn v2_batch_body_coalesces_into_buckets() {
+    let Some(root) = repo_root() else { return };
+    let _serial = GATED.lock().unwrap_or_else(|e| e.into_inner());
+    let sys = Arc::new(ServingSystem::start(SystemConfig::new(root)).unwrap());
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+    // 16 items in one body, pinned to the batched path: all items are
+    // enqueued before any reply is collected, so the dynamic batcher
+    // fuses them instead of executing 16 singletons.
+    let inputs: Vec<String> = (0..16).map(|i| format!("{{\"seed\": {i}}}")).collect();
+    let body = format!(
+        "{{\"inputs\": [{}], \"parameters\": {{\"path\": \"batched\"}}}}",
+        inputs.join(", ")
+    );
+    let resp = client
+        .post_json(&format!("/v2/models/{}/infer", models::DISTILBERT), &body)
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    let v = resp.json().unwrap();
+    let outputs = v.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outputs.len(), 16);
+    for (i, out) in outputs.iter().enumerate() {
+        assert_eq!(out.get("seed").unwrap().as_i64().unwrap(), i as i64, "order kept");
+    }
+    let buckets: Vec<i64> = outputs
+        .iter()
+        .map(|o| o.get("bucket").unwrap().as_i64().unwrap())
+        .collect();
+    assert!(
+        buckets.iter().any(|&b| b >= 2),
+        "16-item body executed as singletons: {buckets:?}"
+    );
+}

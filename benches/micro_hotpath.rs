@@ -5,8 +5,13 @@
 //! histogram record < 1 µs; coordinator overhead ≪ model execute time.
 //!
 //! ```bash
-//! cargo bench --bench micro_hotpath
+//! cargo bench --bench micro_hotpath            # human-readable report
+//! cargo bench --bench micro_hotpath -- --json micro_hotpath.json
 //! ```
+//!
+//! `--json PATH` additionally writes every case's mean/p50/p95 (ns) as
+//! one JSON object — the per-component input `greenflow perfgate` embeds
+//! into the CI `BENCH_*.json` artifact (docs/BENCH.md).
 
 mod common;
 
@@ -31,7 +36,45 @@ fn report(results: &[BenchResult]) {
     }
 }
 
+/// Serialise every case as `{name: {mean_ns, p50_ns, p95_ns, iters}}`.
+fn write_json(path: &str, results: &[BenchResult]) {
+    use greenflow::json::{num, obj, Value};
+    let cases: Vec<(&str, Value)> = results
+        .iter()
+        .map(|r| {
+            (
+                r.name.as_str(),
+                obj(vec![
+                    ("mean_ns", num(r.mean() * 1e9)),
+                    ("p50_ns", num(r.p50() * 1e9)),
+                    ("p95_ns", num(r.p95() * 1e9)),
+                    ("iters", num(r.samples.len() as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let body = obj(vec![
+        ("schema", greenflow::json::s("greenflow.micro-hotpath/1")),
+        ("cases", obj(cases)),
+    ]);
+    match std::fs::write(path, body.to_json()) {
+        Ok(()) => println!("micro_hotpath: wrote {path}"),
+        Err(e) => {
+            eprintln!("micro_hotpath: cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
+    // `cargo bench --bench micro_hotpath -- --json PATH` (everything
+    // after `--` reaches argv).
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let iters = 100_000;
     let mut results = Vec::new();
 
@@ -107,7 +150,12 @@ fn main() {
     report(&results);
 
     // ---- engine execute per model/bucket (needs artifacts) -------------
-    let Some(root) = common::require_artifacts() else { return };
+    let Some(root) = common::require_artifacts() else {
+        if let Some(path) = &json_path {
+            write_json(path, &results);
+        }
+        return;
+    };
     println!();
     for mode in [ExecMode::Literals, ExecMode::DeviceBuffers] {
         let direct = DirectPath::start(
@@ -136,5 +184,9 @@ fn main() {
         report(&engine_results);
         // per-item efficiency of batching
         println!();
+        results.extend(engine_results);
+    }
+    if let Some(path) = &json_path {
+        write_json(path, &results);
     }
 }

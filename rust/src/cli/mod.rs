@@ -5,13 +5,16 @@
 //!                     [--model-control explicit|none]
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
-//!                     [--serve-bench N [--model distilbert_mini]]
+//!                     [--serve-bench N [--model distilbert_mini] [--bench-json out.json]]
 //! greenflow repo      <index|load|unload> [--addr 127.0.0.1:8080]
-//!                     [--model NAME] [--version N]
+//!                     [--model NAME] [--version N] [--wait]
 //! greenflow report    --repo artifacts
 //! greenflow ablation  [--requests 1000] [--tau0 0.2] [--tau-inf 0.78] [--k 2.0]
 //!                     [--adaptive-tau 0.58]
 //! greenflow landscape [--out -]
+//! greenflow perfgate  --serve-json serve_bench.json [--micro-json micro.json]
+//!                     [--out BENCH.json] [--baseline benches/baseline.json]
+//!                     [--max-regress 0.20] [--label pr5]
 //! greenflow version
 //! ```
 //!
@@ -29,7 +32,13 @@
 //! `--model-control explicit` starts the server with nothing loaded;
 //! `greenflow repo load/unload --model NAME [--version N]` then drives
 //! the running server's `/v2/repository` lifecycle API over HTTP
-//! (`repo index` prints every model's per-version state).
+//! (`repo index` prints every model's per-version state). Lifecycle
+//! operations are async (202) unless `--wait` is passed.
+//!
+//! `perfgate` is the CI perf gate: it fuses a `--serve-bench
+//! --bench-json` run and the micro-hotpath timings into one
+//! `BENCH_*.json` snapshot and fails on regression against a committed
+//! baseline — see `docs/BENCH.md`.
 
 pub mod args;
 
@@ -83,6 +92,7 @@ pub fn run(argv: &[String]) -> i32 {
         "serve" => cmd_serve(&args),
         "ablation" => cmd_ablation(&args),
         "landscape" => cmd_landscape(&args),
+        "perfgate" => cmd_perfgate(&args),
         other => {
             eprintln!("unknown command {other:?}\n{}", usage());
             2
@@ -91,7 +101,7 @@ pub fn run(argv: &[String]) -> i32 {
 }
 
 fn usage() -> &'static str {
-    "usage: greenflow <serve|repo|report|ablation|landscape|version> [--flag value ...]"
+    "usage: greenflow <serve|repo|report|ablation|landscape|perfgate|version> [--flag value ...]"
 }
 
 fn repo_root(args: &Args) -> PathBuf {
@@ -178,10 +188,13 @@ fn control_config(args: &Args, slo: f64) -> Option<ControlPlaneConfig> {
 }
 
 /// `greenflow repo <index|load|unload>`: drive a running server's
-/// `/v2/repository` lifecycle API over one HTTP round-trip.
+/// `/v2/repository` lifecycle API over one HTTP round-trip. Load and
+/// unload are asynchronous by default (202 + pollable state via
+/// `repo index`); `--wait` blocks until the server reports the
+/// terminal outcome.
 fn cmd_repo(rest: &[String]) -> i32 {
     const REPO_USAGE: &str = "usage: greenflow repo <index|load|unload> \
-                              [--addr 127.0.0.1:8080] [--model NAME] [--version N]";
+                              [--addr 127.0.0.1:8080] [--model NAME] [--version N] [--wait]";
     let Some((op, flags)) = rest.split_first() else {
         eprintln!("{REPO_USAGE}");
         return 2;
@@ -218,7 +231,8 @@ fn cmd_repo(rest: &[String]) -> i32 {
                 }
                 None => "{}".to_string(),
             };
-            (format!("/v2/repository/models/{model}/{op}"), body)
+            let wait = if args.has("wait") { "?wait=true" } else { "" };
+            (format!("/v2/repository/models/{model}/{op}{wait}"), body)
         }
         other => {
             eprintln!("unknown repo operation {other:?}\n{REPO_USAGE}");
@@ -235,7 +249,8 @@ fn cmd_repo(rest: &[String]) -> i32 {
     match client.post_json(&path, &body) {
         Ok(resp) => {
             println!("{}", resp.body_str().unwrap_or_default());
-            if resp.status == 200 {
+            // 200 = done, 202 = accepted (async lifecycle) — both wins.
+            if (200..300).contains(&resp.status) {
                 0
             } else {
                 eprintln!("HTTP {}", resp.status);
@@ -314,7 +329,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 let model = args
                     .get("model")
                     .unwrap_or_else(|| crate::models::DISTILBERT.to_string());
-                let code = serve_bench(gw.addr(), n, &model);
+                let code = serve_bench(gw.addr(), n, &model, args.get("bench-json").as_deref());
                 gw.shutdown();
                 return code;
             }
@@ -330,8 +345,13 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
-/// Round-trip bench: N v2 infers over one keep-alive connection.
-fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str) -> i32 {
+/// Round-trip bench: N requests over one keep-alive connection. When
+/// the target model has a ready version the round-trips are real v2
+/// infers; otherwise (hermetic CI — the stub backend loads nothing) it
+/// degrades to `GET /v2/health/live`, which still measures the whole
+/// HTTP hot path (accept loop, parse, route, serialise). `--bench-json`
+/// writes the measurements for the CI perf gate (`greenflow perfgate`).
+fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str, json_out: Option<&str>) -> i32 {
     let mut client = match crate::server::HttpClient::connect(addr) {
         Ok(c) => c,
         Err(e) => {
@@ -339,12 +359,33 @@ fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str) -> i32 {
             return 1;
         }
     };
-    let path = format!("/v2/models/{model}/infer");
+    let ready = client
+        .get(&format!("/v2/models/{model}"))
+        .ok()
+        .and_then(|r| r.json().ok())
+        .map(|v| v.get("ready").ok().cloned() == Some(crate::json::Value::Bool(true)))
+        .unwrap_or(false);
+    let target = if ready { "infer" } else { "health" };
+    if !ready {
+        eprintln!(
+            "serve-bench: model {model:?} has no ready version — measuring \
+             /v2/health/live round-trips instead"
+        );
+    }
+    let infer_path = format!("/v2/models/{model}/infer");
+    let mut latencies = Vec::with_capacity(n);
     let t0 = std::time::Instant::now();
     let (mut ok, mut err) = (0usize, 0usize);
     for seed in 0..n {
-        match client.post_json(&path, &format!("{{\"seed\": {seed}}}")) {
+        let t_req = std::time::Instant::now();
+        let result = if ready {
+            client.post_json(&infer_path, &format!("{{\"seed\": {seed}}}"))
+        } else {
+            client.get("/v2/health/live")
+        };
+        match result {
             Ok(resp) => {
+                latencies.push(t_req.elapsed().as_secs_f64());
                 if resp.status == 200 {
                     ok += 1;
                 } else {
@@ -370,13 +411,35 @@ fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str) -> i32 {
         }
     }
     let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let p50 = crate::stats::quantile(&latencies, 0.5);
+    let p95 = crate::stats::quantile(&latencies, 0.95);
     println!(
-        "serve-bench: {n} round-trips on one keep-alive connection in {:.3} s \
-         ({:.0} req/s, {:.1} µs/req), {ok} ok / {err} error responses",
+        "serve-bench[{target}]: {n} round-trips on one keep-alive connection in {:.3} s \
+         ({:.0} req/s, p50 {:.1} µs, p95 {:.1} µs), {ok} ok / {err} error responses",
         secs,
         n as f64 / secs,
-        secs / n as f64 * 1e6,
+        p50 * 1e6,
+        p95 * 1e6,
     );
+    if let Some(path) = json_out {
+        let report = crate::json::obj(vec![
+            ("schema", crate::json::s("greenflow.serve-bench/1")),
+            ("target", crate::json::s(target)),
+            ("model", crate::json::s(model)),
+            ("requests", crate::json::num(n as f64)),
+            ("seconds", crate::json::num(secs)),
+            ("throughput_rps", crate::json::num(n as f64 / secs)),
+            ("p50_latency_us", crate::json::num(p50 * 1e6)),
+            ("p95_latency_us", crate::json::num(p95 * 1e6)),
+            ("ok", crate::json::num(ok as f64)),
+            ("errors", crate::json::num(err as f64)),
+        ]);
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("serve-bench: cannot write {path}: {e}");
+            return 1;
+        }
+        println!("serve-bench: wrote {path}");
+    }
     0
 }
 
@@ -441,6 +504,177 @@ fn cmd_ablation(args: &Args) -> i32 {
     ]);
     print!("{}", t.render());
     0
+}
+
+/// Read a whole JSON file (perfgate inputs).
+fn read_json_file(path: &str) -> Result<crate::json::Value, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    crate::json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+/// A baseline field: a number to gate against, or null/absent = not
+/// pinned yet (the check is skipped and the measured value printed so
+/// the operator can pin it).
+fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
+    v.get(key).ok().and_then(|x| x.as_f64().ok())
+}
+
+/// `greenflow perfgate`: assemble the `BENCH_*.json` perf snapshot and
+/// gate it against a committed baseline (the CI perf gate — see
+/// `docs/BENCH.md`).
+///
+/// ```text
+/// greenflow perfgate --serve-json serve_bench.json [--micro-json micro.json]
+///                    --out BENCH_5.json [--label pr5]
+///                    [--baseline benches/baseline.json] [--max-regress 0.20]
+///                    [--requests 2000]
+/// ```
+///
+/// Inputs: the `--bench-json` output of `greenflow serve --serve-bench`
+/// (HTTP round-trip throughput + latency percentiles) and optionally
+/// the `--json` output of `cargo bench --bench micro_hotpath`
+/// (per-component timings, embedded verbatim). Two gated numbers are
+/// measured in-process so the gate has no backend dependency: the
+/// `Adaptive<T>` hot-path read (ns) and the deterministic admission-sim
+/// admit rate. Exits 1 when any pinned baseline regresses by more than
+/// `--max-regress` (direction-aware: throughput may not drop, latency
+/// and read cost may not grow, admit rate may not drift either way).
+fn cmd_perfgate(args: &Args) -> i32 {
+    use crate::json::{self, Value};
+
+    let Some(serve_path) = args.get("serve-json") else {
+        eprintln!("perfgate needs --serve-json <serve_bench.json>");
+        return 2;
+    };
+    let serve = match read_json_file(&serve_path) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("perfgate: {e}");
+            return 1;
+        }
+    };
+    let serve_num = |key: &str| serve.get(key).ok().and_then(|v| v.as_f64().ok());
+    let (Some(throughput), Some(p50_us), Some(p95_us)) = (
+        serve_num("throughput_rps"),
+        serve_num("p50_latency_us"),
+        serve_num("p95_latency_us"),
+    ) else {
+        eprintln!("perfgate: {serve_path} is missing throughput/latency fields");
+        return 1;
+    };
+    let components = match args.get("micro-json") {
+        Some(p) => match read_json_file(&p) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+        },
+        None => Value::Null,
+    };
+
+    // Adaptive<T> hot-path read, measured right here: the control
+    // plane's promise is that adaptive knobs cost ~a plain load on the
+    // request path (includes ~Instant::now() timer overhead, same as
+    // micro_hotpath).
+    let adaptive = crate::control::Adaptive::new(0.51f64);
+    let mut acc = 0.0f64;
+    let r = crate::benchkit::bench_fn("adaptive_f64.get", 1000, 200_000, || {
+        acc += std::hint::black_box(&adaptive).get();
+    });
+    std::hint::black_box(acc);
+    let adaptive_read_ns = r.mean() * 1e9;
+
+    // Deterministic admission-rate sim (fixed seed + default controller
+    // schedule): catches regressions in the J(x)/τ(t) decision logic
+    // itself, independent of machine speed.
+    let n = args.get_f64("requests").unwrap_or(2000.0).max(1.0) as usize;
+    let seed = 20260710u64;
+    let mut rng = crate::util::Rng::new(seed);
+    let mut arr = ArrivalProcess::poisson(200.0);
+    let times = arrival_times(&mut arr, n, &mut rng);
+    let reqs = RequestStream::new(StreamConfig::default(), seed ^ 1).take(&times);
+    let sim_cfg = SimConfig { seed, ..SimConfig::table3_default() };
+    let mut bio = AdmissionController::new(controller_config(args));
+    let admit_rate = simulate(&mut bio, &reqs, &sim_cfg).admission_rate();
+
+    let label = args.get("label").unwrap_or_else(|| "bench".to_string());
+    let bench = json::obj(vec![
+        ("schema", json::s("greenflow.bench/1")),
+        ("label", json::s(&label)),
+        ("throughput_rps", json::num(throughput)),
+        ("p50_latency_us", json::num(p50_us)),
+        ("p95_latency_us", json::num(p95_us)),
+        ("admit_rate", json::num(admit_rate)),
+        ("adaptive_read_ns", json::num(adaptive_read_ns)),
+        ("serve_bench", serve),
+        ("components", components),
+    ]);
+    let out = args.get("out").unwrap_or_else(|| "BENCH.json".to_string());
+    if let Err(e) = std::fs::write(&out, bench.to_json()) {
+        eprintln!("perfgate: cannot write {out}: {e}");
+        return 1;
+    }
+    println!("perfgate: wrote {out}");
+
+    let Some(baseline_path) = args.get("baseline") else {
+        println!("perfgate: no --baseline, nothing gated");
+        return 0;
+    };
+    let baseline = match read_json_file(&baseline_path) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("perfgate: {e}");
+            return 1;
+        }
+    };
+    let r = args.get_f64("max-regress").unwrap_or(0.20).clamp(0.0, 10.0);
+
+    // (metric, measured, pinned baseline, check kind)
+    enum Gate {
+        /// Regression = dropping below baseline × (1 − r).
+        Floor,
+        /// Regression = rising above baseline × (1 + r).
+        Ceiling,
+        /// Regression = drifting from baseline by more than r either way.
+        Drift,
+    }
+    let checks = [
+        ("throughput_rps", throughput, Gate::Floor),
+        ("p50_latency_us", p50_us, Gate::Ceiling),
+        ("p95_latency_us", p95_us, Gate::Ceiling),
+        ("admit_rate", admit_rate, Gate::Drift),
+        ("adaptive_read_ns", adaptive_read_ns, Gate::Ceiling),
+    ];
+    let mut failed = false;
+    for (name, measured, gate) in checks {
+        let Some(base) = baseline_field(&baseline, name) else {
+            println!("  {name:<18} {measured:>12.3}  (baseline unpinned — recorded only)");
+            continue;
+        };
+        let ok = match gate {
+            Gate::Floor => measured >= base * (1.0 - r),
+            Gate::Ceiling => measured <= base * (1.0 + r),
+            Gate::Drift => (measured - base).abs() <= r * base.abs().max(1e-9),
+        };
+        println!(
+            "  {name:<18} {measured:>12.3}  vs baseline {base:>12.3}  [{}]",
+            if ok { "ok" } else { "REGRESSION" }
+        );
+        if !ok {
+            failed = true;
+        }
+    }
+    if failed {
+        eprintln!(
+            "perfgate: regression past the {:.0}% budget against {baseline_path}",
+            r * 100.0
+        );
+        1
+    } else {
+        println!("perfgate: within the {:.0}% budget of {baseline_path}", r * 100.0);
+        0
+    }
 }
 
 fn cmd_landscape(args: &Args) -> i32 {
@@ -526,6 +760,95 @@ mod tests {
     #[test]
     fn landscape_emits_csv() {
         assert_eq!(run(&sv(&["landscape", "--samples", "50"])), 0);
+    }
+
+    #[test]
+    fn perfgate_assembles_and_gates() {
+        let dir = std::env::temp_dir().join(format!(
+            "gf-perfgate-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let serve = dir.join("serve_bench.json");
+        std::fs::write(
+            &serve,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "throughput_rps": 5000.0, "p50_latency_us": 100.0,
+                "p95_latency_us": 400.0, "ok": 100, "errors": 0}"#,
+        )
+        .unwrap();
+        let out = dir.join("BENCH_test.json");
+
+        // Missing input is a usage error; bad path a runtime error.
+        assert_eq!(run(&sv(&["perfgate"])), 2);
+        assert_eq!(run(&sv(&["perfgate", "--serve-json", "/nonexistent.json"])), 1);
+
+        // No baseline: snapshot written, nothing gated.
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            0
+        );
+        let bench = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            bench.get("schema").unwrap().as_str().unwrap(),
+            "greenflow.bench/1"
+        );
+        assert_eq!(bench.get("throughput_rps").unwrap().as_f64().unwrap(), 5000.0);
+        let admit = bench.get("admit_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&admit), "{admit}");
+        assert!(bench.get("adaptive_read_ns").unwrap().as_f64().unwrap() > 0.0);
+
+        // Generous baseline passes; an impossible throughput floor fails;
+        // unpinned (null) fields are recorded but never gated.
+        let good = dir.join("baseline_good.json");
+        std::fs::write(
+            &good,
+            r#"{"throughput_rps": 4500.0, "p50_latency_us": 120.0,
+                "p95_latency_us": 480.0, "admit_rate": null,
+                "adaptive_read_ns": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--baseline",
+                good.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            0
+        );
+        let bad = dir.join("baseline_bad.json");
+        std::fs::write(&bad, r#"{"throughput_rps": 1e9}"#).unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--baseline",
+                bad.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            1
+        );
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

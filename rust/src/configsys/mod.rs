@@ -11,17 +11,26 @@ pub mod pbtxt;
 
 pub use pbtxt::{parse_pbtxt, PbNode, PbValue};
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+// Hand-written error impls (no `thiserror`) keep the dependency graph
+// path-only — see `runtime::RuntimeError`.
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("pbtxt syntax error: {0}")]
     Syntax(String),
-    #[error("missing field {0}")]
     Missing(&'static str),
-    #[error("invalid value for {0}: {1}")]
     Invalid(&'static str, String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Syntax(m) => write!(f, "pbtxt syntax error: {m}"),
+            ConfigError::Missing(field) => write!(f, "missing field {field}"),
+            ConfigError::Invalid(field, v) => write!(f, "invalid value for {field}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Tensor dtype as declared in config.pbtxt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

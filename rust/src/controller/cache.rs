@@ -39,16 +39,67 @@ impl ResponseCache {
         }
     }
 
+    /// Hard ceiling on the cluster count: the per-version base hash
+    /// reserves exactly these low bits for the cluster index, and
+    /// [`Self::invalidate`]'s walk is bounded by it. `signature` and
+    /// `invalidate` **must** clamp identically or unload would leave
+    /// high-cluster entries alive.
+    pub const MAX_CLUSTERS: u64 = 1 << 20;
+
+    fn cluster_of(seed: u64, clusters: u64) -> u64 {
+        seed % clusters.clamp(1, Self::MAX_CLUSTERS)
+    }
+
     /// Quantise an input signature: bucket the payload seed space so
-    /// similar payloads (same generator cluster) share an entry.
-    pub fn signature(model: &str, seed: u64, clusters: u64) -> u64 {
-        // FNV-1a over the model name, mixed with the seed's cluster.
+    /// similar payloads (same generator cluster) share an entry. The
+    /// model **version** is part of the key — a reloaded version must
+    /// never serve the previous version's cached answers (the ROADMAP
+    /// lifecycle follow-up this fixed). Cluster counts are clamped to
+    /// [`Self::MAX_CLUSTERS`].
+    pub fn signature(model: &str, version: u64, seed: u64, clusters: u64) -> u64 {
+        Self::base(model, version) ^ Self::cluster_of(seed, clusters)
+    }
+
+    /// FNV-1a over the model name and version — the per-version key
+    /// prefix every cluster signature is XORed onto. Keeping the cluster
+    /// in the low bits (XOR of the clamped cluster index) makes a
+    /// version's full signature set enumerable, which is what
+    /// [`Self::invalidate`] walks on unload.
+    fn base(model: &str, version: u64) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in model.as_bytes() {
-            h ^= *b as u64;
+        for b in model.as_bytes().iter().copied().chain(version.to_le_bytes()) {
+            h ^= b as u64;
             h = h.wrapping_mul(0x1000_0000_01b3);
         }
-        h ^ (seed % clusters.max(1))
+        // Clear the low cluster bits (the MAX_CLUSTERS space) so a
+        // cluster index can never bleed into a neighbouring base.
+        h & !(Self::MAX_CLUSTERS - 1)
+    }
+
+    /// Drop every entry a (model, version) pair could have minted:
+    /// called on unload so a later reload starts cold instead of
+    /// inheriting the dead version's answers. Returns how many entries
+    /// were removed. `clusters` must match the value used at `put`
+    /// time (it is a system-wide config constant).
+    pub fn invalidate(&mut self, model: &str, version: u64, clusters: u64) -> usize {
+        let base = Self::base(model, version);
+        let mut removed = 0;
+        // The signature space for one version is exactly
+        // {base ^ c | c < clamped clusters} (the config default is 256).
+        for c in 0..clusters.clamp(1, Self::MAX_CLUSTERS) {
+            if self.map.remove(&(base ^ c)).is_some() {
+                removed += 1;
+            }
+        }
+        if removed > 0 {
+            // Purge the eviction-queue slots too: a reload re-caching
+            // the same signature must get a *fresh* slot — a leftover
+            // one would make eviction drop the newest entry instead of
+            // the oldest.
+            let map = &self.map;
+            self.order.retain(|k| map.contains_key(k));
+        }
+        removed
     }
 
     pub fn get(&mut self, sig: u64) -> Option<CachedResponse> {
@@ -62,6 +113,9 @@ impl ResponseCache {
     }
 
     pub fn put(&mut self, sig: u64, resp: CachedResponse) {
+        // `order` only ever holds live keys (`invalidate` purges the
+        // slots of the entries it drops), so the front of the queue is
+        // always a real eviction victim.
         if self.map.len() >= self.capacity && !self.map.contains_key(&sig) {
             if let Some(old) = self.order.pop_front() {
                 self.map.remove(&old);
@@ -97,7 +151,7 @@ mod tests {
     #[test]
     fn put_get_roundtrip() {
         let mut c = ResponseCache::new(4);
-        let sig = ResponseCache::signature("m", 42, 100);
+        let sig = ResponseCache::signature("m", 1, 42, 100);
         assert!(c.get(sig).is_none());
         c.put(sig, CachedResponse { label: 1, confidence: 0.9 });
         assert_eq!(c.get(sig).unwrap().label, 1);
@@ -126,17 +180,103 @@ mod tests {
 
     #[test]
     fn signature_clusters_seeds() {
-        let a = ResponseCache::signature("m", 5, 10);
-        let b = ResponseCache::signature("m", 15, 10); // same cluster (5 mod 10)
-        let c = ResponseCache::signature("m", 6, 10);
+        let a = ResponseCache::signature("m", 1, 5, 10);
+        let b = ResponseCache::signature("m", 1, 15, 10); // same cluster (5 mod 10)
+        let c = ResponseCache::signature("m", 1, 6, 10);
         assert_eq!(a, b);
         assert_ne!(a, c);
-        assert_ne!(a, ResponseCache::signature("other", 5, 10));
+        assert_ne!(a, ResponseCache::signature("other", 1, 5, 10));
+    }
+
+    #[test]
+    fn signature_is_version_aware() {
+        // The reload bugfix: v1 and v2 of the same model must never
+        // share an entry, even for the same seed cluster.
+        let v1 = ResponseCache::signature("m", 1, 5, 10);
+        let v2 = ResponseCache::signature("m", 2, 5, 10);
+        assert_ne!(v1, v2);
+    }
+
+    #[test]
+    fn invalidate_drops_exactly_one_versions_entries() {
+        let mut c = ResponseCache::new(64);
+        for seed in 0..20u64 {
+            c.put(
+                ResponseCache::signature("m", 1, seed, 10),
+                CachedResponse { label: 1, confidence: 0.9 },
+            );
+            c.put(
+                ResponseCache::signature("m", 2, seed, 10),
+                CachedResponse { label: 2, confidence: 0.9 },
+            );
+        }
+        assert_eq!(c.len(), 20); // 10 clusters per version
+        let removed = c.invalidate("m", 1, 10);
+        assert_eq!(removed, 10);
+        assert!(c.get(ResponseCache::signature("m", 1, 5, 10)).is_none());
+        assert_eq!(c.get(ResponseCache::signature("m", 2, 5, 10)).unwrap().label, 2);
+        // Idempotent: a second pass finds nothing.
+        assert_eq!(c.invalidate("m", 1, 10), 0);
+    }
+
+    #[test]
+    fn invalidate_purges_queue_slots_and_capacity_holds() {
+        let mut c = ResponseCache::new(3);
+        c.put(ResponseCache::signature("m", 1, 0, 4), CachedResponse { label: 0, confidence: 1.0 });
+        c.put(ResponseCache::signature("m", 2, 1, 4), CachedResponse { label: 1, confidence: 1.0 });
+        c.put(ResponseCache::signature("m", 2, 2, 4), CachedResponse { label: 2, confidence: 1.0 });
+        c.invalidate("m", 1, 4);
+        assert_eq!(c.len(), 2);
+        // Two more puts: the purged v1 slot must not distort eviction,
+        // and len stays bounded.
+        c.put(ResponseCache::signature("m", 2, 3, 4), CachedResponse { label: 3, confidence: 1.0 });
+        c.put(ResponseCache::signature("m", 2, 0, 4), CachedResponse { label: 4, confidence: 1.0 });
+        assert!(c.len() <= 3, "capacity respected after invalidation: {}", c.len());
+        assert_eq!(c.get(ResponseCache::signature("m", 2, 0, 4)).unwrap().label, 4);
     }
 
     #[test]
     fn zero_cluster_guard() {
-        // clusters=0 must not divide by zero.
-        let _ = ResponseCache::signature("m", 5, 0);
+        // clusters=0 must not divide by zero (signature or invalidate).
+        let _ = ResponseCache::signature("m", 1, 5, 0);
+        let mut c = ResponseCache::new(2);
+        let _ = c.invalidate("m", 1, 0);
+    }
+
+    #[test]
+    fn reinserting_after_invalidate_keeps_eviction_order() {
+        // A reload that re-caches an invalidated signature must not
+        // inherit its stale eviction slot (which would evict the fresh
+        // entry while older ones survive).
+        let mut c = ResponseCache::new(2);
+        let a = ResponseCache::signature("m", 1, 0, 4);
+        let b = ResponseCache::signature("m", 2, 0, 4);
+        let newest = ResponseCache::signature("m", 2, 1, 4);
+        c.put(a, CachedResponse { label: 1, confidence: 1.0 });
+        c.put(b, CachedResponse { label: 2, confidence: 1.0 });
+        c.invalidate("m", 1, 4); // drops a, must also drop its queue slot
+        c.put(a, CachedResponse { label: 9, confidence: 1.0 }); // reload re-caches a
+        c.put(newest, CachedResponse { label: 3, confidence: 1.0 }); // evicts oldest: b
+        assert_eq!(c.get(a).unwrap().label, 9, "fresh entry survives");
+        assert!(c.get(b).is_none(), "oldest entry evicted");
+        assert_eq!(c.get(newest).unwrap().label, 3);
+    }
+
+    #[test]
+    fn oversized_cluster_counts_clamp_consistently() {
+        // A cluster count past MAX_CLUSTERS clamps the same way in
+        // signature and invalidate, so unload still finds every entry.
+        let huge = ResponseCache::MAX_CLUSTERS << 2;
+        let mut c = ResponseCache::new(8);
+        let seed = ResponseCache::MAX_CLUSTERS + 7; // would exceed the base's low bits unclamped
+        let sig = ResponseCache::signature("m", 1, seed, huge);
+        c.put(sig, CachedResponse { label: 3, confidence: 1.0 });
+        assert_eq!(
+            sig,
+            ResponseCache::signature("m", 1, seed % ResponseCache::MAX_CLUSTERS, huge),
+            "cluster index is computed in the clamped space"
+        );
+        assert_eq!(c.invalidate("m", 1, huge), 1, "invalidate visits the clamped space");
+        assert!(c.get(sig).is_none());
     }
 }

@@ -8,8 +8,6 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use thiserror::Error;
-
 /// A JSON value. Object keys are sorted (BTreeMap) so output is canonical.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -21,23 +19,34 @@ pub enum Value {
     Obj(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, Error)]
+// Hand-written error impls (no `thiserror`) keep the dependency graph
+// path-only — see `runtime::RuntimeError`.
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("type error: expected {0}")]
     Type(&'static str),
-    #[error("missing key {0:?}")]
     Missing(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(i) => write!(f, "unexpected end of input at byte {i}"),
+            JsonError::Unexpected(c, i) => write!(f, "unexpected character {c:?} at byte {i}"),
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadEscape(i) => write!(f, "invalid escape at byte {i}"),
+            JsonError::Trailing(i) => write!(f, "trailing garbage at byte {i}"),
+            JsonError::Type(what) => write!(f, "type error: expected {what}"),
+            JsonError::Missing(key) => write!(f, "missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Value {
     // ---------------------------------------------------------- accessors

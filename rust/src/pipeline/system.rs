@@ -17,6 +17,17 @@
 //! [`RuntimeError::ModelUnavailable`] (HTTP 503) the moment the swap
 //! lands.
 //!
+//! Since the async-lifecycle redesign the engine work itself runs on a
+//! [`LifecycleExecutor`]: `load_model_async` marks the target versions
+//! `Loading` and returns immediately (HTTP 202) while executor threads
+//! spawn the engines and swap the snapshot; `unload_model_async` swaps
+//! the version out inline (new requests 503 at once) and hands the
+//! bounded Arc-refcount drain to the executor. Same-model jobs
+//! serialise, different models load concurrently, and an unload of a
+//! version whose load is still *queued* cancels the job outright. The
+//! synchronous `load_model` / `unload_model` wrappers enqueue the same
+//! jobs and block on their completion (boot, `?wait=true`, tests).
+//!
 //! Beyond the per-request loop, the system can boot a
 //! [`ControlPlane`](crate::control::ControlPlane) from
 //! [`ControlPlaneConfig`]: a background tick that reads the
@@ -28,7 +39,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -47,6 +58,7 @@ use crate::models;
 use crate::models::inputgen;
 use crate::router::{PathKind, RoutePolicy, Router};
 use crate::runtime::engine::{ExecMode, ExecStats};
+use crate::runtime::lifecycle::{JobKind, JobSpec, LifecycleExecutor};
 use crate::runtime::manifest::ModelManifest;
 use crate::runtime::registry::{LoadStats, ModelRegistry, VersionInfo};
 use crate::runtime::tensor::OutputBatch;
@@ -61,6 +73,12 @@ use super::direct::DirectPath;
 /// How long an unload waits for in-flight requests to finish before
 /// letting the last request thread tear the paths down on its own.
 const UNLOAD_DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Lifecycle-executor sizing: enough workers that several models load
+/// concurrently, a queue bound that refuses runaway operator scripts
+/// with `BACKPRESSURE` instead of buffering them forever.
+const LIFECYCLE_WORKERS: usize = 4;
+const LIFECYCLE_QUEUE_CAP: usize = 64;
 
 /// Model-control mode (Triton's `--model-control-mode`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -109,6 +127,11 @@ pub struct SystemConfig {
     pub control: Option<ControlPlaneConfig>,
     /// Whether models load at boot or only via the repository API.
     pub model_control: ModelControl,
+    /// Honour test hooks in the repository (the `slow_load_ms` file
+    /// that stalls an engine spawn). Off by default so a stray file in
+    /// a production repo can never slow real loads; lifecycle tests
+    /// opt in.
+    pub load_hooks: bool,
 }
 
 impl SystemConfig {
@@ -127,6 +150,7 @@ impl SystemConfig {
             route: RoutePolicy::adaptive(50.0),
             control: None,
             model_control: ModelControl::None,
+            load_hooks: false,
         }
     }
 
@@ -147,6 +171,11 @@ impl SystemConfig {
 
     pub fn with_model_control(mut self, mc: ModelControl) -> Self {
         self.model_control = mc;
+        self
+    }
+
+    pub fn with_load_hooks(mut self) -> Self {
+        self.load_hooks = true;
         self
     }
 }
@@ -222,6 +251,12 @@ pub struct VersionHandle {
     energy_events: AtomicU64,
     /// τ bias the per-model pacer writes; read per decision.
     energy_correction: Adaptive<f64>,
+    /// Set when the version leaves the serving snapshot (unload).
+    /// In-flight stragglers check it before writing the response cache:
+    /// a request that outlives the drain timeout must not re-populate
+    /// entries the unload just invalidated (a reload would inherit
+    /// them).
+    retired: AtomicBool,
 }
 
 impl VersionHandle {
@@ -319,27 +354,40 @@ enum AdmitOutcome {
     Skip { result: InferResult },
 }
 
-/// The full serving system.
-pub struct ServingSystem {
+/// State the lifecycle executor's job closures need: everything a load
+/// or unload touches, shared (`Arc`) between the request path and the
+/// executor threads. Serving-path-only state (controller, router,
+/// latency histogram, clock) stays on [`ServingSystem`] itself.
+struct SystemShared {
     /// Declared first so the ticker thread stops before paths shut down.
     plane: Option<ControlPlane>,
     registry: ModelRegistry,
     snapshot: RwLock<Arc<Snapshot>>,
     meter: Arc<EnergyMeter>,
-    latency: Mutex<LatencyHistogram>,
-    controller: Option<Arc<Mutex<AdmissionController>>>,
     cache: Mutex<ResponseCache>,
     metrics: Arc<WindowedMetrics>,
+    cfg: SystemConfig,
+}
+
+/// The full serving system.
+pub struct ServingSystem {
+    /// Declared first: dropping the executor cancels queued jobs and
+    /// joins the workers before the shared state they capture unwinds.
+    executor: LifecycleExecutor,
+    shared: Arc<SystemShared>,
+    latency: Mutex<LatencyHistogram>,
+    controller: Option<Arc<Mutex<AdmissionController>>>,
     router: Mutex<Router>,
     clock: SystemClock,
-    cfg: SystemConfig,
 }
 
 impl ServingSystem {
     /// Boot the system: scan the repository into the registry, start the
     /// global control loops, then (unless `ModelControl::Explicit`) load
-    /// every model's policy versions. A boot-time load failure aborts
-    /// the start — a half-up default-mode server would silently 503.
+    /// every model's policy versions — concurrently, through the
+    /// lifecycle executor, so boot costs ~the slowest model rather than
+    /// the sum. A boot-time load failure aborts the start — a half-up
+    /// default-mode server would silently 503.
     pub fn start(cfg: SystemConfig) -> Result<Self, RuntimeError> {
         let registry = ModelRegistry::scan(&cfg.repo_root)?;
         let meter = Arc::new(EnergyMeter::new(cfg.device.clone(), cfg.meter_mode, 16.0));
@@ -353,23 +401,45 @@ impl ServingSystem {
             .control
             .as_ref()
             .and_then(|pc| Self::wire_global_loops(pc, &controller, &metrics, &router));
-        let sys = ServingSystem {
+        let shared = Arc::new(SystemShared {
             plane,
             registry,
             snapshot: RwLock::new(Arc::new(Snapshot::default())),
             meter,
-            latency: Mutex::new(LatencyHistogram::for_latency()),
-            controller,
             cache: Mutex::new(ResponseCache::new(cfg.cache_capacity)),
             metrics,
+            cfg,
+        });
+        let sys = ServingSystem {
+            executor: LifecycleExecutor::start(LIFECYCLE_WORKERS, LIFECYCLE_QUEUE_CAP),
+            shared,
+            latency: Mutex::new(LatencyHistogram::for_latency()),
+            controller,
             router: Mutex::new(router),
             clock: SystemClock::new(),
-            cfg,
         };
-        if sys.cfg.model_control == ModelControl::None {
-            for name in sys.registry.model_names() {
-                sys.load_model(&name, None)?;
+        if sys.shared.cfg.model_control == ModelControl::None {
+            // Fan every model's load onto the executor, then wait for
+            // all of them — cross-model concurrency at boot. A
+            // repository with more loadable versions than the job-queue
+            // bound must still boot: on backpressure, drain what is in
+            // flight to empty the queue, then retry the model (a lone
+            // model with more versions than the whole queue is the one
+            // shape that still fails).
+            let mut pending = Vec::new();
+            for name in sys.model_names() {
+                let rxs = match sys.spawn_load_jobs(&name, None) {
+                    Ok((_, rxs)) => rxs,
+                    Err(RuntimeError::Backpressure(_)) => {
+                        wait_boot_loads(std::mem::take(&mut pending))?;
+                        let (_, rxs) = sys.spawn_load_jobs(&name, None)?;
+                        rxs
+                    }
+                    Err(e) => return Err(e),
+                };
+                pending.push((name, rxs));
             }
+            wait_boot_loads(pending)?;
         }
         Ok(sys)
     }
@@ -445,7 +515,12 @@ impl ServingSystem {
         plane.start(Duration::from_secs_f64(pc.tick_secs.max(1e-3)));
         Some(plane)
     }
+}
 
+/// Lifecycle resource management: runs on executor threads (via the job
+/// closures) and at boot. Everything here must be reachable through the
+/// `Arc<SystemShared>` alone.
+impl SystemShared {
     /// Attach the per-version control loops (batcher-delay AIMD, the
     /// per-model energy-budget pacer) for a freshly loaded handle.
     fn attach_loops(&self, handle: &Arc<VersionHandle>) {
@@ -518,77 +593,61 @@ impl ServingSystem {
         }
     }
 
-    // ------------------------------------------------------ lifecycle
-
-    /// Load a model: explicit `version`, or the config's version policy.
-    /// Returns the newly loaded version numbers (empty when everything
-    /// targeted was already `Ready`). On failure the registry records
-    /// `Failed{reason}` for the version that broke and the error is
-    /// returned (earlier versions in the same request stay loaded).
-    pub fn load_model(&self, model: &str, version: Option<u64>) -> Result<Vec<u64>, RuntimeError> {
-        let targets = self.registry.begin_load(model, version)?;
-        let mut loaded = Vec::with_capacity(targets.len());
-        for (i, info) in targets.iter().enumerate() {
-            match self.attach_version(model, info) {
-                Ok(()) => loaded.push(info.version),
-                Err(e) => {
-                    self.registry.finish_load(model, info.version, Err(e.to_string()));
-                    // Sibling versions never attempted must not stay
-                    // stranded in Loading (which reads as "busy" to
-                    // every later load/unload) — put them back.
-                    for rest in &targets[i + 1..] {
-                        self.registry.abort_load(model, rest.version);
-                    }
-                    return Err(e);
-                }
-            }
+    /// Remove one version from the serving snapshot: the moment the swap
+    /// lands, new requests get [`RuntimeError::ModelUnavailable`] (503).
+    fn swap_out(&self, model: &str, version: u64) -> Option<Arc<VersionHandle>> {
+        let mut guard = self.snapshot.write().unwrap();
+        let mut next = (**guard).clone();
+        let h = next.models.get_mut(model).and_then(|m| m.remove(&version));
+        if next.models.get(model).is_some_and(|m| m.is_empty()) {
+            next.models.remove(model);
         }
-        Ok(loaded)
+        *guard = Arc::new(next);
+        if let Some(h) = &h {
+            // From here on, in-flight stragglers must not write the
+            // response cache — see `VersionHandle::retired`.
+            h.retired.store(true, Ordering::SeqCst);
+        }
+        h
     }
 
-    /// Unload a model version (or every ready version when `None`):
-    /// swap it out of the serving snapshot (new requests get
-    /// `ModelUnavailable` immediately), detach its control loops, then
-    /// wait — bounded — for in-flight requests to drain before the
-    /// engines shut down.
-    pub fn unload_model(
-        &self,
-        model: &str,
-        version: Option<u64>,
-    ) -> Result<Vec<u64>, RuntimeError> {
-        let targets = self.registry.begin_unload(model, version)?;
-        for &v in &targets {
-            let handle = {
-                let mut guard = self.snapshot.write().unwrap();
-                let mut next = (**guard).clone();
-                let h = next.models.get_mut(model).and_then(|m| m.remove(&v));
-                if next.models.get(model).is_some_and(|m| m.is_empty()) {
-                    next.models.remove(model);
-                }
-                *guard = Arc::new(next);
-                h
-            };
-            if let Some(handle) = handle {
-                self.detach_loops(&handle);
-                // In-flight requests hold their own Arc clone; once the
-                // count reaches 1 the engines are idle and this drop
-                // joins their threads. Past the timeout the last request
-                // thread pays the teardown instead — either way no new
-                // request can reach the version.
-                let deadline = Instant::now() + UNLOAD_DRAIN_TIMEOUT;
-                while Arc::strong_count(&handle) > 1 && Instant::now() < deadline {
-                    std::thread::sleep(Duration::from_millis(2));
-                }
-                drop(handle);
+    /// The slow half of an unload (runs on an executor thread): wait —
+    /// bounded — for in-flight requests to drain, drop the engines,
+    /// complete the registry transition, and invalidate the dead
+    /// version's response-cache entries so a reload starts cold.
+    fn drain_and_finish(&self, model: &str, version: u64, handle: Option<Arc<VersionHandle>>) {
+        if let Some(handle) = handle {
+            // In-flight requests hold their own Arc clone; once the
+            // count reaches 1 the engines are idle and this drop joins
+            // their threads. Past the timeout the last request thread
+            // pays the teardown instead — either way no new request can
+            // reach the version (the snapshot swap already landed).
+            let deadline = Instant::now() + UNLOAD_DRAIN_TIMEOUT;
+            while Arc::strong_count(&handle) > 1 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
             }
-            self.registry.finish_unload(model, v);
+            drop(handle);
         }
-        Ok(targets)
+        self.registry.finish_unload(model, version);
+        self.cache.lock().unwrap().invalidate(model, version, self.cfg.cache_clusters);
     }
 
     /// Spin up one version's engines and swap it into the snapshot.
     fn attach_version(&self, model: &str, info: &VersionInfo) -> Result<(), RuntimeError> {
         let t0 = Instant::now();
+        // Test/bench hook (opt-in via `SystemConfig::load_hooks`): a
+        // `slow_load_ms` file in the version directory stalls the
+        // engine spawn — how the lifecycle integration tests prove
+        // loads never block the gateway without needing a genuinely
+        // slow model. Ignored unless explicitly enabled, so a stray
+        // file in a production repository can never slow real loads.
+        if self.cfg.load_hooks {
+            if let Ok(text) = std::fs::read_to_string(info.dir.join("slow_load_ms")) {
+                if let Ok(ms) = text.trim().parse::<u64>() {
+                    std::thread::sleep(Duration::from_millis(ms.min(30_000)));
+                }
+            }
+        }
         let manifest = ModelManifest::load(&info.dir)?;
         if manifest.name != model {
             return Err(RuntimeError::Manifest(format!(
@@ -670,6 +729,7 @@ impl ServingSystem {
             energy: Mutex::new(EnergyWindow::new(64)),
             energy_events: AtomicU64::new(0),
             energy_correction: Adaptive::new(0.0),
+            retired: AtomicBool::new(false),
         });
         {
             let mut guard = self.snapshot.write().unwrap();
@@ -684,6 +744,304 @@ impl ServingSystem {
         self.registry.finish_load(model, info.version, Ok(stats));
         Ok(())
     }
+}
+
+/// Wait for a batch of boot-time load jobs; the first failure aborts
+/// the boot (a half-up default-mode server would silently 503).
+#[allow(clippy::type_complexity)]
+fn wait_boot_loads(
+    pending: Vec<(String, Vec<mpsc::Receiver<Result<u64, RuntimeError>>>)>,
+) -> Result<(), RuntimeError> {
+    for (name, rxs) in pending {
+        for rx in rxs {
+            match rx.recv() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(RuntimeError::Lifecycle {
+                        model: name.clone(),
+                        reason: "boot load job dropped".to_string(),
+                    })
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Outcome of an asynchronous unload request (the 202/200 payload).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct UnloadTicket {
+    /// Versions transitioned to `Unloading`, draining on the executor.
+    pub unloading: Vec<u64>,
+    /// Still-queued load jobs this request cancelled outright
+    /// (`Loading → Unloaded`, nothing ever ran).
+    pub cancelled: Vec<u64>,
+}
+
+impl ServingSystem {
+    // ------------------------------------------------------ lifecycle
+
+    /// Validate a load and enqueue one executor job per target version.
+    /// Fast path only: repository rescan + state flips to `Loading`; the
+    /// engine spawn happens on the executor. Returns the targeted
+    /// versions plus one completion receiver per job (each yields the
+    /// version on success or the typed attach error).
+    #[allow(clippy::type_complexity)]
+    fn spawn_load_jobs(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<(Vec<u64>, Vec<mpsc::Receiver<Result<u64, RuntimeError>>>), RuntimeError> {
+        let targets = self.shared.registry.begin_load(model, version)?;
+        let mut versions = Vec::with_capacity(targets.len());
+        let mut rxs = Vec::with_capacity(targets.len());
+        let mut specs = Vec::with_capacity(targets.len());
+        for info in &targets {
+            let (tx, rx) = mpsc::channel();
+            let tx_cancel = tx.clone();
+            let v = info.version;
+            let work = {
+                let shared = self.shared.clone();
+                let model = model.to_string();
+                let info = info.clone();
+                Box::new(move || {
+                    // A panicking attach must still land the version in
+                    // a *terminal* registry state — left as `Loading` it
+                    // would read as "busy" to every later load/unload.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || shared.attach_version(&model, &info),
+                    ));
+                    match outcome {
+                        Ok(Ok(())) => {
+                            let _ = tx.send(Ok(info.version));
+                        }
+                        Ok(Err(e)) => {
+                            shared.registry.finish_load(&model, info.version, Err(e.to_string()));
+                            let _ = tx.send(Err(e));
+                        }
+                        Err(_) => {
+                            shared.registry.finish_load(
+                                &model,
+                                info.version,
+                                Err("load job panicked".to_string()),
+                            );
+                            let _ = tx.send(Err(RuntimeError::Lifecycle {
+                                model: model.clone(),
+                                reason: format!("load of version {} panicked", info.version),
+                            }));
+                        }
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            };
+            // A cancelled job reverts `Loading → Unloaded` and fails any
+            // synchronous waiter with a typed error.
+            let cancel = {
+                let shared = self.shared.clone();
+                let model = model.to_string();
+                Box::new(move || {
+                    shared.registry.abort_load(&model, v);
+                    let _ = tx_cancel.send(Err(RuntimeError::Lifecycle {
+                        model,
+                        reason: format!("load of version {v} cancelled before it started"),
+                    }));
+                }) as Box<dyn FnOnce() + Send>
+            };
+            specs.push(JobSpec { version: v, kind: JobKind::Load, work, cancel });
+            versions.push(v);
+            rxs.push(rx);
+        }
+        // All-or-nothing enqueue: a full queue reverts *every* target to
+        // `Unloaded` (no half-accepted multi-version load whose stranded
+        // siblings would read as "busy" to a retry).
+        if let Err(e) = self.executor.submit_all(model, specs) {
+            for info in &targets {
+                self.shared.registry.abort_load(model, info.version);
+            }
+            return Err(e);
+        }
+        Ok((versions, rxs))
+    }
+
+    /// Non-blocking load (the `POST /v2/repository/models/{m}/load` 202
+    /// path): validates, flips the target versions to `Loading`, and
+    /// returns them immediately — the engine spawn runs on the lifecycle
+    /// executor. Poll `/v2/repository/index` or `GET /v2/models/{m}` for
+    /// the outcome (`READY` / `FAILED{reason}`). Validation errors
+    /// (unknown model/version, malformed config, busy version) are still
+    /// synchronous; a full executor queue is `Backpressure` (429).
+    pub fn load_model_async(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<Vec<u64>, RuntimeError> {
+        let (versions, _rxs) = self.spawn_load_jobs(model, version)?;
+        Ok(versions)
+    }
+
+    /// Blocking load: enqueues the same executor jobs as
+    /// [`ServingSystem::load_model_async`] and waits for all of them
+    /// (boot, `?wait=true`, CLI `--wait`, tests). Every targeted version
+    /// is attempted; the first failure's typed error is returned after
+    /// the rest settle (siblings are independent — one broken version no
+    /// longer abandons the others mid-request).
+    pub fn load_model(&self, model: &str, version: Option<u64>) -> Result<Vec<u64>, RuntimeError> {
+        let (_versions, rxs) = self.spawn_load_jobs(model, version)?;
+        let mut loaded = Vec::with_capacity(rxs.len());
+        let mut first_err = None;
+        for rx in rxs {
+            match rx.recv() {
+                Ok(Ok(v)) => loaded.push(v),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err = first_err.or(Some(RuntimeError::Lifecycle {
+                        model: model.to_string(),
+                        reason: "lifecycle job dropped".to_string(),
+                    }))
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(loaded),
+        }
+    }
+
+    /// Validate an unload, cancel still-queued loads it targets, swap
+    /// the ready versions out of the serving snapshot (new requests 503
+    /// immediately), detach their control loops, and enqueue the
+    /// bounded drain as executor jobs.
+    #[allow(clippy::type_complexity)]
+    fn spawn_unload_jobs(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<(UnloadTicket, Vec<mpsc::Receiver<Result<u64, RuntimeError>>>), RuntimeError> {
+        // Unknown models stay a 404 even when cancellation would match
+        // nothing.
+        if !self.shared.registry.has_model(model) {
+            return Err(RuntimeError::UnknownModel(model.to_string()));
+        }
+        // An unload aimed at a load that never started is a pure
+        // cancellation: the job's cancel hook reverts `Loading →
+        // Unloaded` before we look at ready versions.
+        let cancelled = self.executor.cancel_queued_loads(model, version);
+        let targets = match self.shared.registry.begin_unload(model, version) {
+            Ok(t) => t,
+            Err(e) => {
+                if cancelled.is_empty() {
+                    return Err(e);
+                }
+                // Satisfied purely by cancellation.
+                return Ok((UnloadTicket { unloading: Vec::new(), cancelled }, Vec::new()));
+            }
+        };
+        let mut rxs = Vec::with_capacity(targets.len());
+        for &v in &targets {
+            let handle = self.shared.swap_out(model, v);
+            if let Some(h) = &handle {
+                self.shared.detach_loops(h);
+            }
+            let (tx, rx) = mpsc::channel();
+            let work = {
+                let shared = self.shared.clone();
+                let model = model.to_string();
+                Box::new(move || {
+                    // As with loads: a panicking drain must not strand
+                    // the version in `Unloading` — land it `Unloaded`
+                    // best-effort so it stays reloadable.
+                    let drained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || shared.drain_and_finish(&model, v, handle),
+                    ));
+                    match drained {
+                        Ok(()) => {
+                            let _ = tx.send(Ok(v));
+                        }
+                        Err(_) => {
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || shared.registry.finish_unload(&model, v),
+                            ));
+                            let _ = tx.send(Err(RuntimeError::Lifecycle {
+                                model: model.clone(),
+                                reason: format!("unload of version {v} panicked mid-drain"),
+                            }));
+                        }
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            };
+            // Unload jobs are never refused (the queue bound applies to
+            // loads only). Cancelled only at shutdown: dropping the
+            // closure drops the handle and sender, so the version's
+            // engines unwind with the process and any waiter errors out.
+            self.executor
+                .submit(model, v, JobKind::Unload, work, Box::new(|| {}))
+                .expect("unload jobs bypass the queue bound");
+            rxs.push(rx);
+        }
+        Ok((UnloadTicket { unloading: targets, cancelled }, rxs))
+    }
+
+    /// Non-blocking unload (the `POST .../unload` 202 path): new
+    /// requests 503 the moment this returns; the in-flight drain and
+    /// engine teardown run on the executor. Queued loads of the targeted
+    /// version are cancelled instead (reported in the ticket).
+    pub fn unload_model_async(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<UnloadTicket, RuntimeError> {
+        let (ticket, _rxs) = self.spawn_unload_jobs(model, version)?;
+        Ok(ticket)
+    }
+
+    /// Blocking unload: same jobs, waits for the drains to finish. The
+    /// returned ticket keeps drained versions (`unloading`, now fully
+    /// unloaded) separate from cancelled queued loads (`cancelled`,
+    /// which never served) — callers reporting "what was unloaded" must
+    /// not conflate the two.
+    pub fn unload_model_wait(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<UnloadTicket, RuntimeError> {
+        let (ticket, rxs) = self.spawn_unload_jobs(model, version)?;
+        let mut drained = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            match rx.recv() {
+                Ok(Ok(v)) => drained.push(v),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(RuntimeError::Lifecycle {
+                        model: model.to_string(),
+                        reason: "lifecycle job dropped".to_string(),
+                    })
+                }
+            }
+        }
+        drained.sort_unstable();
+        Ok(UnloadTicket { unloading: drained, cancelled: ticket.cancelled })
+    }
+
+    /// Convenience wrapper over [`ServingSystem::unload_model_wait`]:
+    /// every version transitioned out (drained + cancelled), sorted.
+    pub fn unload_model(
+        &self,
+        model: &str,
+        version: Option<u64>,
+    ) -> Result<Vec<u64>, RuntimeError> {
+        let ticket = self.unload_model_wait(model, version)?;
+        let mut done = ticket.cancelled;
+        done.extend(ticket.unloading);
+        done.sort_unstable();
+        Ok(done)
+    }
+
+    /// Lifecycle jobs waiting for an executor worker (surfaced by
+    /// `POST /v2/repository/index` and the `gf_lifecycle_queue_depth`
+    /// gauge).
+    pub fn lifecycle_queue_depth(&self) -> usize {
+        self.executor.queue_depth()
+    }
 
     /// Resolve a servable handle. Distinguishes a model that is not in
     /// the repository at all (`UnknownModel` → 404) from one with no
@@ -693,10 +1051,10 @@ impl ServingSystem {
         model: &str,
         version: Option<u64>,
     ) -> Result<Arc<VersionHandle>, RuntimeError> {
-        let snap = self.snapshot.read().unwrap().clone();
+        let snap = self.shared.snapshot.read().unwrap().clone();
         match snap.resolve(model, version) {
             Some(h) => Ok(h),
-            None if self.registry.has_model(model) => {
+            None if self.shared.registry.has_model(model) => {
                 Err(RuntimeError::ModelUnavailable { model: model.to_string() })
             }
             None => Err(RuntimeError::UnknownModel(model.to_string())),
@@ -706,17 +1064,17 @@ impl ServingSystem {
     // -------------------------------------------------- introspection
 
     pub fn registry(&self) -> &ModelRegistry {
-        &self.registry
+        &self.shared.registry
     }
 
     /// Every registered model name (loaded or not).
     pub fn model_names(&self) -> Vec<String> {
-        self.registry.model_names()
+        self.shared.registry.model_names()
     }
 
     /// Number of models with at least one ready version.
     pub fn ready_models(&self) -> usize {
-        self.snapshot.read().unwrap().models.len()
+        self.shared.snapshot.read().unwrap().models.len()
     }
 
     /// The serving handle for a model version, if ready (None = default
@@ -726,11 +1084,11 @@ impl ServingSystem {
         model: &str,
         version: Option<u64>,
     ) -> Option<Arc<VersionHandle>> {
-        self.snapshot.read().unwrap().resolve(model, version)
+        self.shared.snapshot.read().unwrap().resolve(model, version)
     }
 
     pub fn meter(&self) -> &EnergyMeter {
-        &self.meter
+        &self.shared.meter
     }
 
     pub fn clock(&self) -> &SystemClock {
@@ -744,22 +1102,22 @@ impl ServingSystem {
 
     /// The windowed-metrics aggregator feeding the control loops.
     pub fn metrics(&self) -> &WindowedMetrics {
-        &self.metrics
+        &self.shared.metrics
     }
 
     /// Names of the running control loops (empty when no plane).
     pub fn control_loop_names(&self) -> Vec<String> {
-        self.plane.as_ref().map(|p| p.loop_names()).unwrap_or_default()
+        self.shared.plane.as_ref().map(|p| p.loop_names()).unwrap_or_default()
     }
 
     /// Introspection snapshot of every control loop (name, law, output).
     pub fn control_loop_states(&self) -> Vec<crate::control::LoopState> {
-        self.plane.as_ref().map(|p| p.loop_states()).unwrap_or_default()
+        self.shared.plane.as_ref().map(|p| p.loop_states()).unwrap_or_default()
     }
 
     /// Scheduler queue capacity per batched path (the C(x) normaliser).
     pub fn queue_capacity(&self) -> usize {
-        self.cfg.queue_capacity
+        self.shared.cfg.queue_capacity
     }
 
     /// Whether a model's default version is servable on the batched path.
@@ -769,7 +1127,7 @@ impl ServingSystem {
 
     /// Whether the background control plane is ticking.
     pub fn control_plane_running(&self) -> bool {
-        self.plane.as_ref().map(|p| p.running()).unwrap_or(false)
+        self.shared.plane.as_ref().map(|p| p.running()).unwrap_or(false)
     }
 
     /// Recent arrival rate seen by the shared router.
@@ -820,10 +1178,11 @@ impl ServingSystem {
         let t0 = self.clock.now();
         // Arrival is observed at entry, not completion: concurrent workers
         // finishing out of order must not scramble the rate window.
-        self.metrics.record_arrival(t0);
+        self.shared.metrics.record_arrival(t0);
         let (out, stats) = match path {
             PathKind::Direct => {
-                let input = inputgen::batch_for(&handle.manifest, &[req.seed], self.cfg.salt);
+                let input =
+                    inputgen::batch_for(&handle.manifest, &[req.seed], self.shared.cfg.salt);
                 handle.direct.infer(&req.model, input)?
             }
             PathKind::Batched => {
@@ -858,15 +1217,18 @@ impl ServingSystem {
     ) -> Result<InferResult, RuntimeError> {
         let latency = self.clock.now() - t0;
         self.latency.lock().unwrap().record(latency);
-        self.metrics.record_latency(latency);
+        self.shared.metrics.record_latency(latency);
         let flops_item = handle.manifest.flops_per_item(stats.bucket.max(1));
-        let reading = self.meter.record(flops_item, stats.exec_secs / stats.bucket.max(1) as f64);
+        let reading = self
+            .shared
+            .meter
+            .record(flops_item, stats.exec_secs / stats.bucket.max(1) as f64);
         let now = self.clock.now();
-        self.metrics.record_joules(now, reading.joules);
+        self.shared.metrics.record_joules(now, reading.joules);
         handle.energy.lock().unwrap().record(now, reading.joules);
         handle.energy_events.fetch_add(1, Ordering::Relaxed);
         if path == PathKind::Batched {
-            self.meter.record_idle((latency - stats.exec_secs).max(0.0));
+            self.shared.meter.record_idle((latency - stats.exec_secs).max(0.0));
         }
         Ok(InferResult {
             request_id: req.id,
@@ -900,7 +1262,7 @@ impl ServingSystem {
         let screener = self.version_handle(models::SCREENER, None);
         let (scr_entropy, scr_pred, scr_conf, scr_exec, scr_flops) = match &screener {
             Some(s) if handle.manifest.input_kind == crate::runtime::InputKind::Tokens => {
-                let input = inputgen::batch_for(&s.manifest, &[req.seed], self.cfg.salt);
+                let input = inputgen::batch_for(&s.manifest, &[req.seed], self.shared.cfg.salt);
                 let (o, st) = s.direct.infer(models::SCREENER, input)?;
                 (
                     o.entropy[0] as f64,
@@ -919,16 +1281,17 @@ impl ServingSystem {
         // Spike reference = 2x nominal per-request joules: the steady
         // state sits at e_norm ~= 0.5 and a genuine energy spike drives
         // it to 0.
-        let energy_ref = 2.0 * self.cfg.device.exec_energy(handle.manifest.flops_per_item(1));
+        let energy_ref =
+            2.0 * self.shared.cfg.device.exec_energy(handle.manifest.flops_per_item(1));
         let x = CostInputs {
             entropy: scr_entropy,
             max_entropy: (handle.manifest.classes as f64).ln(),
-            energy_ewma: self.meter.ewma_joules(0.0),
+            energy_ewma: self.shared.meter.ewma_joules(0.0),
             energy_ref,
             queue_depth: handle.queue_depth(),
-            queue_capacity: self.cfg.queue_capacity,
+            queue_capacity: self.shared.cfg.queue_capacity,
             p95_latency: self.p95(),
-            slo_latency: self.cfg.slo_latency,
+            slo_latency: self.shared.cfg.slo_latency,
         };
 
         // 3. Decide, biased by this model's energy-budget pacer.
@@ -937,9 +1300,16 @@ impl ServingSystem {
         match decision {
             Decision::Admit { j, tau } => Ok(AdmitOutcome::Execute { j, tau }),
             Decision::Skip { j, tau, .. } => {
-                // Answer from cache / screener argmax (Algorithm 1 line 9).
-                let sig = ResponseCache::signature(&req.model, req.seed, self.cfg.cache_clusters);
-                let cached = self.cache.lock().unwrap().get(sig);
+                // Answer from cache / screener argmax (Algorithm 1 line
+                // 9). Keys are version-aware: a reloaded version never
+                // inherits its predecessor's answers.
+                let sig = ResponseCache::signature(
+                    &req.model,
+                    handle.version,
+                    req.seed,
+                    self.shared.cfg.cache_clusters,
+                );
+                let cached = self.shared.cache.lock().unwrap().get(sig);
                 let (label, conf) = match cached {
                     Some(c) => (c.label, c.confidence as f32),
                     None => (scr_pred, scr_conf),
@@ -950,11 +1320,11 @@ impl ServingSystem {
                 // requests are not double-counted by the exec path's tap;
                 // the recorded instant is still t0, and the rate window
                 // clamps any cross-thread ordering races.
-                self.metrics.record_arrival(t0);
-                self.metrics.record_latency(latency);
+                self.shared.metrics.record_arrival(t0);
+                self.shared.metrics.record_latency(latency);
                 // Energy: only the screener pass.
-                let reading = self.meter.record(scr_flops, scr_exec);
-                self.metrics.record_joules(self.clock.now(), reading.joules);
+                let reading = self.shared.meter.record(scr_flops, scr_exec);
+                self.shared.metrics.record_joules(self.clock.now(), reading.joules);
                 Ok(AdmitOutcome::Skip {
                     result: InferResult {
                         request_id: req.id,
@@ -996,12 +1366,21 @@ impl ServingSystem {
                 let mut r = self.infer_on_handle(handle, req, prefer)?;
                 r.j = j;
                 r.tau = tau;
-                // populate cache so future skips can answer
-                let sig = ResponseCache::signature(&req.model, req.seed, self.cfg.cache_clusters);
-                self.cache.lock().unwrap().put(
-                    sig,
-                    CachedResponse { label: r.predicted, confidence: r.confidence as f64 },
-                );
+                // Populate the cache so future skips can answer — unless
+                // this version was swapped out mid-request (a straggler
+                // must not resurrect entries the unload invalidated).
+                if !handle.retired.load(Ordering::SeqCst) {
+                    let sig = ResponseCache::signature(
+                        &req.model,
+                        handle.version,
+                        req.seed,
+                        self.shared.cfg.cache_clusters,
+                    );
+                    self.shared.cache.lock().unwrap().put(
+                        sig,
+                        CachedResponse { label: r.predicted, confidence: r.confidence as f64 },
+                    );
+                }
                 Ok(r)
             }
             AdmitOutcome::Skip { result } => Ok(result),
@@ -1080,7 +1459,7 @@ impl ServingSystem {
             // Low-priority shed: refuse before enqueueing once the queue
             // sits above 4/5 of capacity (cheap head-room guard).
             let depth = handle.queue_depth();
-            if depth * 5 >= self.cfg.queue_capacity * 4 {
+            if depth * 5 >= self.shared.cfg.queue_capacity * 4 {
                 return Err(RuntimeError::Backpressure(model.clone()));
             }
         }
@@ -1155,7 +1534,7 @@ impl ServingSystem {
                 ItemPlan::Skip(_) => pending.push(None),
                 ItemPlan::Exec { .. } => {
                     let t_item = self.clock.now();
-                    self.metrics.record_arrival(t_item);
+                    self.shared.metrics.record_arrival(t_item);
                     let rx = batched.submit(req.seed)?;
                     pending.push(Some((t_item, rx)));
                 }
@@ -1175,15 +1554,18 @@ impl ServingSystem {
                         self.finish_exec(&handle, req, PathKind::Batched, t_item, &ob, &stats)?;
                     r.j = j;
                     r.tau = tau;
-                    if r.j.is_finite() {
+                    if r.j.is_finite() && !handle.retired.load(Ordering::SeqCst) {
                         // Controller-admitted work populates the cache so
-                        // future skips can answer (same as `submit`).
+                        // future skips can answer (same as `submit`;
+                        // retired versions must not re-populate what
+                        // their unload invalidated).
                         let sig = ResponseCache::signature(
                             &req.model,
+                            handle.version,
                             req.seed,
-                            self.cfg.cache_clusters,
+                            self.shared.cfg.cache_clusters,
                         );
-                        self.cache.lock().unwrap().put(
+                        self.shared.cache.lock().unwrap().put(
                             sig,
                             CachedResponse {
                                 label: r.predicted,

@@ -1,0 +1,528 @@
+//! The async model-lifecycle executor: a bounded background work queue
+//! that runs load/unload jobs **off the gateway handler path**, so a
+//! slow engine spawn (compile + weight transfer — the energy the paper's
+//! restartless swaps avoid re-paying) never holds an HTTP thread.
+//!
+//! Scheduling contract:
+//!
+//! * **Per-model serialization** — at most one job per model executes at
+//!   a time, so load/unload transitions for one model can never
+//!   interleave mid-flight.
+//! * **Cross-model concurrency** — jobs for *different* models run on
+//!   whichever of the worker threads is free; two slow loads complete in
+//!   ~max of their times, not the sum (arXiv 2402.07585's "asynchronous
+//!   model management" design decision).
+//! * **Bounded queue** — past [`LifecycleExecutor::capacity`] pending
+//!   jobs, submission fails (the gateway maps it to `BACKPRESSURE`/429)
+//!   instead of buffering unbounded operator mistakes.
+//! * **Cancellation** — a *queued* (not yet started) load job can be
+//!   cancelled by a later unload of the same version; its `cancel`
+//!   closure runs instead of `work` (reverting `Loading → Unloaded` and
+//!   failing any synchronous waiter). A job already executing is not
+//!   interruptible — callers see the version as busy.
+//!
+//! The executor knows nothing about engines or registries: jobs are
+//! opaque closures tagged with `(model, version, kind)` for scheduling
+//! and cancellation. [`crate::pipeline::system::ServingSystem`] owns the
+//! instance and builds the closures.
+//!
+//! Telemetry: `gf_lifecycle_queue_depth` (pending jobs),
+//! `gf_lifecycle_wait_seconds.<model>.<version>` (enqueue → start),
+//! `gf_lifecycle_jobs_total` / `gf_lifecycle_cancelled_total`.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::RuntimeError;
+use crate::telemetry::MetricsRegistry;
+
+/// What a job does to its version (cancellation only targets loads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Load,
+    Unload,
+}
+
+/// One lifecycle job as handed to [`LifecycleExecutor::submit_all`].
+pub struct JobSpec {
+    pub version: u64,
+    pub kind: JobKind,
+    /// Runs on a worker thread once the model's slot is free.
+    pub work: Box<dyn FnOnce() + Send>,
+    /// Runs (inline, on the cancelling thread) if the job is cancelled
+    /// or the executor shuts down before `work` starts.
+    pub cancel: Box<dyn FnOnce() + Send>,
+}
+
+/// One queued lifecycle job.
+struct Job {
+    model: String,
+    version: u64,
+    kind: JobKind,
+    enqueued: Instant,
+    work: Box<dyn FnOnce() + Send>,
+    cancel: Box<dyn FnOnce() + Send>,
+}
+
+struct QueueState {
+    pending: VecDeque<Job>,
+    /// Models with a job currently executing on some worker.
+    running: BTreeSet<String>,
+}
+
+struct Inner {
+    state: Mutex<QueueState>,
+    work_ready: Condvar,
+    capacity: usize,
+    stop: AtomicBool,
+}
+
+impl Inner {
+    fn publish_depth(&self, depth: usize) {
+        MetricsRegistry::global().gauge("gf_lifecycle_queue_depth").set(depth as f64);
+    }
+}
+
+/// The background executor. Dropping it drains the queue (cancelling
+/// pending jobs) and joins the workers after their current job.
+pub struct LifecycleExecutor {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl LifecycleExecutor {
+    /// Start `workers` threads over a queue bounded at `capacity`
+    /// pending jobs.
+    pub fn start(workers: usize, capacity: usize) -> Self {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                running: BTreeSet::new(),
+            }),
+            work_ready: Condvar::new(),
+            capacity: capacity.max(1),
+            stop: AtomicBool::new(false),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("gf-lifecycle-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn lifecycle worker")
+            })
+            .collect();
+        LifecycleExecutor { inner, workers: handles }
+    }
+
+    /// Pending-job capacity (the bound `submit` enforces).
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Jobs waiting for a worker (excludes the ones executing).
+    pub fn queue_depth(&self) -> usize {
+        self.inner.state.lock().unwrap().pending.len()
+    }
+
+    /// Enqueue one job (see [`LifecycleExecutor::submit_all`]).
+    pub fn submit(
+        &self,
+        model: &str,
+        version: u64,
+        kind: JobKind,
+        work: Box<dyn FnOnce() + Send>,
+        cancel: Box<dyn FnOnce() + Send>,
+    ) -> Result<(), RuntimeError> {
+        self.submit_all(model, vec![JobSpec { version, kind, work, cancel }])
+    }
+
+    /// Enqueue a batch of jobs for one model **atomically**: either
+    /// every job is accepted or none is. A batch containing **load**
+    /// jobs that would push the queue past its bound fails whole with
+    /// [`RuntimeError::Backpressure`] — the caller unwinds its state
+    /// changes and reports 429; partially-enqueued multi-version loads
+    /// must not exist (the stranded siblings would read as "busy" to
+    /// every retry). Unload-only batches always enqueue: refusing one
+    /// would strand a version in `Unloading` with its snapshot entry
+    /// already swapped out.
+    pub fn submit_all(&self, model: &str, jobs: Vec<JobSpec>) -> Result<(), RuntimeError> {
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        let n = jobs.len() as u64;
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            let has_load = jobs.iter().any(|j| j.kind == JobKind::Load);
+            if has_load && st.pending.len() + jobs.len() > self.inner.capacity {
+                return Err(RuntimeError::Backpressure(format!(
+                    "lifecycle queue full ({} jobs pending, {} submitted, bound {})",
+                    st.pending.len(),
+                    jobs.len(),
+                    self.inner.capacity
+                )));
+            }
+            let now = Instant::now();
+            for spec in jobs {
+                st.pending.push_back(Job {
+                    model: model.to_string(),
+                    version: spec.version,
+                    kind: spec.kind,
+                    enqueued: now,
+                    work: spec.work,
+                    cancel: spec.cancel,
+                });
+            }
+            self.inner.publish_depth(st.pending.len());
+        }
+        MetricsRegistry::global().counter("gf_lifecycle_jobs_total").add(n);
+        self.inner.work_ready.notify_all();
+        Ok(())
+    }
+
+    /// Cancel **queued** load jobs for a model: an explicit `version`
+    /// targets that one, `None` every queued load of the model. Each
+    /// cancelled job's `cancel` closure runs inline; jobs already
+    /// executing are untouched. Returns the cancelled versions.
+    pub fn cancel_queued_loads(&self, model: &str, version: Option<u64>) -> Vec<u64> {
+        let mut cancelled = Vec::new();
+        let mut dropped = Vec::new();
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            let mut keep = VecDeque::with_capacity(st.pending.len());
+            while let Some(job) = st.pending.pop_front() {
+                let hit = job.kind == JobKind::Load
+                    && job.model == model
+                    && version.map(|v| v == job.version).unwrap_or(true);
+                if hit {
+                    cancelled.push(job.version);
+                    dropped.push(job);
+                } else {
+                    keep.push_back(job);
+                }
+            }
+            st.pending = keep;
+            self.inner.publish_depth(st.pending.len());
+        }
+        // Run the cancel hooks outside the queue lock: they touch the
+        // registry (its own lock) and may wake synchronous waiters.
+        let reg = MetricsRegistry::global();
+        for job in dropped {
+            reg.counter("gf_lifecycle_cancelled_total").inc();
+            (job.cancel)();
+        }
+        cancelled
+    }
+
+    /// Whether a load of `(model, version)` is still waiting in the
+    /// queue (test introspection; production callers observe queued
+    /// loads through the registry's `Loading` state instead).
+    #[cfg(test)]
+    fn load_queued(&self, model: &str, version: u64) -> bool {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .pending
+            .iter()
+            .any(|j| j.kind == JobKind::Load && j.model == model && j.version == version)
+    }
+}
+
+impl Drop for LifecycleExecutor {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        // Cancel everything still queued so synchronous waiters are
+        // released instead of hanging on a dead channel.
+        let drained: Vec<Job> = {
+            let mut st = self.inner.state.lock().unwrap();
+            let jobs = std::mem::take(&mut st.pending).into_iter().collect();
+            self.inner.publish_depth(0);
+            jobs
+        };
+        for job in drained {
+            (job.cancel)();
+        }
+        self.inner.work_ready.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Arc<Inner>) {
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // First pending job whose model is not mid-job: FIFO
+                // per model, concurrent across models.
+                let idx = st
+                    .pending
+                    .iter()
+                    .position(|j| !st.running.contains(&j.model));
+                if let Some(i) = idx {
+                    let job = st.pending.remove(i).expect("indexed job");
+                    st.running.insert(job.model.clone());
+                    inner.publish_depth(st.pending.len());
+                    break job;
+                }
+                st = inner.work_ready.wait(st).unwrap();
+            }
+        };
+        MetricsRegistry::global()
+            .gauge(&format!(
+                "gf_lifecycle_wait_seconds.{}.{}",
+                job.model, job.version
+            ))
+            .set(job.enqueued.elapsed().as_secs_f64());
+        // A panicking job must not wedge its model's slot (the worker
+        // would unwind before releasing it, leaving every later job for
+        // that model queued forever) or kill the worker thread.
+        let work = job.work;
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(work)).is_err() {
+            MetricsRegistry::global().counter("gf_lifecycle_job_panics_total").inc();
+        }
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.running.remove(&job.model);
+        }
+        // A freed model slot may unblock a queued same-model job on
+        // another worker.
+        inner.work_ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    type JobFn = Box<dyn FnOnce() + Send>;
+
+    fn recorder() -> (Arc<Mutex<Vec<&'static str>>>, impl Fn(&'static str) -> JobFn) {
+        let log: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+        let l2 = log.clone();
+        let mk = move |tag: &'static str| -> Box<dyn FnOnce() + Send> {
+            let log = l2.clone();
+            Box::new(move || log.lock().unwrap().push(tag))
+        };
+        (log, mk)
+    }
+
+    fn wait_until<F: Fn() -> bool>(cond: F, ms: u64) -> bool {
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        while Instant::now() < deadline {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        cond()
+    }
+
+    #[test]
+    fn jobs_run_and_complete() {
+        let ex = LifecycleExecutor::start(2, 16);
+        let (log, mk) = recorder();
+        ex.submit("a", 1, JobKind::Load, mk("a1"), Box::new(|| {})).unwrap();
+        ex.submit("b", 1, JobKind::Load, mk("b1"), Box::new(|| {})).unwrap();
+        assert!(wait_until(|| log.lock().unwrap().len() == 2, 2000));
+    }
+
+    #[test]
+    fn same_model_serialises_different_models_overlap() {
+        let ex = LifecycleExecutor::start(4, 16);
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let peak_same = Arc::new(AtomicUsize::new(0));
+        let overlap_seen = Arc::new(AtomicBool::new(false));
+        let mk = |model_counter: Arc<AtomicUsize>,
+                  peak: Arc<AtomicUsize>,
+                  cross: Arc<AtomicUsize>,
+                  overlap: Arc<AtomicBool>| {
+            Box::new(move || {
+                let now_same = model_counter.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now_same, Ordering::SeqCst);
+                let now_cross = cross.fetch_add(1, Ordering::SeqCst) + 1;
+                if now_cross >= 2 {
+                    overlap.store(true, Ordering::SeqCst);
+                }
+                std::thread::sleep(Duration::from_millis(60));
+                cross.fetch_sub(1, Ordering::SeqCst);
+                model_counter.fetch_sub(1, Ordering::SeqCst);
+            }) as Box<dyn FnOnce() + Send>
+        };
+        let a_inflight = Arc::new(AtomicUsize::new(0));
+        let b_inflight = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            ex.submit(
+                "a",
+                1,
+                JobKind::Load,
+                mk(a_inflight.clone(), peak_same.clone(), in_flight.clone(), overlap_seen.clone()),
+                Box::new(|| {}),
+            )
+            .unwrap();
+            ex.submit(
+                "b",
+                1,
+                JobKind::Load,
+                mk(b_inflight.clone(), peak_same.clone(), in_flight.clone(), overlap_seen.clone()),
+                Box::new(|| {}),
+            )
+            .unwrap();
+        }
+        assert!(wait_until(
+            || ex.queue_depth() == 0
+                && a_inflight.load(Ordering::SeqCst) == 0
+                && b_inflight.load(Ordering::SeqCst) == 0,
+            5000
+        ));
+        assert_eq!(peak_same.load(Ordering::SeqCst), 1, "per-model serialization");
+        assert!(overlap_seen.load(Ordering::SeqCst), "cross-model concurrency");
+    }
+
+    #[test]
+    fn bounded_queue_refuses_past_capacity() {
+        let ex = LifecycleExecutor::start(1, 2);
+        // One long job occupies the worker; the queue holds 2 more.
+        let (tx, rx) = mpsc::channel::<()>();
+        ex.submit(
+            "a",
+            1,
+            JobKind::Load,
+            Box::new(move || {
+                let _ = rx.recv_timeout(Duration::from_secs(5));
+            }),
+            Box::new(|| {}),
+        )
+        .unwrap();
+        assert!(wait_until(|| ex.queue_depth() == 0, 2000), "worker picked up the job");
+        ex.submit("a", 2, JobKind::Load, Box::new(|| {}), Box::new(|| {})).unwrap();
+        ex.submit("a", 3, JobKind::Load, Box::new(|| {}), Box::new(|| {})).unwrap();
+        let err = ex
+            .submit("a", 4, JobKind::Load, Box::new(|| {}), Box::new(|| {}))
+            .unwrap_err();
+        assert!(matches!(err, RuntimeError::Backpressure(_)), "{err}");
+        tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn batch_submit_is_all_or_nothing() {
+        let ex = LifecycleExecutor::start(1, 3);
+        // Occupy the worker so everything else stays pending.
+        let (tx, rx) = mpsc::channel::<()>();
+        ex.submit(
+            "a",
+            1,
+            JobKind::Load,
+            Box::new(move || {
+                let _ = rx.recv_timeout(Duration::from_secs(5));
+            }),
+            Box::new(|| {}),
+        )
+        .unwrap();
+        assert!(wait_until(|| ex.queue_depth() == 0, 2000));
+        ex.submit("a", 2, JobKind::Load, Box::new(|| {}), Box::new(|| {})).unwrap();
+        // A 3-job load batch over the remaining 2 slots is refused
+        // whole: nothing from it may linger in the queue.
+        let specs: Vec<JobSpec> = (3..6)
+            .map(|v| JobSpec {
+                version: v,
+                kind: JobKind::Load,
+                work: Box::new(|| {}),
+                cancel: Box::new(|| {}),
+            })
+            .collect();
+        let err = ex.submit_all("b", specs).unwrap_err();
+        assert!(matches!(err, RuntimeError::Backpressure(_)), "{err}");
+        assert_eq!(ex.queue_depth(), 1, "refused batch left nothing behind");
+        assert!(!ex.load_queued("b", 3));
+        // Unload batches bypass the bound entirely.
+        let drains: Vec<JobSpec> = (3..6)
+            .map(|v| JobSpec {
+                version: v,
+                kind: JobKind::Unload,
+                work: Box::new(|| {}),
+                cancel: Box::new(|| {}),
+            })
+            .collect();
+        ex.submit_all("b", drains).unwrap();
+        assert_eq!(ex.queue_depth(), 4);
+        tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn queued_load_cancels_but_running_does_not() {
+        let ex = LifecycleExecutor::start(1, 16);
+        let (log, mk) = recorder();
+        let (tx, rx) = mpsc::channel::<()>();
+        let started = Arc::new(AtomicBool::new(false));
+        let s2 = started.clone();
+        ex.submit(
+            "a",
+            1,
+            JobKind::Load,
+            Box::new(move || {
+                s2.store(true, Ordering::SeqCst);
+                let _ = rx.recv_timeout(Duration::from_secs(5));
+            }),
+            mk("a1-cancelled"),
+        )
+        .unwrap();
+        assert!(wait_until(|| started.load(Ordering::SeqCst), 2000));
+        // a2 queues behind a1 (same model) — cancellable.
+        ex.submit("a", 2, JobKind::Load, mk("a2-ran"), mk("a2-cancelled")).unwrap();
+        assert!(ex.load_queued("a", 2));
+        // Running a1 is not cancellable; queued a2 is.
+        assert_eq!(ex.cancel_queued_loads("a", Some(1)), Vec::<u64>::new());
+        assert_eq!(ex.cancel_queued_loads("a", Some(2)), vec![2]);
+        assert!(!ex.load_queued("a", 2));
+        tx.send(()).unwrap();
+        assert!(wait_until(|| !log.lock().unwrap().is_empty(), 2000));
+        assert_eq!(*log.lock().unwrap(), vec!["a2-cancelled"], "work never ran");
+    }
+
+    #[test]
+    fn panicking_job_frees_the_model_slot() {
+        let ex = LifecycleExecutor::start(1, 16);
+        let (log, mk) = recorder();
+        ex.submit("a", 1, JobKind::Load, Box::new(|| panic!("boom")), Box::new(|| {}))
+            .unwrap();
+        // The model's serialization slot must be released despite the
+        // panic, so the next job for the same model still runs.
+        ex.submit("a", 2, JobKind::Load, mk("a2-ran"), Box::new(|| {})).unwrap();
+        assert!(wait_until(|| log.lock().unwrap().contains(&"a2-ran"), 2000));
+    }
+
+    #[test]
+    fn drop_cancels_pending_jobs() {
+        let (log, mk) = recorder();
+        {
+            let ex = LifecycleExecutor::start(1, 16);
+            let (_tx, rx) = mpsc::channel::<()>();
+            ex.submit(
+                "a",
+                1,
+                JobKind::Load,
+                Box::new(move || {
+                    // Held only until drop closes the channel.
+                    let _ = rx.recv_timeout(Duration::from_millis(500));
+                }),
+                Box::new(|| {}),
+            )
+            .unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            ex.submit("a", 2, JobKind::Load, mk("a2-ran"), mk("a2-cancelled")).unwrap();
+        } // drop: a2 never started → its cancel hook runs
+        assert_eq!(*log.lock().unwrap(), vec!["a2-cancelled"]);
+    }
+}

@@ -15,54 +15,84 @@
 //! matter").
 
 pub mod engine;
+pub mod lifecycle;
 pub mod manifest;
 pub mod registry;
 pub mod repository;
 pub mod tensor;
 
 pub use engine::{Engine, ExecMode};
+pub use lifecycle::{JobKind, JobSpec, LifecycleExecutor};
 pub use manifest::{InputKind, ModelManifest, ParamEntry};
 pub use registry::{LoadStats, ModelRegistry, ModelState, VersionView};
 pub use repository::Repository;
 pub use tensor::{InputBatch, OutputBatch};
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+// Error impls are hand-written (no `thiserror`): the crate builds from
+// path dependencies alone, so the committed Cargo.lock never references
+// a registry and the build stays hermetic offline.
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("io error on {path}: {source}")]
     Io {
         path: String,
-        #[source]
         source: std::io::Error,
     },
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("unknown model {0:?}")]
     UnknownModel(String),
-    #[error("no batch bucket >= {requested} for model {model} (max {max})")]
     BatchTooLarge { model: String, requested: usize, max: usize },
-    #[error("input mismatch: {0}")]
     InputMismatch(String),
-    #[error("queue full (backpressure) for model {0:?}")]
     Backpressure(String),
-    #[error("deadline exceeded: {elapsed_ms} ms elapsed against a {timeout_ms} ms budget")]
     DeadlineExceeded { elapsed_ms: u64, timeout_ms: u64 },
     /// The model is registered but no version matching the request is
     /// in `Ready` state (unloaded, still loading, or failed) — the
     /// typed 503 the v2 protocol reports as `MODEL_UNAVAILABLE`.
-    #[error("model {model:?} has no loaded version to serve")]
     ModelUnavailable { model: String },
     /// A present-but-malformed `config.pbtxt`: loading must fail loudly
     /// (HTTP 400), never silently serve with defaults.
-    #[error("model {model:?}: invalid config.pbtxt: {reason}")]
     InvalidConfig { model: String, reason: String },
     /// An invalid lifecycle operation (unloading a model that is not
     /// loaded, loading a version that is mid-transition, ...).
-    #[error("model {model:?}: {reason}")]
     Lifecycle { model: String, reason: String },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Io { path, source } => write!(f, "io error on {path}: {source}"),
+            RuntimeError::Manifest(m) => write!(f, "manifest error: {m}"),
+            RuntimeError::Xla(m) => write!(f, "xla error: {m}"),
+            RuntimeError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+            RuntimeError::BatchTooLarge { model, requested, max } => write!(
+                f,
+                "no batch bucket >= {requested} for model {model} (max {max})"
+            ),
+            RuntimeError::InputMismatch(m) => write!(f, "input mismatch: {m}"),
+            RuntimeError::Backpressure(m) => {
+                write!(f, "queue full (backpressure) for model {m:?}")
+            }
+            RuntimeError::DeadlineExceeded { elapsed_ms, timeout_ms } => write!(
+                f,
+                "deadline exceeded: {elapsed_ms} ms elapsed against a {timeout_ms} ms budget"
+            ),
+            RuntimeError::ModelUnavailable { model } => {
+                write!(f, "model {model:?} has no loaded version to serve")
+            }
+            RuntimeError::InvalidConfig { model, reason } => {
+                write!(f, "model {model:?}: invalid config.pbtxt: {reason}")
+            }
+            RuntimeError::Lifecycle { model, reason } => write!(f, "model {model:?}: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

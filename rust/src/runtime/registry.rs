@@ -196,6 +196,13 @@ impl ModelRegistry {
         Ok(slot.config.clone())
     }
 
+    /// One version's current lifecycle state (None = unknown model or
+    /// version). The async executor's pollable source of truth.
+    pub fn state(&self, model: &str, version: u64) -> Option<ModelState> {
+        let g = self.slots.lock().unwrap();
+        g.get(model)?.versions.get(&version).map(|vs| vs.state.clone())
+    }
+
     /// Per-version introspection for one model.
     pub fn views(&self, model: &str) -> Result<Vec<VersionView>, RuntimeError> {
         let g = self.slots.lock().unwrap();

@@ -370,6 +370,25 @@ pub fn version_view_json(v: &VersionView) -> Value {
     json::obj(fields)
 }
 
+/// Roll a model's per-version states up into the one-word summary
+/// `GET /v2/models/{name}` reports as its top-level `state`. `READY`
+/// wins (something serves), then `LOADING` (an async load is in flight
+/// — poll again), then `UNLOADING`, then `FAILED`, else `UNLOADED`.
+pub fn aggregate_state(views: &[VersionView]) -> &'static str {
+    let any = |f: fn(&ModelState) -> bool| views.iter().any(|v| f(&v.state));
+    if any(|s| matches!(s, ModelState::Ready)) {
+        "READY"
+    } else if any(|s| matches!(s, ModelState::Loading)) {
+        "LOADING"
+    } else if any(|s| matches!(s, ModelState::Unloading)) {
+        "UNLOADING"
+    } else if any(|s| matches!(s, ModelState::Failed { .. })) {
+        "FAILED"
+    } else {
+        "UNLOADED"
+    }
+}
+
 /// `/v2/models/{name}` metadata: per-version lifecycle state plus — when
 /// a version is ready to serve — manifest + serving config + live queue
 /// state (the batching decisions arXiv 2402.07585 calls the
@@ -381,11 +400,15 @@ pub fn model_metadata_json(
     queue_capacity: usize,
 ) -> Value {
     let versions: Vec<Value> = views.iter().map(version_view_json).collect();
+    let state = aggregate_state(views);
     let Some(h) = handle else {
-        // Registered but nothing ready: lifecycle state only.
+        // Registered but nothing ready: lifecycle state only. `state`
+        // distinguishes "still loading — poll again" from "failed" for
+        // clients of the async lifecycle API.
         return json::obj(vec![
             ("name", json::s(name)),
             ("ready", Value::Bool(false)),
+            ("state", json::s(state)),
             ("versions", Value::Arr(versions)),
         ]);
     };
@@ -410,6 +433,7 @@ pub fn model_metadata_json(
     json::obj(vec![
         ("name", json::s(name)),
         ("ready", Value::Bool(true)),
+        ("state", json::s(state)),
         ("version", json::num(h.version() as f64)),
         ("versions", Value::Arr(versions)),
         ("platform", json::s(&platform)),
@@ -560,6 +584,33 @@ mod tests {
         // A non-object "parameters" is a 400, not silently dropped.
         let v = json::parse(r#"{"seed": 1, "parameters": 7}"#).unwrap();
         assert!(InferRequest::from_json("m", &v).is_err());
+    }
+
+    #[test]
+    fn aggregate_state_rolls_up_versions() {
+        let view = |state: ModelState| VersionView { version: 1, state, stats: None };
+        assert_eq!(aggregate_state(&[]), "UNLOADED");
+        assert_eq!(aggregate_state(&[view(ModelState::Unloaded)]), "UNLOADED");
+        assert_eq!(
+            aggregate_state(&[view(ModelState::Loading), view(ModelState::Unloaded)]),
+            "LOADING"
+        );
+        // Something serving beats a sibling still loading.
+        assert_eq!(
+            aggregate_state(&[view(ModelState::Ready), view(ModelState::Loading)]),
+            "READY"
+        );
+        assert_eq!(
+            aggregate_state(&[view(ModelState::Failed { reason: "x".into() })]),
+            "FAILED"
+        );
+        assert_eq!(
+            aggregate_state(&[
+                view(ModelState::Unloading),
+                view(ModelState::Failed { reason: "x".into() })
+            ]),
+            "UNLOADING"
+        );
     }
 
     #[test]

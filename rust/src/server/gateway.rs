@@ -11,8 +11,10 @@
 //! * `POST /v2/models/{name}[/versions/{v}]/infer` — single or batch
 //!   inference with `timeout_ms` deadlines and `priority`
 //! * `POST /v2/repository/index`       — repository-wide version states
-//! * `POST /v2/repository/models/{name}/load|unload` — model lifecycle
-//!   control (optional `{"parameters": {"version": N}}` body)
+//! * `POST /v2/repository/models/{name}/load|unload` — **async** model
+//!   lifecycle control: `202 Accepted` with the work queued on the
+//!   lifecycle executor (optional `{"parameters": {"version": N}}`
+//!   body; `?wait=true` blocks for the old synchronous semantics)
 //! * `GET  /v2/control/loops`          — control-plane introspection
 //! * `GET  /v2/admission/stats`        — admission-controller stats
 //! * legacy: `POST /infer`, `GET /health`, `GET /models`, `GET /metrics`
@@ -261,7 +263,10 @@ pub fn dispatch(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
 }
 
 fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
-    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    // Routing matches the path with its query string split off
+    // (`/load?wait=true` routes like `/load`).
+    let segments: Vec<&str> =
+        req.path_only().split('/').filter(|s| !s.is_empty()).collect();
     match (req.method.as_str(), segments.as_slice()) {
         // ---------------------------------------------------------- v2
         ("GET", ["v2"]) => HttpResponse::ok_json(
@@ -490,12 +495,36 @@ fn repository_index(system: &ServingSystem) -> HttpResponse {
             ])
         })
         .collect();
-    HttpResponse::ok_json(json::obj(vec![("models", Value::Arr(models))]).to_json())
+    HttpResponse::ok_json(
+        json::obj(vec![
+            ("models", Value::Arr(models)),
+            // Executor visibility for async-lifecycle clients: how many
+            // accepted jobs are still waiting for a worker.
+            (
+                "lifecycle",
+                json::obj(vec![(
+                    "queue_depth",
+                    json::num(system.lifecycle_queue_depth() as f64),
+                )]),
+            ),
+        ])
+        .to_json(),
+    )
 }
 
 /// `POST /v2/repository/models/{name}/load|unload` with an optional
 /// `{"parameters": {"version": N}}` body (no body / `{}` = the model's
 /// version policy on load, every ready version on unload).
+///
+/// **Async by default**: load enqueues the engine spawn on the
+/// lifecycle executor and answers `202 Accepted` with the versions now
+/// `LOADING` (poll `/v2/repository/index` or `GET /v2/models/{name}`);
+/// unload swaps the versions out immediately (new requests 503) and
+/// answers `202` while the drain runs in the background — except when
+/// it only cancelled still-queued loads, which completes inline (`200`).
+/// `?wait=true` restores blocking semantics (CLI `--wait`, tests).
+/// Validation failures are synchronous either way: 400/404/429 with a
+/// typed code, never a dangling accepted job.
 fn repository_control(
     name: &str,
     op: &str,
@@ -525,22 +554,70 @@ fn repository_control(
             None => None,
         }
     };
-    let result = match op {
-        "load" => system.load_model(name, version),
-        _ => system.unload_model(name, version),
+    let versions_json = |versions: &[u64]| {
+        Value::Arr(versions.iter().map(|&v| json::num(v as f64)).collect())
     };
-    match result {
-        Ok(versions) => {
-            let arr: Vec<Value> = versions.iter().map(|&v| json::num(v as f64)).collect();
-            Ok(HttpResponse::ok_json(
+    let wait = req.query_flag("wait");
+    if wait {
+        // Blocking semantics: the response reports the terminal outcome.
+        if op == "load" {
+            let versions =
+                system.load_model(name, version).map_err(|e| ApiError::from_runtime(&e))?;
+            return Ok(HttpResponse::ok_json(
                 json::obj(vec![
                     ("model", json::s(name)),
-                    (if op == "load" { "loaded" } else { "unloaded" }, Value::Arr(arr)),
+                    ("loaded", versions_json(&versions)),
                 ])
                 .to_json(),
-            ))
+            ));
         }
-        Err(e) => Err(ApiError::from_runtime(&e)),
+        // `unloaded` = versions that actually drained; a cancelled
+        // still-queued load never served and is reported separately.
+        let ticket = system
+            .unload_model_wait(name, version)
+            .map_err(|e| ApiError::from_runtime(&e))?;
+        let mut fields = vec![
+            ("model", json::s(name)),
+            ("unloaded", versions_json(&ticket.unloading)),
+        ];
+        if !ticket.cancelled.is_empty() {
+            fields.push(("cancelled", versions_json(&ticket.cancelled)));
+        }
+        return Ok(HttpResponse::ok_json(json::obj(fields).to_json()));
+    }
+    if op == "load" {
+        let versions = system
+            .load_model_async(name, version)
+            .map_err(|e| ApiError::from_runtime(&e))?;
+        // Everything targeted was already Ready: nothing was enqueued,
+        // so there is nothing to "accept" — report it done (200), not
+        // LOADING.
+        let (status, state) =
+            if versions.is_empty() { (200, "READY") } else { (202, "LOADING") };
+        Ok(HttpResponse::json(
+            status,
+            json::obj(vec![
+                ("model", json::s(name)),
+                ("state", json::s(state)),
+                ("loading", versions_json(&versions)),
+            ])
+            .to_json(),
+        ))
+    } else {
+        let ticket = system
+            .unload_model_async(name, version)
+            .map_err(|e| ApiError::from_runtime(&e))?;
+        let mut fields = vec![
+            ("model", json::s(name)),
+            ("unloading", versions_json(&ticket.unloading)),
+        ];
+        if !ticket.cancelled.is_empty() {
+            fields.push(("cancelled", versions_json(&ticket.cancelled)));
+        }
+        // A pure cancellation is already complete — nothing left to
+        // accept.
+        let status = if ticket.unloading.is_empty() { 200 } else { 202 };
+        Ok(HttpResponse::json(status, json::obj(fields).to_json()))
     }
 }
 

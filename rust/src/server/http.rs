@@ -233,6 +233,29 @@ impl HttpRequest {
         std::str::from_utf8(&self.body).map_err(|e| e.to_string())
     }
 
+    /// The request target without its query string (what routing
+    /// matches on).
+    pub fn path_only(&self) -> &str {
+        self.path.split_once('?').map(|(p, _)| p).unwrap_or(&self.path)
+    }
+
+    /// Look up one query-string parameter (`?wait=true&x=1`). A key
+    /// present without a value (`?wait`) yields `""`. No percent
+    /// decoding — the v2 surface only uses plain tokens.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        let (_, query) = self.path.split_once('?')?;
+        query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            (k == key).then_some(v)
+        })
+    }
+
+    /// Whether a boolean query parameter is set (`?wait=true`, `?wait=1`
+    /// or bare `?wait`).
+    pub fn query_flag(&self, key: &str) -> bool {
+        matches!(self.query_param(key), Some("" | "true" | "1"))
+    }
+
     /// A case-insensitive header lookup (names are lowercased at parse).
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
@@ -392,6 +415,29 @@ mod tests {
         assert!(r.body.is_empty());
         assert_eq!(r.minor_version, 0);
         assert!(!r.keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn query_strings_split_off_the_path() {
+        let raw = b"POST /v2/repository/models/m/load?wait=true&x=1 HTTP/1.1\r\n\r\n";
+        let r = HttpRequest::parse(&raw[..]).unwrap();
+        assert_eq!(r.path_only(), "/v2/repository/models/m/load");
+        assert_eq!(r.query_param("wait"), Some("true"));
+        assert_eq!(r.query_param("x"), Some("1"));
+        assert_eq!(r.query_param("nope"), None);
+        assert!(r.query_flag("wait"));
+        assert!(!r.query_flag("nope"));
+
+        // Bare key and =1 forms count as set; =false does not.
+        let r = HttpRequest { path: "/x?wait".into(), ..HttpRequest::default() };
+        assert!(r.query_flag("wait"));
+        let r = HttpRequest { path: "/x?wait=false".into(), ..HttpRequest::default() };
+        assert!(!r.query_flag("wait"));
+
+        // No query: path_only is the whole path.
+        let r = HttpRequest { path: "/v2/models".into(), ..HttpRequest::default() };
+        assert_eq!(r.path_only(), "/v2/models");
+        assert_eq!(r.query_param("wait"), None);
     }
 
     #[test]

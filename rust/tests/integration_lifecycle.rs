@@ -6,10 +6,14 @@
 //! typed `MODEL_UNAVAILABLE` 503s, corrupt-config 400s, and
 //! `Failed{reason}` reporting (under the xla stub every engine load
 //! fails at compile, which is exactly the failure path these tests
-//! pin down). The second half needs real artifacts + a real PJRT
-//! backend and drives the acceptance round-trip: load → infer →
-//! unload mid-traffic → 503 → reload → infer, all on one keep-alive
-//! connection with no server restart.
+//! pin down) — plus the **async lifecycle** suite: 202 loads that
+//! return in <100 ms with `LOADING` visible, two artificially slow
+//! loads completing in ~max (not sum) of their times, a responsive
+//! gateway mid-load, and a queued load cancelled by an unload. The
+//! second half needs real artifacts + a real PJRT backend and drives
+//! the acceptance round-trip: load → infer → unload mid-traffic → 503
+//! → reload → infer, all on one keep-alive connection with no server
+//! restart, plus infer-on-Ready-while-another-is-Loading.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -165,7 +169,8 @@ fn explicit_mode_lifecycle_over_live_gateway() {
     assert_eq!(resp.status, 404);
 
     // A corrupt config.pbtxt fails the load loudly (400 + Failed state),
-    // never serving with silent defaults.
+    // never serving with silent defaults — synchronously, even on the
+    // async (202) path: validation never hides behind an accepted job.
     let resp = client.post_json("/v2/repository/models/broken/load", "{}").unwrap();
     assert_eq!(resp.status, 400, "{:?}", resp.body_str());
     assert_eq!(error_code(&resp.json().unwrap()), "BAD_REQUEST");
@@ -180,7 +185,11 @@ fn explicit_mode_lifecycle_over_live_gateway() {
     // hermetic xla stub — and with these synthetic HLO files under any
     // backend — engine compilation fails, so the load must surface a
     // typed error and a Failed{reason} state instead of a half-up model.
-    let resp = client.post_json("/v2/repository/models/alpha/load", "{}").unwrap();
+    // `?wait=true` opts back into blocking semantics so the terminal
+    // outcome is the response status.
+    let resp = client
+        .post_json("/v2/repository/models/alpha/load?wait=true", "{}")
+        .unwrap();
     if resp.status == 200 {
         // A backend that really compiled it: version 2 serves.
         let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
@@ -198,6 +207,205 @@ fn explicit_mode_lifecycle_over_live_gateway() {
         // Still a 503 for clients, and still not ready.
         let resp = client.post_json("/v2/models/alpha/infer", r#"{"seed": 1}"#).unwrap();
         assert_eq!(resp.status, 503);
+    }
+
+    drop(client);
+    drop(gw);
+    let _ = std::fs::remove_dir_all(root);
+}
+
+// ---------------------------------------------------------------------
+// Async lifecycle (stub-safe): non-blocking loads, cross-model
+// concurrency, cancellation. The `slow_load_ms` file in a version
+// directory stalls the engine spawn inside `attach_version`, standing
+// in for a genuinely slow compile + weight transfer.
+// ---------------------------------------------------------------------
+
+/// Build a repo of flat-layout models, each with an artificial engine
+/// spawn delay.
+fn synth_slow_repo(models: &[&str], delay_ms: u64) -> PathBuf {
+    let root = std::env::temp_dir().join(format!(
+        "gf-asynclife-test-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let names: Vec<String> = models.iter().map(|m| format!("{m:?}")).collect();
+    std::fs::write(
+        root.join("repository.json"),
+        format!("{{\"models\": [{}]}}", names.join(", ")),
+    )
+    .unwrap();
+    for m in models {
+        write_version(&root.join(m), m);
+        std::fs::write(root.join(m).join("slow_load_ms"), delay_ms.to_string()).unwrap();
+    }
+    root
+}
+
+#[test]
+fn async_load_is_non_blocking_and_concurrent() {
+    const DELAY_MS: u64 = 1200;
+    let root = synth_slow_repo(&["slow1", "slow2"], DELAY_MS);
+    let cfg = SystemConfig::new(root.clone())
+        .with_model_control(ModelControl::Explicit)
+        .with_load_hooks();
+    let sys = Arc::new(ServingSystem::start(cfg).unwrap());
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+    // Both loads come back in well under the engine-spawn delay: the
+    // handler only validates and flips state; the spawn runs on the
+    // lifecycle executor.
+    let t0 = Instant::now();
+    let resp = client.post_json("/v2/repository/models/slow1/load", "{}").unwrap();
+    let rt1 = t0.elapsed();
+    assert_eq!(resp.status, 202, "{:?}", resp.body_str());
+    let v = resp.json().unwrap();
+    assert_eq!(v.get("state").unwrap().as_str().unwrap(), "LOADING");
+    assert_eq!(v.get("loading").unwrap().as_arr().unwrap().len(), 1);
+
+    let t1 = Instant::now();
+    let resp = client.post_json("/v2/repository/models/slow2/load", "{}").unwrap();
+    let rt2 = t1.elapsed();
+    assert_eq!(resp.status, 202, "{:?}", resp.body_str());
+    assert!(rt1 < Duration::from_millis(100), "load held the handler for {rt1:?}");
+    assert!(rt2 < Duration::from_millis(100), "load held the handler for {rt2:?}");
+
+    // LOADING is visible immediately — index, metadata (model-level
+    // aggregate), and the state gauge.
+    let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+    assert_eq!(index_versions(&index, "slow1"), vec![(1, "LOADING".to_string())]);
+    assert_eq!(index_versions(&index, "slow2"), vec![(1, "LOADING".to_string())]);
+    let meta = client.get("/v2/models/slow1").unwrap().json().unwrap();
+    assert_eq!(meta.get("state").unwrap().as_str().unwrap(), "LOADING");
+    assert_eq!(meta.get("ready").unwrap(), &Value::Bool(false));
+    assert_eq!(
+        MetricsRegistry::global().gauge("gf_model_state.slow1.1").get(),
+        ModelState::Loading.code(),
+    );
+
+    // The gateway keeps serving while both engine spawns run: inference
+    // against a loading model is an *immediate* typed 503, not a stall
+    // behind the spawn.
+    let t2 = Instant::now();
+    let resp = client.post_json("/v2/models/slow1/infer", r#"{"seed": 1}"#).unwrap();
+    assert_eq!(resp.status, 503, "{:?}", resp.body_str());
+    assert_eq!(error_code(&resp.json().unwrap()), "MODEL_UNAVAILABLE");
+    assert!(
+        t2.elapsed() < Duration::from_millis(100),
+        "infer stalled behind a load: {:?}",
+        t2.elapsed()
+    );
+
+    // Both terminal (READY on a real backend, FAILED under the stub) in
+    // ~max of the two delays — cross-model concurrency — never the sum.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+        let s1 = index_versions(&index, "slow1")[0].1.clone();
+        let s2 = index_versions(&index, "slow2")[0].1.clone();
+        if s1 != "LOADING" && s2 != "LOADING" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "loads never settled: {s1}/{s2}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let total = t0.elapsed();
+    assert!(
+        total >= Duration::from_millis(DELAY_MS),
+        "slow-load hook did not engage: {total:?}"
+    );
+    assert!(
+        total < Duration::from_millis(2 * DELAY_MS - 200),
+        "two concurrent loads took ~sum ({total:?}), not ~max"
+    );
+    assert!(
+        MetricsRegistry::global()
+            .counter_value("gf_lifecycle_jobs_total")
+            .unwrap_or(0)
+            >= 2
+    );
+
+    drop(client);
+    drop(gw);
+    let _ = std::fs::remove_dir_all(root);
+}
+
+#[test]
+fn queued_load_cancelled_by_unload() {
+    const DELAY_MS: u64 = 1200;
+    let root = std::env::temp_dir().join(format!(
+        "gf-cancel-test-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    std::fs::write(root.join("repository.json"), r#"{"models": ["qmodel"]}"#).unwrap();
+    for v in [1u64, 2] {
+        let dir = root.join("qmodel").join(v.to_string());
+        write_version(&dir, "qmodel");
+        std::fs::write(dir.join("slow_load_ms"), DELAY_MS.to_string()).unwrap();
+    }
+    let cfg = SystemConfig::new(root.clone())
+        .with_model_control(ModelControl::Explicit)
+        .with_load_hooks();
+    let sys = Arc::new(ServingSystem::start(cfg).unwrap());
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+    // v1 starts its (slow) engine spawn; v2 queues behind it — same
+    // model serialises.
+    let resp = client
+        .post_json("/v2/repository/models/qmodel/load", r#"{"parameters": {"version": 1}}"#)
+        .unwrap();
+    assert_eq!(resp.status, 202, "{:?}", resp.body_str());
+    let resp = client
+        .post_json("/v2/repository/models/qmodel/load", r#"{"parameters": {"version": 2}}"#)
+        .unwrap();
+    assert_eq!(resp.status, 202, "{:?}", resp.body_str());
+    let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+    assert_eq!(
+        index_versions(&index, "qmodel"),
+        vec![(1, "LOADING".to_string()), (2, "LOADING".to_string())]
+    );
+
+    // Unloading the *queued* v2 cancels the job outright: 200 (nothing
+    // left pending), v2 back to UNLOADED, v1 untouched and still
+    // loading.
+    let resp = client
+        .post_json("/v2/repository/models/qmodel/unload", r#"{"parameters": {"version": 2}}"#)
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    let v = resp.json().unwrap();
+    assert_eq!(v.get("cancelled").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(v.get("unloading").unwrap().as_arr().unwrap().len(), 0);
+    let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+    assert_eq!(
+        index_versions(&index, "qmodel"),
+        vec![(1, "LOADING".to_string()), (2, "UNLOADED".to_string())]
+    );
+
+    // The *running* v1 job is not cancellable: its unload is a typed
+    // 400 (busy), not a cancellation.
+    let resp = client
+        .post_json("/v2/repository/models/qmodel/unload", r#"{"parameters": {"version": 1}}"#)
+        .unwrap();
+    assert_eq!(resp.status, 400, "{:?}", resp.body_str());
+
+    // The cancelled job never ran: v2 stays UNLOADED after v1 settles.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let index = client.post_json("/v2/repository/index", "{}").unwrap().json().unwrap();
+        let states = index_versions(&index, "qmodel");
+        if states[0].1 != "LOADING" {
+            assert_eq!(states[1].1, "UNLOADED", "cancelled load ran anyway");
+            break;
+        }
+        assert!(Instant::now() < deadline, "v1 never settled");
+        std::thread::sleep(Duration::from_millis(20));
     }
 
     drop(client);
@@ -276,9 +484,10 @@ fn lifecycle_round_trip_over_live_gateway() {
             });
         }
 
-        // --- unload on the same keep-alive connection
+        // --- unload on the same keep-alive connection (blocking, so
+        // the assertions below see the terminal state)
         let resp = client
-            .post_json(&format!("/v2/repository/models/{model}/unload"), "{}")
+            .post_json(&format!("/v2/repository/models/{model}/unload?wait=true"), "{}")
             .unwrap();
         assert_eq!(resp.status, 200, "{:?}", resp.body_str());
         let v = resp.json().unwrap();
@@ -307,7 +516,7 @@ fn lifecycle_round_trip_over_live_gateway() {
 
         // --- reload, still the same connection, no restart
         let resp = client
-            .post_json(&format!("/v2/repository/models/{model}/load"), "{}")
+            .post_json(&format!("/v2/repository/models/{model}/load?wait=true"), "{}")
             .unwrap();
         assert_eq!(resp.status, 200, "{:?}", resp.body_str());
         let meta = client.get(&format!("/v2/models/{model}")).unwrap().json().unwrap();
@@ -367,4 +576,94 @@ fn v2_batch_body_coalesces_into_buckets() {
         buckets.iter().any(|&b| b >= 2),
         "16-item body executed as singletons: {buckets:?}"
     );
+}
+
+/// Recursive copy for building a scratch repository out of the real
+/// artifacts (the artifacts dir itself is shared and read-only to
+/// tests).
+fn copy_tree(src: &std::path::Path, dst: &std::path::Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap().flatten() {
+        let p = e.path();
+        let q = dst.join(e.file_name());
+        if p.is_dir() {
+            copy_tree(&p, &q);
+        } else {
+            std::fs::copy(&p, &q).unwrap();
+        }
+    }
+}
+
+#[test]
+fn infer_on_ready_model_while_another_loads() {
+    let Some(src) = repo_root() else { return };
+    let _serial = GATED.lock().unwrap_or_else(|e| e.into_inner());
+    // Scratch repo = real artifacts + one synthetic model whose engine
+    // spawn is slowed by 1.5 s.
+    let root = std::env::temp_dir().join(format!(
+        "gf-readywhile-test-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    copy_tree(&src, &root);
+    write_version(&root.join("slowpoke"), "slowpoke");
+    std::fs::write(root.join("slowpoke").join("slow_load_ms"), "1500").unwrap();
+    let idx = std::fs::read_to_string(root.join("repository.json")).unwrap();
+    let mut idx = greenflow::json::parse(&idx).unwrap();
+    if let Value::Obj(obj) = &mut idx {
+        if let Some(Value::Arr(models)) = obj.get_mut("models") {
+            models.push(Value::Str("slowpoke".to_string()));
+        }
+    }
+    std::fs::write(root.join("repository.json"), idx.to_json()).unwrap();
+
+    let cfg = SystemConfig::new(root.clone())
+        .with_model_control(ModelControl::Explicit)
+        .with_load_hooks();
+    let sys = Arc::new(ServingSystem::start(cfg).unwrap());
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+    let model = models::DISTILBERT;
+
+    // Blocking load of the real model first…
+    let resp = client
+        .post_json(&format!("/v2/repository/models/{model}/load?wait=true"), "{}")
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+
+    // …then kick off the slow load and infer against the ready model
+    // while the other is mid-spawn.
+    let resp = client.post_json("/v2/repository/models/slowpoke/load", "{}").unwrap();
+    assert_eq!(resp.status, 202, "{:?}", resp.body_str());
+    let meta = client.get("/v2/models/slowpoke").unwrap().json().unwrap();
+    assert_eq!(meta.get("state").unwrap().as_str().unwrap(), "LOADING");
+
+    let t = Instant::now();
+    let resp = client
+        .post_json(&format!("/v2/models/{model}/infer"), r#"{"seed": 4}"#)
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    assert!(
+        t.elapsed() < Duration::from_millis(1000),
+        "infer on a ready model stalled behind a load: {:?}",
+        t.elapsed()
+    );
+    // The slow load really was still in flight when that infer served.
+    let meta = client.get("/v2/models/slowpoke").unwrap().json().unwrap();
+    assert_eq!(meta.get("state").unwrap().as_str().unwrap(), "LOADING");
+
+    // Let it settle before teardown.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let meta = client.get("/v2/models/slowpoke").unwrap().json().unwrap();
+        if meta.get("state").unwrap().as_str().unwrap() != "LOADING" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slowpoke never settled");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(client);
+    drop(gw);
+    let _ = std::fs::remove_dir_all(root);
 }

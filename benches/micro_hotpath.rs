@@ -28,6 +28,7 @@ use greenflow::models::inputgen;
 use greenflow::pipeline::direct::DirectPath;
 use greenflow::runtime::engine::ExecMode;
 use greenflow::runtime::ModelManifest;
+use greenflow::server::{HttpRequest, RequestParser};
 use greenflow::stats::LatencyHistogram;
 
 fn report(results: &[BenchResult]) {
@@ -145,6 +146,27 @@ fn main() {
     // ---- input generation (payload synth on the request path) ----------
     results.push(bench_fn("inputgen.tokens(32)", 100, 20_000, || {
         let _ = inputgen::tokens_one(42, 32, 512);
+    }));
+
+    // ---- recycled HTTP parse (reactor per-request cost) -----------------
+    // The incremental parser against warm per-connection buffers — the
+    // work the reactor does per keep-alive request before the handler.
+    // Steady state allocates nothing (tests/alloc_http_parse.rs gates
+    // this), so the row measures pure scan + copy.
+    let raw: &[u8] = b"POST /v2/models/distilbert_mini/infer HTTP/1.1\r\n\
+        Host: 127.0.0.1:8000\r\n\
+        Content-Type: application/json\r\n\
+        X-Request-Id: corr-42\r\n\
+        Content-Length: 11\r\n\
+        \r\n\
+        {\"seed\": 7}";
+    let mut parser = RequestParser::new();
+    let mut req = HttpRequest::default();
+    results.push(bench_fn("http.parse_recycled", 1000, iters, || {
+        req.reset();
+        parser.reset();
+        let n = parser.poll(raw, &mut req).unwrap().expect("complete");
+        std::hint::black_box(n);
     }));
 
     report(&results);

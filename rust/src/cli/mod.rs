@@ -5,7 +5,8 @@
 //!                     [--model-control explicit|none]
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
-//!                     [--serve-bench N [--model distilbert_mini] [--bench-json out.json]]
+//!                     [--serve-bench N [--model distilbert_mini] [--bench-json out.json]
+//!                      [--bench-conns C]]
 //! greenflow repo      <index|load|unload> [--addr 127.0.0.1:8080]
 //!                     [--model NAME] [--version N] [--wait]
 //! greenflow report    --repo artifacts
@@ -13,15 +14,17 @@
 //!                     [--adaptive-tau 0.58]
 //! greenflow landscape [--out -]
 //! greenflow perfgate  --serve-json serve_bench.json [--micro-json micro.json]
+//!                     [--serve-hc-json serve_bench_hc.json]
 //!                     [--out BENCH.json] [--baseline benches/baseline.json]
-//!                     [--max-regress 0.20] [--label pr5]
+//!                     [--max-regress 0.20] [--label pr6]
 //! greenflow version
 //! ```
 //!
 //! `--serve-bench N` boots the gateway on an ephemeral port (unless
-//! `--port` pins one), fires `N` v2 infer round-trips over a single
-//! keep-alive connection through [`crate::server::HttpClient`], prints
-//! the round-trip throughput, and exits — the self-contained
+//! `--port` pins one), fires `N` v2 infer round-trips over keep-alive
+//! connections through [`crate::server::HttpClient`] (`--bench-conns C`
+//! spreads them over `C` concurrent connections, default 1), prints
+//! the aggregate throughput, and exits — the self-contained
 //! load-generator smoke the v2 protocol was rebuilt for.
 //!
 //! The `--adaptive-*` / `--energy-budget` flags boot the control plane
@@ -329,7 +332,9 @@ fn cmd_serve(args: &Args) -> i32 {
                 let model = args
                     .get("model")
                     .unwrap_or_else(|| crate::models::DISTILBERT.to_string());
-                let code = serve_bench(gw.addr(), n, &model, args.get("bench-json").as_deref());
+                let conns = args.get_f64("bench-conns").map(|c| c.max(1.0) as usize).unwrap_or(1);
+                let code =
+                    serve_bench(gw.addr(), n, &model, conns, args.get("bench-json").as_deref());
                 gw.shutdown();
                 return code;
             }
@@ -345,26 +350,40 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
-/// Round-trip bench: N requests over one keep-alive connection. When
-/// the target model has a ready version the round-trips are real v2
+/// Round-trip bench: N requests spread over `conns` concurrent
+/// keep-alive connections (default 1, the historical shape; CI also
+/// runs 256 to exercise the reactor's connection scaling). When the
+/// target model has a ready version the round-trips are real v2
 /// infers; otherwise (hermetic CI — the stub backend loads nothing) it
 /// degrades to `GET /v2/health/live`, which still measures the whole
 /// HTTP hot path (accept loop, parse, route, serialise). `--bench-json`
 /// writes the measurements for the CI perf gate (`greenflow perfgate`).
-fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str, json_out: Option<&str>) -> i32 {
-    let mut client = match crate::server::HttpClient::connect(addr) {
-        Ok(c) => c,
+///
+/// Latencies are pooled across connections; throughput is aggregate
+/// wall-clock (N ÷ elapsed across all workers), i.e. what the server
+/// actually sustained, not a per-connection mean.
+fn serve_bench(
+    addr: std::net::SocketAddr,
+    n: usize,
+    model: &str,
+    conns: usize,
+    json_out: Option<&str>,
+) -> i32 {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    let conns = conns.clamp(1, n.max(1));
+    // Readiness probe on its own connection, dropped before timing.
+    let ready = match crate::server::HttpClient::connect(addr) {
+        Ok(mut probe) => probe
+            .get(&format!("/v2/models/{model}"))
+            .ok()
+            .and_then(|r| r.json().ok())
+            .map(|v| v.get("ready").ok().cloned() == Some(crate::json::Value::Bool(true)))
+            .unwrap_or(false),
         Err(e) => {
             eprintln!("serve-bench: cannot connect: {e}");
             return 1;
         }
     };
-    let ready = client
-        .get(&format!("/v2/models/{model}"))
-        .ok()
-        .and_then(|r| r.json().ok())
-        .map(|v| v.get("ready").ok().cloned() == Some(crate::json::Value::Bool(true)))
-        .unwrap_or(false);
     let target = if ready { "infer" } else { "health" };
     if !ready {
         eprintln!(
@@ -373,49 +392,81 @@ fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str, json_out: Opti
         );
     }
     let infer_path = format!("/v2/models/{model}/infer");
-    let mut latencies = Vec::with_capacity(n);
+    let latencies = std::sync::Mutex::new(Vec::with_capacity(n));
+    let ok = AtomicUsize::new(0);
+    let err = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
     let t0 = std::time::Instant::now();
-    let (mut ok, mut err) = (0usize, 0usize);
-    for seed in 0..n {
-        let t_req = std::time::Instant::now();
-        let result = if ready {
-            client.post_json(&infer_path, &format!("{{\"seed\": {seed}}}"))
-        } else {
-            client.get("/v2/health/live")
-        };
-        match result {
-            Ok(resp) => {
-                latencies.push(t_req.elapsed().as_secs_f64());
-                if resp.status == 200 {
-                    ok += 1;
-                } else {
-                    err += 1;
-                }
-                // The server rotates connections after 100k requests
-                // (Connection: close); reconnect instead of dying on
-                // the next write.
-                if !resp.keep_alive() && seed + 1 < n {
-                    client = match crate::server::HttpClient::connect(addr) {
-                        Ok(c) => c,
-                        Err(e) => {
-                            eprintln!("serve-bench: reconnect failed: {e}");
-                            return 1;
-                        }
+    std::thread::scope(|scope| {
+        for worker in 0..conns {
+            // Spread the total across workers (earlier workers absorb
+            // the remainder) so exactly `n` requests hit the wire.
+            let quota = n / conns + usize::from(worker < n % conns);
+            let (latencies, ok, err, failed) = (&latencies, &ok, &err, &failed);
+            let infer_path = infer_path.as_str();
+            scope.spawn(move || {
+                let mut client = match crate::server::HttpClient::connect(addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("serve-bench: connection {worker} failed: {e}");
+                        failed.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                };
+                let mut local = Vec::with_capacity(quota);
+                for seed in 0..quota {
+                    let t_req = std::time::Instant::now();
+                    let result = if ready {
+                        client.post_json(infer_path, &format!("{{\"seed\": {seed}}}"))
+                    } else {
+                        client.get("/v2/health/live")
                     };
+                    match result {
+                        Ok(resp) => {
+                            local.push(t_req.elapsed().as_secs_f64());
+                            if resp.status == 200 {
+                                ok.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                err.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // The server rotates connections after 100k
+                            // requests (Connection: close); reconnect
+                            // instead of dying on the next write.
+                            if !resp.keep_alive() && seed + 1 < quota {
+                                client = match crate::server::HttpClient::connect(addr) {
+                                    Ok(c) => c,
+                                    Err(e) => {
+                                        eprintln!("serve-bench: reconnect failed: {e}");
+                                        failed.store(true, Ordering::SeqCst);
+                                        return;
+                                    }
+                                };
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "serve-bench: transport error on connection {worker}: {e}"
+                            );
+                            failed.store(true, Ordering::SeqCst);
+                            return;
+                        }
+                    }
                 }
-            }
-            Err(e) => {
-                eprintln!("serve-bench: transport error after {} round-trips: {e}", ok + err);
-                return 1;
-            }
+                latencies.lock().unwrap().extend(local);
+            });
         }
-    }
+    });
     let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    if failed.load(Ordering::SeqCst) {
+        return 1;
+    }
+    let latencies = latencies.into_inner().unwrap();
+    let (ok, err) = (ok.load(Ordering::Relaxed), err.load(Ordering::Relaxed));
     let p50 = crate::stats::quantile(&latencies, 0.5);
     let p95 = crate::stats::quantile(&latencies, 0.95);
     println!(
-        "serve-bench[{target}]: {n} round-trips on one keep-alive connection in {:.3} s \
-         ({:.0} req/s, p50 {:.1} µs, p95 {:.1} µs), {ok} ok / {err} error responses",
+        "serve-bench[{target}]: {n} round-trips across {conns} keep-alive connection(s) \
+         in {:.3} s ({:.0} req/s, p50 {:.1} µs, p95 {:.1} µs), {ok} ok / {err} error responses",
         secs,
         n as f64 / secs,
         p50 * 1e6,
@@ -427,6 +478,7 @@ fn serve_bench(addr: std::net::SocketAddr, n: usize, model: &str, json_out: Opti
             ("target", crate::json::s(target)),
             ("model", crate::json::s(model)),
             ("requests", crate::json::num(n as f64)),
+            ("connections", crate::json::num(conns as f64)),
             ("seconds", crate::json::num(secs)),
             ("throughput_rps", crate::json::num(n as f64 / secs)),
             ("p50_latency_us", crate::json::num(p50 * 1e6)),
@@ -525,13 +577,17 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 ///
 /// ```text
 /// greenflow perfgate --serve-json serve_bench.json [--micro-json micro.json]
-///                    --out BENCH_5.json [--label pr5]
+///                    [--serve-hc-json serve_bench_hc.json]
+///                    --out BENCH_6.json [--label pr6]
 ///                    [--baseline benches/baseline.json] [--max-regress 0.20]
 ///                    [--requests 2000]
 /// ```
 ///
 /// Inputs: the `--bench-json` output of `greenflow serve --serve-bench`
-/// (HTTP round-trip throughput + latency percentiles) and optionally
+/// (HTTP round-trip throughput + latency percentiles), optionally a
+/// second high-concurrency run (`--bench-conns 256 --bench-json
+/// serve_bench_hc.json`, passed as `--serve-hc-json`) gated as
+/// `hc_throughput_rps`, and optionally
 /// the `--json` output of `cargo bench --bench micro_hotpath`
 /// (per-component timings, embedded verbatim). Two gated numbers are
 /// measured in-process so the gate has no backend dependency: the
@@ -562,6 +618,26 @@ fn cmd_perfgate(args: &Args) -> i32 {
         eprintln!("perfgate: {serve_path} is missing throughput/latency fields");
         return 1;
     };
+    // Optional high-concurrency serve-bench (`--bench-conns 256` run):
+    // gates aggregate connection-scaling throughput as a Floor. Absent
+    // = not gated (keeps single-connection invocations working).
+    let serve_hc = match args.get("serve-hc-json") {
+        Some(p) => match read_json_file(&p) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    let hc_throughput = serve_hc
+        .as_ref()
+        .and_then(|v| v.get("throughput_rps").ok().and_then(|x| x.as_f64().ok()));
+    if serve_hc.is_some() && hc_throughput.is_none() {
+        eprintln!("perfgate: --serve-hc-json input is missing throughput_rps");
+        return 1;
+    }
     let components = match args.get("micro-json") {
         Some(p) => match read_json_file(&p) {
             Ok(v) => v,
@@ -599,7 +675,7 @@ fn cmd_perfgate(args: &Args) -> i32 {
     let admit_rate = simulate(&mut bio, &reqs, &sim_cfg).admission_rate();
 
     let label = args.get("label").unwrap_or_else(|| "bench".to_string());
-    let bench = json::obj(vec![
+    let mut fields = vec![
         ("schema", json::s("greenflow.bench/1")),
         ("label", json::s(&label)),
         ("throughput_rps", json::num(throughput)),
@@ -607,9 +683,16 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("p95_latency_us", json::num(p95_us)),
         ("admit_rate", json::num(admit_rate)),
         ("adaptive_read_ns", json::num(adaptive_read_ns)),
-        ("serve_bench", serve),
-        ("components", components),
-    ]);
+    ];
+    if let Some(hc) = hc_throughput {
+        fields.push(("hc_throughput_rps", json::num(hc)));
+    }
+    fields.push(("serve_bench", serve));
+    if let Some(hc) = serve_hc {
+        fields.push(("serve_bench_hc", hc));
+    }
+    fields.push(("components", components));
+    let bench = json::obj(fields);
     let out = args.get("out").unwrap_or_else(|| "BENCH.json".to_string());
     if let Err(e) = std::fs::write(&out, bench.to_json()) {
         eprintln!("perfgate: cannot write {out}: {e}");
@@ -639,13 +722,16 @@ fn cmd_perfgate(args: &Args) -> i32 {
         /// Regression = drifting from baseline by more than r either way.
         Drift,
     }
-    let checks = [
+    let mut checks = vec![
         ("throughput_rps", throughput, Gate::Floor),
         ("p50_latency_us", p50_us, Gate::Ceiling),
         ("p95_latency_us", p95_us, Gate::Ceiling),
         ("admit_rate", admit_rate, Gate::Drift),
         ("adaptive_read_ns", adaptive_read_ns, Gate::Ceiling),
     ];
+    if let Some(hc) = hc_throughput {
+        checks.push(("hc_throughput_rps", hc, Gate::Floor));
+    }
     let mut failed = false;
     for (name, measured, gate) in checks {
         let Some(base) = baseline_field(&baseline, name) else {
@@ -848,6 +934,60 @@ mod tests {
             ])),
             1
         );
+
+        // High-concurrency input: recorded as hc_throughput_rps and
+        // gated as a Floor when the baseline pins it.
+        let serve_hc = dir.join("serve_bench_hc.json");
+        std::fs::write(
+            &serve_hc,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "connections": 256, "throughput_rps": 9000.0,
+                "p50_latency_us": 900.0, "p95_latency_us": 3000.0}"#,
+        )
+        .unwrap();
+        let good_hc = dir.join("baseline_good_hc.json");
+        std::fs::write(
+            &good_hc,
+            r#"{"throughput_rps": 4500.0, "hc_throughput_rps": 8000.0}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--serve-hc-json",
+                serve_hc.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--baseline",
+                good_hc.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            0
+        );
+        let bench = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(bench.get("hc_throughput_rps").unwrap().as_f64().unwrap(), 9000.0);
+        assert!(bench.get("serve_bench_hc").is_ok());
+        let bad_hc = dir.join("baseline_bad_hc.json");
+        std::fs::write(&bad_hc, r#"{"hc_throughput_rps": 1e9}"#).unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--serve-hc-json",
+                serve_hc.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--baseline",
+                bad_hc.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            1
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 
@@ -878,6 +1018,19 @@ mod tests {
                 root.to_str().unwrap(),
                 "--serve-bench",
                 "10",
+            ])),
+            0
+        );
+        // And spread over 4 concurrent connections.
+        assert_eq!(
+            run(&sv(&[
+                "serve",
+                "--repo",
+                root.to_str().unwrap(),
+                "--serve-bench",
+                "40",
+                "--bench-conns",
+                "4",
             ])),
             0
         );

@@ -153,6 +153,81 @@ impl ControlLaw for BudgetPacer {
     }
 }
 
+/// Full PID controller on the error `signal - setpoint`, with clamped
+/// output and integral anti-windup.
+///
+/// Same sign convention as [`SetpointTracker`] (its pure-I special
+/// case): a signal above the setpoint drives the output up. The
+/// proportional term reacts to the current error immediately — where
+/// the integral tracker needs many ticks to accumulate the same
+/// correction — and the derivative term damps the overshoot that a
+/// hard proportional gain would otherwise ring with, so τ converges in
+/// fewer control ticks (the `tests/integration_control.rs` convergence
+/// contrast).
+///
+/// Anti-windup: the integral state is clamped so that `ki * integral`
+/// alone can never exceed the output band — a long saturated excursion
+/// (burst far above the setpoint) unwinds immediately once the signal
+/// returns, instead of replaying the accumulated windup as overshoot.
+#[derive(Debug, Clone)]
+pub struct Pid {
+    pub setpoint: f64,
+    pub kp: f64,
+    pub ki: f64,
+    pub kd: f64,
+    pub min: f64,
+    pub max: f64,
+    integral: f64,
+    prev_error: Option<f64>,
+    value: f64,
+}
+
+impl Pid {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        initial: f64,
+        setpoint: f64,
+        kp: f64,
+        ki: f64,
+        kd: f64,
+        min: f64,
+        max: f64,
+    ) -> Self {
+        assert!(kp >= 0.0 && ki >= 0.0 && kd >= 0.0, "PID gains must be >= 0");
+        assert!(kp > 0.0 || ki > 0.0, "a PID with no P and no I never moves");
+        assert!(min <= max && (min..=max).contains(&initial));
+        Pid { setpoint, kp, ki, kd, min, max, integral: 0.0, prev_error: None, value: initial }
+    }
+}
+
+impl ControlLaw for Pid {
+    fn step(&mut self, signal: f64, dt: f64) -> f64 {
+        let dt = dt.max(0.0);
+        let error = signal - self.setpoint;
+        if self.ki > 0.0 {
+            // Clamp the *integral contribution* into the output band.
+            self.integral =
+                (self.integral + error * dt).clamp(self.min / self.ki, self.max / self.ki);
+        }
+        let derivative = match self.prev_error {
+            Some(prev) if dt > 0.0 => (error - prev) / dt,
+            _ => 0.0,
+        };
+        self.prev_error = Some(error);
+        self.value = (self.kp * error + self.ki * self.integral + self.kd * derivative)
+            .clamp(self.min, self.max);
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "pid"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,11 +349,89 @@ mod tests {
     }
 
     #[test]
+    fn pid_matches_setpoint_tracker_when_pure_integral() {
+        // With kp = kd = 0 and per-step dt = 1, the PID must reduce to
+        // the integral tracker it generalises.
+        let mut pid = Pid::new(0.0, 0.6, 0.0, 0.4, 0.0, -1.0, 1.0);
+        let mut tracker = SetpointTracker::new(0.0, 0.6, 0.4, -1.0, 1.0);
+        for signal in [0.9, 0.1, 0.7, 0.6, 0.2, 0.95] {
+            assert!((pid.step(signal, 1.0) - tracker.step(signal, 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pid_sign_convention_matches_setpoint_tracker() {
+        let mut law = Pid::new(0.0, 0.5, 0.3, 0.1, 0.0, -1.0, 1.0);
+        // over the setpoint: correction rises (stricter τ)
+        assert!(law.step(0.9, 1.0) > 0.0);
+        // sustained under-shoot drives it negative (permissive τ)
+        for _ in 0..20 {
+            law.step(0.1, 1.0);
+        }
+        assert!(law.output() < 0.0);
+    }
+
+    #[test]
+    fn pid_proportional_term_reacts_immediately() {
+        // One step, same error: the P term moves the output at once,
+        // where the pure-I tracker takes gain*error per step.
+        let mut pid = Pid::new(0.0, 0.5, 1.0, 0.1, 0.0, -1.0, 1.0);
+        let out = pid.step(0.9, 1.0);
+        assert!(out > 0.4, "P term should dominate the first step, got {out}");
+    }
+
+    #[test]
+    fn pid_derivative_damps_a_rising_error() {
+        // The derivative acts on the error's motion: while the error is
+        // falling (the loop converging), D subtracts from the output —
+        // the damping that lets PR-6's convergence test run hotter P/I
+        // gains without overshoot.
+        let mut with_d = Pid::new(0.0, 0.0, 0.5, 0.1, 0.2, -10.0, 10.0);
+        let mut without_d = Pid::new(0.0, 0.0, 0.5, 0.1, 0.0, -10.0, 10.0);
+        with_d.step(1.0, 1.0);
+        without_d.step(1.0, 1.0);
+        // error falls 1.0 → 0.2: D sees -0.8/s and pulls the output
+        // below the P+I-only controller.
+        let damped = with_d.step(0.2, 1.0);
+        let undamped = without_d.step(0.2, 1.0);
+        assert!(damped < undamped, "D failed to damp: {damped} vs {undamped}");
+    }
+
+    #[test]
+    fn pid_anti_windup_bounds_the_integral() {
+        // Long saturated excursion, then the error reverses: an
+        // unclamped integral (200 × 10 accumulated) would hold the
+        // output pinned at max for ~2000 more steps; the clamped one
+        // lets the controller move off the rail on the very next step.
+        let mut law = Pid::new(0.0, 0.0, 0.2, 0.5, 0.0, -1.0, 1.0);
+        for _ in 0..200 {
+            law.step(10.0, 1.0);
+        }
+        assert_eq!(law.output(), 1.0, "saturated at max during the excursion");
+        let out = law.step(-1.0, 1.0);
+        assert!(out < 0.5, "integral windup pinned the output: {out}");
+    }
+
+    #[test]
+    fn pid_clamps_output() {
+        let mut law = Pid::new(0.0, 0.0, 100.0, 0.0, 0.0, -0.25, 0.25);
+        assert_eq!(law.step(1.0, 1.0), 0.25);
+        assert_eq!(law.step(-1.0, 1.0), -0.25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pid_rejects_a_controller_that_cannot_move() {
+        Pid::new(0.0, 0.5, 0.0, 0.0, 1.0, -1.0, 1.0);
+    }
+
+    #[test]
     fn laws_are_object_safe() {
         let mut laws: Vec<Box<dyn ControlLaw>> = vec![
             Box::new(Aimd::new(1.0, 1.0, 1.0, 0.5, 0.0, 10.0)),
             Box::new(SetpointTracker::new(0.0, 0.5, 0.1, -1.0, 1.0)),
             Box::new(BudgetPacer::new(10.0, 0.1, 0.0, 1.0)),
+            Box::new(Pid::new(0.0, 0.5, 0.5, 0.1, 0.05, -1.0, 1.0)),
         ];
         for law in &mut laws {
             let out = law.step(0.7, 0.1);

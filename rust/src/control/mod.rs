@@ -16,7 +16,8 @@
 //! │ RateWindow    │   │ trait ControlLaw  │   │ Adaptive<T>          │
 //! │ LatencyWindow │ → │  · Aimd           │ → │  (atomic handle read │
 //! │ EnergyWindow  │   │  · SetpointTracker│   │   on the hot path)   │
-//! │ WindowedMetrics│  │  · BudgetPacer    │   │                      │
+//! │ WindowedMetrics│  │  · Pid            │   │                      │
+//! │               │   │  · BudgetPacer    │   │                      │
 //! └───────────────┘   └───────────────────┘   └──────────────────────┘
 //!   request events      windowed signal          τ correction,
 //!   (arrival, latency,   vs. setpoint            batcher delay µs,
@@ -30,8 +31,8 @@
 //!   existing telemetry/energy events.
 //! * **Decide** ([`law`]) — pluggable control laws behind the
 //!   [`ControlLaw`] trait: AIMD ([`Aimd`]), additive setpoint tracking
-//!   ([`SetpointTracker`], the admission-rate → τ servo), and
-//!   energy-budget pacing ([`BudgetPacer`]).
+//!   ([`SetpointTracker`], the admission-rate → τ servo), full PID with
+//!   anti-windup ([`Pid`]), and energy-budget pacing ([`BudgetPacer`]).
 //! * **Act** ([`adaptive`]) — the generic [`Adaptive<T>`] handle: an
 //!   atomic cell consumers read on the hot path at the cost of one
 //!   relaxed load (see `benches/micro_hotpath.rs` for the measurement
@@ -62,7 +63,7 @@ pub mod plane;
 pub mod window;
 
 pub use adaptive::{Adaptive, AtomicBits};
-pub use law::{Aimd, BudgetPacer, ControlLaw, SetpointTracker};
+pub use law::{Aimd, BudgetPacer, ControlLaw, Pid, SetpointTracker};
 pub use plane::{
     AdaptiveDelayConfig, AdaptiveRouterConfig, AdaptiveTauConfig, ControlLoop, ControlPlane,
     ControlPlaneConfig, EnergyBudgetConfig, LoopState,

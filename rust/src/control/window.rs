@@ -202,6 +202,16 @@ pub struct MetricsSnapshot {
     pub mean_joules: f64,
     /// Total events recorded since boot.
     pub events: u64,
+    /// Per-path rolling p95 (s): requests served on the direct
+    /// (latency-sensitive) path vs the batched path. 0.0 until that path
+    /// has samples. The blended `p95_latency` mixes both populations —
+    /// a loop steering one path must read its own signal or the other
+    /// path's tail pollutes the feedback (see `pipeline::system`).
+    pub p95_direct: f64,
+    pub p95_batched: f64,
+    /// Per-path completion counts since boot (freshness gates).
+    pub events_direct: u64,
+    pub events_batched: u64,
 }
 
 /// Lock-light shared aggregator: the serving pipeline calls the three
@@ -216,8 +226,12 @@ pub struct MetricsSnapshot {
 pub struct WindowedMetrics {
     arrivals: Mutex<RateWindow>,
     latencies: Mutex<LatencyWindow>,
+    direct: Mutex<LatencyWindow>,
+    batched: Mutex<LatencyWindow>,
     energy: Mutex<EnergyWindow>,
     events: AtomicU64,
+    events_direct: AtomicU64,
+    events_batched: AtomicU64,
 }
 
 impl WindowedMetrics {
@@ -227,8 +241,12 @@ impl WindowedMetrics {
         WindowedMetrics {
             arrivals: Mutex::new(RateWindow::new(rate_window)),
             latencies: Mutex::new(LatencyWindow::new(sample_window)),
+            direct: Mutex::new(LatencyWindow::new(sample_window)),
+            batched: Mutex::new(LatencyWindow::new(sample_window)),
             energy: Mutex::new(EnergyWindow::new(rate_window)),
             events: AtomicU64::new(0),
+            events_direct: AtomicU64::new(0),
+            events_batched: AtomicU64::new(0),
         }
     }
 
@@ -237,8 +255,25 @@ impl WindowedMetrics {
         self.events.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a latency with no path attribution (admission skips,
+    /// callers predating the split). Feeds only the blended window.
     pub fn record_latency(&self, secs: f64) {
         self.latencies.lock().unwrap().record(secs);
+    }
+
+    /// Record a direct-path completion: feeds the direct window *and*
+    /// the blended one, so blended consumers keep seeing every sample.
+    pub fn record_latency_direct(&self, secs: f64) {
+        self.latencies.lock().unwrap().record(secs);
+        self.direct.lock().unwrap().record(secs);
+        self.events_direct.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Batched-path counterpart of [`Self::record_latency_direct`].
+    pub fn record_latency_batched(&self, secs: f64) {
+        self.latencies.lock().unwrap().record(secs);
+        self.batched.lock().unwrap().record(secs);
+        self.events_batched.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_joules(&self, t: f64, joules: f64) {
@@ -249,12 +284,22 @@ impl WindowedMetrics {
         self.events.load(Ordering::Relaxed)
     }
 
+    pub fn events_direct(&self) -> u64 {
+        self.events_direct.load(Ordering::Relaxed)
+    }
+
+    pub fn events_batched(&self) -> u64 {
+        self.events_batched.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let qps = self.arrivals.lock().unwrap().rate();
         let (p50, p95, mean_latency) = {
             let l = self.latencies.lock().unwrap();
             (l.quantile(0.5), l.p95(), l.mean())
         };
+        let p95_direct = self.direct.lock().unwrap().p95();
+        let p95_batched = self.batched.lock().unwrap().p95();
         let (watts, mean_joules) = {
             let e = self.energy.lock().unwrap();
             (e.watts(), e.mean_joules())
@@ -267,6 +312,10 @@ impl WindowedMetrics {
             watts,
             mean_joules,
             events: self.events(),
+            p95_direct,
+            p95_batched,
+            events_direct: self.events_direct(),
+            events_batched: self.events_batched(),
         }
     }
 }
@@ -394,5 +443,39 @@ mod tests {
         assert!((s.p95_latency - 0.02).abs() < 1e-12);
         assert!((s.watts - 5.0 / 0.9).abs() < 1e-6, "watts {}", s.watts);
         assert_eq!(s.events, 10);
+    }
+
+    #[test]
+    fn per_path_windows_separate_the_tails() {
+        let m = WindowedMetrics::new(16, 64);
+        // Fast direct path (1 ms) next to a slow batched path (100 ms):
+        // the blended p95 is dominated by the batched tail, while the
+        // direct signal stays honest.
+        for _ in 0..50 {
+            m.record_latency_direct(0.001);
+            m.record_latency_batched(0.100);
+        }
+        let s = m.snapshot();
+        assert!((s.p95_direct - 0.001).abs() < 1e-12, "direct {}", s.p95_direct);
+        assert!((s.p95_batched - 0.100).abs() < 1e-12, "batched {}", s.p95_batched);
+        assert!(
+            s.p95_latency > 10.0 * s.p95_direct,
+            "blended p95 {} should be polluted by the batched tail",
+            s.p95_latency
+        );
+        assert_eq!(s.events_direct, 50);
+        assert_eq!(s.events_batched, 50);
+    }
+
+    #[test]
+    fn unattributed_latency_feeds_only_the_blend() {
+        let m = WindowedMetrics::new(16, 16);
+        m.record_latency(0.5);
+        let s = m.snapshot();
+        assert_eq!(s.p95_direct, 0.0);
+        assert_eq!(s.p95_batched, 0.0);
+        assert!((s.p95_latency - 0.5).abs() < 1e-12);
+        assert_eq!(s.events_direct, 0);
+        assert_eq!(s.events_batched, 0);
     }
 }

@@ -328,22 +328,43 @@ fn deadline_error(opts: &SubmitOptions, fallback_start: f64, now: f64) -> Runtim
 /// until new events landed since the previous tick — count-bounded
 /// windows would otherwise replay the last regime forever after
 /// traffic stops.
-fn fresh_p95(metrics: &Arc<WindowedMetrics>) -> Box<dyn FnMut() -> f64 + Send> {
+///
+/// `events` picks the freshness counter and `p95` the quantile to read,
+/// so each loop can watch the population it actually steers: the router
+/// threshold moves traffic off the *direct* path, so it must see the
+/// direct p95 (a blended signal lets the batched tail push the
+/// threshold down, starving the direct path it was protecting); the
+/// batch-delay loop shapes the *batched* path only.
+fn fresh_p95_signal(
+    metrics: &Arc<WindowedMetrics>,
+    events: fn(&WindowedMetrics) -> u64,
+    p95: fn(&WindowedMetrics) -> f64,
+) -> Box<dyn FnMut() -> f64 + Send> {
     let m = metrics.clone();
     let mut last_events = 0u64;
     Box::new(move || {
-        let ev = m.events();
+        let ev = events(m.as_ref());
         if ev == last_events {
             return f64::NAN;
         }
         last_events = ev;
-        let p95 = m.snapshot().p95_latency;
+        let p95 = p95(m.as_ref());
         if p95 > 0.0 {
             p95
         } else {
             f64::NAN
         }
     })
+}
+
+/// Direct-path p95, fresh while direct completions keep landing.
+fn fresh_p95_direct(metrics: &Arc<WindowedMetrics>) -> Box<dyn FnMut() -> f64 + Send> {
+    fresh_p95_signal(metrics, WindowedMetrics::events_direct, |m| m.snapshot().p95_direct)
+}
+
+/// Batched-path p95, fresh while batched completions keep landing.
+fn fresh_p95_batched(metrics: &Arc<WindowedMetrics>) -> Box<dyn FnMut() -> f64 + Send> {
+    fresh_p95_signal(metrics, WindowedMetrics::events_batched, |m| m.snapshot().p95_batched)
 }
 
 /// Outcome of the per-request admission pass (screener → J(x) vs τ(t)).
@@ -506,7 +527,7 @@ impl ServingSystem {
                 plane.add_loop(ControlLoop::new(
                     "router_qps_threshold",
                     Box::new(law),
-                    fresh_p95(metrics),
+                    fresh_p95_direct(metrics),
                     Box::new(move |v| handle.set(v)),
                 ));
             }
@@ -551,7 +572,7 @@ impl SystemShared {
                 plane.add_loop(ControlLoop::new(
                     format!("batch_delay_us.{key}"),
                     Box::new(law),
-                    fresh_p95(&self.metrics),
+                    fresh_p95_batched(&self.metrics),
                     Box::new(move |v| h.set(v.max(0.0).round() as u64)),
                 ));
             }
@@ -1217,7 +1238,13 @@ impl ServingSystem {
     ) -> Result<InferResult, RuntimeError> {
         let latency = self.clock.now() - t0;
         self.latency.lock().unwrap().record(latency);
-        self.shared.metrics.record_latency(latency);
+        // Path-attributed tap: the router loop reads the direct p95, the
+        // batch-delay loop the batched p95 (both also land in the blend).
+        match path {
+            PathKind::Direct => self.shared.metrics.record_latency_direct(latency),
+            PathKind::Batched => self.shared.metrics.record_latency_batched(latency),
+            _ => self.shared.metrics.record_latency(latency),
+        }
         let flops_item = handle.manifest.flops_per_item(stats.bucket.max(1));
         let reading = self
             .shared

@@ -19,24 +19,35 @@
 //! * `GET  /v2/admission/stats`        — admission-controller stats
 //! * legacy: `POST /infer`, `GET /health`, `GET /models`, `GET /metrics`
 //!
-//! Connections are HTTP/1.1 **keep-alive**: one thread runs a request
-//! loop per connection until the peer closes, sends
-//! `Connection: close`, or idles past [`KEEP_ALIVE_IDLE`]. Live
-//! connections are capped at `pool_size × 16`; over the cap, new
+//! Connections are HTTP/1.1 **keep-alive**, served by the epoll
+//! reactor in [`super::reactor`] on Linux (`docs/REACTOR.md`): a small
+//! pool of event-loop threads owns every connection, parsed requests
+//! hand off to a bounded worker pool, and per-connection buffers are
+//! recycled across requests. Non-Linux builds fall back to the old
+//! one-thread-per-connection loop ([`serve_connection`], which also
+//! remains the reference implementation for unit tests). Either way a
+//! connection lives until the peer closes, sends `Connection: close`,
+//! or idles past [`KEEP_ALIVE_IDLE`]; live connections are capped at
+//! `pool_size × `[`CONNECTIONS_PER_POOL_UNIT`], and over the cap new
 //! connections get an immediate 503.
 
+#[cfg(not(target_os = "linux"))]
 use std::collections::HashMap;
 use std::io::{BufReader, Read};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+#[cfg(not(target_os = "linux"))]
+use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(not(target_os = "linux"))]
+use std::sync::Mutex;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::json::{self, Value};
 use crate::pipeline::system::{InferResult, ServingSystem, SubmitOptions};
 use crate::router::PathKind;
-use crate::telemetry::MetricsRegistry;
+use crate::telemetry::{MetricsRegistry, ShardedCounter};
 use crate::util::Clock;
 use crate::workload::stream::Request;
 
@@ -44,20 +55,56 @@ use super::api::{self, ApiError, ErrorCode, InferRequest, InferResponse, PathCho
 use super::http::{HttpRequest, HttpResponse};
 
 /// Idle keep-alive connections are closed after this long without a new
-/// request, freeing their thread.
+/// request.
 pub const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(5);
 
 /// Hard cap on requests served per connection (rotation guard).
-const MAX_REQUESTS_PER_CONNECTION: usize = 100_000;
+pub(crate) const MAX_REQUESTS_PER_CONNECTION: usize = 100_000;
 
-/// Concurrent connections per unit of `pool_size` (keep-alive holds a
-/// thread per connection, so the cap must be well above the old
-/// one-request-per-thread pool size).
-const CONNECTIONS_PER_POOL_UNIT: usize = 16;
+/// Concurrent connections per unit of `pool_size`. On Linux the reactor
+/// holds connections as slab entries, not threads, so the cap scales to
+/// thousands; the thread-per-connection fallback keeps the old 16×.
+#[cfg(target_os = "linux")]
+pub const CONNECTIONS_PER_POOL_UNIT: usize = 512;
+#[cfg(not(target_os = "linux"))]
+pub const CONNECTIONS_PER_POOL_UNIT: usize = 16;
 
-/// Live-connection registry: per-connection socket handles (so
-/// `shutdown` can force blocked reads to return) plus the live count
-/// the acceptor enforces the connection cap against.
+/// Pre-resolved sharded counters for the per-request hot path. Looking
+/// a counter up by name takes the registry lock; incrementing through
+/// these handles touches only a per-thread shard (see
+/// `telemetry::sharded`).
+pub(crate) struct HotCounters {
+    pub(crate) requests: Arc<ShardedCounter>,
+    pub(crate) keepalive_reuse: Arc<ShardedCounter>,
+    pub(crate) infer_items: Arc<ShardedCounter>,
+    pub(crate) backpressure: Arc<ShardedCounter>,
+    pub(crate) deadline_exceeded: Arc<ShardedCounter>,
+    pub(crate) model_unavailable: Arc<ShardedCounter>,
+}
+
+/// The gateway's hot-path counters, resolved once per process. Readers
+/// (`/metrics`, `/v2/admission/stats`) still see them through the
+/// registry's `counter_value`/`render_prometheus` fold.
+pub(crate) fn hot() -> &'static HotCounters {
+    static HOT: OnceLock<HotCounters> = OnceLock::new();
+    HOT.get_or_init(|| {
+        let reg = MetricsRegistry::global();
+        HotCounters {
+            requests: reg.sharded_counter("gf_http_requests_total"),
+            keepalive_reuse: reg.sharded_counter("gf_http_keepalive_reuse_total"),
+            infer_items: reg.sharded_counter("gf_http_infer_total"),
+            backpressure: reg.sharded_counter("gf_http_backpressure_total"),
+            deadline_exceeded: reg.sharded_counter("gf_http_deadline_exceeded_total"),
+            model_unavailable: reg.sharded_counter("gf_http_model_unavailable_total"),
+        }
+    })
+}
+
+/// Live-connection registry for the thread-per-connection fallback:
+/// per-connection socket handles (so `shutdown` can force blocked reads
+/// to return) plus the live count the acceptor enforces the cap
+/// against.
+#[cfg(not(target_os = "linux"))]
 #[derive(Default)]
 struct ConnTable {
     conns: Mutex<HashMap<u64, TcpStream>>,
@@ -66,11 +113,13 @@ struct ConnTable {
 
 /// Deregisters a connection when its thread exits, however it exits
 /// (panic included).
+#[cfg(not(target_os = "linux"))]
 struct ConnGuard {
     table: Arc<ConnTable>,
     id: u64,
 }
 
+#[cfg(not(target_os = "linux"))]
 impl Drop for ConnGuard {
     fn drop(&mut self) {
         self.table.conns.lock().unwrap().remove(&self.id);
@@ -78,22 +127,50 @@ impl Drop for ConnGuard {
     }
 }
 
+/// The platform-specific connection engine behind a [`Gateway`].
+enum Backend {
+    /// Linux: epoll reactor + bounded worker pool.
+    #[cfg(target_os = "linux")]
+    Reactor(super::reactor::ReactorServer),
+    /// Fallback: one thread per live connection.
+    #[cfg(not(target_os = "linux"))]
+    Threads(Arc<ConnTable>),
+}
+
 /// A running HTTP gateway bound to a local port.
 pub struct Gateway {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
-    table: Arc<ConnTable>,
+    backend: Backend,
 }
 
 impl Gateway {
     /// Bind `127.0.0.1:port` (port 0 = ephemeral) and serve `system`.
-    /// Keep-alive holds one thread per live connection, so `pool_size`
-    /// scales the concurrent-connection cap (`pool_size × 16`); over the
-    /// cap new connections get an immediate 503 — a fixed pool would let
-    /// `pool_size` long-lived clients starve everyone else.
+    /// `pool_size` sizes the worker pool (and scales the
+    /// concurrent-connection cap, `pool_size ×
+    /// `[`CONNECTIONS_PER_POOL_UNIT`]); over the cap new connections get
+    /// an immediate 503 rather than letting long-lived clients starve
+    /// everyone else.
     pub fn start(
         system: Arc<ServingSystem>,
+        port: u16,
+        pool_size: usize,
+    ) -> std::io::Result<Gateway> {
+        Gateway::start_with_handler(
+            Arc::new(move |req: &HttpRequest| dispatch(req, &system)),
+            port,
+            pool_size,
+        )
+    }
+
+    /// [`Gateway::start`] with an arbitrary handler instead of a
+    /// [`ServingSystem`] — the full network stack (acceptor, reactor,
+    /// worker pool, keep-alive, caps) around any request function.
+    /// Tests use this to drive connection-level behaviour without
+    /// artifacts.
+    pub fn start_with_handler(
+        handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>,
         port: u16,
         pool_size: usize,
     ) -> std::io::Result<Gateway> {
@@ -101,24 +178,30 @@ impl Gateway {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let table = Arc::new(ConnTable::default());
-        let table2 = table.clone();
         let max_connections = pool_size.max(1) * CONNECTIONS_PER_POOL_UNIT;
 
-        // Blocking accept; shutdown() wakes it with a self-connect. No
-        // polling sleep on the accept path (the old 2 ms WouldBlock nap
-        // capped accept throughput at ~500 conn/s).
-        let acceptor = std::thread::Builder::new()
-            .name("gf-gateway".to_string())
-            .spawn(move || {
-                let mut next_conn_id = 0u64;
-                loop {
+        #[cfg(target_os = "linux")]
+        {
+            // Reactors scale with the worker pool but stay few: the
+            // event loops are I/O-bound, and every extra one is another
+            // epoll instance to wake. Workers absorb the blocking work.
+            let reactors = ((pool_size.max(1) + 3) / 4).min(4);
+            let server =
+                super::reactor::ReactorServer::start(handler, reactors, pool_size.max(1))?;
+            let sink = server.sink();
+
+            // Blocking accept; shutdown() wakes it with a self-connect.
+            // The acceptor only hands sockets off — never parses — so
+            // accept throughput is not gated on request handling.
+            let acceptor = std::thread::Builder::new()
+                .name("gf-gateway".to_string())
+                .spawn(move || loop {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             if stop2.load(Ordering::SeqCst) {
                                 break; // the shutdown self-connect
                             }
-                            if table2.active.load(Ordering::SeqCst) >= max_connections {
+                            if sink.active() >= max_connections {
                                 MetricsRegistry::global()
                                     .counter("gf_gateway_conn_limit_total")
                                     .inc();
@@ -126,22 +209,7 @@ impl Gateway {
                                     .write_to_with(&stream, false);
                                 continue; // drop closes it
                             }
-                            let id = next_conn_id;
-                            next_conn_id += 1;
-                            table2.active.fetch_add(1, Ordering::SeqCst);
-                            if let Ok(clone) = stream.try_clone() {
-                                table2.conns.lock().unwrap().insert(id, clone);
-                            }
-                            let guard = ConnGuard { table: table2.clone(), id };
-                            let system = system.clone();
-                            // If the spawn fails the closure (and guard)
-                            // is dropped with the error, undoing the count.
-                            let _ = std::thread::Builder::new()
-                                .name("gf-http-conn".to_string())
-                                .spawn(move || {
-                                    let _guard = guard;
-                                    serve_connection(stream, |req| dispatch(req, &system));
-                                });
+                            sink.register(stream);
                         }
                         Err(_) => {
                             MetricsRegistry::global()
@@ -155,21 +223,87 @@ impl Gateway {
                             std::thread::sleep(Duration::from_millis(20));
                         }
                     }
-                }
-            })
-            .expect("spawn gateway");
+                })
+                .expect("spawn gateway");
 
-        Ok(Gateway { addr, stop, acceptor: Some(acceptor), table })
+            Ok(Gateway {
+                addr,
+                stop,
+                acceptor: Some(acceptor),
+                backend: Backend::Reactor(server),
+            })
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let table = Arc::new(ConnTable::default());
+            let table2 = table.clone();
+            let acceptor = std::thread::Builder::new()
+                .name("gf-gateway".to_string())
+                .spawn(move || {
+                    let mut next_conn_id = 0u64;
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if stop2.load(Ordering::SeqCst) {
+                                    break; // the shutdown self-connect
+                                }
+                                if table2.active.load(Ordering::SeqCst) >= max_connections {
+                                    MetricsRegistry::global()
+                                        .counter("gf_gateway_conn_limit_total")
+                                        .inc();
+                                    let _ =
+                                        HttpResponse::error(503, "connection limit reached")
+                                            .write_to_with(&stream, false);
+                                    continue; // drop closes it
+                                }
+                                let id = next_conn_id;
+                                next_conn_id += 1;
+                                table2.active.fetch_add(1, Ordering::SeqCst);
+                                if let Ok(clone) = stream.try_clone() {
+                                    table2.conns.lock().unwrap().insert(id, clone);
+                                }
+                                let guard = ConnGuard { table: table2.clone(), id };
+                                let handler = handler.clone();
+                                // If the spawn fails the closure (and
+                                // guard) is dropped with the error,
+                                // undoing the count.
+                                let _ = std::thread::Builder::new()
+                                    .name("gf-http-conn".to_string())
+                                    .spawn(move || {
+                                        let _guard = guard;
+                                        serve_connection(stream, |req| handler(req));
+                                    });
+                            }
+                            Err(_) => {
+                                MetricsRegistry::global()
+                                    .counter("gf_gateway_accept_errors")
+                                    .inc();
+                                if stop2.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_millis(20));
+                            }
+                        }
+                    }
+                })
+                .expect("spawn gateway");
+
+            Ok(Gateway {
+                addr,
+                stop,
+                acceptor: Some(acceptor),
+                backend: Backend::Threads(table),
+            })
+        }
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
-    /// Stop accepting, then quiesce: force every live connection's
-    /// blocked read to return (socket shutdown) and wait — bounded — for
-    /// the handler threads to exit, so callers can assume no request is
-    /// still being served afterwards.
+    /// Stop accepting, then quiesce: idle connections close at once,
+    /// in-flight requests finish (bounded), so callers can assume no
+    /// request is still being served afterwards.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Wake the blocking accept so the acceptor observes `stop`.
@@ -177,12 +311,19 @@ impl Gateway {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
-        for conn in self.table.conns.lock().unwrap().values() {
-            let _ = conn.shutdown(Shutdown::Both);
-        }
-        let deadline = Instant::now() + Duration::from_secs(2);
-        while self.table.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Reactor(server) => server.shutdown(),
+            #[cfg(not(target_os = "linux"))]
+            Backend::Threads(table) => {
+                for conn in table.conns.lock().unwrap().values() {
+                    let _ = conn.shutdown(Shutdown::Both);
+                }
+                let deadline = Instant::now() + Duration::from_secs(2);
+                while table.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
         }
     }
 }
@@ -204,13 +345,13 @@ where
     let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
-    let reg = MetricsRegistry::global();
+    let counters = hot();
     for served in 0..MAX_REQUESTS_PER_CONNECTION {
         match HttpRequest::read_from(&mut reader) {
             Ok(req) => {
-                reg.counter("gf_http_requests_total").inc();
+                counters.requests.inc();
                 if served > 0 {
-                    reg.counter("gf_http_keepalive_reuse_total").inc();
+                    counters.keepalive_reuse.inc();
                 }
                 // Only methods we answer with deterministic framing stay
                 // keep-alive. A HEAD client must not read a body (RFC
@@ -392,7 +533,7 @@ fn run_infer(
             ..SubmitOptions::default()
         },
     };
-    reg.counter("gf_http_infer_total").add(ir.seeds.len() as u64);
+    hot().infer_items.add(ir.seeds.len() as u64);
     let requests: Vec<Request> = ir
         .seeds
         .iter()
@@ -410,13 +551,9 @@ fn run_infer(
         Err(e) => {
             let api_err = ApiError::from_runtime(&e);
             match api_err.code {
-                ErrorCode::Backpressure => reg.counter("gf_http_backpressure_total").inc(),
-                ErrorCode::DeadlineExceeded => {
-                    reg.counter("gf_http_deadline_exceeded_total").inc()
-                }
-                ErrorCode::ModelUnavailable => {
-                    reg.counter("gf_http_model_unavailable_total").inc()
-                }
+                ErrorCode::Backpressure => hot().backpressure.inc(),
+                ErrorCode::DeadlineExceeded => hot().deadline_exceeded.inc(),
+                ErrorCode::ModelUnavailable => hot().model_unavailable.inc(),
                 _ => {}
             }
             Err(api_err)
@@ -704,6 +841,8 @@ fn control_loops(system: &ServingSystem) -> HttpResponse {
         ("qps", json::num(finite(snap.qps))),
         ("p50_latency", json::num(finite(snap.p50_latency))),
         ("p95_latency", json::num(finite(snap.p95_latency))),
+        ("p95_direct", json::num(finite(snap.p95_direct))),
+        ("p95_batched", json::num(finite(snap.p95_batched))),
         ("watts", json::num(finite(snap.watts))),
         ("events", json::num(snap.events as f64)),
     ]);

@@ -5,8 +5,25 @@
 //! HTTP/1.1 **keep-alive** — a connection serves many sequential requests
 //! until the peer (or a `Connection: close` header) ends it. No chunked
 //! encoding, no TLS, no pipelining of concurrent requests.
+//!
+//! Two parsers share the framing rules:
+//!
+//! * [`HttpRequest::read_from`] — the blocking reference implementation
+//!   over a `BufRead` (the thread-per-connection fallback loop and
+//!   one-shot [`HttpRequest::parse`]).
+//! * [`RequestParser`] — an **incremental, zero-allocation** state
+//!   machine over an externally owned byte buffer, used by the epoll
+//!   reactor ([`super::reactor`]). It resumes where the last `poll`
+//!   stopped (slow peers cost O(new bytes), not O(buffer) per poll) and
+//!   writes into a recycled [`HttpRequest`] whose `String`/`Vec`
+//!   capacity survives across keep-alive requests, so steady-state
+//!   parsing performs no heap allocation (asserted by
+//!   `rust/tests/alloc_http_parse.rs`).
+//!
+//! Both enforce the same caps bit-for-bit: 16 MiB bodies (413), 8 KiB
+//! header lines / 100 header lines (431), `Transfer-Encoding` refusal
+//! and conflicting `Content-Length` (400), `Expect: 100-continue` (417).
 
-use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 
 /// Request body cap (16 MiB). Bodies declaring more are refused with 413
@@ -70,12 +87,100 @@ impl HttpParseError {
     }
 }
 
+/// Request headers in a recyclable flat map.
+///
+/// Names are stored lowercased; lookups are case-insensitive either way.
+/// `clear` keeps every slot's `String` capacity, so a connection that
+/// parses into the same `Headers` across keep-alive requests stops
+/// allocating once the slots have grown to the largest request seen
+/// (the zero-allocation hot-path contract of [`RequestParser`]).
+///
+/// Replaces the previous `BTreeMap<String, String>`: same replace-on-
+/// duplicate semantics, linear scans instead of tree walks (requests
+/// carry a handful of headers, capped at [`MAX_HEADER_COUNT`]).
+#[derive(Debug, Clone, Default)]
+pub struct Headers {
+    slots: Vec<(String, String)>,
+    len: usize,
+}
+
+impl Headers {
+    pub fn new() -> Self {
+        Headers::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Forget every entry, keeping slot capacity for recycling.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Case-insensitive lookup.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.slots[..self.len]
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+
+    /// Iterate `(name, value)` pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.slots[..self.len].iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Insert or replace (last write wins, like the old map). Allocation-
+    /// free once the target slot's strings have enough capacity.
+    pub fn set(&mut self, name: &str, value: &str) {
+        for (k, v) in &mut self.slots[..self.len] {
+            if k.eq_ignore_ascii_case(name) {
+                v.clear();
+                v.push_str(value);
+                return;
+            }
+        }
+        if self.len == self.slots.len() {
+            self.slots.push((String::new(), String::new()));
+        }
+        let (k, v) = &mut self.slots[self.len];
+        k.clear();
+        for c in name.chars() {
+            k.push(c.to_ascii_lowercase());
+        }
+        v.clear();
+        v.push_str(value);
+        self.len += 1;
+    }
+
+    /// Owned-string convenience for tests and handlers.
+    pub fn insert(&mut self, name: String, value: String) {
+        self.set(&name, &value);
+    }
+}
+
+/// Order-insensitive equality over the live entries.
+impl PartialEq for Headers {
+    fn eq(&self, other: &Self) -> bool {
+        self.len == other.len && self.iter().all(|(k, v)| other.get(k) == Some(v))
+    }
+}
+
 /// A parsed HTTP request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HttpRequest {
     pub method: String,
     pub path: String,
-    pub headers: BTreeMap<String, String>,
+    pub headers: Headers,
     pub body: Vec<u8>,
     /// Minor HTTP version (`HTTP/1.<minor>`): keep-alive is the default
     /// for 1.1, opt-in for 1.0.
@@ -87,7 +192,7 @@ impl Default for HttpRequest {
         HttpRequest {
             method: "GET".to_string(),
             path: "/".to_string(),
-            headers: BTreeMap::new(),
+            headers: Headers::new(),
             body: Vec::new(),
             minor_version: 1,
         }
@@ -133,27 +238,29 @@ impl HttpRequest {
         Self::read_from(&mut reader)
     }
 
+    /// Clear all fields while keeping every buffer's capacity — the
+    /// recycling step between keep-alive requests parsed by
+    /// [`RequestParser`]. (Unlike `Default`, method/path come back
+    /// empty; the next parse overwrites them.)
+    pub fn reset(&mut self) {
+        self.method.clear();
+        self.path.clear();
+        self.headers.clear();
+        self.body.clear();
+        self.minor_version = 1;
+    }
+
     /// Read the next request off a persistent buffered reader.
     pub fn read_from<R: BufRead>(reader: &mut R) -> Result<HttpRequest, HttpParseError> {
         let line = match read_line_capped(reader)? {
             Some(l) => l,
             None => return Err(HttpParseError::ConnectionClosed),
         };
-        if line.is_empty() {
-            return Err(HttpParseError::Malformed("empty request line".into()));
-        }
-        let mut parts = line.split_whitespace();
-        let missing = |what: &'static str| HttpParseError::Malformed(format!("missing {what}"));
-        let method = parts.next().ok_or_else(|| missing("method"))?.to_string();
-        let path = parts.next().ok_or_else(|| missing("path"))?.to_string();
-        let version = parts.next().ok_or_else(|| missing("version"))?;
-        let minor_version = match version {
-            "HTTP/1.1" => 1,
-            "HTTP/1.0" => 0,
-            v => return Err(HttpParseError::Malformed(format!("unsupported version {v}"))),
-        };
+        let mut req = HttpRequest::default();
+        req.method.clear();
+        req.path.clear();
+        parse_request_line(&line, &mut req)?;
 
-        let mut headers = BTreeMap::new();
         let mut header_lines = 0usize;
         loop {
             let h = match read_line_capped(reader)? {
@@ -169,64 +276,18 @@ impl HttpRequest {
             if header_lines > MAX_HEADER_COUNT {
                 return Err(HttpParseError::HeadersTooLarge);
             }
-            if let Some((k, v)) = h.split_once(':') {
-                let k = k.trim().to_ascii_lowercase();
-                let v = v.trim().to_string();
-                if let Some(old) = headers.insert(k.clone(), v.clone()) {
-                    // Conflicting repeated Content-Length values are a
-                    // framing attack (RFC 9112 §6.3) — refuse rather
-                    // than silently last-wins.
-                    if k == "content-length" && old != v {
-                        return Err(HttpParseError::Malformed(
-                            "conflicting content-length headers".into(),
-                        ));
-                    }
-                }
-            }
+            parse_header_line(&h, &mut req.headers)?;
         }
 
-        // We never emit the interim `100 Continue`: answering 417 at
-        // once beats letting an expectant client stall against the idle
-        // timeout (clients retry without the Expect header).
-        if headers.contains_key("expect") {
-            return Err(HttpParseError::ExpectationFailed);
-        }
-
-        // Body framing must be exact on a keep-alive connection: a
-        // mis-framed body desyncs every later request on the socket
-        // (request smuggling). Chunked bodies are not supported, and a
-        // Content-Length we cannot parse is never silently treated as 0.
-        if headers.contains_key("transfer-encoding") {
-            return Err(HttpParseError::Malformed(
-                "transfer-encoding is not supported".into(),
-            ));
-        }
-        let len: usize = match headers.get("content-length").map(|v| v.trim()) {
-            None => 0,
-            Some(v) => match v.parse() {
-                Ok(n) => n,
-                // All-digit values too big for usize are an oversized
-                // body (413), not a malformed request.
-                Err(_) if !v.is_empty() && v.bytes().all(|b| b.is_ascii_digit()) => {
-                    return Err(HttpParseError::BodyTooLarge(usize::MAX));
-                }
-                Err(_) => {
-                    return Err(HttpParseError::Malformed(format!(
-                        "bad content-length {v:?}"
-                    )));
-                }
-            },
-        };
-        if len > MAX_BODY_BYTES {
-            return Err(HttpParseError::BodyTooLarge(len));
-        }
+        let len = body_length(&req.headers)?;
         let mut body = vec![0u8; len];
         if len > 0 {
             reader
                 .read_exact(&mut body)
                 .map_err(|e| HttpParseError::Malformed(e.to_string()))?;
         }
-        Ok(HttpRequest { method, path, headers, body, minor_version })
+        req.body = body;
+        Ok(req)
     }
 
     pub fn body_str(&self) -> Result<&str, String> {
@@ -256,20 +317,208 @@ impl HttpRequest {
         matches!(self.query_param(key), Some("" | "true" | "1"))
     }
 
-    /// A case-insensitive header lookup (names are lowercased at parse).
+    /// A case-insensitive header lookup.
     pub fn header(&self, name: &str) -> Option<&str> {
-        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+        self.headers.get(name)
     }
 
     /// Whether the connection should stay open after this exchange:
     /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
-    /// HTTP/1.0 closes unless `Connection: keep-alive`.
+    /// HTTP/1.0 closes unless `Connection: keep-alive`. Allocation-free
+    /// (read per request on the reactor hot path).
     pub fn keep_alive(&self) -> bool {
-        match self.headers.get("connection").map(|v| v.to_ascii_lowercase()) {
-            Some(v) if v == "close" => false,
-            Some(v) if v == "keep-alive" => true,
+        match self.headers.get("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
             _ => self.minor_version >= 1,
         }
+    }
+}
+
+/// Parse `METHOD PATH HTTP/1.x` into a recycled request (no allocation
+/// once `method`/`path` have capacity).
+fn parse_request_line(line: &str, req: &mut HttpRequest) -> Result<(), HttpParseError> {
+    if line.is_empty() {
+        return Err(HttpParseError::Malformed("empty request line".into()));
+    }
+    let mut parts = line.split_whitespace();
+    let missing = |what: &'static str| HttpParseError::Malformed(format!("missing {what}"));
+    let method = parts.next().ok_or_else(|| missing("method"))?;
+    let path = parts.next().ok_or_else(|| missing("path"))?;
+    let version = parts.next().ok_or_else(|| missing("version"))?;
+    req.minor_version = match version {
+        "HTTP/1.1" => 1,
+        "HTTP/1.0" => 0,
+        v => return Err(HttpParseError::Malformed(format!("unsupported version {v}"))),
+    };
+    req.method.clear();
+    req.method.push_str(method);
+    req.path.clear();
+    req.path.push_str(path);
+    Ok(())
+}
+
+/// Parse one `Name: value` header line into the map. Colon-less lines
+/// are skipped (they still count against the line cap at the caller).
+/// Conflicting repeated Content-Length values are a framing attack
+/// (RFC 9112 §6.3) — refuse rather than silently last-wins.
+fn parse_header_line(line: &str, headers: &mut Headers) -> Result<(), HttpParseError> {
+    if let Some((k, v)) = line.split_once(':') {
+        let (k, v) = (k.trim(), v.trim());
+        if k.eq_ignore_ascii_case("content-length") {
+            if let Some(old) = headers.get("content-length") {
+                if old != v {
+                    return Err(HttpParseError::Malformed(
+                        "conflicting content-length headers".into(),
+                    ));
+                }
+            }
+        }
+        headers.set(k, v);
+    }
+    Ok(())
+}
+
+/// Validate the completed header section and return the declared body
+/// length. Body framing must be exact on a keep-alive connection: a
+/// mis-framed body desyncs every later request on the socket (request
+/// smuggling). Chunked bodies are not supported, and a Content-Length
+/// we cannot parse is never silently treated as 0.
+fn body_length(headers: &Headers) -> Result<usize, HttpParseError> {
+    // We never emit the interim `100 Continue`: answering 417 at once
+    // beats letting an expectant client stall against the idle timeout
+    // (clients retry without the Expect header).
+    if headers.contains("expect") {
+        return Err(HttpParseError::ExpectationFailed);
+    }
+    if headers.contains("transfer-encoding") {
+        return Err(HttpParseError::Malformed("transfer-encoding is not supported".into()));
+    }
+    let len: usize = match headers.get("content-length").map(|v| v.trim()) {
+        None => 0,
+        Some(v) => match v.parse() {
+            Ok(n) => n,
+            // All-digit values too big for usize are an oversized
+            // body (413), not a malformed request.
+            Err(_) if !v.is_empty() && v.bytes().all(|b| b.is_ascii_digit()) => {
+                return Err(HttpParseError::BodyTooLarge(usize::MAX));
+            }
+            Err(_) => {
+                return Err(HttpParseError::Malformed(format!("bad content-length {v:?}")));
+            }
+        },
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(HttpParseError::BodyTooLarge(len));
+    }
+    Ok(len)
+}
+
+/// Incremental request parser over an external byte buffer — the epoll
+/// reactor's zero-allocation hot path.
+///
+/// Protocol: append received bytes to one growing buffer, call
+/// [`RequestParser::poll`] with the *whole* buffer each time.
+/// `Ok(None)` = need more bytes; `Ok(Some(n))` = one complete request
+/// was written into `req` and consumed the buffer's first `n` bytes —
+/// the caller drains them and calls [`RequestParser::reset`] (and
+/// [`HttpRequest::reset`]) before the next request. Errors are
+/// terminal for the connection (same statuses as the blocking parser).
+///
+/// Internal offsets index into the caller's buffer, so the buffer must
+/// only grow (never shift) between polls of one request. Scanning
+/// resumes at the previous high-water mark: feeding a request one byte
+/// per poll costs O(total), not O(total²) — the slow-loris guarantee.
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    /// Bytes already scanned for a line terminator.
+    scanned: usize,
+    /// Where the line currently being assembled starts.
+    line_start: usize,
+    /// Header lines consumed so far (counts toward [`MAX_HEADER_COUNT`]).
+    header_lines: usize,
+    have_request_line: bool,
+    /// Buffer offset one past the blank line, once seen.
+    head_end: usize,
+    /// Declared body length, once the head is complete.
+    body_len: usize,
+    head_done: bool,
+}
+
+impl RequestParser {
+    pub fn new() -> Self {
+        RequestParser::default()
+    }
+
+    /// Forget all progress. Call after a completed request (once its
+    /// bytes are drained from the input buffer) or to reuse the parser
+    /// on a new connection.
+    pub fn reset(&mut self) {
+        *self = RequestParser::default();
+    }
+
+    /// Whether any bytes of an in-progress request have been consumed
+    /// into parser state (EOF now would be mid-request, not idle).
+    pub fn started(&self) -> bool {
+        self.scanned > 0 || self.head_done
+    }
+
+    /// Advance over `buf` (the connection's entire unconsumed input) and
+    /// complete at most one request into `req`. See the type docs for
+    /// the contract.
+    pub fn poll(
+        &mut self,
+        buf: &[u8],
+        req: &mut HttpRequest,
+    ) -> Result<Option<usize>, HttpParseError> {
+        while !self.head_done {
+            // Find the next LF among the bytes not yet scanned.
+            let Some(pos) = buf[self.scanned..].iter().position(|&b| b == b'\n') else {
+                // Unterminated partial line: enforce the line cap now so
+                // a drip-feeding peer cannot buffer unbounded headers.
+                if (buf.len() - self.line_start) as u64 >= MAX_HEADER_LINE_BYTES {
+                    return Err(HttpParseError::HeadersTooLarge);
+                }
+                self.scanned = buf.len();
+                return Ok(None);
+            };
+            let nl = self.scanned + pos;
+            // A terminated line is within the cap iff its length
+            // including the LF is ≤ the cap (same rule as the blocking
+            // reader's `take(cap)`).
+            if (nl + 1 - self.line_start) as u64 > MAX_HEADER_LINE_BYTES {
+                return Err(HttpParseError::HeadersTooLarge);
+            }
+            let mut line = &buf[self.line_start..nl];
+            while line.last() == Some(&b'\r') {
+                line = &line[..line.len() - 1];
+            }
+            let line = std::str::from_utf8(line)
+                .map_err(|_| HttpParseError::Malformed("non-utf8 line".into()))?;
+            self.scanned = nl + 1;
+            self.line_start = self.scanned;
+            if !self.have_request_line {
+                parse_request_line(line, req)?;
+                self.have_request_line = true;
+            } else if line.is_empty() {
+                self.head_end = self.scanned;
+                self.body_len = body_length(&req.headers)?;
+                self.head_done = true;
+            } else {
+                self.header_lines += 1;
+                if self.header_lines > MAX_HEADER_COUNT {
+                    return Err(HttpParseError::HeadersTooLarge);
+                }
+                parse_header_line(line, &mut req.headers)?;
+            }
+        }
+        let need = self.head_end + self.body_len;
+        if buf.len() < need {
+            return Ok(None);
+        }
+        req.body.clear();
+        req.body.extend_from_slice(&buf[self.head_end..need]);
+        Ok(Some(need))
     }
 }
 
@@ -400,7 +649,7 @@ mod tests {
         let r = HttpRequest::parse(&raw[..]).unwrap();
         assert_eq!(r.method, "POST");
         assert_eq!(r.path, "/infer");
-        assert_eq!(r.headers["content-length"], "13");
+        assert_eq!(r.header("content-length"), Some("13"));
         assert_eq!(r.body_str().unwrap().trim(), "{\"seed\": 42}");
         assert_eq!(r.minor_version, 1);
         assert!(r.keep_alive(), "HTTP/1.1 defaults to keep-alive");
@@ -446,6 +695,25 @@ mod tests {
         assert!(!HttpRequest::parse(&close[..]).unwrap().keep_alive());
         let keep = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
         assert!(HttpRequest::parse(&keep[..]).unwrap().keep_alive());
+    }
+
+    #[test]
+    fn headers_recycle_without_leaking_entries() {
+        let mut h = Headers::new();
+        h.set("X-One", "1");
+        h.set("x-one", "2");
+        assert_eq!(h.get("X-ONE"), Some("2"), "replace on duplicate, any case");
+        assert_eq!(h.len(), 1);
+        h.set("X-Two", "b");
+        assert_eq!(h.len(), 2);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.get("x-one"), None, "cleared entries are gone");
+        h.set("X-Three", "c");
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.get("x-three"), Some("c"));
+        assert_eq!(h.get("x-two"), None, "recycled slot must not resurrect x-two");
+        assert_eq!(h.iter().next(), Some(("x-three", "c")), "names stored lowercased");
     }
 
     #[test]
@@ -586,6 +854,140 @@ mod tests {
             HttpRequest::read_from(&mut reader).unwrap_err(),
             HttpParseError::ConnectionClosed
         );
+    }
+
+    // ------------------------------------------------ RequestParser
+
+    /// One-shot poll over a complete buffer.
+    fn poll_once(raw: &[u8]) -> Result<(HttpRequest, usize), HttpParseError> {
+        let mut p = RequestParser::new();
+        let mut req = HttpRequest::default();
+        req.reset();
+        match p.poll(raw, &mut req)? {
+            Some(n) => Ok((req, n)),
+            None => Err(HttpParseError::Malformed("incomplete".into())),
+        }
+    }
+
+    #[test]
+    fn incremental_parser_matches_the_blocking_parser() {
+        // Every complete input must agree between the two parsers —
+        // same request or the same error.
+        let cases: Vec<Vec<u8>> = vec![
+            b"POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"seed\": 42}\n"
+                .to_vec(),
+            b"GET /health HTTP/1.0\r\n\r\n".to_vec(),
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n".to_vec(),
+            b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n".to_vec(),
+            b"NOT-HTTP\r\n\r\n".to_vec(),
+            b"GET /x SPDY/3\r\n\r\n".to_vec(),
+            b"\r\n\r\n".to_vec(),
+            b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 10\r\n\r\nhellohello"
+                .to_vec(),
+            b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello".to_vec(),
+            b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 5\r\n\r\n".to_vec(),
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(),
+            b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n".to_vec(),
+            b"POST / HTTP/1.1\r\nContent-Length: banana\r\n\r\n".to_vec(),
+            format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1)
+                .into_bytes(),
+            format!(
+                "GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n",
+                "a".repeat(MAX_HEADER_LINE_BYTES as usize)
+            )
+            .into_bytes(),
+            {
+                let mut raw = String::from("GET / HTTP/1.1\r\n");
+                for i in 0..(MAX_HEADER_COUNT + 1) {
+                    raw.push_str(&format!("X-H-{i}: v\r\n"));
+                }
+                raw.push_str("\r\n");
+                raw.into_bytes()
+            },
+        ];
+        for raw in &cases {
+            let blocking = HttpRequest::parse(&raw[..]);
+            let incremental = poll_once(raw).map(|(r, _)| r);
+            match (&blocking, &incremental) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{:?}", String::from_utf8_lossy(raw)),
+                (Err(a), Err(b)) => {
+                    assert_eq!(a, b, "{:?}", String::from_utf8_lossy(raw))
+                }
+                _ => panic!(
+                    "parsers disagree on {:?}: blocking {blocking:?} vs incremental \
+                     {incremental:?}",
+                    String::from_utf8_lossy(raw)
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_parser_resumes_byte_at_a_time() {
+        let raw: &[u8] = b"POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let mut p = RequestParser::new();
+        let mut req = HttpRequest::default();
+        req.reset();
+        let mut buf = Vec::new();
+        for (i, &b) in raw.iter().enumerate() {
+            buf.push(b);
+            let got = p.poll(&buf, &mut req).unwrap();
+            if i + 1 < raw.len() {
+                assert_eq!(got, None, "complete after only {} bytes?", i + 1);
+            } else {
+                assert_eq!(got, Some(raw.len()));
+            }
+        }
+        assert_eq!(req.path, "/echo");
+        assert_eq!(req.body, b"hello");
+        assert!(p.started());
+    }
+
+    #[test]
+    fn incremental_parser_consumes_pipelined_requests_in_turn() {
+        let raw: &[u8] = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut buf = raw.to_vec();
+        let mut p = RequestParser::new();
+        let mut req = HttpRequest::default();
+        req.reset();
+        let n = p.poll(&buf, &mut req).unwrap().unwrap();
+        assert_eq!(req.path, "/a");
+        buf.drain(..n);
+        p.reset();
+        req.reset();
+        let n = p.poll(&buf, &mut req).unwrap().unwrap();
+        assert_eq!(req.path, "/b");
+        assert!(!req.keep_alive());
+        assert_eq!(n, buf.len());
+    }
+
+    #[test]
+    fn incremental_parser_caps_unterminated_header_drip() {
+        // A peer that streams one overlong line with no LF must be cut
+        // off at the cap, not buffered forever.
+        let mut p = RequestParser::new();
+        let mut req = HttpRequest::default();
+        req.reset();
+        let buf = vec![b'a'; MAX_HEADER_LINE_BYTES as usize];
+        assert_eq!(p.poll(&buf, &mut req), Err(HttpParseError::HeadersTooLarge));
+    }
+
+    #[test]
+    fn recycled_request_forgets_the_previous_parse() {
+        let mut p = RequestParser::new();
+        let mut req = HttpRequest::default();
+        req.reset();
+        let a: &[u8] = b"POST /a HTTP/1.1\r\nX-Only-A: 1\r\nContent-Length: 3\r\n\r\nabc";
+        p.poll(a, &mut req).unwrap().unwrap();
+        assert_eq!(req.header("x-only-a"), Some("1"));
+        p.reset();
+        req.reset();
+        let b: &[u8] = b"GET /b HTTP/1.1\r\n\r\n";
+        p.poll(b, &mut req).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/b");
+        assert!(req.body.is_empty());
+        assert_eq!(req.header("x-only-a"), None, "recycled headers must clear");
     }
 
     #[test]

@@ -2,18 +2,24 @@
 //! layer), grown into a typed **v2 inference protocol** modeled on
 //! KServe/Triton.
 //!
-//! A minimal HTTP/1.1 keep-alive server on `std::net::TcpListener`,
-//! one thread per live connection under a capped count (no tokio
-//! offline; DESIGN.md §6). Layers:
+//! A minimal HTTP/1.1 keep-alive server on `std::net::TcpListener`
+//! (no tokio offline; DESIGN.md §6). On Linux connections are served by
+//! a hand-rolled epoll reactor with a bounded worker pool
+//! (`docs/REACTOR.md`); elsewhere, one thread per live connection under
+//! a capped count. Layers:
 //!
-//! * [`http`]    — request parsing (header caps, 413/431 mapping) and
-//!   response writing with keep-alive.
+//! * [`http`]    — request parsing (header caps, 413/431 mapping) with
+//!   both a blocking reference parser and the reactor's incremental
+//!   zero-allocation [`http::RequestParser`], plus response writing
+//!   with keep-alive.
 //! * [`api`]     — the typed protocol: request/response/error structs,
 //!   stable error codes (`BACKPRESSURE`, `MODEL_NOT_FOUND`,
 //!   `DEADLINE_EXCEEDED`, …) and their HTTP mappings.
+//! * [`reactor`] — (Linux) the epoll event loops, per-connection state
+//!   machines with recycled buffers, and the worker handoff.
 //! * [`gateway`] — the route table (`/v2/...` including the
 //!   `/v2/repository` model-lifecycle surface, plus legacy shims), the
-//!   keep-alive connection loop, and the blocking acceptor.
+//!   blocking acceptor, and the platform backend selection.
 //! * [`client`]  — a small in-process HTTP/1.1 client for the CLI's
 //!   `--serve-bench` round-trip mode and the integration tests.
 //!
@@ -23,8 +29,10 @@ pub mod api;
 pub mod client;
 pub mod gateway;
 pub mod http;
+#[cfg(target_os = "linux")]
+pub mod reactor;
 
 pub use api::{ApiError, ErrorCode, InferRequest, InferResponse};
 pub use client::{ClientResponse, HttpClient};
 pub use gateway::{dispatch, serve_connection, Gateway};
-pub use http::{HttpParseError, HttpRequest, HttpResponse};
+pub use http::{Headers, HttpParseError, HttpRequest, HttpResponse, RequestParser};

@@ -1,0 +1,922 @@
+//! Event-driven connection engine: a hand-rolled epoll reactor.
+//!
+//! Replaces the thread-per-connection loop for the gateway on Linux.
+//! A small pool of **reactor threads** each owns one epoll instance and
+//! a slab of nonblocking connections; parsed requests hand off to a
+//! bounded **worker pool** (handlers block on engine submits and
+//! lifecycle waits, which must never stall the event loop), and the
+//! serialized response rides back to the owning reactor through a
+//! completion queue + eventfd wake, to be flushed with EPOLLOUT re-arm
+//! under write backpressure.
+//!
+//! Per-connection state machine:
+//!
+//! ```text
+//!   Reading ──complete request──▶ InFlight ──completion──▶ Writing
+//!      ▲                                                     │
+//!      └──────────────── keep-alive (buffers recycled) ──────┘
+//!                                                            │
+//!              parse error / queue full ──▶ Writing ──▶ Draining ──▶ close
+//! ```
+//!
+//! Buffers are allocated once per connection and recycled across
+//! keep-alive requests (`Vec::clear` keeps capacity): the read buffer
+//! grows to the largest request seen, the [`HttpRequest`] and its
+//! header slots are reused by [`RequestParser`], and the write buffer
+//! round-trips through the worker job so the response serializes into
+//! the same allocation every time. Steady state performs no per-request
+//! heap allocation (see `rust/tests/alloc_http_parse.rs` for the parse
+//! half of that claim).
+//!
+//! Everything here sits on four raw syscalls (`epoll_create1`,
+//! `epoll_ctl`, `epoll_wait`, `eventfd`) declared against libc symbols
+//! std already links — the crate's dependency graph stays path-only
+//! (no mio/tokio/libc crate), in the same vendored spirit as
+//! `vendor/xla-stub`. Level-triggered mode throughout: simpler
+//! correctness story than edge-triggered, and the loop always reads to
+//! `WouldBlock` anyway. The module is `cfg(target_os = "linux")`; other
+//! platforms keep the thread-per-connection fallback in
+//! [`super::gateway`].
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::gateway::{hot, KEEP_ALIVE_IDLE, MAX_REQUESTS_PER_CONNECTION};
+use super::http::{HttpParseError, HttpRequest, HttpResponse, RequestParser};
+
+/// Raw syscall surface. The symbols live in libc, which std links on
+/// every Linux target; declaring them directly keeps the dependency
+/// graph path-only. Constants are the x86_64/aarch64 generic-ABI
+/// values.
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// Kernel ABI struct. x86_64 packs it (no padding between the u32
+    /// and the u64); never take references to its fields — copy them.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// `epoll_wait` slot reserved for the reactor's wake eventfd.
+const WAKE_TOKEN: u64 = u64::MAX;
+/// Events drained per `epoll_wait` call.
+const EVENTS_PER_WAIT: usize = 256;
+/// Wait timeout — the reactor's housekeeping tick (idle sweep, drain
+/// deadlines, shutdown progress).
+const TICK_MS: i32 = 250;
+/// Per-reactor scratch read buffer (bytes move into the connection's
+/// grow-once buffer immediately).
+const SCRATCH_BYTES: usize = 16 * 1024;
+/// After an error response, read-and-discard the peer's in-flight bytes
+/// for at most this long before closing (a close with unread bytes
+/// queued RSTs the socket, which can discard the response we wrote).
+/// Mirrors the blocking loop's drain in `serve_connection`.
+const DRAIN_WINDOW: Duration = Duration::from_millis(750);
+/// Graceful-shutdown grace: in-flight requests get this long to finish
+/// writing before their connections are force-closed.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+/// Bounded handoff queue to the worker pool; beyond it the reactor
+/// answers 503 inline rather than buffering unbounded work.
+const WORK_QUEUE_CAP: usize = 4096;
+
+/// The request handler the worker pool runs (blocking allowed).
+pub type Handler = dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync;
+
+/// Thin RAII epoll wrapper.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let r = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if r < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    fn del(&self, fd: RawFd) -> io::Result<()> {
+        // Pre-2.6.9 kernels reject a null event even for DEL; pass a
+        // dummy unconditionally.
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for events (retrying EINTR); returns how many landed in
+    /// `events`.
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                sys::epoll_wait(
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len() as std::os::raw::c_int,
+                    timeout_ms,
+                )
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Nonblocking eventfd used to kick a reactor out of `epoll_wait`
+/// (new connections, completions, shutdown). Counter semantics: many
+/// wakes fold into one readable event; one drain read resets it.
+struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    fn new() -> io::Result<EventFd> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EventFd { fd })
+    }
+
+    fn wake(&self) {
+        let one: u64 = 1;
+        let _ = unsafe {
+            sys::write(self.fd, &one as *const u64 as *const std::os::raw::c_void, 8)
+        };
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 8];
+        let _ =
+            unsafe { sys::read(self.fd, buf.as_mut_ptr() as *mut std::os::raw::c_void, 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Per-reactor shared state: the epoll instance plus the two inbound
+/// queues other threads feed (new sockets from the acceptor, finished
+/// responses from the workers), each paired with the eventfd wake.
+pub(crate) struct ReactorShared {
+    epoll: Epoll,
+    wake: EventFd,
+    completions: Mutex<Vec<Completion>>,
+    pending: Mutex<Vec<TcpStream>>,
+}
+
+/// A finished response on its way back to the owning reactor. `req` and
+/// `out` are the connection's recycled buffers making the round trip.
+struct Completion {
+    slot: usize,
+    generation: u64,
+    req: HttpRequest,
+    out: Vec<u8>,
+    keep: bool,
+}
+
+/// A parsed request handed to the worker pool.
+struct Job {
+    shared: Arc<ReactorShared>,
+    slot: usize,
+    generation: u64,
+    req: HttpRequest,
+    out: Vec<u8>,
+    keep: bool,
+}
+
+/// Bounded FIFO the reactors feed and the workers drain.
+struct WorkerPool {
+    queue: Mutex<VecDeque<Job>>,
+    cond: Condvar,
+    stop: Arc<AtomicBool>,
+}
+
+impl WorkerPool {
+    /// `Err(job)` when the queue is saturated — the caller owes the
+    /// client an inline 503.
+    fn submit(&self, job: Job) -> Result<(), Job> {
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= WORK_QUEUE_CAP {
+            return Err(job);
+        }
+        q.push_back(job);
+        drop(q);
+        self.cond.notify_one();
+        Ok(())
+    }
+}
+
+fn worker_loop(pool: Arc<WorkerPool>, handler: Arc<Handler>) {
+    loop {
+        let job = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                // Drain-then-exit: jobs queued before the stop flag
+                // still get responses (graceful shutdown).
+                if pool.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) =
+                    pool.cond.wait_timeout(q, Duration::from_millis(100)).unwrap();
+                q = guard;
+            }
+        };
+        // A panicking handler must not take the worker down with it —
+        // the pool is fixed-size, so every lost worker is lost capacity
+        // forever. Map panics to a 500 and keep serving.
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&job.req)))
+            .unwrap_or_else(|_| HttpResponse::error(500, "handler panicked"));
+        let mut out = job.out;
+        out.clear();
+        let _ = resp.write_to_with(&mut out, job.keep);
+        let mut req = job.req;
+        req.reset();
+        job.shared.completions.lock().unwrap().push(Completion {
+            slot: job.slot,
+            generation: job.generation,
+            req,
+            out,
+            keep: job.keep,
+        });
+        job.shared.wake.wake();
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// Accumulating request bytes.
+    Reading,
+    /// Request handed to the worker pool; epoll interest disarmed.
+    InFlight,
+    /// Flushing `out`; `then_drain` marks an error response that should
+    /// drain-then-close instead of closing abruptly.
+    Writing { keep: bool, then_drain: bool },
+    /// Error response written; discarding the peer's in-flight bytes
+    /// until EOF or the deadline.
+    Draining { deadline: Instant },
+}
+
+/// One live connection owned by a reactor thread.
+struct Conn {
+    stream: TcpStream,
+    slot: usize,
+    generation: u64,
+    /// Unconsumed input; grows once, drained per completed request.
+    buf: Vec<u8>,
+    /// Serialized response being flushed.
+    out: Vec<u8>,
+    written: usize,
+    parser: RequestParser,
+    /// The recycled request object; `None` only while InFlight (the
+    /// worker holds it).
+    req: Option<HttpRequest>,
+    state: State,
+    served: usize,
+    last_activity: Instant,
+    /// Peer hung up while the request was in flight: discard the
+    /// response instead of writing into a dead socket.
+    peer_gone: bool,
+    /// Currently armed epoll interest; `None` = not in the epoll set.
+    interest: Option<u32>,
+}
+
+/// What `advance` (parse + dispatch) did with the buffered bytes.
+enum Advance {
+    /// Request still incomplete; stay in Reading.
+    NeedMore,
+    /// State changed (dispatched, or writing a response); stop reading.
+    Parked,
+    /// Connection is done; close it.
+    Close,
+}
+
+/// A reactor thread: one epoll instance plus the slab of connections it
+/// owns. Slots are reused via a free list; generations disambiguate
+/// stale completions from force-closed predecessors.
+struct Reactor {
+    shared: Arc<ReactorShared>,
+    workers: Arc<WorkerPool>,
+    stop: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    generation: u64,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; EVENTS_PER_WAIT];
+        let mut scratch = vec![0u8; SCRATCH_BYTES];
+        let mut grace_deadline: Option<Instant> = None;
+        let mut last_sweep = Instant::now();
+        loop {
+            let n = match self.shared.epoll.wait(&mut events, TICK_MS) {
+                Ok(n) => n,
+                Err(_) => {
+                    // A broken epoll fd must not busy-spin the core.
+                    std::thread::sleep(Duration::from_millis(5));
+                    0
+                }
+            };
+            for ev in events.iter().take(n) {
+                // Copy fields out of the packed struct — no references.
+                let token = ev.data;
+                let revents = ev.events;
+                if token == WAKE_TOKEN {
+                    self.shared.wake.drain();
+                    continue;
+                }
+                self.handle_event(token as usize, revents, &mut scratch);
+            }
+            let completions = std::mem::take(&mut *self.shared.completions.lock().unwrap());
+            for c in completions {
+                self.apply_completion(c);
+            }
+            let stopping = self.stop.load(Ordering::SeqCst);
+            let pending = std::mem::take(&mut *self.shared.pending.lock().unwrap());
+            for stream in pending {
+                if stopping {
+                    // Accepted but never served; undo the live count.
+                    self.live.fetch_sub(1, Ordering::SeqCst);
+                } else {
+                    self.register_new(stream);
+                }
+            }
+            let now = Instant::now();
+            if stopping && grace_deadline.is_none() {
+                grace_deadline = Some(now + SHUTDOWN_GRACE);
+            }
+            if stopping || now.duration_since(last_sweep) >= Duration::from_millis(250) {
+                last_sweep = now;
+                self.sweep(now, stopping, grace_deadline);
+            }
+            if stopping && self.conns.iter().all(|c| c.is_none()) {
+                break;
+            }
+        }
+    }
+
+    /// Housekeeping tick: idle keep-alive reaps, drain deadlines, and
+    /// shutdown progress (idle connections close at once; in-flight ones
+    /// get [`SHUTDOWN_GRACE`] before force-close).
+    fn sweep(&mut self, now: Instant, stopping: bool, grace: Option<Instant>) {
+        for slot in 0..self.conns.len() {
+            let Some(conn) = &self.conns[slot] else { continue };
+            let expire = match conn.state {
+                // Idle (or mid-request slow) readers close silently,
+                // like the blocking loop's read-timeout close.
+                State::Reading => {
+                    stopping
+                        || now.duration_since(conn.last_activity) > KEEP_ALIVE_IDLE
+                }
+                State::Draining { deadline } => now >= deadline,
+                State::InFlight | State::Writing { .. } => {
+                    stopping && grace.is_some_and(|d| now >= d)
+                }
+            };
+            if expire {
+                let conn = self.conns[slot].take().unwrap();
+                self.close(conn, slot);
+            }
+        }
+    }
+
+    fn register_new(&mut self, stream: TcpStream) {
+        let _ = stream.set_nonblocking(true);
+        let _ = stream.set_nodelay(true);
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.conns.len() - 1
+        });
+        self.generation = self.generation.wrapping_add(1);
+        let mut conn = Conn {
+            stream,
+            slot,
+            generation: self.generation,
+            buf: Vec::new(),
+            out: Vec::new(),
+            written: 0,
+            parser: RequestParser::new(),
+            req: Some(HttpRequest::default()),
+            state: State::Reading,
+            served: 0,
+            last_activity: Instant::now(),
+            peer_gone: false,
+            interest: None,
+        };
+        self.set_interest(&mut conn, sys::EPOLLIN | sys::EPOLLRDHUP);
+        if conn.interest.is_none() {
+            // epoll refused the fd; nothing to serve.
+            self.close(conn, slot);
+            return;
+        }
+        self.conns[slot] = Some(conn);
+    }
+
+    fn handle_event(&mut self, slot: usize, revents: u32, scratch: &mut [u8]) {
+        // Take the connection out of its slot for the duration — stale
+        // tokens (closed earlier in this batch) simply miss.
+        let Some(mut conn) = self.conns.get_mut(slot).and_then(Option::take) else {
+            return;
+        };
+        let alive = self.drive(&mut conn, slot, revents, scratch);
+        if alive {
+            self.conns[slot] = Some(conn);
+        } else {
+            self.close(conn, slot);
+        }
+    }
+
+    fn drive(&mut self, conn: &mut Conn, slot: usize, revents: u32, scratch: &mut [u8]) -> bool {
+        conn.last_activity = Instant::now();
+        match conn.state {
+            State::InFlight => {
+                // Interest is disarmed, so only ERR/HUP arrive (they are
+                // always reported). Deregister to stop the level-
+                // triggered refire loop, and discard the response later.
+                // (EPOLLRDHUP alone is NOT peer-gone: a client may
+                // half-close after sending and still read the reply.)
+                if revents & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                    conn.peer_gone = true;
+                    self.deregister(conn);
+                }
+                true
+            }
+            State::Draining { .. } => loop {
+                match conn.stream.read(scratch) {
+                    Ok(0) => return false,
+                    Ok(_) => {}
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            },
+            State::Reading => self.drive_read(conn, slot, scratch),
+            State::Writing { .. } => self.drive_write(conn, slot),
+        }
+    }
+
+    /// Pull bytes until `WouldBlock`, advancing the parser as they land.
+    fn drive_read(&mut self, conn: &mut Conn, slot: usize, scratch: &mut [u8]) -> bool {
+        loop {
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    if conn.buf.is_empty() && !conn.parser.started() {
+                        return false; // clean keep-alive close
+                    }
+                    // EOF mid-request gets the same 400 the blocking
+                    // parser produces for a truncated stream.
+                    return !matches!(
+                        self.start_error_response(
+                            conn,
+                            &HttpParseError::Malformed("eof inside request".into()),
+                        ),
+                        Advance::Close
+                    );
+                }
+                Ok(n) => {
+                    conn.buf.extend_from_slice(&scratch[..n]);
+                    match self.advance(conn, slot) {
+                        Advance::NeedMore => {}
+                        Advance::Parked => return true,
+                        Advance::Close => return false,
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Run the parser over the buffered bytes; on a complete request,
+    /// hand it to the worker pool and disarm read interest.
+    fn advance(&mut self, conn: &mut Conn, slot: usize) -> Advance {
+        let mut req = conn.req.take().unwrap_or_default();
+        match conn.parser.poll(&conn.buf, &mut req) {
+            Ok(None) => {
+                conn.req = Some(req);
+                Advance::NeedMore
+            }
+            Ok(Some(consumed)) => {
+                conn.buf.drain(..consumed);
+                conn.parser.reset();
+                let counters = hot();
+                counters.requests.inc();
+                if conn.served > 0 {
+                    counters.keepalive_reuse.inc();
+                }
+                // Same keep-alive decision as the blocking loop: only
+                // methods we answer with deterministic framing stay
+                // open (a HEAD client must not read a body, so our
+                // bodied 405 would desync the socket).
+                let keep = req.keep_alive()
+                    && conn.served + 1 < MAX_REQUESTS_PER_CONNECTION
+                    && matches!(req.method.as_str(), "GET" | "POST");
+                conn.state = State::InFlight;
+                self.set_interest(conn, 0);
+                let job = Job {
+                    shared: self.shared.clone(),
+                    slot,
+                    generation: conn.generation,
+                    req,
+                    out: std::mem::take(&mut conn.out),
+                    keep,
+                };
+                match self.workers.submit(job) {
+                    Ok(()) => Advance::Parked,
+                    Err(job) => {
+                        // Worker queue saturated: 503 inline (pure
+                        // serialization, nothing blocking) and close.
+                        conn.out = job.out;
+                        let mut req = job.req;
+                        req.reset();
+                        conn.req = Some(req);
+                        self.respond_inline(
+                            conn,
+                            slot,
+                            HttpResponse::error(503, "server overloaded"),
+                            false,
+                        )
+                    }
+                }
+            }
+            Err(e) => {
+                conn.req = Some(req);
+                self.start_error_response(conn, &e)
+            }
+        }
+    }
+
+    /// Serialize a reactor-generated response (parse error, 503) into
+    /// the write buffer and start flushing.
+    fn respond_inline(
+        &mut self,
+        conn: &mut Conn,
+        slot: usize,
+        resp: HttpResponse,
+        then_drain: bool,
+    ) -> Advance {
+        conn.out.clear();
+        conn.written = 0;
+        let _ = resp.write_to_with(&mut conn.out, false);
+        conn.state = State::Writing { keep: false, then_drain };
+        if self.drive_write(conn, slot) {
+            Advance::Parked
+        } else {
+            Advance::Close
+        }
+    }
+
+    fn start_error_response(&mut self, conn: &mut Conn, err: &HttpParseError) -> Advance {
+        let slot = conn.slot;
+        match err.to_response() {
+            Some(resp) => self.respond_inline(conn, slot, resp, true),
+            None => Advance::Close,
+        }
+    }
+
+    /// Flush `out`; on backpressure arm EPOLLOUT and yield, on
+    /// completion run the post-response transition.
+    fn drive_write(&mut self, conn: &mut Conn, slot: usize) -> bool {
+        loop {
+            if conn.written >= conn.out.len() {
+                return self.finish_response(conn, slot);
+            }
+            match conn.stream.write(&conn.out[conn.written..]) {
+                Ok(0) => return false,
+                Ok(n) => conn.written += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    self.set_interest(conn, sys::EPOLLOUT);
+                    return true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// The response is fully flushed: drain, close, or recycle the
+    /// connection for the next keep-alive request.
+    fn finish_response(&mut self, conn: &mut Conn, slot: usize) -> bool {
+        let State::Writing { keep, then_drain } = conn.state else {
+            return false;
+        };
+        conn.out.clear();
+        conn.written = 0;
+        if then_drain {
+            let _ = conn.stream.shutdown(Shutdown::Write);
+            conn.state = State::Draining { deadline: Instant::now() + DRAIN_WINDOW };
+            self.set_interest(conn, sys::EPOLLIN | sys::EPOLLRDHUP);
+            return true;
+        }
+        if !keep || conn.peer_gone || self.stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        conn.served += 1;
+        conn.state = State::Reading;
+        if let Some(req) = conn.req.as_mut() {
+            req.reset();
+        }
+        conn.last_activity = Instant::now();
+        self.set_interest(conn, sys::EPOLLIN | sys::EPOLLRDHUP);
+        // Level-triggered epoll never re-fires for bytes already in our
+        // userspace buffer — parse any pipelined request now.
+        !matches!(self.advance(conn, slot), Advance::Close)
+    }
+
+    /// Route a worker completion back onto its connection (if it is
+    /// still the same connection — generations catch slot reuse after a
+    /// force-close).
+    fn apply_completion(&mut self, c: Completion) {
+        let Some(mut conn) = self.conns.get_mut(c.slot).and_then(Option::take) else {
+            return;
+        };
+        if conn.generation != c.generation {
+            self.conns[c.slot] = Some(conn); // someone else's slot now
+            return;
+        }
+        let slot = c.slot;
+        conn.req = Some(c.req);
+        conn.out = c.out;
+        conn.written = 0;
+        if conn.peer_gone {
+            self.close(conn, slot);
+            return;
+        }
+        conn.state = State::Writing { keep: c.keep, then_drain: false };
+        if self.drive_write(&mut conn, slot) {
+            self.conns[slot] = Some(conn);
+        } else {
+            self.close(conn, slot);
+        }
+    }
+
+    /// Arm (or re-arm) epoll interest, registering the fd on first use.
+    fn set_interest(&self, conn: &mut Conn, events: u32) {
+        if conn.interest == Some(events) {
+            return;
+        }
+        let fd = conn.stream.as_raw_fd();
+        let token = conn.slot as u64;
+        let r = match conn.interest {
+            Some(_) => self.shared.epoll.modify(fd, events, token),
+            None => self.shared.epoll.add(fd, events, token),
+        };
+        if r.is_ok() {
+            conn.interest = Some(events);
+        }
+    }
+
+    fn deregister(&self, conn: &mut Conn) {
+        if conn.interest.is_some() {
+            let _ = self.shared.epoll.del(conn.stream.as_raw_fd());
+            conn.interest = None;
+        }
+    }
+
+    fn close(&mut self, mut conn: Conn, slot: usize) {
+        self.deregister(&mut conn);
+        self.free.push(slot);
+        self.live.fetch_sub(1, Ordering::SeqCst);
+        // Dropping the stream closes the socket.
+    }
+}
+
+/// Cheap cloneable handle the acceptor uses to hand new sockets to the
+/// reactors (round-robin) and to read the live-connection count for the
+/// connection cap.
+#[derive(Clone)]
+pub struct ConnSink {
+    shareds: Vec<Arc<ReactorShared>>,
+    next: Arc<AtomicUsize>,
+    live: Arc<AtomicUsize>,
+}
+
+impl ConnSink {
+    pub fn active(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    pub fn register(&self, stream: TcpStream) {
+        self.live.fetch_add(1, Ordering::SeqCst);
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.shareds.len();
+        let shared = &self.shareds[i];
+        shared.pending.lock().unwrap().push(stream);
+        shared.wake.wake();
+    }
+}
+
+/// The running reactor + worker threads behind a [`super::Gateway`] on
+/// Linux.
+pub struct ReactorServer {
+    shareds: Vec<Arc<ReactorShared>>,
+    pool: Arc<WorkerPool>,
+    stop: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    next: Arc<AtomicUsize>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ReactorServer {
+    /// Spawn `reactors` event-loop threads and `workers` handler
+    /// threads around `handler`.
+    pub fn start(
+        handler: Arc<Handler>,
+        reactors: usize,
+        workers: usize,
+    ) -> io::Result<ReactorServer> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(WorkerPool {
+            queue: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            stop: stop.clone(),
+        });
+        let mut threads = Vec::new();
+        let mut shareds = Vec::new();
+        for i in 0..reactors.max(1) {
+            let shared = Arc::new(ReactorShared {
+                epoll: Epoll::new()?,
+                wake: EventFd::new()?,
+                completions: Mutex::new(Vec::new()),
+                pending: Mutex::new(Vec::new()),
+            });
+            shared.epoll.add(shared.wake.fd, sys::EPOLLIN, WAKE_TOKEN)?;
+            shareds.push(shared.clone());
+            let reactor = Reactor {
+                shared,
+                workers: pool.clone(),
+                stop: stop.clone(),
+                live: live.clone(),
+                conns: Vec::new(),
+                free: Vec::new(),
+                generation: 0,
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("gf-reactor-{i}"))
+                    .spawn(move || reactor.run())
+                    .expect("spawn reactor"),
+            );
+        }
+        for i in 0..workers.max(1) {
+            let pool = pool.clone();
+            let handler = handler.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("gf-worker-{i}"))
+                    .spawn(move || worker_loop(pool, handler))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(ReactorServer {
+            shareds,
+            pool,
+            stop,
+            live,
+            next: Arc::new(AtomicUsize::new(0)),
+            threads,
+        })
+    }
+
+    pub fn sink(&self) -> ConnSink {
+        ConnSink {
+            shareds: self.shareds.clone(),
+            next: self.next.clone(),
+            live: self.live.clone(),
+        }
+    }
+
+    pub fn active_connections(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Stop and join everything: idle connections close immediately,
+    /// in-flight requests get [`SHUTDOWN_GRACE`] to finish. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.pool.cond.notify_all();
+        for shared in &self.shareds {
+            shared.wake.wake();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReactorServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // FFI smoke test: the hand-declared constants and struct layout
+    // must round-trip a real event through a real epoll instance.
+    #[test]
+    fn eventfd_wakes_epoll() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.fd, sys::EPOLLIN, 7).unwrap();
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "no wake yet");
+        ev.wake();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        let token = events[0].data; // copy out of the packed struct
+        assert_eq!(token, 7);
+        ev.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "drained");
+    }
+
+    #[test]
+    fn epoll_tracks_interest_changes() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.fd, 0, 9).unwrap();
+        ev.wake();
+        // Interest disarmed: readable but no EPOLLIN subscription.
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        ep.modify(ev.fd, sys::EPOLLIN, 9).unwrap();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        ep.del(ev.fd).unwrap();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "deleted fds stay silent");
+    }
+}

@@ -9,7 +9,9 @@
 
 pub mod export;
 pub mod registry;
+pub mod sharded;
 pub mod tracker;
 
 pub use registry::MetricsRegistry;
+pub use sharded::ShardedCounter;
 pub use tracker::{Run, Tracker};

@@ -8,6 +8,8 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use super::sharded::ShardedCounter;
+
 /// Monotonic counter.
 #[derive(Debug, Default)]
 pub struct Counter(AtomicU64);
@@ -50,6 +52,9 @@ impl Gauge {
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    /// Contention-free counters for per-request hot paths; one logical
+    /// namespace with `counters` (readers see both, merged).
+    sharded: Mutex<BTreeMap<String, Arc<ShardedCounter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
 }
 
@@ -72,17 +77,38 @@ impl MetricsRegistry {
         self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
-    /// Read a counter without registering it (None if never created) —
-    /// introspection endpoints must not mint zero-valued series.
-    pub fn counter_value(&self, name: &str) -> Option<u64> {
-        self.counters.lock().unwrap().get(name).map(|c| c.get())
+    /// A contention-free counter for per-request hot paths (see
+    /// [`super::sharded::ShardedCounter`]). Resolve once, hold the
+    /// `Arc`, increment forever — registration takes the lock, the
+    /// increments never do. Names share the counter namespace: don't
+    /// register the same name as both plain and sharded.
+    pub fn sharded_counter(&self, name: &str) -> Arc<ShardedCounter> {
+        self.sharded.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
-    /// Render in Prometheus text exposition format.
+    /// Read a counter without registering it (None if never created) —
+    /// introspection endpoints must not mint zero-valued series. Checks
+    /// both the plain and the sharded namespaces.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        if let Some(c) = self.counters.lock().unwrap().get(name) {
+            return Some(c.get());
+        }
+        self.sharded.lock().unwrap().get(name).map(|c| c.get())
+    }
+
+    /// Render in Prometheus text exposition format. Plain and sharded
+    /// counters fold into one sorted counter section.
     pub fn render_prometheus(&self) -> String {
-        let mut out = String::new();
+        let mut counters: BTreeMap<String, u64> = BTreeMap::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+            counters.insert(name.clone(), c.get());
+        }
+        for (name, c) in self.sharded.lock().unwrap().iter() {
+            counters.insert(name.clone(), c.get());
+        }
+        let mut out = String::new();
+        for (name, v) in &counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
         }
         for (name, g) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
@@ -120,6 +146,23 @@ mod tests {
         assert!(!r.render_prometheus().contains("ghost"));
         r.counter("real").add(3);
         assert_eq!(r.counter_value("real"), Some(3));
+    }
+
+    #[test]
+    fn sharded_counters_share_the_counter_surface() {
+        let r = MetricsRegistry::new();
+        let c = r.sharded_counter("hot_total");
+        c.inc();
+        c.add(4);
+        // Same name resolves to the same instance.
+        assert_eq!(r.sharded_counter("hot_total").get(), 5);
+        // counter_value and the Prometheus render both see the fold.
+        assert_eq!(r.counter_value("hot_total"), Some(5));
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE hot_total counter"));
+        assert!(text.contains("hot_total 5"));
+        // And reads still never register.
+        assert_eq!(r.counter_value("hot_ghost"), None);
     }
 
     #[test]

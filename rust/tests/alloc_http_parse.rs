@@ -1,0 +1,99 @@
+//! Allocation gate for the reactor's HTTP hot path (PR-6 acceptance
+//! criterion): once a connection's `HttpRequest` and `RequestParser`
+//! are warm, parsing further requests must not touch the allocator —
+//! the whole point of the recycled per-connection buffers.
+//!
+//! Mechanism: a counting `#[global_allocator]` wrapping the system
+//! allocator, with a thread-local counter (const-initialised `Cell`,
+//! so the counter itself never allocates). The binary holds exactly
+//! one test: the count must be attributable to this thread's parses
+//! alone.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use greenflow::server::{HttpRequest, RequestParser};
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+fn bump() {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const RAW: &[u8] = b"POST /v2/models/distilbert/infer HTTP/1.1\r\n\
+Host: 127.0.0.1:8000\r\n\
+Content-Type: application/json\r\n\
+X-Request-Id: corr-42\r\n\
+Connection: keep-alive\r\n\
+Content-Length: 34\r\n\
+\r\n\
+{\"seed\": 7, \"parameters\": {\"x\":1}}";
+
+fn parse_once(parser: &mut RequestParser, req: &mut HttpRequest) {
+    req.reset();
+    parser.reset();
+    // Split the feed so the resume path (partial head, then the rest)
+    // is exercised too, not just the single-shot completion.
+    let consumed = match parser.poll(&RAW[..40], req).unwrap() {
+        Some(n) => n,
+        None => parser.poll(RAW, req).unwrap().expect("complete request"),
+    };
+    assert_eq!(consumed, RAW.len());
+    assert_eq!(req.method, "POST");
+    assert_eq!(req.header("x-request-id"), Some("corr-42"));
+    assert_eq!(req.body.len(), 34);
+}
+
+#[test]
+fn warm_request_parsing_does_not_allocate() {
+    let mut parser = RequestParser::new();
+    let mut req = HttpRequest::default();
+
+    // Warm-up: grows method/path/header-slot/body buffers to capacity.
+    for _ in 0..3 {
+        parse_once(&mut parser, &mut req);
+    }
+
+    let baseline = allocs();
+    for _ in 0..100 {
+        parse_once(&mut parser, &mut req);
+    }
+    let grew = allocs() - baseline;
+    assert_eq!(
+        grew, 0,
+        "the warm parse path allocated {grew} time(s) over 100 requests; \
+         the reactor relies on it being allocation-free"
+    );
+}

@@ -8,9 +8,11 @@
 //!    takes it.
 //! 2. AIMD batch delay keeps windowed p95 under the SLO on sparse bursty
 //!    traffic where the static delay window violates it.
+//! 3. The PID law converges faster than the pure-integral tracker on a
+//!    lagged plant, with both landing on the setpoint.
 
 use greenflow::batching::policy::BatcherPolicy;
-use greenflow::control::law::{Aimd, ControlLaw};
+use greenflow::control::law::{Aimd, ControlLaw, Pid, SetpointTracker};
 use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::{AdaptiveTauPolicy, AdmissionController, ControllerConfig};
@@ -145,6 +147,63 @@ fn aimd_batch_delay_recovers_the_slo_the_static_window_violates() {
         adaptive_rep.final_delay_us
     );
     assert_eq!(adaptive_rep.completed, static_rep.completed, "no requests lost");
+}
+
+/// Sluggish first-order plant: the measured signal chases the level the
+/// actuator commands with inertia — the shape of a windowed p95 or a
+/// windowed admission rate, which respond to a knob change only as the
+/// sample window turns over.
+fn lagged_plant(p: f64, corr: f64) -> f64 {
+    let commanded = (0.9 - 0.8 * corr).clamp(0.0, 1.0);
+    p + 0.3 * (commanded - p)
+}
+
+/// Drive `law` against the lagged plant for `steps` ticks and return
+/// (settle, final): `settle` is the last tick whose signal sat outside
+/// ±`band` of the setpoint — i.e. after it, the loop stayed converged.
+fn settle_time(law: &mut dyn ControlLaw, steps: usize, band: f64) -> (usize, f64) {
+    const SETPOINT: f64 = 0.6;
+    let mut p = 0.9;
+    let mut corr = 0.0;
+    let mut settle = 0;
+    for k in 0..steps {
+        p = lagged_plant(p, corr);
+        if (p - SETPOINT).abs() > band {
+            settle = k + 1;
+        }
+        corr = law.step(p, 1.0);
+    }
+    (settle, p)
+}
+
+#[test]
+fn pid_converges_faster_than_the_integral_tracker_on_a_lagged_plant() {
+    // On a *static* plant a well-tuned pure-integral tracker is already
+    // near-deadbeat, so the comparison is run on a plant with inertia,
+    // where the P term reacts to the instantaneous error and the D term
+    // damps the overshoot the lag would otherwise cause.
+    //
+    // The tracker gain 0.25 is the best settle found by sweeping
+    // 0.05..2.0 on this exact plant — the PID is compared against the
+    // tracker at its best, not a strawman.
+    let mut tracker = SetpointTracker::new(0.0, 0.6, 0.25, -1.0, 1.0);
+    let (tracker_settle, tracker_final) = settle_time(&mut tracker, 400, 0.02);
+
+    let mut pid = Pid::new(0.0, 0.6, 1.5, 0.9, 0.5, -1.0, 1.0);
+    let (pid_settle, pid_final) = settle_time(&mut pid, 400, 0.02);
+
+    assert!(
+        (tracker_final - 0.6).abs() <= 0.02,
+        "tracker never converged: final {tracker_final:.4}"
+    );
+    assert!((pid_final - 0.6).abs() <= 0.02, "pid never converged: final {pid_final:.4}");
+    // Measured: tracker settles in 10 ticks, PID in 3. Assert with a 2×
+    // margin so minor float drift can't flake the contrast.
+    assert!(
+        pid_settle * 2 < tracker_settle,
+        "PID ({pid_settle} ticks) should settle well before the \
+         integral tracker ({tracker_settle} ticks)"
+    );
 }
 
 #[test]

@@ -143,6 +143,144 @@ fn oversized_body_gets_413_oversized_headers_431() {
 }
 
 // ---------------------------------------------------------------------
+// Artifact-free: reactor edge cases through the full network stack
+// (`Gateway::start_with_handler` — epoll reactor on Linux, the
+// thread-per-connection fallback elsewhere; the contract is identical).
+// ---------------------------------------------------------------------
+
+fn edge_handler() -> Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync> {
+    Arc::new(|req: &HttpRequest| match (req.method.as_str(), req.path_only()) {
+        ("GET", "/ping") => HttpResponse::ok_json("{\"pong\":true}".to_string()),
+        ("POST", "/echo") => HttpResponse::ok_json(format!("{{\"len\":{}}}", req.body.len())),
+        ("GET", "/big") => HttpResponse::ok_text("x".repeat(8 * 1024 * 1024)),
+        ("GET", "/slow") => {
+            std::thread::sleep(Duration::from_millis(300));
+            HttpResponse::ok_json("{\"slow\":true}".to_string())
+        }
+        _ => HttpResponse::error(404, "no such route"),
+    })
+}
+
+/// Split a raw HTTP/1.1 response at the head/body boundary.
+fn split_response(raw: &[u8]) -> (&[u8], &[u8]) {
+    let pos = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("no head/body boundary in response");
+    (&raw[..pos], &raw[pos + 4..])
+}
+
+#[test]
+fn slow_loris_header_drip_is_parsed_across_many_polls() {
+    let mut gw = Gateway::start_with_handler(edge_handler(), 0, 2).unwrap();
+    let mut s = TcpStream::connect(gw.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Two requests on one socket, each dripped a byte at a time: the
+    // incremental parser must resume from its offset on every poll, and
+    // the recycled per-connection buffers must not leak state from the
+    // first request into the second.
+    for round in 0..2 {
+        let req = b"GET /ping HTTP/1.1\r\nHost: x\r\nX-Drip: slow\r\n\r\n";
+        for &b in req.iter() {
+            s.write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Read the complete response (its body is the final bytes, so
+        // seeing it means nothing is left to bleed into the next round).
+        let mut buf = [0u8; 1024];
+        let mut got = Vec::new();
+        while !String::from_utf8_lossy(&got).contains("{\"pong\":true}") {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "server hung up mid-response on round {round}");
+            got.extend_from_slice(&buf[..n]);
+        }
+        let head = String::from_utf8_lossy(&got);
+        assert!(head.starts_with("HTTP/1.1 200"), "round {round}: {head}");
+    }
+    gw.shutdown();
+}
+
+#[test]
+fn mid_request_disconnect_leaves_the_server_healthy() {
+    let mut gw = Gateway::start_with_handler(edge_handler(), 0, 2).unwrap();
+    let addr = gw.addr();
+
+    // Abandon a connection halfway through a request body...
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"POST /echo HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+            .unwrap();
+        // dropped here: EOF inside the request
+    }
+    // ...and halfway through the headers.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /ping HTTP/1.1\r\nX-Par").unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(50));
+
+    // The reactor must have reaped both without wedging a poll thread:
+    // fresh connections are still served.
+    let mut client = HttpClient::connect(addr).unwrap();
+    for _ in 0..3 {
+        assert_eq!(client.get("/ping").unwrap().status, 200);
+    }
+    gw.shutdown();
+}
+
+#[test]
+fn write_backpressure_buffers_a_huge_response_for_a_slow_reader() {
+    let mut gw = Gateway::start_with_handler(edge_handler(), 0, 2).unwrap();
+    let mut s = TcpStream::connect(gw.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // 8 MiB response into a socket whose peer is not reading: the
+    // kernel send buffer fills, the reactor sees WouldBlock, parks the
+    // remainder in the connection's write buffer, and re-arms EPOLLOUT.
+    s.write_all(b"GET /big HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    std::thread::sleep(Duration::from_millis(500)); // let the buffers fill
+
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap(); // terminated by the close
+    let (head, body) = split_response(&raw);
+    let head = String::from_utf8_lossy(head);
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert_eq!(body.len(), 8 * 1024 * 1024, "body truncated under backpressure");
+    assert!(body.iter().all(|&b| b == b'x'), "body corrupted under backpressure");
+    gw.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_and_closes_idle() {
+    let mut gw = Gateway::start_with_handler(edge_handler(), 0, 2).unwrap();
+    let addr = gw.addr();
+
+    // An idle keep-alive connection, warmed with one round-trip.
+    let mut idle = HttpClient::connect(addr).unwrap();
+    assert_eq!(idle.get("/ping").unwrap().status, 200);
+
+    // An in-flight request whose handler outlives the shutdown call.
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    slow.write_all(b"GET /slow HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let the worker pick it up
+
+    gw.shutdown(); // must block until the in-flight response is out
+
+    let mut raw = Vec::new();
+    slow.read_to_end(&mut raw).unwrap();
+    let (head, body) = split_response(&raw);
+    let head = String::from_utf8_lossy(head);
+    assert!(head.starts_with("HTTP/1.1 200"), "in-flight request dropped: {head}");
+    assert_eq!(body, b"{\"slow\":true}");
+
+    // The idle connection was quiesced: the next round-trip fails
+    // instead of hanging.
+    assert!(idle.get("/ping").is_err(), "idle keep-alive must be closed by shutdown");
+}
+
+// ---------------------------------------------------------------------
 // Full-gateway end-to-end (skipped without artifacts).
 // ---------------------------------------------------------------------
 

@@ -137,6 +137,25 @@ fn main() {
         let _ = std::hint::black_box(rw.rate());
     }));
 
+    // ---- replica scheduler read (power-of-two-choices pick) -------------
+    // The per-request cost the replica-set redesign adds to the serving
+    // hot path: one ticket hash plus two load probes over the replica
+    // set. Gated in CI as `sched_read_ns` (docs/BENCH.md).
+    {
+        use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+        let loads: Vec<AtomicUsize> = (0..4usize).map(AtomicUsize::new).collect();
+        let ticket = AtomicU64::new(0);
+        let mut acc_s = 0usize;
+        results.push(bench_fn("sched.p2c_pick", 1000, iters, || {
+            let t = ticket.fetch_add(1, Ordering::Relaxed);
+            let (i, j) = greenflow::pipeline::p2c_indices(t, loads.len());
+            let a = loads[i].load(Ordering::Relaxed);
+            let b = loads[j].load(Ordering::Relaxed);
+            acc_s += if b < a { b } else { a };
+        }));
+        std::hint::black_box(acc_s);
+    }
+
     // ---- energy meter record --------------------------------------------
     let meter = EnergyMeter::new(DeviceProfile::rtx4000_ada(), MeterMode::SimulatedFlops, 16.0);
     results.push(bench_fn("energy_meter.record", 1000, iters, || {

@@ -589,12 +589,15 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 /// serve_bench_hc.json`, passed as `--serve-hc-json`) gated as
 /// `hc_throughput_rps`, and optionally
 /// the `--json` output of `cargo bench --bench micro_hotpath`
-/// (per-component timings, embedded verbatim). Two gated numbers are
+/// (per-component timings, embedded verbatim). Four gated numbers are
 /// measured in-process so the gate has no backend dependency: the
-/// `Adaptive<T>` hot-path read (ns) and the deterministic admission-sim
-/// admit rate. Exits 1 when any pinned baseline regresses by more than
-/// `--max-regress` (direction-aware: throughput may not drop, latency
-/// and read cost may not grow, admit rate may not drift either way).
+/// `Adaptive<T>` hot-path read (ns), the replica-scheduler
+/// power-of-two-choices pick (`sched_read_ns`), the cold-start
+/// lifecycle-executor round-trip (`cold_start_ms`, engine compile
+/// excluded), and the deterministic admission-sim admit rate. Exits 1
+/// when any pinned baseline regresses by more than `--max-regress`
+/// (direction-aware: throughput may not drop, latency and read/dispatch
+/// costs may not grow, admit rate may not drift either way).
 fn cmd_perfgate(args: &Args) -> i32 {
     use crate::json::{self, Value};
 
@@ -661,6 +664,53 @@ fn cmd_perfgate(args: &Args) -> i32 {
     std::hint::black_box(acc);
     let adaptive_read_ns = r.mean() * 1e9;
 
+    // Replica-scheduler read, measured in-process like the adaptive
+    // read: one power-of-two-choices ticket hash plus two per-replica
+    // load probes — the cost the replica-set redesign added to every
+    // request. No engines involved, so the number is hermetic.
+    let sched_read_ns = {
+        use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+        let loads: Vec<AtomicUsize> = (0..4usize).map(AtomicUsize::new).collect();
+        let ticket = AtomicU64::new(0);
+        let mut acc_s = 0usize;
+        let r = crate::benchkit::bench_fn("sched.p2c_pick", 1000, 200_000, || {
+            let t = ticket.fetch_add(1, Ordering::Relaxed);
+            let (i, j) = crate::pipeline::p2c_indices(t, loads.len());
+            let a = loads[i].load(Ordering::Relaxed);
+            let b = loads[j].load(Ordering::Relaxed);
+            acc_s += if b < a { b } else { a };
+        });
+        std::hint::black_box(acc_s);
+        r.mean() * 1e9
+    };
+
+    // Cold-start orchestration overhead: the lifecycle-executor
+    // round-trip a wake-up from zero replicas pays *before* any engine
+    // work (submit → worker pickup → completion). Engine compile time
+    // is deliberately excluded — it belongs to the backend, not to the
+    // scale-to-zero machinery this gate guards.
+    let cold_start_ms = {
+        use crate::runtime::lifecycle::{JobKind, LifecycleExecutor};
+        let exec = LifecycleExecutor::start(1, 16);
+        let iters = 200usize;
+        let t0 = std::time::Instant::now();
+        for i in 0..iters {
+            let (tx, rx) = std::sync::mpsc::channel();
+            exec.submit(
+                "perfgate",
+                i as u64,
+                JobKind::Scale,
+                Box::new(move || {
+                    let _ = tx.send(());
+                }),
+                Box::new(|| {}),
+            )
+            .expect("scale jobs bypass the queue bound");
+            let _ = rx.recv();
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+    };
+
     // Deterministic admission-rate sim (fixed seed + default controller
     // schedule): catches regressions in the J(x)/τ(t) decision logic
     // itself, independent of machine speed.
@@ -683,6 +733,8 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("p95_latency_us", json::num(p95_us)),
         ("admit_rate", json::num(admit_rate)),
         ("adaptive_read_ns", json::num(adaptive_read_ns)),
+        ("sched_read_ns", json::num(sched_read_ns)),
+        ("cold_start_ms", json::num(cold_start_ms)),
     ];
     if let Some(hc) = hc_throughput {
         fields.push(("hc_throughput_rps", json::num(hc)));
@@ -728,6 +780,8 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("p95_latency_us", p95_us, Gate::Ceiling),
         ("admit_rate", admit_rate, Gate::Drift),
         ("adaptive_read_ns", adaptive_read_ns, Gate::Ceiling),
+        ("sched_read_ns", sched_read_ns, Gate::Ceiling),
+        ("cold_start_ms", cold_start_ms, Gate::Ceiling),
     ];
     if let Some(hc) = hc_throughput {
         checks.push(("hc_throughput_rps", hc, Gate::Floor));
@@ -893,6 +947,8 @@ mod tests {
         let admit = bench.get("admit_rate").unwrap().as_f64().unwrap();
         assert!((0.0..=1.0).contains(&admit), "{admit}");
         assert!(bench.get("adaptive_read_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(bench.get("sched_read_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(bench.get("cold_start_ms").unwrap().as_f64().unwrap() > 0.0);
 
         // Generous baseline passes; an impossible throughput floor fails;
         // unpinned (null) fields are recorded but never gated.

@@ -228,6 +228,101 @@ impl ControlLaw for Pid {
     }
 }
 
+/// Replica-count governor with hysteresis and idle scale-to-zero.
+///
+/// `signal` is *demand in replica-units*: the concurrent work a version
+/// is carrying (in-flight + queued, scaled by latency pressure and the
+/// energy-budget throttle — composed by the loop wiring, see
+/// `SystemShared::attach_loops`). The law moves its target one replica
+/// per tick — never a jump — with a hysteresis band so demand noise
+/// around a boundary cannot flap spawn/retire cycles:
+///
+/// * scale **up** when demand exceeds `up_threshold` of what the
+///   current set absorbs (`signal > target * up_threshold`);
+/// * scale **down** when the set one smaller would still run under
+///   `down_threshold` (`signal < (target - 1) * down_threshold`);
+/// * scale **to zero** only after `idle_secs` of continuous zero
+///   demand — the cold-model branch of arXiv:2402.07585's dynamic
+///   model management. A cold version that sees demand again comes
+///   back to one replica on the next tick.
+///
+/// The output is a fractional target; the actor rounds it and applies
+/// the delta through the `LifecycleExecutor`.
+#[derive(Debug, Clone)]
+pub struct ReplicaScaler {
+    pub max_replicas: f64,
+    pub up_threshold: f64,
+    pub down_threshold: f64,
+    pub idle_secs: f64,
+    idle_accum: f64,
+    value: f64,
+}
+
+impl ReplicaScaler {
+    pub fn new(
+        initial: f64,
+        max_replicas: f64,
+        up_threshold: f64,
+        down_threshold: f64,
+        idle_secs: f64,
+    ) -> Self {
+        assert!(max_replicas >= 1.0, "a scaler that can never run a replica is useless");
+        assert!(
+            0.0 < down_threshold && down_threshold < up_threshold && up_threshold <= 1.0,
+            "hysteresis needs 0 < down < up <= 1"
+        );
+        assert!(idle_secs > 0.0, "idle window must be positive");
+        assert!((0.0..=max_replicas).contains(&initial));
+        ReplicaScaler {
+            max_replicas,
+            up_threshold,
+            down_threshold,
+            idle_secs,
+            idle_accum: 0.0,
+            value: initial,
+        }
+    }
+
+    /// Seconds of continuous zero demand observed so far.
+    pub fn idle_for(&self) -> f64 {
+        self.idle_accum
+    }
+}
+
+impl ControlLaw for ReplicaScaler {
+    fn step(&mut self, signal: f64, dt: f64) -> f64 {
+        let dt = dt.max(0.0);
+        let signal = signal.max(0.0);
+        if signal > 0.0 {
+            self.idle_accum = 0.0;
+        } else {
+            self.idle_accum += dt;
+        }
+        let cur = self.value;
+        if self.idle_accum >= self.idle_secs {
+            self.value = 0.0;
+        } else if cur < 1.0 {
+            if signal > 0.0 {
+                // cold version saw traffic: bring the first replica up
+                self.value = 1.0;
+            }
+        } else if signal > cur * self.up_threshold {
+            self.value = (cur + 1.0).min(self.max_replicas);
+        } else if cur > 1.0 && signal < (cur - 1.0) * self.down_threshold {
+            self.value = cur - 1.0;
+        }
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "replica"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,12 +521,81 @@ mod tests {
     }
 
     #[test]
+    fn replica_scaler_steps_up_one_at_a_time_under_load() {
+        let mut s = ReplicaScaler::new(1.0, 8.0, 0.8, 0.4, 30.0);
+        // demand of 4 replicas-worth: grows 1 → 2 → 3 → 4 → 5, then the
+        // hysteresis band holds (4.0 <= 5 * 0.8).
+        for expect in [2.0, 3.0, 4.0, 5.0, 5.0, 5.0] {
+            assert_eq!(s.step(4.0, 1.0), expect);
+        }
+    }
+
+    #[test]
+    fn replica_scaler_scales_down_with_hysteresis() {
+        let mut s = ReplicaScaler::new(4.0, 8.0, 0.8, 0.4, 30.0);
+        // demand 1.5: one fewer replica (3) would run at 0.5 each —
+        // above the 0.4 down-threshold only through (cur-1)*0.4:
+        // 1.5 > 3*0.4 = 1.2 holds at cur=4, so no shrink yet.
+        assert_eq!(s.step(1.5, 1.0), 4.0);
+        // demand 1.0 < 3*0.4: shrink one per tick until the band holds
+        assert_eq!(s.step(1.0, 1.0), 3.0);
+        assert_eq!(s.step(1.0, 1.0), 3.0, "1.0 > 2*0.4 holds at 3");
+        assert_eq!(s.step(0.7, 1.0), 2.0);
+        // never through zero on load alone
+        for _ in 0..10 {
+            s.step(0.1, 1.0);
+        }
+        assert_eq!(s.output(), 1.0);
+    }
+
+    #[test]
+    fn replica_scaler_reaches_zero_only_after_the_idle_window() {
+        let mut s = ReplicaScaler::new(1.0, 8.0, 0.8, 0.4, 10.0);
+        for _ in 0..9 {
+            assert_eq!(s.step(0.0, 1.0), 1.0, "still inside the idle window");
+        }
+        assert_eq!(s.step(0.0, 1.0), 0.0, "idle window elapsed");
+        // traffic on a cold version brings one replica back
+        assert_eq!(s.step(0.5, 1.0), 1.0);
+        assert_eq!(s.idle_for(), 0.0, "demand resets the idle clock");
+    }
+
+    #[test]
+    fn replica_scaler_demand_resets_idle_accumulation() {
+        let mut s = ReplicaScaler::new(1.0, 4.0, 0.8, 0.4, 10.0);
+        for _ in 0..9 {
+            s.step(0.0, 1.0);
+        }
+        s.step(1.0, 2.0); // traffic just before the window elapses
+        for _ in 0..9 {
+            assert!(s.step(0.0, 1.0) >= 1.0);
+        }
+        assert_eq!(s.step(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn replica_scaler_clamps_at_max() {
+        let mut s = ReplicaScaler::new(1.0, 3.0, 0.8, 0.4, 30.0);
+        for _ in 0..10 {
+            s.step(100.0, 1.0);
+        }
+        assert_eq!(s.output(), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn replica_scaler_rejects_inverted_hysteresis() {
+        ReplicaScaler::new(1.0, 4.0, 0.4, 0.8, 10.0);
+    }
+
+    #[test]
     fn laws_are_object_safe() {
         let mut laws: Vec<Box<dyn ControlLaw>> = vec![
             Box::new(Aimd::new(1.0, 1.0, 1.0, 0.5, 0.0, 10.0)),
             Box::new(SetpointTracker::new(0.0, 0.5, 0.1, -1.0, 1.0)),
             Box::new(BudgetPacer::new(10.0, 0.1, 0.0, 1.0)),
             Box::new(Pid::new(0.0, 0.5, 0.5, 0.1, 0.05, -1.0, 1.0)),
+            Box::new(ReplicaScaler::new(1.0, 4.0, 0.8, 0.4, 30.0)),
         ];
         for law in &mut laws {
             let out = law.step(0.7, 0.1);

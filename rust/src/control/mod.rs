@@ -63,9 +63,9 @@ pub mod plane;
 pub mod window;
 
 pub use adaptive::{Adaptive, AtomicBits};
-pub use law::{Aimd, BudgetPacer, ControlLaw, Pid, SetpointTracker};
+pub use law::{Aimd, BudgetPacer, ControlLaw, Pid, ReplicaScaler, SetpointTracker};
 pub use plane::{
     AdaptiveDelayConfig, AdaptiveRouterConfig, AdaptiveTauConfig, ControlLoop, ControlPlane,
-    ControlPlaneConfig, EnergyBudgetConfig, LoopState,
+    ControlPlaneConfig, EnergyBudgetConfig, LoopState, ReplicaScalerConfig,
 };
 pub use window::{EnergyWindow, LatencyWindow, MetricsSnapshot, RateWindow, WindowedMetrics};

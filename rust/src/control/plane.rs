@@ -291,6 +291,37 @@ impl Default for EnergyBudgetConfig {
     }
 }
 
+/// Replica autoscaling: a per-version `ReplicaScaler` loop decides a
+/// target replica count from windowed demand (in-flight + queue depth,
+/// inflated by latency pressure and the energy-budget throttle) and
+/// applies the delta through the lifecycle executor.
+#[derive(Debug, Clone)]
+pub struct ReplicaScalerConfig {
+    /// Hard per-version replica ceiling.
+    pub max_replicas: usize,
+    /// Per-replica utilization above which one more replica is added.
+    pub up_threshold: f64,
+    /// Utilization of the one-smaller set below which one is retired.
+    pub down_threshold: f64,
+    /// Continuous zero-demand seconds before the last replica retires
+    /// (scale-to-zero); the next request cold-starts.
+    pub idle_secs: f64,
+    /// Concurrent requests one replica is sized for (demand divisor).
+    pub per_replica_capacity: f64,
+}
+
+impl Default for ReplicaScalerConfig {
+    fn default() -> Self {
+        ReplicaScalerConfig {
+            max_replicas: 4,
+            up_threshold: 0.8,
+            down_threshold: 0.4,
+            idle_secs: 60.0,
+            per_replica_capacity: 4.0,
+        }
+    }
+}
+
 /// Which loops the serving system boots, and the tick cadence.
 #[derive(Debug, Clone)]
 pub struct ControlPlaneConfig {
@@ -299,6 +330,7 @@ pub struct ControlPlaneConfig {
     pub adaptive_batch_delay: Option<AdaptiveDelayConfig>,
     pub adaptive_router: Option<AdaptiveRouterConfig>,
     pub energy_budget: Option<EnergyBudgetConfig>,
+    pub replica_scaler: Option<ReplicaScalerConfig>,
 }
 
 impl Default for ControlPlaneConfig {
@@ -309,6 +341,7 @@ impl Default for ControlPlaneConfig {
             adaptive_batch_delay: None,
             adaptive_router: None,
             energy_budget: None,
+            replica_scaler: None,
         }
     }
 }
@@ -338,12 +371,22 @@ impl ControlPlaneConfig {
         self
     }
 
+    pub fn with_replica_scaler(mut self, max_replicas: usize, idle_secs: f64) -> Self {
+        self.replica_scaler = Some(ReplicaScalerConfig {
+            max_replicas,
+            idle_secs,
+            ..ReplicaScalerConfig::default()
+        });
+        self
+    }
+
     /// Any loop enabled?
     pub fn any_enabled(&self) -> bool {
         self.adaptive_tau.is_some()
             || self.adaptive_batch_delay.is_some()
             || self.adaptive_router.is_some()
             || self.energy_budget.is_some()
+            || self.replica_scaler.is_some()
     }
 }
 
@@ -449,12 +492,16 @@ mod tests {
             .with_adaptive_tau(0.6)
             .with_adaptive_batch_delay(0.05)
             .with_adaptive_router(0.1)
-            .with_energy_budget(75.0);
+            .with_energy_budget(75.0)
+            .with_replica_scaler(6, 30.0);
         assert!(c.any_enabled());
         assert_eq!(c.adaptive_tau.unwrap().target_admit_rate, 0.6);
         assert_eq!(c.adaptive_batch_delay.unwrap().slo_p95_secs, 0.05);
         assert_eq!(c.adaptive_router.unwrap().slo_p95_secs, 0.1);
         assert_eq!(c.energy_budget.unwrap().budget_watts, 75.0);
+        let rs = c.replica_scaler.unwrap();
+        assert_eq!(rs.max_replicas, 6);
+        assert_eq!(rs.idle_secs, 30.0);
         assert!(!ControlPlaneConfig::default().any_enabled());
     }
 }

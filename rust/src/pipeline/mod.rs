@@ -18,9 +18,12 @@
 //! closed loop (Fig. 2).
 //!
 //! Paths are owned per **model version**: [`system::VersionHandle`]
-//! bundles one version's direct engine + batched path, attached and
-//! detached at runtime by the `/v2/repository` lifecycle API (see
-//! [`crate::runtime::registry`]).
+//! owns a replica set of N engine replicas (each one direct engine +
+//! batched path), scheduled power-of-two-choices and scaled by the
+//! control plane's per-version `replica_scaler` loop; versions are
+//! attached and detached at runtime by the `/v2/repository` lifecycle
+//! API (see [`crate::runtime::registry`]) and replicas spawn/retire
+//! through the same lifecycle executor (docs/SCALING.md).
 
 pub mod batched;
 pub mod direct;
@@ -29,5 +32,7 @@ pub mod worker;
 
 pub use batched::BatchedPath;
 pub use direct::DirectPath;
-pub use system::{InferResult, ModelControl, ServingSystem, SubmitOptions, SystemConfig};
+pub use system::{
+    p2c_indices, InferResult, ModelControl, ServingSystem, SubmitOptions, SystemConfig,
+};
 pub use worker::{InstancePool, Job};

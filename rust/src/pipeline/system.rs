@@ -36,16 +36,32 @@
 //! and one energy-budget pacer **per loaded batched path**
 //! (`energy_budget.<model>/<version>`), each attached and detached with
 //! its version.
+//!
+//! Since the replica-set redesign a `Ready` version owns **N engine
+//! replicas** ([`Replica`]: one direct engine + one batcher each)
+//! instead of a single direct/batched pair. The hot path schedules over
+//! them power-of-two-choices ([`p2c_indices`]) on per-replica in-flight
+//! and queue-depth counters; the per-version
+//! `replica_scaler.<model>/<version>` loop (a
+//! [`ReplicaScaler`](crate::control::ReplicaScaler) law) moves a target
+//! replica count with the windowed demand, batched-path p95 pressure,
+//! and the energy-budget throttle, and acts through the
+//! [`LifecycleExecutor`] (`JobKind::Scale`) so replica spawn/retire
+//! inherits per-model serialization, cancellation, and panic
+//! containment. Scale-to-zero retires the last replica after the idle
+//! window; the next request **cold-starts** — it enqueues the spawn and
+//! queues behind it instead of 503ing (`gf_cold_starts_total`, with the
+//! wait recorded separately as `gf_cold_start_ms.<model>.<version>`).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 use crate::batching::policy::BatcherPolicy;
 use crate::configsys::ModelConfig;
-use crate::control::law::{Aimd, BudgetPacer, SetpointTracker};
+use crate::control::law::{Aimd, BudgetPacer, ReplicaScaler, SetpointTracker};
 use crate::control::{
     Adaptive, ControlLoop, ControlPlane, ControlPlaneConfig, EnergyWindow, WindowedMetrics,
 };
@@ -79,6 +95,37 @@ const UNLOAD_DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
 /// with `BACKPRESSURE` instead of buffering them forever.
 const LIFECYCLE_WORKERS: usize = 4;
 const LIFECYCLE_QUEUE_CAP: usize = 64;
+
+/// How long retiring one replica waits for its in-flight requests
+/// before letting the last request thread tear the engines down on its
+/// own (same contract as [`UNLOAD_DRAIN_TIMEOUT`], per replica).
+const REPLICA_DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Upper bound a cold-start request waits for the spawn it triggered.
+/// Generous: a cold start pays an engine compile, and timing out early
+/// would turn a slow-but-succeeding spawn into a spurious 503.
+const COLD_START_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// SplitMix64 finalizer — the replica scheduler's ticket hash: one
+/// multiply-xor-shift cascade per pick, no RNG state beyond the ticket
+/// counter itself.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Power-of-two-choices candidate pair for a replica set of size `n`
+/// (`n ≥ 1`): hash the ticket once, derive two indices from the low and
+/// high halves. Public so `benches/micro_hotpath.rs` and the perf gate
+/// can measure the scheduler read without spinning up engines.
+#[inline]
+pub fn p2c_indices(ticket: u64, n: usize) -> (usize, usize) {
+    let h = splitmix64(ticket);
+    ((h as u32 as usize) % n, ((h >> 32) as usize) % n)
+}
 
 /// Model-control mode (Triton's `--model-control-mode`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -231,17 +278,94 @@ pub struct InferResult {
     pub tau: f64,
 }
 
-/// One `Ready` model version's attached serving resources. In-flight
-/// requests hold an `Arc` clone, so the engines and batcher threads
-/// survive an unload until the last request completes — that `Arc`
-/// refcount *is* the drain mechanism.
+/// One engine replica: a direct engine plus (for batched-capable
+/// models) its own dynamic batcher. A version's replica set holds N of
+/// these; the scheduler spreads requests over them power-of-two-choices
+/// on [`Replica::load`].
+pub struct Replica {
+    direct: DirectPath,
+    batched: Option<BatchedPath>,
+    /// Requests currently executing on this replica (either path).
+    in_flight: AtomicUsize,
+}
+
+impl Replica {
+    /// Scheduler load signal: in-flight executions plus queued batcher
+    /// work. Two relaxed atomic reads — measured as `sched_read_ns` in
+    /// the perf gate.
+    fn load(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+            + self.batched.as_ref().map(|b| b.queue_depth()).unwrap_or(0)
+    }
+}
+
+/// RAII in-flight marker: holding one pins the replica (the `Arc`
+/// clone) and keeps its `in_flight` count honest across early returns
+/// and panics.
+struct InFlightGuard(Arc<Replica>);
+
+impl InFlightGuard {
+    fn new(replica: Arc<Replica>) -> Self {
+        replica.in_flight.fetch_add(1, Ordering::Relaxed);
+        InFlightGuard(replica)
+    }
+
+    fn replica(&self) -> &Replica {
+        &self.0
+    }
+}
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One `Ready` model version's attached serving resources — since the
+/// replica-set redesign, a **set of N [`Replica`]s** behind a
+/// power-of-two-choices scheduler rather than a single engine pair.
+/// In-flight requests hold an `Arc` clone (of the handle and of their
+/// replica), so engines and batcher threads survive an unload until the
+/// last request completes — that `Arc` refcount *is* the drain
+/// mechanism.
+///
+/// A version can hold **zero** replicas (scale-to-zero): it stays in
+/// the serving snapshot, and the next request cold-starts a replica
+/// through the lifecycle executor instead of 503ing.
 pub struct VersionHandle {
     model: String,
     version: u64,
     manifest: ModelManifest,
     config: Option<ModelConfig>,
-    direct: DirectPath,
-    batched: Option<BatchedPath>,
+    /// The replica set, snapshot-swapped whole (readers clone the `Arc`
+    /// once per pick and never hold the lock across an inference).
+    replicas: RwLock<Arc<Vec<Arc<Replica>>>>,
+    /// Replica count the scaler (or an operator override) wants; the
+    /// executor-serialized reconcile walks the set toward it.
+    target_replicas: AtomicUsize,
+    /// Monotonic pick counter feeding [`p2c_indices`].
+    sched_ticket: AtomicU64,
+    /// Whether this version's replicas carry a batcher (false only for
+    /// the screener, which serves inline on its direct engine).
+    batched_capable: bool,
+    /// Batcher policy cloned into every replica. Clones share the
+    /// `Adaptive` queue-delay cell, so one AIMD loop drives every
+    /// replica's batcher window.
+    policy: Option<BatcherPolicy>,
+    /// Engine instances per replica batcher (from the model config).
+    instances: usize,
+    /// Version directory, kept so a reconcile can spawn new replicas.
+    dir: PathBuf,
+    /// Cold-start election: the one request that wins the CAS counts
+    /// the cold start and enqueues the spawn; everyone else just waits.
+    cold_spawn: AtomicBool,
+    /// Bumped when a reconcile (or its cancellation) finishes. A
+    /// cold-start waiter that sees two bumps without a replica knows
+    /// its spawn genuinely failed.
+    cold_gen: AtomicU64,
+    /// Requests parked in a cold-start wait; counted into
+    /// [`VersionHandle::in_flight`] so the scaler sees their demand.
+    cold_waiting: AtomicUsize,
     stats: LoadStats,
     /// Batcher queue-delay handle, kept for control-loop attach.
     delay_handle: Option<Adaptive<u64>>,
@@ -280,13 +404,84 @@ impl VersionHandle {
         self.stats
     }
 
+    /// Whether this version's replicas carry a batched path. Note this
+    /// is a property of the *version*, not of the current replica
+    /// count: it stays true at zero replicas (the batcher comes back
+    /// with the cold-started replica).
     pub fn has_batched(&self) -> bool {
-        self.batched.is_some()
+        self.batched_capable
     }
 
-    /// Current scheduler-queue depth (0 for batcher-less models).
+    /// Ready replicas currently serving.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.read().unwrap().len()
+    }
+
+    /// Replica count the scaler currently wants.
+    pub fn target_replicas(&self) -> usize {
+        self.target_replicas.load(Ordering::SeqCst)
+    }
+
+    /// Requests executing on (or cold-start-waiting for) this version.
+    pub fn in_flight(&self) -> usize {
+        let replicas = self.replicas.read().unwrap().clone();
+        replicas.iter().map(|r| r.in_flight.load(Ordering::Relaxed)).sum::<usize>()
+            + self.cold_waiting.load(Ordering::SeqCst)
+    }
+
+    /// Scheduler-queue depth summed over the replica set (0 for
+    /// batcher-less models and at zero replicas).
     pub fn queue_depth(&self) -> usize {
-        self.batched.as_ref().map(|b| b.queue_depth()).unwrap_or(0)
+        let replicas = self.replicas.read().unwrap().clone();
+        replicas
+            .iter()
+            .map(|r| r.batched.as_ref().map(|b| b.queue_depth()).unwrap_or(0))
+            .sum()
+    }
+
+    /// Power-of-two-choices pick: hash the ticket, probe two replicas,
+    /// take the lighter. `None` at zero replicas (cold-start
+    /// territory). The degenerate sizes skip the hash entirely.
+    fn pick_replica(&self) -> Option<Arc<Replica>> {
+        let replicas = self.replicas.read().unwrap().clone();
+        match replicas.len() {
+            0 => None,
+            1 => Some(replicas[0].clone()),
+            n => {
+                let ticket = self.sched_ticket.fetch_add(1, Ordering::Relaxed);
+                let (i, j) = p2c_indices(ticket, n);
+                let pick =
+                    if replicas[j].load() < replicas[i].load() { &replicas[j] } else { &replicas[i] };
+                Some(pick.clone())
+            }
+        }
+    }
+
+    /// Clone-swap one replica in (reconcile only — executor-serialized
+    /// per model, so no two writers race).
+    fn push_replica(&self, replica: Arc<Replica>) {
+        let mut guard = self.replicas.write().unwrap();
+        let mut next = (**guard).clone();
+        next.push(replica);
+        *guard = Arc::new(next);
+    }
+
+    /// Clone-swap the newest replica out; the caller owns the drain.
+    fn pop_replica(&self) -> Option<Arc<Replica>> {
+        let mut guard = self.replicas.write().unwrap();
+        let mut next = (**guard).clone();
+        let r = next.pop()?;
+        *guard = Arc::new(next);
+        Some(r)
+    }
+}
+
+/// Decrements `cold_waiting` on every exit path of a cold-start wait.
+struct ColdWaitGuard<'a>(&'a VersionHandle);
+
+impl Drop for ColdWaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.cold_waiting.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -387,14 +582,21 @@ struct SystemShared {
     meter: Arc<EnergyMeter>,
     cache: Mutex<ResponseCache>,
     metrics: Arc<WindowedMetrics>,
+    /// Weak back-reference to the lifecycle executor so the scaler's
+    /// apply side and cold starts can enqueue `JobKind::Scale` jobs.
+    /// Weak, not `Arc`: the executor's job closures capture
+    /// `Arc<SystemShared>`, so a strong reference here would cycle and
+    /// leak the whole system. Set once in [`ServingSystem::start`].
+    executor: OnceLock<Weak<LifecycleExecutor>>,
     cfg: SystemConfig,
 }
 
 /// The full serving system.
 pub struct ServingSystem {
-    /// Declared first: dropping the executor cancels queued jobs and
-    /// joins the workers before the shared state they capture unwinds.
-    executor: LifecycleExecutor,
+    /// Declared first: dropping the (sole strong) executor handle
+    /// cancels queued jobs and joins the workers before the shared
+    /// state they capture unwinds.
+    executor: Arc<LifecycleExecutor>,
     shared: Arc<SystemShared>,
     latency: Mutex<LatencyHistogram>,
     controller: Option<Arc<Mutex<AdmissionController>>>,
@@ -429,10 +631,13 @@ impl ServingSystem {
             meter,
             cache: Mutex::new(ResponseCache::new(cfg.cache_capacity)),
             metrics,
+            executor: OnceLock::new(),
             cfg,
         });
+        let executor = Arc::new(LifecycleExecutor::start(LIFECYCLE_WORKERS, LIFECYCLE_QUEUE_CAP));
+        let _ = shared.executor.set(Arc::downgrade(&executor));
         let sys = ServingSystem {
-            executor: LifecycleExecutor::start(LIFECYCLE_WORKERS, LIFECYCLE_QUEUE_CAP),
+            executor,
             shared,
             latency: Mutex::new(LatencyHistogram::for_latency()),
             controller,
@@ -543,9 +748,12 @@ impl ServingSystem {
 /// `Arc<SystemShared>` alone.
 impl SystemShared {
     /// Attach the per-version control loops (batcher-delay AIMD, the
-    /// per-model energy-budget pacer) for a freshly loaded handle.
-    fn attach_loops(&self, handle: &Arc<VersionHandle>) {
-        let (Some(plane), Some(pc)) = (&self.plane, &self.cfg.control) else {
+    /// per-model energy-budget pacer, the replica scaler) for a freshly
+    /// loaded handle. Associated fn (not a method): the scaler's apply
+    /// closure needs a `Weak<SystemShared>`, and `&Arc<Self>` is not a
+    /// receiver type.
+    fn attach_loops(shared: &Arc<SystemShared>, handle: &Arc<VersionHandle>) {
+        let (Some(plane), Some(pc)) = (&shared.plane, &shared.cfg.control) else {
             return;
         };
         let key = format!("{}/{}", handle.model, handle.version);
@@ -572,7 +780,7 @@ impl SystemShared {
                 plane.add_loop(ControlLoop::new(
                     format!("batch_delay_us.{key}"),
                     Box::new(law),
-                    fresh_p95_batched(&self.metrics),
+                    fresh_p95_batched(&shared.metrics),
                     Box::new(move |v| h.set(v.max(0.0).round() as u64)),
                 ));
             }
@@ -583,7 +791,7 @@ impl SystemShared {
         // this model's τ bias. A stale window means the model ran
         // nothing ⇒ report ~0 W so the correction decays while idle.
         if let Some(ec) = &pc.energy_budget {
-            if handle.batched.is_some() {
+            if handle.batched_capable {
                 let law = BudgetPacer::new(ec.budget_watts, ec.gain, 0.0, ec.max_correction);
                 let sig = handle.clone();
                 let mut last_events = 0u64;
@@ -604,6 +812,55 @@ impl SystemShared {
                 ));
             }
         }
+
+        // Replica scaler: windowed demand (in-flight + queued work, in
+        // per-replica-capacity units), inflated by batched-path p95
+        // pressure against the SLO and deflated by this model's
+        // energy-budget throttle — a model over its power budget earns
+        // fewer replicas, not more. The apply side acts *through the
+        // lifecycle executor* (`JobKind::Scale`), so replica spawn and
+        // retire inherit per-model serialization, cancellation, and
+        // panic containment. The scaler captures only a `Weak` system
+        // reference (the plane lives inside `SystemShared`; a strong
+        // capture would cycle). Screener excluded: it serves the
+        // admission pass inline, and scaling it to zero would silently
+        // degrade every decision to the latent-entropy fallback.
+        if let Some(rc) = &pc.replica_scaler {
+            if handle.batched_capable {
+                let law = ReplicaScaler::new(
+                    1.0,
+                    rc.max_replicas.max(1) as f64,
+                    rc.up_threshold,
+                    rc.down_threshold,
+                    rc.idle_secs,
+                );
+                let sig = handle.clone();
+                let metrics = shared.metrics.clone();
+                let slo = shared.cfg.slo_latency;
+                let per_cap = rc.per_replica_capacity.max(1e-9);
+                let signal = move || {
+                    let demand = (sig.in_flight() + sig.queue_depth()) as f64 / per_cap;
+                    let p95 = metrics.snapshot().p95_batched;
+                    let pressure =
+                        if slo > 0.0 && p95 > slo { (p95 / slo).min(4.0) } else { 1.0 };
+                    let throttle = 1.0 + sig.energy_correction.get().max(0.0);
+                    demand * pressure / throttle
+                };
+                let weak = Arc::downgrade(shared);
+                let h = handle.clone();
+                let apply = move |out: f64| {
+                    if let Some(shared) = weak.upgrade() {
+                        SystemShared::request_scale(&shared, &h, out.round().max(0.0) as usize);
+                    }
+                };
+                plane.add_loop(ControlLoop::new(
+                    format!("replica_scaler.{key}"),
+                    Box::new(law),
+                    Box::new(signal),
+                    Box::new(apply),
+                ));
+            }
+        }
     }
 
     fn detach_loops(&self, handle: &VersionHandle) {
@@ -611,6 +868,7 @@ impl SystemShared {
             let key = format!("{}/{}", handle.model, handle.version);
             plane.remove_loop(&format!("batch_delay_us.{key}"));
             plane.remove_loop(&format!("energy_budget.{key}"));
+            plane.remove_loop(&format!("replica_scaler.{key}"));
         }
     }
 
@@ -626,8 +884,13 @@ impl SystemShared {
         *guard = Arc::new(next);
         if let Some(h) = &h {
             // From here on, in-flight stragglers must not write the
-            // response cache — see `VersionHandle::retired`.
+            // response cache — see `VersionHandle::retired`. Retirement
+            // also fails any parked cold-start waiters and makes a
+            // late-running reconcile bail out.
             h.retired.store(true, Ordering::SeqCst);
+            crate::telemetry::MetricsRegistry::global()
+                .gauge(&format!("gf_replicas.{}.{}", h.model, h.version))
+                .set(0.0);
         }
         h
     }
@@ -653,8 +916,14 @@ impl SystemShared {
         self.cache.lock().unwrap().invalidate(model, version, self.cfg.cache_clusters);
     }
 
-    /// Spin up one version's engines and swap it into the snapshot.
-    fn attach_version(&self, model: &str, info: &VersionInfo) -> Result<(), RuntimeError> {
+    /// Spin up one version's first replica and swap the version into
+    /// the snapshot. Associated fn for the same reason as
+    /// [`SystemShared::attach_loops`].
+    fn attach_version(
+        shared: &Arc<SystemShared>,
+        model: &str,
+        info: &VersionInfo,
+    ) -> Result<(), RuntimeError> {
         let t0 = Instant::now();
         // Test/bench hook (opt-in via `SystemConfig::load_hooks`): a
         // `slow_load_ms` file in the version directory stalls the
@@ -662,7 +931,7 @@ impl SystemShared {
         // loads never block the gateway without needing a genuinely
         // slow model. Ignored unless explicitly enabled, so a stray
         // file in a production repository can never slow real loads.
-        if self.cfg.load_hooks {
+        if shared.cfg.load_hooks {
             if let Ok(text) = std::fs::read_to_string(info.dir.join("slow_load_ms")) {
                 if let Ok(ms) = text.trim().parse::<u64>() {
                     std::thread::sleep(Duration::from_millis(ms.min(30_000)));
@@ -678,7 +947,7 @@ impl SystemShared {
                 model
             )));
         }
-        let config = self.registry.config(model)?;
+        let config = shared.registry.config(model)?;
         if let Some(c) = &config {
             // Shape/dtype discipline (the paper's §VII "practical
             // gotchas"), enforced at load so a bad config is a typed
@@ -709,26 +978,23 @@ impl SystemShared {
             }
         }
 
-        let direct = DirectPath::start(vec![info.dir.clone()], self.cfg.exec_mode)?;
-        let mut delay_handle = None;
-        let batched = if model == models::SCREENER {
-            None // the screener serves inline on its direct engine
+        // The screener serves inline on its direct engine; every other
+        // model's replicas carry a batcher. Policy clones share one
+        // Adaptive delay cell, so the AIMD loop keeps driving every
+        // replica's window no matter how many the scaler spawns.
+        let policy = if model == models::SCREENER {
+            None
         } else {
-            let policy = config
-                .as_ref()
-                .map(BatcherPolicy::from_config)
-                .unwrap_or_else(|| BatcherPolicy::immediate(manifest.max_bucket()));
-            delay_handle = Some(policy.delay_handle());
-            let instances = config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
-            Some(BatchedPath::start(
-                info.dir.clone(),
-                policy,
-                instances,
-                self.cfg.queue_capacity,
-                self.cfg.exec_mode,
-                self.cfg.salt,
-            )?)
+            Some(
+                config
+                    .as_ref()
+                    .map(BatcherPolicy::from_config)
+                    .unwrap_or_else(|| BatcherPolicy::immediate(manifest.max_bucket())),
+            )
         };
+        let delay_handle = policy.as_ref().map(|p| p.delay_handle());
+        let instances = config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
+        let first = shared.spawn_replica(&info.dir, policy.as_ref(), instances)?;
 
         let load_secs = t0.elapsed().as_secs_f64();
         let stats = LoadStats {
@@ -736,15 +1002,23 @@ impl SystemShared {
             weight_bytes: manifest.weights_bytes() as u64,
             // Estimated compile + weight-transfer energy: full draw on
             // the metered device over the load interval.
-            est_load_joules: self.meter.profile().power_at(1.0) * load_secs,
+            est_load_joules: shared.meter.profile().power_at(1.0) * load_secs,
         };
         let handle = Arc::new(VersionHandle {
             model: model.to_string(),
             version: info.version,
             manifest,
             config,
-            direct,
-            batched,
+            replicas: RwLock::new(Arc::new(vec![Arc::new(first)])),
+            target_replicas: AtomicUsize::new(1),
+            sched_ticket: AtomicU64::new(0),
+            batched_capable: policy.is_some(),
+            policy,
+            instances,
+            dir: info.dir.clone(),
+            cold_spawn: AtomicBool::new(false),
+            cold_gen: AtomicU64::new(0),
+            cold_waiting: AtomicUsize::new(0),
             stats,
             delay_handle,
             energy: Mutex::new(EnergyWindow::new(64)),
@@ -753,7 +1027,7 @@ impl SystemShared {
             retired: AtomicBool::new(false),
         });
         {
-            let mut guard = self.snapshot.write().unwrap();
+            let mut guard = shared.snapshot.write().unwrap();
             let mut next = (**guard).clone();
             next.models
                 .entry(model.to_string())
@@ -761,10 +1035,209 @@ impl SystemShared {
                 .insert(info.version, handle.clone());
             *guard = Arc::new(next);
         }
-        self.attach_loops(&handle);
-        self.registry.finish_load(model, info.version, Ok(stats));
+        crate::telemetry::MetricsRegistry::global()
+            .gauge(&format!("gf_replicas.{}.{}", model, info.version))
+            .set(1.0);
+        Self::attach_loops(shared, &handle);
+        shared.registry.finish_load(model, info.version, Ok(stats));
         Ok(())
     }
+
+    /// Spin up one engine replica (direct engine + batcher) for a
+    /// version directory. Runs on executor threads at load and on every
+    /// scale-up reconcile.
+    fn spawn_replica(
+        &self,
+        dir: &std::path::Path,
+        policy: Option<&BatcherPolicy>,
+        instances: usize,
+    ) -> Result<Replica, RuntimeError> {
+        let direct = DirectPath::start(vec![dir.to_path_buf()], self.cfg.exec_mode)?;
+        let batched = match policy {
+            Some(p) => Some(BatchedPath::start(
+                dir.to_path_buf(),
+                p.clone(),
+                instances,
+                self.cfg.queue_capacity,
+                self.cfg.exec_mode,
+                self.cfg.salt,
+            )?),
+            None => None,
+        };
+        Ok(Replica { direct, batched, in_flight: AtomicUsize::new(0) })
+    }
+
+    /// Set a version's target replica count and (if anything changed)
+    /// enqueue the executor-serialized reconcile that walks the set
+    /// toward it. No-op on retired handles: an unload mid-flight wins.
+    fn request_scale(shared: &Arc<SystemShared>, handle: &Arc<VersionHandle>, target: usize) {
+        if handle.retired.load(Ordering::SeqCst) {
+            return;
+        }
+        let prev = handle.target_replicas.swap(target, Ordering::SeqCst);
+        if prev == target && handle.replica_count() == target {
+            return;
+        }
+        if prev != target {
+            crate::telemetry::MetricsRegistry::global()
+                .counter("gf_replica_scale_events_total")
+                .inc();
+        }
+        let _ = Self::submit_reconcile(shared, handle);
+    }
+
+    /// Enqueue one `JobKind::Scale` reconcile for this version. Scale
+    /// jobs bypass the load-queue bound (see [`JobKind::Scale`]); false
+    /// only when the executor is already gone (shutdown).
+    fn submit_reconcile(shared: &Arc<SystemShared>, handle: &Arc<VersionHandle>) -> bool {
+        let Some(exec) = shared.executor.get().and_then(Weak::upgrade) else {
+            return false;
+        };
+        let work = {
+            let shared = shared.clone();
+            let h = handle.clone();
+            Box::new(move || shared.reconcile_replicas(&h)) as Box<dyn FnOnce() + Send>
+        };
+        // A cancelled reconcile (shutdown drain) must still release any
+        // cold-start election and bump the generation so parked waiters
+        // fail fast instead of sleeping out the full timeout.
+        let cancel = {
+            let h = handle.clone();
+            Box::new(move || {
+                h.cold_spawn.store(false, Ordering::SeqCst);
+                h.cold_gen.fetch_add(1, Ordering::SeqCst);
+            }) as Box<dyn FnOnce() + Send>
+        };
+        exec.submit(&handle.model, handle.version, JobKind::Scale, work, cancel).is_ok()
+    }
+
+    /// Walk a version's replica set toward its target, one replica at a
+    /// time, re-reading the target each step so a scaler reversal
+    /// mid-walk is honoured. Runs on an executor worker under per-model
+    /// serialization — it is the only writer of the replica vector.
+    fn reconcile_replicas(&self, handle: &Arc<VersionHandle>) {
+        let registry = crate::telemetry::MetricsRegistry::global();
+        let gauge = registry.gauge(&format!("gf_replicas.{}.{}", handle.model, handle.version));
+        loop {
+            if handle.retired.load(Ordering::SeqCst) {
+                break;
+            }
+            let cur = handle.replica_count();
+            let target = handle.target_replicas.load(Ordering::SeqCst);
+            if cur < target {
+                match self.spawn_replica(&handle.dir, handle.policy.as_ref(), handle.instances) {
+                    Ok(r) => handle.push_replica(Arc::new(r)),
+                    Err(_) => {
+                        // Leave the target standing: the next scaler
+                        // tick (or cold-start retry) re-enqueues.
+                        registry.counter("gf_replica_spawn_failures_total").inc();
+                        break;
+                    }
+                }
+            } else if cur > target {
+                match handle.pop_replica() {
+                    Some(r) => drain_replica(r),
+                    None => break,
+                }
+            } else {
+                break;
+            }
+            gauge.set(handle.replica_count() as f64);
+        }
+        if !handle.retired.load(Ordering::SeqCst) {
+            gauge.set(handle.replica_count() as f64);
+        }
+        // Release the cold-start election and publish "a reconcile
+        // finished" to any parked waiters.
+        handle.cold_spawn.store(false, Ordering::SeqCst);
+        handle.cold_gen.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Hot-path replica acquisition: power-of-two-choices pick, or — at
+    /// zero replicas — the cold-start wait. Returns the RAII in-flight
+    /// guard the caller holds across the engine call.
+    fn acquire_replica(
+        shared: &Arc<SystemShared>,
+        handle: &Arc<VersionHandle>,
+    ) -> Result<InFlightGuard, RuntimeError> {
+        if let Some(r) = handle.pick_replica() {
+            return Ok(InFlightGuard::new(r));
+        }
+        Self::cold_start_wait(shared, handle)
+    }
+
+    /// Scale-to-zero wake-up: the first request elects itself spawner
+    /// (CAS on `cold_spawn`), counts the cold start, raises the target
+    /// floor to one, and enqueues a reconcile; every concurrent request
+    /// parks and polls for the replica instead of 503ing. Waiters give
+    /// up on retirement (unload wins), on two reconcile generations
+    /// passing with no replica (the spawn genuinely failed — one bump
+    /// may predate our failed pick, two cannot), or on the cold-start
+    /// timeout.
+    fn cold_start_wait(
+        shared: &Arc<SystemShared>,
+        handle: &Arc<VersionHandle>,
+    ) -> Result<InFlightGuard, RuntimeError> {
+        let unavailable = || RuntimeError::ModelUnavailable { model: handle.model.clone() };
+        if handle.retired.load(Ordering::SeqCst) {
+            return Err(unavailable());
+        }
+        let t0 = Instant::now();
+        handle.cold_waiting.fetch_add(1, Ordering::SeqCst);
+        let _parked = ColdWaitGuard(handle);
+        let gen0 = handle.cold_gen.load(Ordering::SeqCst);
+        if handle
+            .cold_spawn
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            // Won the election — but a reconcile may have landed a
+            // replica between our failed pick and the CAS.
+            if let Some(r) = handle.pick_replica() {
+                handle.cold_spawn.store(false, Ordering::SeqCst);
+                return Ok(InFlightGuard::new(r));
+            }
+            crate::telemetry::MetricsRegistry::global().counter("gf_cold_starts_total").inc();
+            handle.target_replicas.fetch_max(1, Ordering::SeqCst);
+            if !Self::submit_reconcile(shared, handle) {
+                handle.cold_spawn.store(false, Ordering::SeqCst);
+                return Err(unavailable());
+            }
+        } else {
+            // Raise the floor too: a concurrent scale-to-zero apply
+            // must not land underneath the winner's reconcile.
+            handle.target_replicas.fetch_max(1, Ordering::SeqCst);
+        }
+        loop {
+            if let Some(r) = handle.pick_replica() {
+                crate::telemetry::MetricsRegistry::global()
+                    .gauge(&format!("gf_cold_start_ms.{}.{}", handle.model, handle.version))
+                    .set(t0.elapsed().as_secs_f64() * 1e3);
+                return Ok(InFlightGuard::new(r));
+            }
+            if handle.retired.load(Ordering::SeqCst) {
+                return Err(unavailable());
+            }
+            if handle.cold_gen.load(Ordering::SeqCst) >= gen0 + 2 {
+                return Err(unavailable());
+            }
+            if t0.elapsed() > COLD_START_TIMEOUT {
+                return Err(unavailable());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Bounded per-replica drain (scale-down): wait for in-flight holders
+/// to release their `Arc` clones, then drop the engines; past the
+/// timeout the last request thread pays the teardown instead.
+fn drain_replica(replica: Arc<Replica>) {
+    let deadline = Instant::now() + REPLICA_DRAIN_TIMEOUT;
+    while Arc::strong_count(&replica) > 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(replica);
 }
 
 /// Wait for a batch of boot-time load jobs; the first failure aborts
@@ -831,7 +1304,7 @@ impl ServingSystem {
                     // a *terminal* registry state — left as `Loading` it
                     // would read as "busy" to every later load/unload.
                     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || shared.attach_version(&model, &info),
+                        || SystemShared::attach_version(&shared, &model, &info),
                     ));
                     match outcome {
                         Ok(Ok(())) => {
@@ -1181,6 +1654,31 @@ impl ServingSystem {
         self.version_handle(model, None).map(|h| h.queue_depth()).unwrap_or(0)
     }
 
+    /// `(ready, target, in_flight)` replica counts of a model version
+    /// (the `GET /v2/models/{m}` `replicas` object); None when the
+    /// version is not in the serving snapshot.
+    pub fn replica_counts(&self, model: &str, version: Option<u64>) -> Option<(usize, usize, usize)> {
+        self.version_handle(model, version)
+            .map(|h| (h.replica_count(), h.target_replicas(), h.in_flight()))
+    }
+
+    /// Operator override: set a version's target replica count directly
+    /// (tests, CLI, emergency pinning). Goes through the same
+    /// executor-serialized reconcile the scaler uses — and the scaler,
+    /// if attached, will keep adjusting it on later ticks. Target 0 is
+    /// scale-to-zero: the version stays resolvable and the next request
+    /// cold-starts.
+    pub fn scale_replicas(
+        &self,
+        model: &str,
+        version: Option<u64>,
+        target: usize,
+    ) -> Result<(), RuntimeError> {
+        let handle = self.resolve(model, version)?;
+        SystemShared::request_scale(&self.shared, &handle, target);
+        Ok(())
+    }
+
     // -------------------------------------------------------- serving
 
     /// Execute a request on an explicit path, bypassing the controller
@@ -1202,17 +1700,24 @@ impl ServingSystem {
         self.shared.metrics.record_arrival(t0);
         let (out, stats) = match path {
             PathKind::Direct => {
+                let guard = SystemShared::acquire_replica(&self.shared, handle)?;
                 let input =
                     inputgen::batch_for(&handle.manifest, &[req.seed], self.shared.cfg.salt);
-                handle.direct.infer(&req.model, input)?
+                guard.replica().direct.infer(&req.model, input)?
             }
             PathKind::Batched => {
-                let p = handle.batched.as_ref().ok_or_else(|| {
-                    RuntimeError::InputMismatch(format!(
+                if !handle.has_batched() {
+                    return Err(RuntimeError::InputMismatch(format!(
                         "model {:?} has no batched path",
                         req.model
-                    ))
-                })?;
+                    )));
+                }
+                let guard = SystemShared::acquire_replica(&self.shared, handle)?;
+                let p = guard
+                    .replica()
+                    .batched
+                    .as_ref()
+                    .expect("batched-capable replicas carry a batcher");
                 p.infer(req.seed)?
             }
             PathKind::CacheSkip => {
@@ -1287,10 +1792,21 @@ impl ServingSystem {
         // (resolved from the live snapshot — an unloaded screener falls
         // back to the request's latent-confidence entropy).
         let screener = self.version_handle(models::SCREENER, None);
-        let (scr_entropy, scr_pred, scr_conf, scr_exec, scr_flops) = match &screener {
+        // The screener must stay cheap: it keeps a pinned replica set
+        // (the scaler skips batcher-less versions), but if it were ever
+        // at zero replicas a cold-start stall here would tax every
+        // admission decision — fall back to the latent entropy instead.
+        let screener_pick = match &screener {
             Some(s) if handle.manifest.input_kind == crate::runtime::InputKind::Tokens => {
+                s.pick_replica().map(|r| (s.clone(), InFlightGuard::new(r)))
+            }
+            // Vision path (or no screener loaded): latent fallback.
+            _ => None,
+        };
+        let (scr_entropy, scr_pred, scr_conf, scr_exec, scr_flops) = match &screener_pick {
+            Some((s, guard)) => {
                 let input = inputgen::batch_for(&s.manifest, &[req.seed], self.shared.cfg.salt);
-                let (o, st) = s.direct.infer(models::SCREENER, input)?;
+                let (o, st) = guard.replica().direct.infer(models::SCREENER, input)?;
                 (
                     o.entropy[0] as f64,
                     o.predicted(0),
@@ -1299,10 +1815,10 @@ impl ServingSystem {
                     s.manifest.flops_per_item(1),
                 )
             }
-            // Vision path (or no screener loaded): use the latent-
-            // confidence entropy the request carries.
-            _ => (req.entropy(), req.label, req.confidence as f32, 0.0, 0.0),
+            // Latent-confidence entropy the request carries.
+            None => (req.entropy(), req.label, req.confidence as f32, 0.0, 0.0),
         };
+        drop(screener_pick);
 
         // 2. Assemble CostInputs from the live feedback signals.
         // Spike reference = 2x nominal per-request joules: the steady
@@ -1474,7 +1990,7 @@ impl ServingSystem {
         // "batched" there is a client error (not MODEL_NOT_FOUND — the
         // model exists and is loaded), and the model-blind auto router
         // falls back to direct.
-        if path == PathKind::Batched && handle.batched.is_none() {
+        if path == PathKind::Batched && !handle.has_batched() {
             if prefer.is_some() {
                 return Err(RuntimeError::InputMismatch(format!(
                     "model {model:?} has no batched path"
@@ -1519,7 +2035,16 @@ impl ServingSystem {
             return Ok(out);
         }
 
-        let batched = handle.batched.as_ref().expect("batched path checked above");
+        // Pin one replica for the whole body: coalescing only works if
+        // every admitted item lands on the *same* batcher. The guard
+        // keeps the replica alive (and its in-flight count honest)
+        // across Phases A–C; at zero replicas this is the cold start.
+        let batch_guard = SystemShared::acquire_replica(&self.shared, &handle)?;
+        let batched = batch_guard
+            .replica()
+            .batched
+            .as_ref()
+            .expect("batched-capable replicas carry a batcher");
 
         // Phase A — per-item admission (screener runs per item; skips
         // answer immediately from cache).
@@ -1727,7 +2252,8 @@ mod tests {
                 .with_adaptive_tau(0.5)
                 .with_adaptive_batch_delay(0.25)
                 .with_adaptive_router(0.25)
-                .with_energy_budget(100.0),
+                .with_energy_budget(100.0)
+                .with_replica_scaler(4, 30.0),
             );
         let sys = ServingSystem::start(cfg).unwrap();
         assert!(sys.control_plane_running());
@@ -1738,6 +2264,16 @@ mod tests {
         // loaded model version), keyed energy_budget.<model>/<version>.
         assert!(
             names.iter().any(|n| n.starts_with("energy_budget.")),
+            "{names:?}"
+        );
+        // One replica scaler per batched-capable version; the screener
+        // (batcher-less) must not get one.
+        assert!(
+            names.iter().any(|n| n.starts_with("replica_scaler.")),
+            "{names:?}"
+        );
+        assert!(
+            !names.iter().any(|n| n.contains(&format!("replica_scaler.{}", models::SCREENER))),
             "{names:?}"
         );
         // batch_delay_us.<model>/<v> loops appear once per version whose
@@ -1893,5 +2429,84 @@ mod tests {
             let b = sys.infer_on(r, PathKind::Batched).unwrap();
             assert_eq!(d.predicted, b.predicted);
         }
+    }
+
+    #[test]
+    fn p2c_indices_are_deterministic_and_in_range() {
+        for n in 1..=7usize {
+            for t in 0..500u64 {
+                let (i, j) = p2c_indices(t, n);
+                assert!(i < n && j < n, "({i},{j}) out of range for n={n}");
+                assert_eq!((i, j), p2c_indices(t, n), "same ticket, same pair");
+            }
+        }
+        // Over many tickets both probes must spread across the set —
+        // a scheduler that always probes replica 0 is no scheduler.
+        let n = 4;
+        let mut seen = [false; 4];
+        for t in 0..64u64 {
+            let (i, j) = p2c_indices(t, n);
+            seen[i] = true;
+            seen[j] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn operator_scale_up_and_down_converges() {
+        let Some(root) = repo_root() else { return };
+        let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+        let (ready, target, _) = sys.replica_counts(models::DISTILBERT, None).unwrap();
+        assert_eq!((ready, target), (1, 1), "versions boot with one replica");
+
+        sys.scale_replicas(models::DISTILBERT, None, 3).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while sys.replica_counts(models::DISTILBERT, None).unwrap().0 != 3 {
+            assert!(Instant::now() < deadline, "scale-up never converged");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // All three replicas serve; p2c keeps answers identical.
+        let reqs = requests(6, models::DISTILBERT);
+        for r in &reqs {
+            let d = sys.infer_on(r, PathKind::Direct).unwrap();
+            let b = sys.infer_on(r, PathKind::Batched).unwrap();
+            assert_eq!(d.predicted, b.predicted);
+        }
+
+        sys.scale_replicas(models::DISTILBERT, None, 1).unwrap();
+        while sys.replica_counts(models::DISTILBERT, None).unwrap().0 != 1 {
+            assert!(Instant::now() < deadline, "scale-down never converged");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(sys.infer_on(&reqs[0], PathKind::Direct).is_ok());
+    }
+
+    #[test]
+    fn scale_to_zero_cold_starts_on_next_request() {
+        let Some(root) = repo_root() else { return };
+        let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+        let reg = crate::telemetry::MetricsRegistry::global();
+        let cold0 = reg.counter_value("gf_cold_starts_total").unwrap_or(0);
+
+        sys.scale_replicas(models::RESNET, None, 0).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while sys.replica_counts(models::RESNET, None).unwrap().0 != 0 {
+            assert!(Instant::now() < deadline, "scale-to-zero never converged");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Still resolvable — scale-to-zero is not an unload.
+        assert!(sys.version_handle(models::RESNET, None).is_some());
+
+        // The next request cold-starts instead of 503ing, and exactly
+        // one cold start is counted for it.
+        let r = requests(1, models::RESNET).pop().unwrap();
+        let res = sys.infer_on(&r, PathKind::Direct).unwrap();
+        assert!(res.latency_secs > 0.0);
+        assert_eq!(
+            reg.counter_value("gf_cold_starts_total").unwrap_or(0) - cold0,
+            1,
+            "one cold start for the wake-up request"
+        );
+        assert!(sys.replica_counts(models::RESNET, None).unwrap().0 >= 1);
     }
 }

@@ -44,6 +44,12 @@ use crate::telemetry::MetricsRegistry;
 pub enum JobKind {
     Load,
     Unload,
+    /// Replica-set reconciliation (spawn/retire replicas toward the
+    /// scaler's target). Like unloads, scale jobs bypass the queue
+    /// bound: they are issued by the control tick (naturally
+    /// rate-limited) and refusing one would strand a version's replica
+    /// set away from its published target.
+    Scale,
 }
 
 /// One lifecycle job as handed to [`LifecycleExecutor::submit_all`].
@@ -412,6 +418,8 @@ mod tests {
             .submit("a", 4, JobKind::Load, Box::new(|| {}), Box::new(|| {}))
             .unwrap_err();
         assert!(matches!(err, RuntimeError::Backpressure(_)), "{err}");
+        // Scale jobs (control-tick driven) bypass the bound like unloads.
+        ex.submit("a", 5, JobKind::Scale, Box::new(|| {}), Box::new(|| {})).unwrap();
         tx.send(()).unwrap();
     }
 

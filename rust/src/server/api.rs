@@ -452,6 +452,14 @@ pub fn model_metadata_json(
         ("instances", json::num(instances as f64)),
         ("batched_path", Value::Bool(h.has_batched())),
         (
+            "replicas",
+            json::obj(vec![
+                ("ready", json::num(h.replica_count() as f64)),
+                ("target", json::num(h.target_replicas() as f64)),
+                ("in_flight", json::num(h.in_flight() as f64)),
+            ]),
+        ),
+        (
             "queue",
             json::obj(vec![
                 ("depth", json::num(h.queue_depth() as f64)),

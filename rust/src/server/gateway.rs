@@ -616,20 +616,44 @@ fn model_metadata(name: &str, version: Option<u64>, system: &ServingSystem) -> H
 }
 
 /// `POST /v2/repository/index`: every registered model with per-version
-/// lifecycle state and load stats (Triton's repository-index API).
+/// lifecycle state and load stats (Triton's repository-index API), the
+/// model-level state rollup, the aggregate ready-replica count, and —
+/// when a version sits in `Failed` — its reason at the model level, so
+/// an operator sweeping the index sees the failure without expanding
+/// every version array.
 fn repository_index(system: &ServingSystem) -> HttpResponse {
     let models: Vec<Value> = system
         .registry()
         .index()
         .iter()
         .map(|(name, views)| {
-            json::obj(vec![
+            let mut fields = vec![
                 ("name", json::s(name)),
+                ("state", json::s(api::aggregate_state(views))),
+                // Ready replicas summed over this model's serving
+                // versions (0 while unloaded or scaled to zero).
                 (
-                    "versions",
-                    Value::Arr(views.iter().map(api::version_view_json).collect()),
+                    "replicas",
+                    json::num(
+                        views
+                            .iter()
+                            .filter_map(|v| system.replica_counts(name, Some(v.version)))
+                            .map(|(ready, _, _)| ready)
+                            .sum::<usize>() as f64,
+                    ),
                 ),
-            ])
+            ];
+            if let Some(reason) = views.iter().find_map(|v| match &v.state {
+                crate::runtime::registry::ModelState::Failed { reason } => Some(reason.clone()),
+                _ => None,
+            }) {
+                fields.push(("failed_reason", json::s(&reason)));
+            }
+            fields.push((
+                "versions",
+                Value::Arr(views.iter().map(api::version_view_json).collect()),
+            ));
+            json::obj(fields)
         })
         .collect();
     HttpResponse::ok_json(

@@ -14,10 +14,16 @@
 //! * [`batching`] — an event-driven model of the dynamic batcher (queue +
 //!   delay window + serially-busy server) with a control-tick callback, so
 //!   the control plane's AIMD delay loop can be exercised deterministically.
+//! * [`replica`] — a discrete-tick model of a version's replica set under
+//!   the [`crate::control::ReplicaScaler`] law with lagged spawns and a
+//!   cold-start wait, proving the scale-up → scale-down → scale-to-zero →
+//!   cold-start trajectory deterministically.
 
 pub mod batching;
 pub mod landscape;
+pub mod replica;
 pub mod serving;
 
 pub use batching::{simulate_batching, BatchSimConfig, BatchSimReport};
+pub use replica::{simulate_replicas, ReplicaSimConfig, ReplicaSimReport};
 pub use serving::{simulate, SimConfig, SimReport};

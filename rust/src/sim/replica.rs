@@ -1,0 +1,251 @@
+//! Deterministic replica-autoscaling simulation: the test bench for the
+//! [`ReplicaScaler`] control law against a lagged plant.
+//!
+//! Discrete-tick model of a version's replica set: each tick an offered
+//! load lands in a backlog, ready replicas drain it at
+//! `per_replica_capacity` requests per tick, and the scaler law reads
+//! the backlog (in replica-capacity units — the same signal shape the
+//! live `replica_scaler.<model>/<version>` loop computes) and moves a
+//! target. Actuation is **lagged**, as in the real system: a scale-up
+//! decided now produces a ready replica only `spawn_delay_ticks` later
+//! (the reconcile + engine spawn), and a wake-up from zero pays the
+//! longer `cold_start_ticks`. Requests arriving at zero replicas are
+//! **queued behind the cold start, never dropped** — the sim mirrors
+//! the serving path's cold-start wait instead of a 503.
+//!
+//! This is how the scale-up / scale-down / scale-to-zero / cold-start
+//! trajectory is proven deterministically (no engines, no clocks, no
+//! sleeps); the artifact-gated integration tests then replay the same
+//! story on real engine replicas.
+
+use crate::control::law::ControlLaw;
+use crate::control::ReplicaScaler;
+
+/// Plant + law parameters for one run.
+#[derive(Debug, Clone)]
+pub struct ReplicaSimConfig {
+    /// Control-tick length (sim seconds).
+    pub tick: f64,
+    /// Requests one ready replica drains per tick.
+    pub per_replica_capacity: f64,
+    /// Ticks between a scale-up decision and the replica serving
+    /// (reconcile + warm engine spawn).
+    pub spawn_delay_ticks: usize,
+    /// Ticks a wake-up from zero replicas takes (cold compile).
+    pub cold_start_ticks: usize,
+    /// Scaler law parameters (mirror `ReplicaScalerConfig`).
+    pub max_replicas: usize,
+    pub up_threshold: f64,
+    pub down_threshold: f64,
+    /// Seconds of zero demand before the last replica retires.
+    pub idle_secs: f64,
+}
+
+impl Default for ReplicaSimConfig {
+    fn default() -> Self {
+        ReplicaSimConfig {
+            tick: 1.0,
+            per_replica_capacity: 4.0,
+            spawn_delay_ticks: 2,
+            cold_start_ticks: 4,
+            max_replicas: 6,
+            up_threshold: 0.8,
+            down_threshold: 0.4,
+            idle_secs: 10.0,
+        }
+    }
+}
+
+/// Aggregate outcome of one run.
+#[derive(Debug, Clone)]
+pub struct ReplicaSimReport {
+    /// Ready replicas at the end of each tick.
+    pub replicas: Vec<usize>,
+    /// Scaler target at the end of each tick.
+    pub targets: Vec<usize>,
+    /// Requests completed over the run.
+    pub served: f64,
+    /// Requests still queued when the trace ended.
+    pub backlog: f64,
+    /// Wake-ups from zero replicas (the sim's `gf_cold_starts_total`).
+    pub cold_starts: usize,
+    /// Ticks the first cold-started request waited before any capacity
+    /// existed to serve it (None if the run never cold-started).
+    pub cold_start_wait_ticks: Option<usize>,
+}
+
+impl ReplicaSimReport {
+    pub fn peak_replicas(&self) -> usize {
+        self.replicas.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Run the scaler against `offered` (requests arriving per tick). The
+/// plant starts with one ready replica and target 1, like a freshly
+/// loaded version.
+pub fn simulate_replicas(offered: &[f64], cfg: &ReplicaSimConfig) -> ReplicaSimReport {
+    assert!(cfg.per_replica_capacity > 0.0, "capacity must be positive");
+    let mut law = ReplicaScaler::new(
+        1.0,
+        cfg.max_replicas.max(1) as f64,
+        cfg.up_threshold,
+        cfg.down_threshold,
+        cfg.idle_secs,
+    );
+    let mut ready = 1usize;
+    // Pending spawns: countdown of ticks until each becomes ready.
+    let mut spawning: Vec<usize> = Vec::new();
+    let mut backlog = 0.0f64;
+    let mut served = 0.0f64;
+    let mut cold_starts = 0usize;
+    let mut cold_wait: Option<usize> = None;
+    let mut cold_waiting_since: Option<usize> = None;
+
+    let mut replicas = Vec::with_capacity(offered.len());
+    let mut targets = Vec::with_capacity(offered.len());
+
+    for (t, &load) in offered.iter().enumerate() {
+        backlog += load.max(0.0);
+
+        // Spawns in flight mature by one tick.
+        for s in &mut spawning {
+            *s = s.saturating_sub(1);
+        }
+        let matured = spawning.iter().filter(|&&s| s == 0).count();
+        spawning.retain(|&s| s > 0);
+        ready += matured;
+        if ready > 0 {
+            if let (Some(since), None) = (cold_waiting_since, cold_wait) {
+                cold_wait = Some(t - since);
+            }
+            cold_waiting_since = None;
+        }
+
+        // Cold start: demand hits an empty replica set with no spawn in
+        // flight. The first parked request elects the spawn (counted
+        // once), everyone queues behind it. Placed after maturation so
+        // a fresh spawn waits its full `cold_start_ticks` — it must not
+        // lose a tick in the instant it was born.
+        if ready == 0 && backlog > 0.0 && spawning.is_empty() {
+            cold_starts += 1;
+            spawning.push(cfg.cold_start_ticks);
+            if cold_waiting_since.is_none() {
+                cold_waiting_since = Some(t);
+            }
+        }
+
+        // Ready replicas drain the backlog.
+        let capacity = ready as f64 * cfg.per_replica_capacity;
+        let drained = backlog.min(capacity);
+        backlog -= drained;
+        served += drained;
+
+        // The scaler reads demand in replica-capacity units — backlog
+        // left after this tick plus what arrived, so a step that the
+        // current set absorbs exactly still registers as load.
+        let signal = (backlog + load.max(0.0)) / cfg.per_replica_capacity;
+        let target = law.step(signal, cfg.tick).round().max(0.0) as usize;
+
+        // Lagged actuation toward the target, one replica per tick
+        // (mirrors the reconcile walking one step at a time).
+        let committed = ready + spawning.len();
+        if target > committed {
+            spawning.push(cfg.spawn_delay_ticks);
+        } else if target < ready && ready > 0 {
+            // Retire the newest replica; drains are fast in sim terms.
+            ready -= 1;
+        }
+
+        replicas.push(ready);
+        targets.push(target);
+    }
+
+    ReplicaSimReport {
+        replicas,
+        targets,
+        served,
+        backlog,
+        cold_starts,
+        cold_start_wait_ticks: cold_wait,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The ISSUE's acceptance trajectory, end to end: replicas rise
+    /// under a step load, fall when it drops, reach zero after the idle
+    /// window, and a lone wake-up request cold-starts (counted exactly
+    /// once) and completes instead of being dropped.
+    #[test]
+    fn step_load_scales_up_down_to_zero_and_cold_starts() {
+        let cfg = ReplicaSimConfig::default();
+        let mut offered = Vec::new();
+        offered.extend(vec![2.0; 10]); // light: 0.5 replica-units per tick
+        offered.extend(vec![16.0; 30]); // step: 4 replica-units per tick
+        offered.extend(vec![1.0; 20]); // drop back under the down threshold
+        offered.extend(vec![0.0; 15]); // silence longer than idle_secs
+        let wake_tick = offered.len();
+        offered.push(1.0); // one wake-up request
+        offered.extend(vec![0.0; 8]); // room to serve it
+
+        let rep = simulate_replicas(&offered, &cfg);
+
+        // Scale-up under the step: well past the single boot replica.
+        assert!(rep.peak_replicas() >= 3, "peak {} too low", rep.peak_replicas());
+        // Scale-down once the step ends: before the silence begins the
+        // set is back to one.
+        assert_eq!(rep.replicas[59], 1, "{:?}", rep.replicas);
+        // Scale-to-zero after the idle window.
+        assert_eq!(rep.replicas[wake_tick - 1], 0, "{:?}", rep.replicas);
+        // The wake-up cold-starts exactly once, waits the cold-start
+        // lag, and the request is served — never dropped.
+        assert_eq!(rep.cold_starts, 1);
+        assert_eq!(rep.cold_start_wait_ticks, Some(cfg.cold_start_ticks));
+        assert_eq!(rep.backlog, 0.0, "wake-up request must complete");
+        assert!(rep.replicas[rep.replicas.len() - 1] >= 1, "woken set serves again");
+        // Everything offered was eventually served.
+        let total: f64 = offered.iter().sum();
+        assert!((rep.served - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steady_light_load_holds_one_replica() {
+        let cfg = ReplicaSimConfig::default();
+        let offered = vec![1.0; 40]; // 0.25 replica-units per tick
+        let rep = simulate_replicas(&offered, &cfg);
+        assert!(rep.replicas.iter().all(|&r| r == 1), "{:?}", rep.replicas);
+        assert_eq!(rep.cold_starts, 0);
+    }
+
+    #[test]
+    fn scale_up_is_capped_at_max_replicas() {
+        let cfg = ReplicaSimConfig { max_replicas: 3, ..Default::default() };
+        let offered = vec![100.0; 40]; // way past capacity
+        let rep = simulate_replicas(&offered, &cfg);
+        assert_eq!(rep.peak_replicas(), 3, "{:?}", rep.replicas);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = ReplicaSimConfig::default();
+        let mut offered = vec![2.0; 10];
+        offered.extend(vec![20.0; 20]);
+        offered.extend(vec![0.0; 20]);
+        let a = simulate_replicas(&offered, &cfg);
+        let b = simulate_replicas(&offered, &cfg);
+        assert_eq!(a.replicas, b.replicas);
+        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.cold_starts, b.cold_starts);
+        assert_eq!(a.served, b.served);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let rep = simulate_replicas(&[], &ReplicaSimConfig::default());
+        assert_eq!(rep.cold_starts, 0);
+        assert!(rep.replicas.is_empty());
+        assert_eq!(rep.served, 0.0);
+    }
+}

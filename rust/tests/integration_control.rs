@@ -10,13 +10,19 @@
 //!    traffic where the static delay window violates it.
 //! 3. The PID law converges faster than the pure-integral tracker on a
 //!    lagged plant, with both landing on the setpoint.
+//! 4. The ReplicaScaler converges a lagged replica-set plant (spawns
+//!    become ready two ticks after the decision) to a stable level at
+//!    each demand phase without oscillating, and never scales a
+//!    nonzero-demand set to zero.
 
 use greenflow::batching::policy::BatcherPolicy;
 use greenflow::control::law::{Aimd, ControlLaw, Pid, SetpointTracker};
 use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::{AdaptiveTauPolicy, AdmissionController, ControllerConfig};
-use greenflow::sim::{simulate, simulate_batching, BatchSimConfig, SimConfig};
+use greenflow::sim::{
+    simulate, simulate_batching, simulate_replicas, BatchSimConfig, ReplicaSimConfig, SimConfig,
+};
 use greenflow::util::Rng;
 use greenflow::workload::arrival::{arrival_times, ArrivalProcess};
 use greenflow::workload::stream::{Request, RequestStream, StreamConfig};
@@ -204,6 +210,55 @@ fn pid_converges_faster_than_the_integral_tracker_on_a_lagged_plant() {
         "PID ({pid_settle} ticks) should settle well before the \
          integral tracker ({tracker_settle} ticks)"
     );
+}
+
+#[test]
+fn replica_scaler_converges_on_a_lagged_plant_without_oscillating() {
+    // The replica sim *is* a lagged plant: a scale-up decided now
+    // produces a ready replica only spawn_delay_ticks later, the shape
+    // that makes naive threshold scalers ring (decide up again while
+    // the first spawn is still in flight, then overshoot and flap).
+    let cfg = ReplicaSimConfig::default(); // 4 req/replica/tick, 2-tick spawn lag
+    let mut offered = Vec::new();
+    offered.extend(vec![12.0; 60]); // 3 replica-units of demand
+    offered.extend(vec![4.0; 60]); // 1 replica-unit
+    offered.extend(vec![0.2; 40]); // a trickle
+    let rep = simulate_replicas(&offered, &cfg);
+
+    // Phase A settles: one level held through the whole tail, with
+    // enough capacity for 3 units under the 0.8 up-threshold and zero
+    // steady-state backlog. The exact level depends on the transient
+    // overshoot (the hysteresis band is deliberately wide), but it must
+    // stop moving.
+    let a_tail = &rep.replicas[40..60];
+    assert!(a_tail.iter().all(|&r| r == a_tail[0]), "phase A oscillates: {a_tail:?}");
+    assert!(
+        a_tail[0] >= 4 && a_tail[0] <= cfg.max_replicas,
+        "phase A level {} out of band",
+        a_tail[0]
+    );
+
+    // Phase B: demand drops to 1 unit and the band walks the set down
+    // to 3 — the first level whose down-threshold the signal no longer
+    // undercuts — wherever phase A landed.
+    let b_tail = &rep.replicas[100..120];
+    assert!(b_tail.iter().all(|&r| r == 3), "phase B should park at 3: {b_tail:?}");
+
+    // Phase C: trickle demand holds exactly one replica. Nonzero load
+    // never scales to zero — that takes a fully idle window.
+    let c_tail = &rep.replicas[140..160];
+    assert!(c_tail.iter().all(|&r| r == 1), "phase C should hold 1: {c_tail:?}");
+    assert_eq!(rep.cold_starts, 0);
+
+    // Every offered request was served; nothing queued at the end.
+    let total: f64 = offered.iter().sum();
+    assert!((rep.served - total).abs() < 1e-9, "served {} of {total}", rep.served);
+    assert_eq!(rep.backlog, 0.0);
+
+    // Deterministic: the same trace replays the same trajectory.
+    let again = simulate_replicas(&offered, &cfg);
+    assert_eq!(rep.replicas, again.replicas);
+    assert_eq!(rep.targets, again.targets);
 }
 
 #[test]

@@ -13,7 +13,10 @@
 //! second half needs real artifacts + a real PJRT backend and drives
 //! the acceptance round-trip: load → infer → unload mid-traffic → 503
 //! → reload → infer, all on one keep-alive connection with no server
-//! restart, plus infer-on-Ready-while-another-is-Loading.
+//! restart, plus infer-on-Ready-while-another-is-Loading and the
+//! scale-to-zero → cold-start wake-up (idle window retires the last
+//! replica; the next request queues behind the respawn and serves —
+//! never a 503 — counting `gf_cold_starts_total` exactly once).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -576,6 +579,59 @@ fn v2_batch_body_coalesces_into_buckets() {
         buckets.iter().any(|&b| b >= 2),
         "16-item body executed as singletons: {buckets:?}"
     );
+}
+
+#[test]
+fn scale_to_zero_then_cold_start_over_live_gateway() {
+    let Some(root) = repo_root() else { return };
+    let _serial = GATED.lock().unwrap_or_else(|e| e.into_inner());
+    // Aggressive idle window + fast ticks so the scaler retires the
+    // last replica in milliseconds instead of the production minutes.
+    let cfg = SystemConfig::new(root).with_control(
+        greenflow::control::ControlPlaneConfig { tick_secs: 0.02, ..Default::default() }
+            .with_replica_scaler(2, 0.3),
+    );
+    let sys = Arc::new(ServingSystem::start(cfg).unwrap());
+    let gw = Gateway::start(sys.clone(), 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+    let model = models::DISTILBERT;
+    let infer_path = format!("/v2/models/{model}/infer");
+
+    // Warm request: the boot replica serves it, no cold start.
+    let resp = client.post_json(&infer_path, r#"{"seed": 1}"#).unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    let cold0 = MetricsRegistry::global().counter_value("gf_cold_starts_total").unwrap_or(0);
+
+    // Idle past the window: the scaler walks the set down to zero.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (ready, _, _) = sys.replica_counts(model, None).expect("version stays resolvable");
+        if ready == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "never scaled to zero (ready {ready})");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // Scaled to zero, the version is still READY to the v2 surface —
+    // scale-to-zero is invisible to clients except as latency.
+    let meta = client.get(&format!("/v2/models/{model}")).unwrap().json().unwrap();
+    assert_eq!(meta.get("ready").unwrap(), &Value::Bool(true));
+
+    // The wake-up request queues behind the cold start and completes —
+    // a 200, never a 503 — and counts exactly one cold start.
+    let resp = client.post_json(&infer_path, r#"{"seed": 2}"#).unwrap();
+    assert_eq!(resp.status, 200, "cold start must serve: {:?}", resp.body_str());
+    let cold1 = MetricsRegistry::global().counter_value("gf_cold_starts_total").unwrap_or(0);
+    assert_eq!(cold1 - cold0, 1, "exactly one cold start");
+    let (ready, _, _) = sys.replica_counts(model, None).unwrap();
+    assert!(ready >= 1, "cold start left a live replica");
+    assert!(
+        MetricsRegistry::global().gauge(&format!("gf_cold_start_ms.{model}.1")).get() > 0.0,
+        "cold-start latency gauge recorded"
+    );
+
+    drop(client);
+    drop(gw);
 }
 
 /// Recursive copy for building a scratch repository out of the real

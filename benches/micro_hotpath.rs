@@ -156,6 +156,43 @@ fn main() {
         std::hint::black_box(acc_s);
     }
 
+    // ---- response-cache probe (sharded vs single-mutex) -----------------
+    // The per-request cache consult the coalescing subsystem runs on
+    // every submit: signature hash + shard pick + one shard-lock get.
+    // The single-mutex row is the pre-shard baseline for comparison
+    // (uncontended here; sharding pays off under concurrent load).
+    // Gated in CI as `cache_read_ns` (docs/BENCH.md).
+    {
+        use greenflow::controller::cache::{CachedResponse, ResponseCache};
+        use greenflow::pipeline::ShardedResponseCache;
+        let sharded = ShardedResponseCache::new(4096);
+        let single = std::sync::Mutex::new(ResponseCache::new(4096));
+        for seed in 0..1024u64 {
+            let sig = ResponseCache::signature("bench", 1, seed, 1024);
+            let resp = CachedResponse { label: seed as u32, confidence: 0.9 };
+            sharded.put(sig, resp);
+            single.lock().unwrap().put(sig, resp);
+        }
+        let mut next = 0u64;
+        let mut acc_c = 0u64;
+        results.push(bench_fn("cache.sharded_get", 1000, iters, || {
+            let sig = ResponseCache::signature("bench", 1, next, 1024);
+            next = (next + 1) & 1023;
+            if let Some(hit) = std::hint::black_box(&sharded).get(sig) {
+                acc_c += hit.label as u64;
+            }
+        }));
+        let mut next_m = 0u64;
+        results.push(bench_fn("cache.mutex_get", 1000, iters, || {
+            let sig = ResponseCache::signature("bench", 1, next_m, 1024);
+            next_m = (next_m + 1) & 1023;
+            if let Some(hit) = std::hint::black_box(&single).lock().unwrap().get(sig) {
+                acc_c += hit.label as u64;
+            }
+        }));
+        std::hint::black_box(acc_c);
+    }
+
     // ---- energy meter record --------------------------------------------
     let meter = EnergyMeter::new(DeviceProfile::rtx4000_ada(), MeterMode::SimulatedFlops, 16.0);
     results.push(bench_fn("energy_meter.record", 1000, iters, || {

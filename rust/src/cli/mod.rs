@@ -6,12 +6,12 @@
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
 //!                     [--serve-bench N [--model distilbert_mini] [--bench-json out.json]
-//!                      [--bench-conns C]]
+//!                      [--bench-conns C] [--bench-dup-ratio R]]
 //! greenflow repo      <index|load|unload> [--addr 127.0.0.1:8080]
 //!                     [--model NAME] [--version N] [--wait]
 //! greenflow report    --repo artifacts
 //! greenflow ablation  [--requests 1000] [--tau0 0.2] [--tau-inf 0.78] [--k 2.0]
-//!                     [--adaptive-tau 0.58]
+//!                     [--adaptive-tau 0.58] [--duplicate-ratio 0.0]
 //! greenflow landscape [--out -]
 //! greenflow perfgate  --serve-json serve_bench.json [--micro-json micro.json]
 //!                     [--serve-hc-json serve_bench_hc.json]
@@ -26,6 +26,11 @@
 //! spreads them over `C` concurrent connections, default 1), prints
 //! the aggregate throughput, and exits — the self-contained
 //! load-generator smoke the v2 protocol was rebuilt for.
+//! `--bench-dup-ratio R` makes fraction `R` of the requests exact
+//! duplicates of one hot request, exercising the singleflight
+//! coalescing path; the report then carries the realised
+//! `coalesce_hit_rate` and `joules_saved` scraped from
+//! `/v2/admission/stats` (see `docs/COALESCE.md`).
 //!
 //! The `--adaptive-*` / `--energy-budget` flags boot the control plane
 //! ([`crate::control`]): background loops that retune τ, the batcher
@@ -333,8 +338,15 @@ fn cmd_serve(args: &Args) -> i32 {
                     .get("model")
                     .unwrap_or_else(|| crate::models::DISTILBERT.to_string());
                 let conns = args.get_f64("bench-conns").map(|c| c.max(1.0) as usize).unwrap_or(1);
-                let code =
-                    serve_bench(gw.addr(), n, &model, conns, args.get("bench-json").as_deref());
+                let dup_ratio = args.get_f64("bench-dup-ratio").unwrap_or(0.0).clamp(0.0, 1.0);
+                let code = serve_bench(
+                    gw.addr(),
+                    n,
+                    &model,
+                    conns,
+                    dup_ratio,
+                    args.get("bench-json").as_deref(),
+                );
                 gw.shutdown();
                 return code;
             }
@@ -359,6 +371,14 @@ fn cmd_serve(args: &Args) -> i32 {
 /// HTTP hot path (accept loop, parse, route, serialise). `--bench-json`
 /// writes the measurements for the CI perf gate (`greenflow perfgate`).
 ///
+/// `dup_ratio` ∈ [0, 1] sends that fraction of requests with one
+/// shared hot seed (exact duplicates, Bresenham-spread so the mix is
+/// even); the rest get globally unique seeds. Duplicates that overlap
+/// in flight coalesce onto one execution — the report's
+/// `coalesce_hit_rate`/`joules_saved` (scraped from
+/// `/v2/admission/stats` after the run) quantify the saving. In the
+/// health fallback both are reported as 0.
+///
 /// Latencies are pooled across connections; throughput is aggregate
 /// wall-clock (N ÷ elapsed across all workers), i.e. what the server
 /// actually sustained, not a per-connection mean.
@@ -367,6 +387,7 @@ fn serve_bench(
     n: usize,
     model: &str,
     conns: usize,
+    dup_ratio: f64,
     json_out: Option<&str>,
 ) -> i32 {
     use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -414,7 +435,19 @@ fn serve_bench(
                     }
                 };
                 let mut local = Vec::with_capacity(quota);
-                for seed in 0..quota {
+                // Bresenham accumulator: exactly ⌊quota·R⌋±1 requests
+                // reuse the hot seed, evenly interleaved — no RNG, so
+                // runs are reproducible.
+                let mut dup_acc = 0.0f64;
+                for i in 0..quota {
+                    dup_acc += dup_ratio;
+                    let seed = if dup_acc >= 1.0 {
+                        dup_acc -= 1.0;
+                        0 // the shared hot request every duplicate collapses onto
+                    } else {
+                        // Globally unique across workers.
+                        1 + (worker + conns * i) as u64
+                    };
                     let t_req = std::time::Instant::now();
                     let result = if ready {
                         client.post_json(infer_path, &format!("{{\"seed\": {seed}}}"))
@@ -432,7 +465,7 @@ fn serve_bench(
                             // The server rotates connections after 100k
                             // requests (Connection: close); reconnect
                             // instead of dying on the next write.
-                            if !resp.keep_alive() && seed + 1 < quota {
+                            if !resp.keep_alive() && i + 1 < quota {
                                 client = match crate::server::HttpClient::connect(addr) {
                                     Ok(c) => c,
                                     Err(e) => {
@@ -464,6 +497,26 @@ fn serve_bench(
     let (ok, err) = (ok.load(Ordering::Relaxed), err.load(Ordering::Relaxed));
     let p50 = crate::stats::quantile(&latencies, 0.5);
     let p95 = crate::stats::quantile(&latencies, 0.95);
+    // Post-run coalescing gains, scraped from the server's own stats
+    // endpoint (zero in the health fallback — no executions to save).
+    let (coalesce_hit_rate, joules_saved, executions) =
+        match crate::server::HttpClient::connect(addr)
+            .ok()
+            .and_then(|mut c| c.get("/v2/admission/stats").ok())
+            .and_then(|r| r.json().ok())
+        {
+            Some(v) => {
+                let co = |key: &str| {
+                    v.get("coalesce")
+                        .ok()
+                        .and_then(|c| c.get(key).ok())
+                        .and_then(|x| x.as_f64().ok())
+                        .unwrap_or(0.0)
+                };
+                (co("hit_rate"), co("joules_saved"), co("executions"))
+            }
+            None => (0.0, 0.0, 0.0),
+        };
     println!(
         "serve-bench[{target}]: {n} round-trips across {conns} keep-alive connection(s) \
          in {:.3} s ({:.0} req/s, p50 {:.1} µs, p95 {:.1} µs), {ok} ok / {err} error responses",
@@ -472,6 +525,14 @@ fn serve_bench(
         p50 * 1e6,
         p95 * 1e6,
     );
+    if dup_ratio > 0.0 {
+        println!(
+            "serve-bench[coalesce]: dup-ratio {dup_ratio:.2}, {executions:.0} executions \
+             ({:.0} exec/s), coalesce hit rate {:.1}%, {joules_saved:.3} J saved",
+            executions / secs,
+            coalesce_hit_rate * 100.0,
+        );
+    }
     if let Some(path) = json_out {
         let report = crate::json::obj(vec![
             ("schema", crate::json::s("greenflow.serve-bench/1")),
@@ -479,10 +540,15 @@ fn serve_bench(
             ("model", crate::json::s(model)),
             ("requests", crate::json::num(n as f64)),
             ("connections", crate::json::num(conns as f64)),
+            ("dup_ratio", crate::json::num(dup_ratio)),
             ("seconds", crate::json::num(secs)),
             ("throughput_rps", crate::json::num(n as f64 / secs)),
             ("p50_latency_us", crate::json::num(p50 * 1e6)),
             ("p95_latency_us", crate::json::num(p95 * 1e6)),
+            ("executions", crate::json::num(executions)),
+            ("executions_per_sec", crate::json::num(executions / secs)),
+            ("coalesce_hit_rate", crate::json::num(coalesce_hit_rate)),
+            ("joules_saved", crate::json::num(joules_saved)),
             ("ok", crate::json::num(ok as f64)),
             ("errors", crate::json::num(err as f64)),
         ]);
@@ -503,7 +569,11 @@ fn cmd_ablation(args: &Args) -> i32 {
     let times = arrival_times(&mut arr, n, &mut rng);
     let reqs = RequestStream::new(StreamConfig::default(), seed ^ 1).take(&times);
 
-    let cfg = SimConfig { seed, ..SimConfig::table3_default() };
+    // `--duplicate-ratio R`: fraction of requests that are exact
+    // duplicates of an in-flight one, answered by singleflight
+    // coalescing instead of execution (docs/COALESCE.md).
+    let dup = args.get_f64("duplicate-ratio").unwrap_or(0.0).clamp(0.0, 1.0);
+    let cfg = SimConfig { seed, duplicate_ratio: dup, ..SimConfig::table3_default() };
     let std_report = simulate(&mut OpenLoop, &reqs, &cfg);
     let mut bio = AdmissionController::new(controller_config(args));
     let bio_report = simulate(&mut bio, &reqs, &cfg);
@@ -554,6 +624,22 @@ fn cmd_ablation(args: &Args) -> i32 {
         pct(std_report.energy_kwh, bio_report.energy_kwh),
         format!("{:.6}", adaptive_report.energy_kwh),
     ]);
+    if dup > 0.0 {
+        t.row(vec![
+            "Coalesced".into(),
+            format!("{}", std_report.coalesced),
+            format!("{}", bio_report.coalesced),
+            format!("{:+}", bio_report.coalesced as i64 - std_report.coalesced as i64),
+            format!("{}", adaptive_report.coalesced),
+        ]);
+        t.row(vec![
+            "Energy/Answer (J)".into(),
+            format!("{:.4}", std_report.energy_per_answer()),
+            format!("{:.4}", bio_report.energy_per_answer()),
+            pct(std_report.energy_per_answer(), bio_report.energy_per_answer()),
+            format!("{:.4}", adaptive_report.energy_per_answer()),
+        ]);
+    }
     print!("{}", t.render());
     0
 }
@@ -578,6 +664,7 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 /// ```text
 /// greenflow perfgate --serve-json serve_bench.json [--micro-json micro.json]
 ///                    [--serve-hc-json serve_bench_hc.json]
+///                    [--serve-dup-json serve_bench_dup.json]
 ///                    --out BENCH_6.json [--label pr6]
 ///                    [--baseline benches/baseline.json] [--max-regress 0.20]
 ///                    [--requests 2000]
@@ -587,14 +674,22 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 /// (HTTP round-trip throughput + latency percentiles), optionally a
 /// second high-concurrency run (`--bench-conns 256 --bench-json
 /// serve_bench_hc.json`, passed as `--serve-hc-json`) gated as
-/// `hc_throughput_rps`, and optionally
+/// `hc_throughput_rps`, optionally a duplicate-heavy run
+/// (`--bench-dup-ratio 0.8`, passed as `--serve-dup-json`) embedded as
+/// `serve_bench_dup`, and optionally
 /// the `--json` output of `cargo bench --bench micro_hotpath`
-/// (per-component timings, embedded verbatim). Four gated numbers are
+/// (per-component timings, embedded verbatim). Five gated numbers are
 /// measured in-process so the gate has no backend dependency: the
 /// `Adaptive<T>` hot-path read (ns), the replica-scheduler
-/// power-of-two-choices pick (`sched_read_ns`), the cold-start
+/// power-of-two-choices pick (`sched_read_ns`), the sharded
+/// response-cache probe (`cache_read_ns` — the per-request cost the
+/// coalescing subsystem added to every submit), the cold-start
 /// lifecycle-executor round-trip (`cold_start_ms`, engine compile
-/// excluded), and the deterministic admission-sim admit rate. Exits 1
+/// excluded), and the deterministic admission-sim admit rate. When a
+/// serve-bench input carries coalescing gains (the `--serve-dup-json`
+/// report preferred, else the main one), `coalesce_hit_rate` and
+/// `joules_saved` are recorded in the
+/// snapshot (never gated — they depend on the duplicate mix). Exits 1
 /// when any pinned baseline regresses by more than `--max-regress`
 /// (direction-aware: throughput may not drop, latency and read/dispatch
 /// costs may not grow, admit rate may not drift either way).
@@ -641,6 +736,19 @@ fn cmd_perfgate(args: &Args) -> i32 {
         eprintln!("perfgate: --serve-hc-json input is missing throughput_rps");
         return 1;
     }
+    // Optional duplicate-heavy serve-bench (`--bench-dup-ratio` run):
+    // embedded verbatim, and preferred as the source of the recorded
+    // coalescing gains (the plain run has no duplicates to coalesce).
+    let serve_dup = match args.get("serve-dup-json") {
+        Some(p) => match read_json_file(&p) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
     let components = match args.get("micro-json") {
         Some(p) => match read_json_file(&p) {
             Ok(v) => v,
@@ -681,6 +789,32 @@ fn cmd_perfgate(args: &Args) -> i32 {
             acc_s += if b < a { b } else { a };
         });
         std::hint::black_box(acc_s);
+        r.mean() * 1e9
+    };
+
+    // Sharded response-cache probe, measured in-process: signature
+    // hash + shard pick + one shard-lock get — the cost the coalescing
+    // subsystem's cache consult adds to every submit. Populated so the
+    // probe exercises real hits, like the serving steady state.
+    let cache_read_ns = {
+        use crate::controller::cache::{CachedResponse, ResponseCache};
+        let cache = crate::pipeline::ShardedResponseCache::new(4096);
+        for seed in 0..1024u64 {
+            cache.put(
+                ResponseCache::signature("perfgate", 1, seed, 1024),
+                CachedResponse { label: seed as u32, confidence: 0.9 },
+            );
+        }
+        let mut next = 0u64;
+        let mut acc_c = 0u64;
+        let r = crate::benchkit::bench_fn("cache.sharded_get", 1000, 200_000, || {
+            let sig = ResponseCache::signature("perfgate", 1, next, 1024);
+            next = (next + 1) & 1023;
+            if let Some(hit) = std::hint::black_box(&cache).get(sig) {
+                acc_c += hit.label as u64;
+            }
+        });
+        std::hint::black_box(acc_c);
         r.mean() * 1e9
     };
 
@@ -725,6 +859,16 @@ fn cmd_perfgate(args: &Args) -> i32 {
     let admit_rate = simulate(&mut bio, &reqs, &sim_cfg).admission_rate();
 
     let label = args.get("label").unwrap_or_else(|| "bench".to_string());
+    // Coalescing gains: from the duplicate-heavy run when one was
+    // passed, else from the main serve-bench run (present when it was
+    // a `--bench-dup-ratio` run; recorded, never gated).
+    let dup_num = |key: &str| {
+        serve_dup
+            .as_ref()
+            .and_then(|v| v.get(key).ok().and_then(|x| x.as_f64().ok()))
+    };
+    let coalesce_hit_rate = dup_num("coalesce_hit_rate").or_else(|| serve_num("coalesce_hit_rate"));
+    let joules_saved = dup_num("joules_saved").or_else(|| serve_num("joules_saved"));
     let mut fields = vec![
         ("schema", json::s("greenflow.bench/1")),
         ("label", json::s(&label)),
@@ -734,14 +878,24 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("admit_rate", json::num(admit_rate)),
         ("adaptive_read_ns", json::num(adaptive_read_ns)),
         ("sched_read_ns", json::num(sched_read_ns)),
+        ("cache_read_ns", json::num(cache_read_ns)),
         ("cold_start_ms", json::num(cold_start_ms)),
     ];
+    if let Some(v) = coalesce_hit_rate {
+        fields.push(("coalesce_hit_rate", json::num(v)));
+    }
+    if let Some(v) = joules_saved {
+        fields.push(("joules_saved", json::num(v)));
+    }
     if let Some(hc) = hc_throughput {
         fields.push(("hc_throughput_rps", json::num(hc)));
     }
     fields.push(("serve_bench", serve));
     if let Some(hc) = serve_hc {
         fields.push(("serve_bench_hc", hc));
+    }
+    if let Some(dup) = serve_dup {
+        fields.push(("serve_bench_dup", dup));
     }
     fields.push(("components", components));
     let bench = json::obj(fields);
@@ -781,6 +935,7 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("admit_rate", admit_rate, Gate::Drift),
         ("adaptive_read_ns", adaptive_read_ns, Gate::Ceiling),
         ("sched_read_ns", sched_read_ns, Gate::Ceiling),
+        ("cache_read_ns", cache_read_ns, Gate::Ceiling),
         ("cold_start_ms", cold_start_ms, Gate::Ceiling),
     ];
     if let Some(hc) = hc_throughput {
@@ -877,6 +1032,14 @@ mod tests {
     }
 
     #[test]
+    fn ablation_with_duplicate_ratio() {
+        assert_eq!(
+            run(&sv(&["ablation", "--requests", "300", "--duplicate-ratio", "0.5"])),
+            0
+        );
+    }
+
+    #[test]
     fn control_config_from_flags() {
         let a = Args::parse(&sv(&[
             "--adaptive-tau",
@@ -916,7 +1079,9 @@ mod tests {
             &serve,
             r#"{"schema": "greenflow.serve-bench/1", "target": "health",
                 "throughput_rps": 5000.0, "p50_latency_us": 100.0,
-                "p95_latency_us": 400.0, "ok": 100, "errors": 0}"#,
+                "p95_latency_us": 400.0, "dup_ratio": 0.8,
+                "coalesce_hit_rate": 0.75, "joules_saved": 12.5,
+                "ok": 100, "errors": 0}"#,
         )
         .unwrap();
         let out = dir.join("BENCH_test.json");
@@ -948,7 +1113,11 @@ mod tests {
         assert!((0.0..=1.0).contains(&admit), "{admit}");
         assert!(bench.get("adaptive_read_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(bench.get("sched_read_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(bench.get("cache_read_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(bench.get("cold_start_ms").unwrap().as_f64().unwrap() > 0.0);
+        // Coalescing gains pass through from the serve-bench input.
+        assert_eq!(bench.get("coalesce_hit_rate").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(bench.get("joules_saved").unwrap().as_f64().unwrap(), 12.5);
 
         // Generous baseline passes; an impossible throughput floor fails;
         // unpinned (null) fields are recorded but never gated.
@@ -1044,6 +1213,37 @@ mod tests {
             ])),
             1
         );
+
+        // Duplicate-heavy input: embedded as serve_bench_dup, and its
+        // coalescing numbers take precedence over the main report's.
+        let serve_dup = dir.join("serve_bench_dup.json");
+        std::fs::write(
+            &serve_dup,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "connections": 64, "throughput_rps": 7000.0,
+                "p50_latency_us": 150.0, "p95_latency_us": 600.0,
+                "dup_ratio": 0.8, "coalesce_hit_rate": 0.6,
+                "joules_saved": 33.0}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--serve-dup-json",
+                serve_dup.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            0
+        );
+        let bench = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(bench.get("coalesce_hit_rate").unwrap().as_f64().unwrap(), 0.6);
+        assert_eq!(bench.get("joules_saved").unwrap().as_f64().unwrap(), 33.0);
+        assert!(bench.get("serve_bench_dup").is_ok());
         let _ = std::fs::remove_dir_all(dir);
     }
 
@@ -1087,6 +1287,22 @@ mod tests {
                 "40",
                 "--bench-conns",
                 "4",
+            ])),
+            0
+        );
+        // Duplicate-heavy mix: exercises the singleflight coalescing
+        // path end-to-end (hot seed shared across connections).
+        assert_eq!(
+            run(&sv(&[
+                "serve",
+                "--repo",
+                root.to_str().unwrap(),
+                "--serve-bench",
+                "40",
+                "--bench-conns",
+                "4",
+                "--bench-dup-ratio",
+                "0.8",
             ])),
             0
         );

@@ -25,6 +25,7 @@ pub struct ResponseCache {
     capacity: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl ResponseCache {
@@ -36,6 +37,7 @@ impl ResponseCache {
             capacity,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -102,6 +104,24 @@ impl ResponseCache {
         removed
     }
 
+    /// Remove an explicit signature set, purging eviction-queue slots
+    /// like [`Self::invalidate`] does. The sharded cache's invalidation
+    /// walk routes each enumerated signature to its owning shard and
+    /// hands that shard its slice through this.
+    pub fn remove_all(&mut self, sigs: &[u64]) -> usize {
+        let mut removed = 0;
+        for sig in sigs {
+            if self.map.remove(sig).is_some() {
+                removed += 1;
+            }
+        }
+        if removed > 0 {
+            let map = &self.map;
+            self.order.retain(|k| map.contains_key(k));
+        }
+        removed
+    }
+
     pub fn get(&mut self, sig: u64) -> Option<CachedResponse> {
         let r = self.map.get(&sig).copied();
         if r.is_some() {
@@ -112,18 +132,39 @@ impl ResponseCache {
         r
     }
 
-    pub fn put(&mut self, sig: u64, resp: CachedResponse) {
+    /// Insert, FIFO-evicting when full. Returns `true` when an older
+    /// entry was evicted to make room (feeds `gf_cache_evictions_total`).
+    pub fn put(&mut self, sig: u64, resp: CachedResponse) -> bool {
         // `order` only ever holds live keys (`invalidate` purges the
         // slots of the entries it drops), so the front of the queue is
         // always a real eviction victim.
+        let mut evicted = false;
         if self.map.len() >= self.capacity && !self.map.contains_key(&sig) {
             if let Some(old) = self.order.pop_front() {
                 self.map.remove(&old);
+                self.evictions += 1;
+                evicted = true;
             }
         }
         if self.map.insert(sig, resp).is_none() {
             self.order.push_back(sig);
         }
+        evicted
+    }
+
+    /// Enumerate the full signature set a (model, version) pair can
+    /// mint — `{base ^ c | c < clamped clusters}` — with the exact
+    /// clamp [`Self::signature`] applies. This is the key set
+    /// [`Self::invalidate`] walks; the singleflight table retires the
+    /// same set on unload so in-flight coalesced entries die with the
+    /// version.
+    pub fn signatures_of(
+        model: &str,
+        version: u64,
+        clusters: u64,
+    ) -> impl Iterator<Item = u64> {
+        let base = Self::base(model, version);
+        (0..clusters.clamp(1, Self::MAX_CLUSTERS)).map(move |c| base ^ c)
     }
 
     pub fn len(&self) -> usize {
@@ -141,6 +182,18 @@ impl ResponseCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 }
 
@@ -260,6 +313,30 @@ mod tests {
         assert_eq!(c.get(a).unwrap().label, 9, "fresh entry survives");
         assert!(c.get(b).is_none(), "oldest entry evicted");
         assert_eq!(c.get(newest).unwrap().label, 3);
+    }
+
+    #[test]
+    fn signatures_of_enumerates_exactly_the_version_space() {
+        // The retirement walk must reach every signature `signature`
+        // can mint for the version — and nothing else.
+        let sigs: Vec<u64> = ResponseCache::signatures_of("m", 3, 10).collect();
+        assert_eq!(sigs.len(), 10);
+        for seed in 0..50u64 {
+            assert!(sigs.contains(&ResponseCache::signature("m", 3, seed, 10)));
+        }
+        assert!(!sigs.contains(&ResponseCache::signature("m", 4, 0, 10)));
+        // Zero clamps to one, like signature/invalidate.
+        assert_eq!(ResponseCache::signatures_of("m", 3, 0).count(), 1);
+    }
+
+    #[test]
+    fn put_reports_evictions() {
+        let mut c = ResponseCache::new(2);
+        assert!(!c.put(1, CachedResponse { label: 0, confidence: 1.0 }));
+        assert!(!c.put(2, CachedResponse { label: 0, confidence: 1.0 }));
+        assert!(!c.put(1, CachedResponse { label: 1, confidence: 1.0 }), "update is not an eviction");
+        assert!(c.put(3, CachedResponse { label: 0, confidence: 1.0 }), "full + new key evicts");
+        assert_eq!(c.evictions(), 1);
     }
 
     #[test]

@@ -49,6 +49,10 @@ struct Inner {
     ewma: Ewma,
     totals: Streaming,
     total_joules: f64,
+    /// Joules an execution *would* have burned but didn't (coalesced
+    /// followers). Never added to `total_joules` — spent and saved are
+    /// disjoint ledgers.
+    saved_joules: f64,
 }
 
 impl EnergyMeter {
@@ -60,6 +64,7 @@ impl EnergyMeter {
                 ewma: Ewma::with_span(ewma_span),
                 totals: Streaming::new(),
                 total_joules: 0.0,
+                saved_joules: 0.0,
             }),
             profile,
             mode,
@@ -95,6 +100,21 @@ impl EnergyMeter {
         self.inner.lock().unwrap().total_joules += joules;
     }
 
+    /// Credit joules an avoided execution would have burned (a
+    /// coalesced follower answered from its leader's result). Kept out
+    /// of `total_joules` and the EWMA: E(x) must keep reflecting what
+    /// executions actually cost.
+    pub fn record_saved(&self, joules: f64) {
+        if joules.is_finite() && joules > 0.0 {
+            self.inner.lock().unwrap().saved_joules += joules;
+        }
+    }
+
+    /// Total joules avoided through coalescing (`gf_joules_saved_total`).
+    pub fn total_joules_saved(&self) -> f64 {
+        self.inner.lock().unwrap().saved_joules
+    }
+
     /// Current rolling joules/request (the controller's E(x) input);
     /// `default` until the first request.
     pub fn ewma_joules(&self, default: f64) -> f64 {
@@ -122,6 +142,7 @@ impl EnergyMeter {
         g.ewma.reset();
         g.totals = Streaming::new();
         g.total_joules = 0.0;
+        g.saved_joules = 0.0;
     }
 }
 
@@ -185,9 +206,25 @@ mod tests {
     fn reset_clears() {
         let m = meter(MeterMode::SimulatedFlops);
         m.record(1e9, 0.0);
+        m.record_saved(1.0);
         m.reset();
         assert_eq!(m.total_joules(), 0.0);
+        assert_eq!(m.total_joules_saved(), 0.0);
         assert_eq!(m.per_request_stats().0, 0);
+    }
+
+    #[test]
+    fn saved_joules_stay_out_of_spent_ledger() {
+        let m = meter(MeterMode::SimulatedFlops);
+        let spent = m.record(1e9, 0.0).joules;
+        m.record_saved(spent);
+        m.record_saved(spent);
+        m.record_saved(f64::NAN); // ignored
+        m.record_saved(-1.0); // ignored
+        assert!((m.total_joules_saved() - 2.0 * spent).abs() < 1e-12);
+        assert!((m.total_joules() - spent).abs() < 1e-12, "spent unchanged");
+        let (n, _, _) = m.per_request_stats();
+        assert_eq!(n, 1, "EWMA/totals see only real executions");
     }
 
     #[test]

@@ -26,13 +26,15 @@
 //! through the same lifecycle executor (docs/SCALING.md).
 
 pub mod batched;
+pub mod coalesce;
 pub mod direct;
 pub mod system;
 pub mod worker;
 
 pub use batched::BatchedPath;
+pub use coalesce::{ShardedResponseCache, SingleflightTable};
 pub use direct::DirectPath;
 pub use system::{
-    p2c_indices, InferResult, ModelControl, ServingSystem, SubmitOptions, SystemConfig,
+    p2c_indices, InferResult, ModelControl, Served, ServingSystem, SubmitOptions, SystemConfig,
 };
 pub use worker::{InstancePool, Job};

@@ -70,6 +70,9 @@ use crate::controller::cost::CostInputs;
 use crate::controller::{AdmissionController, ControllerConfig, Decision};
 use crate::energy::meter::{EnergyMeter, MeterMode};
 use crate::energy::profile::DeviceProfile;
+use crate::pipeline::coalesce::{
+    CoalescedAnswer, Follower, FollowerVerdict, Join, ShardedResponseCache, SingleflightTable,
+};
 use crate::models;
 use crate::models::inputgen;
 use crate::router::{PathKind, RoutePolicy, Router};
@@ -257,6 +260,32 @@ impl SubmitOptions {
     }
 }
 
+/// Who actually produced a response's answer — `bucket: 0` alone cannot
+/// distinguish a cache answer from a bucket-0 execution, and a coalesced
+/// follower looks like neither. Serialized on the wire as the `served`
+/// field (docs/API.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Served {
+    /// A real engine execution ran for this request.
+    Model,
+    /// Admission skipped inference; answered from the response cache
+    /// (or the screener's argmax on a cache miss).
+    Cache,
+    /// A concurrent duplicate: answered from the in-flight leader's
+    /// result without executing (joules saved).
+    Coalesced,
+}
+
+impl Served {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Served::Model => "model",
+            Served::Cache => "cache",
+            Served::Coalesced => "coalesced",
+        }
+    }
+}
+
 /// Result of serving one request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct InferResult {
@@ -276,6 +305,8 @@ pub struct InferResult {
     /// J(x) and τ(t) at decision time (NaN when open loop).
     pub j: f64,
     pub tau: f64,
+    /// Who produced the answer (engine / cache / coalesced leader).
+    pub served: Served,
 }
 
 /// One engine replica: a direct engine plus (for batched-capable
@@ -580,7 +611,10 @@ struct SystemShared {
     registry: ModelRegistry,
     snapshot: RwLock<Arc<Snapshot>>,
     meter: Arc<EnergyMeter>,
-    cache: Mutex<ResponseCache>,
+    cache: ShardedResponseCache,
+    /// In-flight dedup: signature → leader flight. Joined on the
+    /// execute path, retired with the version on unload.
+    coalesce: SingleflightTable,
     metrics: Arc<WindowedMetrics>,
     /// Weak back-reference to the lifecycle executor so the scaler's
     /// apply side and cold starts can enqueue `JobKind::Scale` jobs.
@@ -629,7 +663,8 @@ impl ServingSystem {
             registry,
             snapshot: RwLock::new(Arc::new(Snapshot::default())),
             meter,
-            cache: Mutex::new(ResponseCache::new(cfg.cache_capacity)),
+            cache: ShardedResponseCache::new(cfg.cache_capacity),
+            coalesce: SingleflightTable::new(),
             metrics,
             executor: OnceLock::new(),
             cfg,
@@ -888,6 +923,15 @@ impl SystemShared {
             // also fails any parked cold-start waiters and makes a
             // late-running reconcile bail out.
             h.retired.store(true, Ordering::SeqCst);
+            // Retire the version's in-flight singleflight entries at the
+            // same moment: parked followers wake with `Retired` (503)
+            // instead of waiting on a leader pinned to dying engines,
+            // and a reload's first arrival starts a fresh flight.
+            self.coalesce.retire(ResponseCache::signatures_of(
+                &h.model,
+                h.version,
+                self.cfg.cache_clusters,
+            ));
             crate::telemetry::MetricsRegistry::global()
                 .gauge(&format!("gf_replicas.{}.{}", h.model, h.version))
                 .set(0.0);
@@ -913,7 +957,11 @@ impl SystemShared {
             drop(handle);
         }
         self.registry.finish_unload(model, version);
-        self.cache.lock().unwrap().invalidate(model, version, self.cfg.cache_clusters);
+        self.cache.invalidate(model, version, self.cfg.cache_clusters);
+        // Belt-and-braces: `swap_out` already retired the singleflight
+        // entries, but unload paths that never had a snapshot entry
+        // (load-failure cleanup) still must not leave a stale flight.
+        self.coalesce.retire(ResponseCache::signatures_of(model, version, self.cfg.cache_clusters));
     }
 
     /// Spin up one version's first replica and swap the version into
@@ -1585,6 +1633,20 @@ impl ServingSystem {
         &self.shared.meter
     }
 
+    /// Per-system response-cache totals (hits/misses/evictions/len) —
+    /// the `/v2/admission/stats` cache block reads these rather than
+    /// the process-global registry, which tests sharing one process
+    /// would cross-pollute.
+    pub fn cache_stats(&self) -> crate::pipeline::coalesce::CacheStats {
+        self.shared.cache.stats()
+    }
+
+    /// Per-system singleflight totals (coalesced followers, live
+    /// entries, engine executions).
+    pub fn coalesce_stats(&self) -> crate::pipeline::coalesce::CoalesceStats {
+        self.shared.coalesce.stats()
+    }
+
     pub fn clock(&self) -> &SystemClock {
         &self.clock
     }
@@ -1762,6 +1824,7 @@ impl ServingSystem {
         if path == PathKind::Batched {
             self.shared.meter.record_idle((latency - stats.exec_secs).max(0.0));
         }
+        self.shared.coalesce.note_execution();
         Ok(InferResult {
             request_id: req.id,
             predicted: out.predicted(0),
@@ -1774,6 +1837,7 @@ impl ServingSystem {
             path,
             j: f64::NAN,
             tau: f64::NAN,
+            served: Served::Model,
         })
     }
 
@@ -1852,7 +1916,7 @@ impl ServingSystem {
                     req.seed,
                     self.shared.cfg.cache_clusters,
                 );
-                let cached = self.shared.cache.lock().unwrap().get(sig);
+                let cached = self.shared.cache.get(sig);
                 let (label, conf) = match cached {
                     Some(c) => (c.label, c.confidence as f32),
                     None => (scr_pred, scr_conf),
@@ -1881,6 +1945,7 @@ impl ServingSystem {
                         path: PathKind::CacheSkip,
                         j,
                         tau,
+                        served: Served::Cache,
                     },
                 })
             }
@@ -1891,7 +1956,7 @@ impl ServingSystem {
     /// route or answer from cache.
     pub fn submit(&self, req: &Request, prefer: PathKind) -> Result<InferResult, RuntimeError> {
         let handle = self.resolve(&req.model, None)?;
-        self.submit_handle(&handle, req, prefer)
+        self.submit_handle(&handle, req, prefer, None)
     }
 
     fn submit_handle(
@@ -1899,34 +1964,138 @@ impl ServingSystem {
         handle: &Arc<VersionHandle>,
         req: &Request,
         prefer: PathKind,
+        opts: Option<&SubmitOptions>,
     ) -> Result<InferResult, RuntimeError> {
-        let Some(ctrl) = &self.controller else {
-            return self.infer_on_handle(handle, req, prefer);
-        };
         let t0 = self.clock.now();
+        let Some(ctrl) = &self.controller else {
+            return self.execute_coalesced(handle, req, prefer, f64::NAN, f64::NAN, opts, t0);
+        };
         match self.admission_decision(ctrl, handle, req, t0)? {
             AdmitOutcome::Execute { j, tau } => {
-                let mut r = self.infer_on_handle(handle, req, prefer)?;
-                r.j = j;
-                r.tau = tau;
-                // Populate the cache so future skips can answer — unless
-                // this version was swapped out mid-request (a straggler
-                // must not resurrect entries the unload invalidated).
-                if !handle.retired.load(Ordering::SeqCst) {
-                    let sig = ResponseCache::signature(
-                        &req.model,
-                        handle.version,
-                        req.seed,
-                        self.shared.cfg.cache_clusters,
-                    );
-                    self.shared.cache.lock().unwrap().put(
-                        sig,
-                        CachedResponse { label: r.predicted, confidence: r.confidence as f64 },
-                    );
-                }
-                Ok(r)
+                self.execute_coalesced(handle, req, prefer, j, tau, opts, t0)
             }
             AdmitOutcome::Skip { result } => Ok(result),
+        }
+    }
+
+    /// Run one admitted request through the singleflight table: the
+    /// first arrival for a signature executes (leader) and publishes
+    /// its result; concurrent duplicates park as followers and share
+    /// it. Cache-population semantics are the leader's and unchanged
+    /// from the pre-coalescing code: controller-admitted work (finite
+    /// `j`) populates the cache unless the version was retired
+    /// mid-request.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_coalesced(
+        &self,
+        handle: &Arc<VersionHandle>,
+        req: &Request,
+        prefer: PathKind,
+        j: f64,
+        tau: f64,
+        opts: Option<&SubmitOptions>,
+        t0: f64,
+    ) -> Result<InferResult, RuntimeError> {
+        let sig = ResponseCache::signature(
+            &req.model,
+            handle.version,
+            req.seed,
+            self.shared.cfg.cache_clusters,
+        );
+        match self.shared.coalesce.join(sig) {
+            Join::Leader(guard) => match self.infer_on_handle(handle, req, prefer) {
+                Ok(mut r) => {
+                    r.j = j;
+                    r.tau = tau;
+                    guard.complete(CoalescedAnswer {
+                        predicted: r.predicted,
+                        confidence: r.confidence,
+                        entropy: r.entropy,
+                        exec_secs: r.exec_secs,
+                        bucket: r.bucket,
+                        path: r.path,
+                    });
+                    // Populate the cache so future skips can answer —
+                    // unless this version was swapped out mid-request (a
+                    // straggler must not resurrect entries the unload
+                    // invalidated).
+                    if r.j.is_finite() && !handle.retired.load(Ordering::SeqCst) {
+                        self.shared.cache.put(
+                            sig,
+                            CachedResponse { label: r.predicted, confidence: r.confidence as f64 },
+                        );
+                    }
+                    Ok(r)
+                }
+                Err(e) => {
+                    guard.fail(&e);
+                    Err(e)
+                }
+            },
+            Join::Follower(follower) => {
+                self.wait_follower(handle, req, follower, j, tau, opts, t0)
+            }
+        }
+    }
+
+    /// Park on an in-flight leader and account the outcome. A `Ready`
+    /// wake-up is an engine execution that never ran: the avoided
+    /// joules — the version's per-request energy profile estimate — are
+    /// credited to the meter's saved ledger and `gf_joules_saved_total`.
+    /// A deadline expiry detaches this follower only; the leader (and
+    /// any other follower) keeps running.
+    #[allow(clippy::too_many_arguments)]
+    fn wait_follower(
+        &self,
+        handle: &Arc<VersionHandle>,
+        req: &Request,
+        follower: Follower,
+        j: f64,
+        tau: f64,
+        opts: Option<&SubmitOptions>,
+        t0: f64,
+    ) -> Result<InferResult, RuntimeError> {
+        let timeout = opts
+            .and_then(|o| o.deadline)
+            .map(|d| Duration::from_secs_f64((d - self.clock.now()).max(0.0)));
+        match follower.wait(timeout) {
+            FollowerVerdict::Ready(a) => {
+                let latency = self.clock.now() - t0;
+                self.latency.lock().unwrap().record(latency);
+                self.shared.metrics.record_arrival(t0);
+                self.shared.metrics.record_latency(latency);
+                let saved =
+                    self.shared.cfg.device.exec_energy(handle.manifest.flops_per_item(1));
+                self.shared.meter.record_saved(saved);
+                let reg = crate::telemetry::MetricsRegistry::global();
+                reg.gauge("gf_joules_saved_total").set(self.shared.meter.total_joules_saved());
+                self.shared.coalesce.note_coalesced();
+                Ok(InferResult {
+                    request_id: req.id,
+                    predicted: a.predicted,
+                    confidence: a.confidence,
+                    entropy: a.entropy,
+                    latency_secs: latency,
+                    exec_secs: a.exec_secs,
+                    bucket: a.bucket,
+                    // The leader's energy was spent and attributed once;
+                    // this answer's marginal energy is ~zero.
+                    joules: 0.0,
+                    path: a.path,
+                    j,
+                    tau,
+                    served: Served::Coalesced,
+                })
+            }
+            FollowerVerdict::Failed(e) => Err(e),
+            FollowerVerdict::Retired => {
+                Err(RuntimeError::ModelUnavailable { model: req.model.clone() })
+            }
+            FollowerVerdict::TimedOut => {
+                let now = self.clock.now();
+                let fallback = SubmitOptions::default();
+                Err(deadline_error(opts.unwrap_or(&fallback), t0, now))
+            }
         }
     }
 
@@ -2020,9 +2189,10 @@ impl ServingSystem {
                     }
                 }
                 let r = if bypass_admission {
-                    self.infer_on_handle(&handle, req, path)?
+                    let now = self.clock.now();
+                    self.execute_coalesced(&handle, req, path, f64::NAN, f64::NAN, Some(opts), now)?
                 } else {
-                    self.submit_handle(&handle, req, path)?
+                    self.submit_handle(&handle, req, path, Some(opts))?
                 };
                 out.push(r);
             }
@@ -2075,37 +2245,93 @@ impl ServingSystem {
         }
 
         // Phase B — enqueue every admitted item before collecting any
-        // reply, so one body fuses into shared buckets. An enqueue
-        // failure (backpressure) aborts the batch; receivers already
-        // enqueued are dropped and their replies discarded by the
-        // batcher (all-or-error contract).
+        // reply, so one body fuses into shared buckets. Each item joins
+        // the singleflight table first: only leaders enqueue engine
+        // work; duplicates (within this body or racing another client)
+        // park as followers and share the leader's bucket result. An
+        // enqueue failure (backpressure) aborts the batch; receivers
+        // already enqueued are dropped and their replies discarded by
+        // the batcher, and the dropped leader guards publish the typed
+        // failure to any follower (all-or-error contract).
         type Reply = mpsc::Receiver<Result<(OutputBatch, ExecStats), RuntimeError>>;
-        let mut pending: Vec<Option<(f64, Reply)>> = Vec::with_capacity(reqs.len());
+        enum Slot<'a> {
+            Skip,
+            Lead { t_item: f64, rx: Reply, guard: crate::pipeline::coalesce::LeaderGuard<'a> },
+            Follow { t_item: f64, follower: Follower },
+        }
+        let mut pending: Vec<Slot> = Vec::with_capacity(reqs.len());
         for (req, plan) in reqs.iter().zip(&plans) {
             match plan {
-                ItemPlan::Skip(_) => pending.push(None),
+                ItemPlan::Skip(_) => pending.push(Slot::Skip),
                 ItemPlan::Exec { .. } => {
                     let t_item = self.clock.now();
-                    self.shared.metrics.record_arrival(t_item);
-                    let rx = batched.submit(req.seed)?;
-                    pending.push(Some((t_item, rx)));
+                    let sig = ResponseCache::signature(
+                        &req.model,
+                        handle.version,
+                        req.seed,
+                        self.shared.cfg.cache_clusters,
+                    );
+                    match self.shared.coalesce.join(sig) {
+                        Join::Leader(guard) => {
+                            // Followers record their arrival in
+                            // `wait_follower`; leaders here.
+                            self.shared.metrics.record_arrival(t_item);
+                            match batched.submit(req.seed) {
+                                Ok(rx) => pending.push(Slot::Lead { t_item, rx, guard }),
+                                Err(e) => {
+                                    guard.fail(&e);
+                                    return Err(e);
+                                }
+                            }
+                        }
+                        Join::Follower(follower) => {
+                            pending.push(Slot::Follow { t_item, follower })
+                        }
+                    }
                 }
             }
         }
 
         // Phase C — collect replies in request order and account each
-        // item exactly as a lone batched execution would be.
+        // item exactly as a lone batched execution would be. A body's
+        // internal duplicates always see their leader earlier in the
+        // vector (join order), so its result is published before the
+        // follower's wait.
         let mut out = Vec::with_capacity(reqs.len());
         for ((req, plan), slot) in reqs.iter().zip(plans).zip(pending) {
             match (plan, slot) {
                 (ItemPlan::Skip(result), _) => out.push(result),
-                (ItemPlan::Exec { j, tau }, Some((t_item, rx))) => {
-                    let (ob, stats) =
-                        rx.recv().map_err(|_| RuntimeError::Xla("reply dropped".into()))??;
-                    let mut r =
-                        self.finish_exec(&handle, req, PathKind::Batched, t_item, &ob, &stats)?;
+                (ItemPlan::Exec { j, tau }, Slot::Lead { t_item, rx, guard }) => {
+                    let exec = rx
+                        .recv()
+                        .map_err(|_| RuntimeError::Xla("reply dropped".into()))
+                        .and_then(|r| r);
+                    let (ob, stats) = match exec {
+                        Ok(v) => v,
+                        Err(e) => {
+                            guard.fail(&e);
+                            return Err(e);
+                        }
+                    };
+                    let mut r = match self
+                        .finish_exec(&handle, req, PathKind::Batched, t_item, &ob, &stats)
+                    {
+                        Ok(r) => r,
+                        Err(e) => {
+                            guard.fail(&e);
+                            return Err(e);
+                        }
+                    };
                     r.j = j;
                     r.tau = tau;
+                    guard.complete(CoalescedAnswer {
+                        predicted: r.predicted,
+                        confidence: r.confidence,
+                        entropy: r.entropy,
+                        exec_secs: r.exec_secs,
+                        bucket: r.bucket,
+                        path: r.path,
+                    });
                     if r.j.is_finite() && !handle.retired.load(Ordering::SeqCst) {
                         // Controller-admitted work populates the cache so
                         // future skips can answer (same as `submit`;
@@ -2117,7 +2343,7 @@ impl ServingSystem {
                             req.seed,
                             self.shared.cfg.cache_clusters,
                         );
-                        self.shared.cache.lock().unwrap().put(
+                        self.shared.cache.put(
                             sig,
                             CachedResponse {
                                 label: r.predicted,
@@ -2127,8 +2353,19 @@ impl ServingSystem {
                     }
                     out.push(r);
                 }
-                (ItemPlan::Exec { .. }, None) => {
-                    unreachable!("exec plans always enqueue a receiver")
+                (ItemPlan::Exec { j, tau }, Slot::Follow { t_item, follower }) => {
+                    out.push(self.wait_follower(
+                        &handle,
+                        req,
+                        follower,
+                        j,
+                        tau,
+                        Some(opts),
+                        t_item,
+                    )?);
+                }
+                (ItemPlan::Exec { .. }, Slot::Skip) => {
+                    unreachable!("exec plans always join the singleflight table")
                 }
             }
         }

@@ -296,8 +296,14 @@ pub fn next_request_id() -> u64 {
 }
 
 /// One item's serialised outcome inside a batch response. `bucket` is
-/// the batch bucket the execution fused into (0 for cache answers) —
-/// how clients observe multi-item bodies coalescing.
+/// the batch bucket the execution fused into — how clients observe
+/// multi-item bodies coalescing. `bucket` alone is ambiguous for
+/// non-executed answers (a cache answer reports 0, a coalesced
+/// follower reports its leader's bucket), so `served` states who
+/// actually produced the answer: `"model"` (an engine execution ran),
+/// `"cache"` (admission skip answered from the response cache or
+/// screener argmax), or `"coalesced"` (a concurrent duplicate shared
+/// the in-flight leader's result).
 pub fn item_json(seed: u64, r: &InferResult) -> Value {
     let mut fields = vec![
         ("seed", json::num(seed as f64)),
@@ -308,6 +314,7 @@ pub fn item_json(seed: u64, r: &InferResult) -> Value {
         ("joules", json::num(r.joules)),
         ("path", json::s(r.path.as_str())),
         ("bucket", json::num(r.bucket as f64)),
+        ("served", json::s(r.served.as_str())),
     ];
     if r.j.is_finite() && r.tau.is_finite() {
         fields.push(("j", json::num(r.j)));

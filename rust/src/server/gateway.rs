@@ -896,6 +896,29 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
         ("deadline_exceeded_responses", count("gf_http_deadline_exceeded_total")),
         ("model_unavailable_responses", count("gf_http_model_unavailable_total")),
     ]);
+    // The coalescing/cache blocks read the *system's* own counters
+    // (not the process-global registry, which other systems in the
+    // same process would cross-pollute).
+    let co = system.coalesce_stats();
+    let answered = co.coalesced + co.executions;
+    let coalesce = json::obj(vec![
+        ("coalesced_total", json::num(co.coalesced as f64)),
+        ("inflight", json::num(co.inflight as f64)),
+        ("executions", json::num(co.executions as f64)),
+        (
+            "hit_rate",
+            json::num(if answered == 0 { 0.0 } else { co.coalesced as f64 / answered as f64 }),
+        ),
+        ("joules_saved", json::num(finite(system.meter().total_joules_saved()))),
+    ]);
+    let cs = system.cache_stats();
+    let cache = json::obj(vec![
+        ("hits", json::num(cs.hits as f64)),
+        ("misses", json::num(cs.misses as f64)),
+        ("evictions", json::num(cs.evictions as f64)),
+        ("entries", json::num(cs.len as f64)),
+        ("hit_rate", json::num(finite(cs.hit_rate()))),
+    ]);
     let body = match system.controller_stats() {
         Some(s) => json::obj(vec![
             ("enabled", Value::Bool(true)),
@@ -906,8 +929,15 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
             ("last_j", json::num(finite(s.last_j))),
             ("last_tau", json::num(finite(s.last_tau))),
             ("gateway", gateway),
+            ("coalesce", coalesce),
+            ("cache", cache),
         ]),
-        None => json::obj(vec![("enabled", Value::Bool(false)), ("gateway", gateway)]),
+        None => json::obj(vec![
+            ("enabled", Value::Bool(false)),
+            ("gateway", gateway),
+            ("coalesce", coalesce),
+            ("cache", cache),
+        ]),
     };
     HttpResponse::ok_json(body.to_json())
 }

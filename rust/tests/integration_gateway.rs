@@ -443,3 +443,48 @@ fn batched_path_overload_maps_to_429_backpressure() {
         "a capacity-1 queue under 8 concurrent clients must backpressure"
     );
 }
+
+#[test]
+fn duplicate_batch_coalesces_over_http_and_stats_report_it() {
+    let Some(root) = repo_root() else { return };
+    // No controller: every item bypasses admission, so a body of six
+    // identical seeds on the batched path must land as exactly one
+    // leader execution plus five coalesced followers — visible both in
+    // the per-item `served` field and on `/v2/admission/stats`.
+    let sys = Arc::new(ServingSystem::start(SystemConfig::new(root)).unwrap());
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+    let body = r#"{"inputs": [{"seed": 7}, {"seed": 7}, {"seed": 7},
+                              {"seed": 7}, {"seed": 7}, {"seed": 7}],
+                   "parameters": {"path": "batched"}}"#;
+    let resp = client
+        .post_json(&format!("/v2/models/{}/infer", models::DISTILBERT), body)
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    let v = resp.json().unwrap();
+    let outputs = v.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outputs.len(), 6);
+    let mut served = Vec::new();
+    for o in outputs {
+        served.push(o.get("served").unwrap().as_str().unwrap());
+    }
+    assert_eq!(served[0], "model", "first arrival executes");
+    assert!(
+        served[1..].iter().all(|&s| s == "coalesced"),
+        "duplicates must coalesce, got {served:?}"
+    );
+    let first = outputs[0].get("predicted").unwrap().as_i64().unwrap();
+    for out in outputs {
+        assert_eq!(out.get("predicted").unwrap().as_i64().unwrap(), first);
+    }
+
+    // The stats surface accounts for the avoided work in joules.
+    let stats = client.get("/v2/admission/stats").unwrap().json().unwrap();
+    let co = stats.get("coalesce").unwrap();
+    assert!(co.get("coalesced_total").unwrap().as_i64().unwrap() >= 5);
+    assert!(co.get("joules_saved").unwrap().as_f64().unwrap() > 0.0);
+    assert!(co.get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    let cache = stats.get("cache").unwrap();
+    assert!(cache.get("entries").unwrap().as_i64().unwrap() >= 0);
+}

@@ -12,7 +12,7 @@ use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::ControllerConfig;
 use greenflow::models;
-use greenflow::pipeline::system::{ServingSystem, SystemConfig};
+use greenflow::pipeline::system::{Served, ServingSystem, SubmitOptions, SystemConfig};
 use greenflow::router::PathKind;
 use greenflow::server::Gateway;
 use greenflow::workload::stream::{Request, RequestStream, StreamConfig};
@@ -181,6 +181,104 @@ fn gateway_serves_http_round_trips() {
             .into(),
     );
     assert!(bad.starts_with("HTTP/1.1 400"));
+}
+
+#[test]
+fn n_duplicate_batch_executes_once_and_saves_joules() {
+    let Some(root) = repo_root() else { return };
+    // One body of N identical requests on the batched path is the
+    // deterministic coalescing shape: Phase B joins in index order, so
+    // item 0 leads and every other item attaches as a follower — no
+    // thread-timing dependence.
+    let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+    let base = requests(1, models::DISTILBERT, 33).pop().unwrap();
+    let body: Vec<Request> = (0..8).map(|_| base.clone()).collect();
+    let before = sys.coalesce_stats();
+    let saved_before = sys.meter().total_joules_saved();
+
+    let results = sys
+        .submit_batch(&body, Some(PathKind::Batched), &SubmitOptions::default())
+        .unwrap();
+    assert_eq!(results.len(), 8);
+    assert_eq!(results[0].served, Served::Model, "first arrival leads and executes");
+    for r in &results[1..] {
+        assert_eq!(r.served, Served::Coalesced, "duplicates share the leader's result");
+        assert_eq!(r.predicted, results[0].predicted);
+        assert_eq!(r.confidence, results[0].confidence);
+        assert_eq!(r.joules, 0.0, "a coalesced answer has ~zero marginal energy");
+    }
+
+    let after = sys.coalesce_stats();
+    assert_eq!(after.executions - before.executions, 1, "exactly one engine execution");
+    assert_eq!(after.coalesced - before.coalesced, 7, "seven followers coalesced");
+    assert_eq!(after.inflight, 0, "the flight is closed");
+    assert!(
+        sys.meter().total_joules_saved() > saved_before,
+        "avoided executions are credited as joules saved"
+    );
+}
+
+#[test]
+fn unload_mid_flight_retires_coalesce_entries_without_hangs() {
+    let Some(root) = repo_root() else { return };
+    // Bounce the model's lifecycle under live duplicate traffic: every
+    // in-flight singleflight entry the unload retires must wake its
+    // followers with a typed error (never a hang — the test completing
+    // is the assertion), and the post-reload table must be cold.
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    let sys = Arc::new(ServingSystem::start(SystemConfig::new(root)).unwrap());
+    let base = requests(1, models::DISTILBERT, 55).pop().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let completed = Arc::new(AtomicUsize::new(0));
+    let worker = {
+        let sys = sys.clone();
+        let base = base.clone();
+        let stop = stop.clone();
+        let completed = completed.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                let body: Vec<Request> = (0..4).map(|_| base.clone()).collect();
+                match sys.submit_batch(&body, Some(PathKind::Batched), &SubmitOptions::default()) {
+                    Ok(rs) => {
+                        assert_eq!(rs.len(), 4);
+                        completed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    // Typed refusal while the version is down or
+                    // draining — the all-or-error contract holds.
+                    Err(_) => {}
+                }
+            }
+        })
+    };
+    for _ in 0..3 {
+        let _ = sys.unload_model(models::DISTILBERT, None);
+        sys.load_model(models::DISTILBERT, None).unwrap();
+    }
+    // The Ready windows between bounces can be tiny; give the worker
+    // one guaranteed window after the final reload before stopping.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while completed.load(Ordering::SeqCst) == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::SeqCst);
+    worker.join().expect("no panic under lifecycle churn");
+    assert!(
+        completed.load(Ordering::SeqCst) > 0,
+        "some duplicate bodies must complete under churn"
+    );
+
+    // Reload starts cold: no retired flight (or stale cache entry)
+    // answers for the fresh version — the first item of a new body
+    // executes, the rest coalesce onto it.
+    let body: Vec<Request> = (0..4).map(|_| base.clone()).collect();
+    let rs = sys
+        .submit_batch(&body, Some(PathKind::Batched), &SubmitOptions::default())
+        .unwrap();
+    assert_eq!(rs[0].served, Served::Model, "post-reload leader executes fresh");
+    for r in &rs[1..] {
+        assert_eq!(r.served, Served::Coalesced);
+    }
+    assert_eq!(sys.coalesce_stats().inflight, 0);
 }
 
 #[test]

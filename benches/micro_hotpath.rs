@@ -193,6 +193,26 @@ fn main() {
         std::hint::black_box(acc_c);
     }
 
+    // ---- QoS admission decide (per-request tenant gate) -----------------
+    // The per-request cost the multi-tenant QoS layer adds in front of
+    // the admission controller: one shard read-lock, one tenant-mutex
+    // GCRA step, and the counter bumps. The quota is set far above the
+    // bench rate so every decide admits — sheds leave the hot path by
+    // definition. Gated in CI as `qos_decide_ns` (docs/BENCH.md).
+    {
+        use greenflow::qos::{QosConfig, QosLayer};
+        let layer = QosLayer::new(QosConfig {
+            default_rate_rps: 1_000_000_000,
+            default_burst: 1_000_000,
+            ..QosConfig::default()
+        });
+        let mut t_q = 0.0f64;
+        results.push(bench_fn("qos.decide", 1000, iters, || {
+            t_q += 1e-6;
+            std::hint::black_box(layer.decide("bench", 1, 0, t_q));
+        }));
+    }
+
     // ---- energy meter record --------------------------------------------
     let meter = EnergyMeter::new(DeviceProfile::rtx4000_ada(), MeterMode::SimulatedFlops, 16.0);
     results.push(bench_fn("energy_meter.record", 1000, iters, || {

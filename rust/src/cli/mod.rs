@@ -6,7 +6,8 @@
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
 //!                     [--serve-bench N [--model distilbert_mini] [--bench-json out.json]
-//!                      [--bench-conns C] [--bench-dup-ratio R]]
+//!                      [--bench-conns C] [--bench-dup-ratio R]
+//!                      [--bench-tenants T] [--bench-hot-tenant-share S]]
 //! greenflow repo      <index|load|unload> [--addr 127.0.0.1:8080]
 //!                     [--model NAME] [--version N] [--wait]
 //! greenflow report    --repo artifacts
@@ -15,6 +16,7 @@
 //! greenflow landscape [--out -]
 //! greenflow perfgate  --serve-json serve_bench.json [--micro-json micro.json]
 //!                     [--serve-hc-json serve_bench_hc.json]
+//!                     [--serve-tenant-json serve_bench_tenant.json]
 //!                     [--out BENCH.json] [--baseline benches/baseline.json]
 //!                     [--max-regress 0.20] [--label pr6]
 //! greenflow version
@@ -31,6 +33,12 @@
 //! coalescing path; the report then carries the realised
 //! `coalesce_hit_rate` and `joules_saved` scraped from
 //! `/v2/admission/stats` (see `docs/COALESCE.md`).
+//! `--bench-tenants T` tags every request with an `X-Tenant-Id` header
+//! spread across `T` synthetic tenants; `--bench-hot-tenant-share S`
+//! routes fraction `S` of them to the hot tenant `t0`, the rest
+//! round-robin across the cold ones. The report then carries
+//! per-tenant admitted-rate fields (`tenant_stats`) — the QoS
+//! hot-tenant lane (see `docs/QOS.md`).
 //!
 //! The `--adaptive-*` / `--energy-budget` flags boot the control plane
 //! ([`crate::control`]): background loops that retune τ, the batcher
@@ -339,14 +347,18 @@ fn cmd_serve(args: &Args) -> i32 {
                     .unwrap_or_else(|| crate::models::DISTILBERT.to_string());
                 let conns = args.get_f64("bench-conns").map(|c| c.max(1.0) as usize).unwrap_or(1);
                 let dup_ratio = args.get_f64("bench-dup-ratio").unwrap_or(0.0).clamp(0.0, 1.0);
-                let code = serve_bench(
-                    gw.addr(),
+                let tenants = args.get_f64("bench-tenants").map(|t| t as usize).unwrap_or(0);
+                let hot_tenant_share = args.get_f64("bench-hot-tenant-share").unwrap_or(0.0);
+                let opts = BenchOpts {
                     n,
-                    &model,
+                    model,
                     conns,
                     dup_ratio,
-                    args.get("bench-json").as_deref(),
-                );
+                    tenants,
+                    hot_tenant_share,
+                    json_out: args.get("bench-json"),
+                };
+                let code = serve_bench(gw.addr(), &opts);
                 gw.shutdown();
                 return code;
             }
@@ -382,16 +394,28 @@ fn cmd_serve(args: &Args) -> i32 {
 /// Latencies are pooled across connections; throughput is aggregate
 /// wall-clock (N ÷ elapsed across all workers), i.e. what the server
 /// actually sustained, not a per-connection mean.
-fn serve_bench(
-    addr: std::net::SocketAddr,
+///
+/// `tenants > 0` switches on the QoS lane: every request carries an
+/// `X-Tenant-Id` header, fraction `hot_tenant_share` lands on the hot
+/// tenant `t0` (Bresenham-spread like the duplicate mix, so the
+/// interleave is deterministic), the rest round-robin across the cold
+/// tenants, and the report gains per-tenant admitted-rate fields.
+struct BenchOpts {
     n: usize,
-    model: &str,
+    model: String,
     conns: usize,
     dup_ratio: f64,
-    json_out: Option<&str>,
-) -> i32 {
+    tenants: usize,
+    hot_tenant_share: f64,
+    json_out: Option<String>,
+}
+
+fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
     use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-    let conns = conns.clamp(1, n.max(1));
+    let (n, model, dup_ratio) = (opts.n, opts.model.as_str(), opts.dup_ratio);
+    let (tenants, hot_share) = (opts.tenants, opts.hot_tenant_share.clamp(0.0, 1.0));
+    let json_out = opts.json_out.as_deref();
+    let conns = opts.conns.clamp(1, n.max(1));
     // Readiness probe on its own connection, dropped before timing.
     let ready = match crate::server::HttpClient::connect(addr) {
         Ok(mut probe) => probe
@@ -417,6 +441,13 @@ fn serve_bench(
     let ok = AtomicUsize::new(0);
     let err = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
+    // Per-tenant tallies for the QoS lane (empty when tenants == 0).
+    // Index 0 is the hot tenant; sheds are any non-200 answer (429
+    // rate-limit / retry-budget / backpressure in practice).
+    let tenant_names: Vec<String> = (0..tenants).map(|i| format!("t{i}")).collect();
+    let tenant_sent: Vec<AtomicUsize> = (0..tenants).map(|_| AtomicUsize::new(0)).collect();
+    let tenant_ok: Vec<AtomicUsize> = (0..tenants).map(|_| AtomicUsize::new(0)).collect();
+    let tenant_shed: Vec<AtomicUsize> = (0..tenants).map(|_| AtomicUsize::new(0)).collect();
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for worker in 0..conns {
@@ -424,6 +455,8 @@ fn serve_bench(
             // the remainder) so exactly `n` requests hit the wire.
             let quota = n / conns + usize::from(worker < n % conns);
             let (latencies, ok, err, failed) = (&latencies, &ok, &err, &failed);
+            let (tenant_names, tenant_sent, tenant_ok, tenant_shed) =
+                (&tenant_names, &tenant_sent, &tenant_ok, &tenant_shed);
             let infer_path = infer_path.as_str();
             scope.spawn(move || {
                 let mut client = match crate::server::HttpClient::connect(addr) {
@@ -439,6 +472,9 @@ fn serve_bench(
                 // reuse the hot seed, evenly interleaved — no RNG, so
                 // runs are reproducible.
                 let mut dup_acc = 0.0f64;
+                // Same Bresenham idea for the hot-tenant share: exactly
+                // ⌊quota·S⌋±1 requests land on t0, evenly interleaved.
+                let mut hot_acc = 0.0f64;
                 for i in 0..quota {
                     dup_acc += dup_ratio;
                     let seed = if dup_acc >= 1.0 {
@@ -448,11 +484,39 @@ fn serve_bench(
                         // Globally unique across workers.
                         1 + (worker + conns * i) as u64
                     };
-                    let t_req = std::time::Instant::now();
-                    let result = if ready {
-                        client.post_json(infer_path, &format!("{{\"seed\": {seed}}}"))
+                    let tenant = if tenants == 0 {
+                        None
                     } else {
-                        client.get("/v2/health/live")
+                        hot_acc += hot_share;
+                        if hot_acc >= 1.0 {
+                            hot_acc -= 1.0;
+                            Some(0)
+                        } else if tenants == 1 {
+                            Some(0)
+                        } else {
+                            Some(1 + (worker + conns * i) % (tenants - 1))
+                        }
+                    };
+                    let t_req = std::time::Instant::now();
+                    let result = match tenant {
+                        Some(ti) => {
+                            tenant_sent[ti].fetch_add(1, Ordering::Relaxed);
+                            let id = (crate::qos::TENANT_HEADER, tenant_names[ti].as_str());
+                            if ready {
+                                client.request(
+                                    "POST",
+                                    infer_path,
+                                    &[("Content-Type", "application/json"), id],
+                                    Some(format!("{{\"seed\": {seed}}}").as_bytes()),
+                                )
+                            } else {
+                                client.request("GET", "/v2/health/live", &[id], None)
+                            }
+                        }
+                        None if ready => {
+                            client.post_json(infer_path, &format!("{{\"seed\": {seed}}}"))
+                        }
+                        None => client.get("/v2/health/live"),
                     };
                     match result {
                         Ok(resp) => {
@@ -461,6 +525,13 @@ fn serve_bench(
                                 ok.fetch_add(1, Ordering::Relaxed);
                             } else {
                                 err.fetch_add(1, Ordering::Relaxed);
+                            }
+                            if let Some(ti) = tenant {
+                                if resp.status == 200 {
+                                    tenant_ok[ti].fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    tenant_shed[ti].fetch_add(1, Ordering::Relaxed);
+                                }
                             }
                             // The server rotates connections after 100k
                             // requests (Connection: close); reconnect
@@ -533,8 +604,28 @@ fn serve_bench(
             coalesce_hit_rate * 100.0,
         );
     }
+    // Per-tenant admitted rates for the QoS lane (hot tenant first).
+    let tenant_rows: Vec<crate::json::Value> = (0..tenants)
+        .map(|i| {
+            let sent = tenant_sent[i].load(Ordering::Relaxed);
+            let okc = tenant_ok[i].load(Ordering::Relaxed);
+            let shed = tenant_shed[i].load(Ordering::Relaxed);
+            println!(
+                "serve-bench[tenant {}]: {sent} sent, {okc} ok ({:.0} admitted/s), {shed} shed",
+                tenant_names[i],
+                okc as f64 / secs,
+            );
+            crate::json::obj(vec![
+                ("name", crate::json::s(&tenant_names[i])),
+                ("requests", crate::json::num(sent as f64)),
+                ("ok", crate::json::num(okc as f64)),
+                ("shed", crate::json::num(shed as f64)),
+                ("admitted_rps", crate::json::num(okc as f64 / secs)),
+            ])
+        })
+        .collect();
     if let Some(path) = json_out {
-        let report = crate::json::obj(vec![
+        let mut fields = vec![
             ("schema", crate::json::s("greenflow.serve-bench/1")),
             ("target", crate::json::s(target)),
             ("model", crate::json::s(model)),
@@ -551,7 +642,13 @@ fn serve_bench(
             ("joules_saved", crate::json::num(joules_saved)),
             ("ok", crate::json::num(ok as f64)),
             ("errors", crate::json::num(err as f64)),
-        ]);
+        ];
+        if tenants > 0 {
+            fields.push(("tenants", crate::json::num(tenants as f64)));
+            fields.push(("hot_tenant_share", crate::json::num(hot_share)));
+            fields.push(("tenant_stats", crate::json::Value::Arr(tenant_rows)));
+        }
+        let report = crate::json::obj(fields);
         if let Err(e) = std::fs::write(path, report.to_json()) {
             eprintln!("serve-bench: cannot write {path}: {e}");
             return 1;
@@ -665,6 +762,7 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 /// greenflow perfgate --serve-json serve_bench.json [--micro-json micro.json]
 ///                    [--serve-hc-json serve_bench_hc.json]
 ///                    [--serve-dup-json serve_bench_dup.json]
+///                    [--serve-tenant-json serve_bench_tenant.json]
 ///                    --out BENCH_6.json [--label pr6]
 ///                    [--baseline benches/baseline.json] [--max-regress 0.20]
 ///                    [--requests 2000]
@@ -676,14 +774,18 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 /// serve_bench_hc.json`, passed as `--serve-hc-json`) gated as
 /// `hc_throughput_rps`, optionally a duplicate-heavy run
 /// (`--bench-dup-ratio 0.8`, passed as `--serve-dup-json`) embedded as
-/// `serve_bench_dup`, and optionally
+/// `serve_bench_dup`, optionally a tenant-tagged run (`--bench-tenants`,
+/// passed as `--serve-tenant-json`) embedded as `serve_bench_tenant`
+/// with its per-tenant admitted-rate fields, and optionally
 /// the `--json` output of `cargo bench --bench micro_hotpath`
-/// (per-component timings, embedded verbatim). Five gated numbers are
+/// (per-component timings, embedded verbatim). Six gated numbers are
 /// measured in-process so the gate has no backend dependency: the
 /// `Adaptive<T>` hot-path read (ns), the replica-scheduler
 /// power-of-two-choices pick (`sched_read_ns`), the sharded
 /// response-cache probe (`cache_read_ns` — the per-request cost the
-/// coalescing subsystem added to every submit), the cold-start
+/// coalescing subsystem added to every submit), the per-tenant QoS
+/// admission decide (`qos_decide_ns` — the gate every infer pays in
+/// front of the admission controller), the cold-start
 /// lifecycle-executor round-trip (`cold_start_ms`, engine compile
 /// excluded), and the deterministic admission-sim admit rate. When a
 /// serve-bench input carries coalescing gains (the `--serve-dup-json`
@@ -740,6 +842,20 @@ fn cmd_perfgate(args: &Args) -> i32 {
     // embedded verbatim, and preferred as the source of the recorded
     // coalescing gains (the plain run has no duplicates to coalesce).
     let serve_dup = match args.get("serve-dup-json") {
+        Some(p) => match read_json_file(&p) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    // Optional tenant-tagged serve-bench (`--bench-tenants` run): the
+    // QoS hot-tenant lane, embedded verbatim with its per-tenant
+    // admitted-rate fields (never gated — they depend on the share
+    // knob and the configured quotas).
+    let serve_tenant = match args.get("serve-tenant-json") {
         Some(p) => match read_json_file(&p) {
             Ok(v) => Some(v),
             Err(e) => {
@@ -818,6 +934,26 @@ fn cmd_perfgate(args: &Args) -> i32 {
         r.mean() * 1e9
     };
 
+    // Per-tenant QoS admission decide, measured in-process: one shard
+    // read-lock, one tenant-mutex GCRA step, and the counter bumps —
+    // the gate every infer request pays before the admission
+    // controller. The quota sits far above the bench rate so every
+    // decide admits; sheds leave the hot path by definition.
+    let qos_decide_ns = {
+        use crate::qos::{QosConfig, QosLayer};
+        let layer = QosLayer::new(QosConfig {
+            default_rate_rps: 1_000_000_000,
+            default_burst: 1_000_000,
+            ..QosConfig::default()
+        });
+        let mut t_q = 0.0f64;
+        let r = crate::benchkit::bench_fn("qos.decide", 1000, 200_000, || {
+            t_q += 1e-6;
+            std::hint::black_box(layer.decide("perfgate", 1, 0, t_q));
+        });
+        r.mean() * 1e9
+    };
+
     // Cold-start orchestration overhead: the lifecycle-executor
     // round-trip a wake-up from zero replicas pays *before* any engine
     // work (submit → worker pickup → completion). Engine compile time
@@ -879,6 +1015,7 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("adaptive_read_ns", json::num(adaptive_read_ns)),
         ("sched_read_ns", json::num(sched_read_ns)),
         ("cache_read_ns", json::num(cache_read_ns)),
+        ("qos_decide_ns", json::num(qos_decide_ns)),
         ("cold_start_ms", json::num(cold_start_ms)),
     ];
     if let Some(v) = coalesce_hit_rate {
@@ -896,6 +1033,9 @@ fn cmd_perfgate(args: &Args) -> i32 {
     }
     if let Some(dup) = serve_dup {
         fields.push(("serve_bench_dup", dup));
+    }
+    if let Some(tenant) = serve_tenant {
+        fields.push(("serve_bench_tenant", tenant));
     }
     fields.push(("components", components));
     let bench = json::obj(fields);
@@ -936,6 +1076,7 @@ fn cmd_perfgate(args: &Args) -> i32 {
         ("adaptive_read_ns", adaptive_read_ns, Gate::Ceiling),
         ("sched_read_ns", sched_read_ns, Gate::Ceiling),
         ("cache_read_ns", cache_read_ns, Gate::Ceiling),
+        ("qos_decide_ns", qos_decide_ns, Gate::Ceiling),
         ("cold_start_ms", cold_start_ms, Gate::Ceiling),
     ];
     if let Some(hc) = hc_throughput {
@@ -1114,6 +1255,7 @@ mod tests {
         assert!(bench.get("adaptive_read_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(bench.get("sched_read_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(bench.get("cache_read_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(bench.get("qos_decide_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(bench.get("cold_start_ms").unwrap().as_f64().unwrap() > 0.0);
         // Coalescing gains pass through from the serve-bench input.
         assert_eq!(bench.get("coalesce_hit_rate").unwrap().as_f64().unwrap(), 0.75);
@@ -1244,6 +1386,39 @@ mod tests {
         assert_eq!(bench.get("coalesce_hit_rate").unwrap().as_f64().unwrap(), 0.6);
         assert_eq!(bench.get("joules_saved").unwrap().as_f64().unwrap(), 33.0);
         assert!(bench.get("serve_bench_dup").is_ok());
+
+        // Tenant-tagged input: embedded verbatim as serve_bench_tenant
+        // (the hot-tenant lane's per-tenant fields ride along ungated).
+        let serve_tenant = dir.join("serve_bench_tenant.json");
+        std::fs::write(
+            &serve_tenant,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "tenants": 4, "hot_tenant_share": 0.7,
+                "throughput_rps": 6000.0,
+                "tenant_stats": [{"name": "t0", "requests": 140.0,
+                                  "ok": 140.0, "shed": 0.0,
+                                  "admitted_rps": 4200.0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--serve-tenant-json",
+                serve_tenant.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            0
+        );
+        let bench = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let embedded = bench.get("serve_bench_tenant").unwrap();
+        assert_eq!(embedded.get("tenants").unwrap().as_f64().unwrap(), 4.0);
+        let rows = embedded.get("tenant_stats").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "t0");
         let _ = std::fs::remove_dir_all(dir);
     }
 
@@ -1303,6 +1478,24 @@ mod tests {
                 "4",
                 "--bench-dup-ratio",
                 "0.8",
+            ])),
+            0
+        );
+        // Tenant-tagged mix: the QoS hot-tenant lane (X-Tenant-Id
+        // spread over 3 tenants, 70% of requests on the hot one).
+        assert_eq!(
+            run(&sv(&[
+                "serve",
+                "--repo",
+                root.to_str().unwrap(),
+                "--serve-bench",
+                "30",
+                "--bench-conns",
+                "3",
+                "--bench-tenants",
+                "3",
+                "--bench-hot-tenant-share",
+                "0.7",
             ])),
             0
         );

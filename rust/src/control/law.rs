@@ -323,6 +323,59 @@ impl ControlLaw for ReplicaScaler {
     }
 }
 
+/// Tenant quota governor: maps global pressure (watts over budget) to
+/// a multiplicative scale on every tenant's GCRA rate.
+///
+/// `signal` is the windowed power draw; `setpoint` the power budget.
+/// The scale shrinks in proportion to the *relative* overshoot
+/// (`gain × (signal − setpoint)/setpoint` per second) and recovers at
+/// the same gain when the draw falls back under budget, clamped to
+/// `[min_scale, 1]`. Relative error makes one gain work across
+/// deployments whose budgets differ by orders of magnitude, and the
+/// `min_scale` floor guarantees no tenant is ever throttled to zero —
+/// pressure degrades quotas, it never revokes them.
+///
+/// The actor side writes the output through
+/// `crate::qos::QosLayer::set_quota_scale`, which rescales each
+/// tenant's `Adaptive<u32>` rate cell (effective rate =
+/// `base_rate × scale`).
+#[derive(Debug, Clone)]
+pub struct QuotaScaler {
+    pub setpoint: f64,
+    pub gain: f64,
+    pub min_scale: f64,
+    value: f64,
+}
+
+impl QuotaScaler {
+    pub fn new(setpoint: f64, gain: f64, min_scale: f64) -> Self {
+        assert!(setpoint > 0.0, "pressure setpoint must be positive");
+        assert!(gain > 0.0, "a gainless scaler never moves");
+        assert!(
+            min_scale > 0.0 && min_scale < 1.0,
+            "min_scale must lie in (0, 1): quotas degrade, never vanish"
+        );
+        QuotaScaler { setpoint, gain, min_scale, value: 1.0 }
+    }
+}
+
+impl ControlLaw for QuotaScaler {
+    fn step(&mut self, signal: f64, dt: f64) -> f64 {
+        let dt = dt.max(0.0);
+        let err = (signal - self.setpoint) / self.setpoint;
+        self.value = (self.value - self.gain * err * dt).clamp(self.min_scale, 1.0);
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "quota"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -589,6 +642,40 @@ mod tests {
     }
 
     #[test]
+    fn quota_scaler_shrinks_under_pressure_and_recovers() {
+        let mut q = QuotaScaler::new(100.0, 0.5, 0.05);
+        assert_eq!(q.output(), 1.0, "starts with full quotas");
+        // 200 W against a 100 W budget: relative error 1.0 → −0.5/s.
+        assert!((q.step(200.0, 1.0) - 0.5).abs() < 1e-9);
+        for _ in 0..10 {
+            q.step(200.0, 1.0);
+        }
+        assert_eq!(q.output(), 0.05, "clamps at min_scale, never zero");
+        // Back under budget: recovers toward 1 and clamps there.
+        for _ in 0..100 {
+            q.step(50.0, 1.0);
+        }
+        assert_eq!(q.output(), 1.0);
+    }
+
+    #[test]
+    fn quota_scaler_scales_with_dt() {
+        let mut a = QuotaScaler::new(10.0, 0.2, 0.05);
+        let mut b = QuotaScaler::new(10.0, 0.2, 0.05);
+        a.step(15.0, 1.0);
+        for _ in 0..10 {
+            b.step(15.0, 0.1);
+        }
+        assert!((a.output() - b.output()).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quota_scaler_rejects_zero_floor() {
+        QuotaScaler::new(10.0, 0.1, 0.0);
+    }
+
+    #[test]
     fn laws_are_object_safe() {
         let mut laws: Vec<Box<dyn ControlLaw>> = vec![
             Box::new(Aimd::new(1.0, 1.0, 1.0, 0.5, 0.0, 10.0)),
@@ -596,6 +683,7 @@ mod tests {
             Box::new(BudgetPacer::new(10.0, 0.1, 0.0, 1.0)),
             Box::new(Pid::new(0.0, 0.5, 0.5, 0.1, 0.05, -1.0, 1.0)),
             Box::new(ReplicaScaler::new(1.0, 4.0, 0.8, 0.4, 30.0)),
+            Box::new(QuotaScaler::new(40.0, 0.5, 0.05)),
         ];
         for law in &mut laws {
             let out = law.step(0.7, 0.1);

@@ -322,6 +322,26 @@ impl Default for ReplicaScalerConfig {
     }
 }
 
+/// Tenant quota scaling: a `QuotaScaler` loop shrinks every tenant's
+/// GCRA rate (via `crate::qos::QosLayer::set_quota_scale`) while the
+/// windowed power draw runs over budget, and lets quotas recover when
+/// pressure clears.
+#[derive(Debug, Clone)]
+pub struct QuotaScalerConfig {
+    /// Power budget (watts) above which tenant quotas shrink.
+    pub budget_watts: f64,
+    /// Fractional scale change per unit *relative* overshoot per second.
+    pub gain: f64,
+    /// Quota-scale floor in `(0, 1)`; tenants are never throttled to zero.
+    pub min_scale: f64,
+}
+
+impl Default for QuotaScalerConfig {
+    fn default() -> Self {
+        QuotaScalerConfig { budget_watts: 60.0, gain: 0.5, min_scale: 0.05 }
+    }
+}
+
 /// Which loops the serving system boots, and the tick cadence.
 #[derive(Debug, Clone)]
 pub struct ControlPlaneConfig {
@@ -331,6 +351,7 @@ pub struct ControlPlaneConfig {
     pub adaptive_router: Option<AdaptiveRouterConfig>,
     pub energy_budget: Option<EnergyBudgetConfig>,
     pub replica_scaler: Option<ReplicaScalerConfig>,
+    pub quota_scaler: Option<QuotaScalerConfig>,
 }
 
 impl Default for ControlPlaneConfig {
@@ -342,6 +363,7 @@ impl Default for ControlPlaneConfig {
             adaptive_router: None,
             energy_budget: None,
             replica_scaler: None,
+            quota_scaler: None,
         }
     }
 }
@@ -380,6 +402,12 @@ impl ControlPlaneConfig {
         self
     }
 
+    pub fn with_quota_scaler(mut self, budget_watts: f64) -> Self {
+        self.quota_scaler =
+            Some(QuotaScalerConfig { budget_watts, ..QuotaScalerConfig::default() });
+        self
+    }
+
     /// Any loop enabled?
     pub fn any_enabled(&self) -> bool {
         self.adaptive_tau.is_some()
@@ -387,6 +415,7 @@ impl ControlPlaneConfig {
             || self.adaptive_router.is_some()
             || self.energy_budget.is_some()
             || self.replica_scaler.is_some()
+            || self.quota_scaler.is_some()
     }
 }
 
@@ -493,7 +522,8 @@ mod tests {
             .with_adaptive_batch_delay(0.05)
             .with_adaptive_router(0.1)
             .with_energy_budget(75.0)
-            .with_replica_scaler(6, 30.0);
+            .with_replica_scaler(6, 30.0)
+            .with_quota_scaler(45.0);
         assert!(c.any_enabled());
         assert_eq!(c.adaptive_tau.unwrap().target_admit_rate, 0.6);
         assert_eq!(c.adaptive_batch_delay.unwrap().slo_p95_secs, 0.05);
@@ -502,6 +532,7 @@ mod tests {
         let rs = c.replica_scaler.unwrap();
         assert_eq!(rs.max_replicas, 6);
         assert_eq!(rs.idle_secs, 30.0);
+        assert_eq!(c.quota_scaler.unwrap().budget_watts, 45.0);
         assert!(!ControlPlaneConfig::default().any_enabled());
     }
 }

@@ -41,6 +41,7 @@ pub mod energy;
 pub mod json;
 pub mod models;
 pub mod pipeline;
+pub mod qos;
 pub mod router;
 pub mod runtime;
 pub mod server;

@@ -61,7 +61,7 @@ use std::time::{Duration, Instant};
 
 use crate::batching::policy::BatcherPolicy;
 use crate::configsys::ModelConfig;
-use crate::control::law::{Aimd, BudgetPacer, ReplicaScaler, SetpointTracker};
+use crate::control::law::{Aimd, BudgetPacer, QuotaScaler, ReplicaScaler, SetpointTracker};
 use crate::control::{
     Adaptive, ControlLoop, ControlPlane, ControlPlaneConfig, EnergyWindow, WindowedMetrics,
 };
@@ -75,6 +75,7 @@ use crate::pipeline::coalesce::{
 };
 use crate::models;
 use crate::models::inputgen;
+use crate::qos::{QosConfig, QosLayer};
 use crate::router::{PathKind, RoutePolicy, Router};
 use crate::runtime::engine::{ExecMode, ExecStats};
 use crate::runtime::lifecycle::{JobKind, JobSpec, LifecycleExecutor};
@@ -182,6 +183,10 @@ pub struct SystemConfig {
     /// a production repo can never slow real loads; lifecycle tests
     /// opt in.
     pub load_hooks: bool,
+    /// Per-tenant QoS admission (GCRA quotas + retry budgets). Always
+    /// on; the defaults are generous enough that single-tenant
+    /// deployments never notice it.
+    pub qos: QosConfig,
 }
 
 impl SystemConfig {
@@ -201,6 +206,7 @@ impl SystemConfig {
             control: None,
             model_control: ModelControl::None,
             load_hooks: false,
+            qos: QosConfig::default(),
         }
     }
 
@@ -226,6 +232,11 @@ impl SystemConfig {
 
     pub fn with_load_hooks(mut self) -> Self {
         self.load_hooks = true;
+        self
+    }
+
+    pub fn with_qos(mut self, qos: QosConfig) -> Self {
+        self.qos = qos;
         self
     }
 }
@@ -636,6 +647,10 @@ pub struct ServingSystem {
     controller: Option<Arc<Mutex<AdmissionController>>>,
     router: Mutex<Router>,
     clock: SystemClock,
+    /// Per-tenant QoS gates (GCRA quotas, retry budgets); the gateway
+    /// consults it before `submit_opts`, the `tenant_quota_scale`
+    /// control loop writes its quota-scale cell.
+    qos: Arc<QosLayer>,
 }
 
 impl ServingSystem {
@@ -654,10 +669,13 @@ impl ServingSystem {
             .map(|c| Arc::new(Mutex::new(AdmissionController::new(c))));
         let metrics = Arc::new(WindowedMetrics::new(64, 256));
         let router = Router::new(cfg.route.clone());
+        // The QoS layer exists before the control plane: the quota
+        // loop's apply side captures it.
+        let qos = Arc::new(QosLayer::new(cfg.qos.clone()));
         let plane = cfg
             .control
             .as_ref()
-            .and_then(|pc| Self::wire_global_loops(pc, &controller, &metrics, &router));
+            .and_then(|pc| Self::wire_global_loops(pc, &controller, &metrics, &router, &qos));
         let shared = Arc::new(SystemShared {
             plane,
             registry,
@@ -678,6 +696,7 @@ impl ServingSystem {
             controller,
             router: Mutex::new(router),
             clock: SystemClock::new(),
+            qos,
         };
         if sys.shared.cfg.model_control == ModelControl::None {
             // Fan every model's load onto the executor, then wait for
@@ -714,6 +733,7 @@ impl ServingSystem {
         controller: &Option<Arc<Mutex<AdmissionController>>>,
         metrics: &Arc<WindowedMetrics>,
         router: &Router,
+        qos: &Arc<QosLayer>,
     ) -> Option<ControlPlane> {
         if !pc.any_enabled() {
             return None;
@@ -771,6 +791,33 @@ impl ServingSystem {
                     Box::new(move |v| handle.set(v)),
                 ));
             }
+        }
+
+        // Tenant quota scaling: windowed power over budget shrinks every
+        // tenant's GCRA rate multiplicatively; under-budget windows let
+        // quotas recover toward the configured base. A stale window (no
+        // new arrivals since the last tick) reports 0 W — like the
+        // per-model pacers — so quotas recover while the system idles
+        // instead of holding the last pressure reading forever.
+        if let Some(qc) = &pc.quota_scaler {
+            let law = QuotaScaler::new(qc.budget_watts, qc.gain, qc.min_scale);
+            let m = metrics.clone();
+            let mut last_events = 0u64;
+            let signal = move || {
+                let ev = m.events();
+                if ev == last_events {
+                    return 0.0;
+                }
+                last_events = ev;
+                m.snapshot().watts
+            };
+            let q = qos.clone();
+            plane.add_loop(ControlLoop::new(
+                "tenant_quota_scale",
+                Box::new(law),
+                Box::new(signal),
+                Box::new(move |v| q.set_quota_scale(v)),
+            ));
         }
 
         plane.start(Duration::from_secs_f64(pc.tick_secs.max(1e-3)));
@@ -1651,6 +1698,12 @@ impl ServingSystem {
         &self.clock
     }
 
+    /// The per-tenant QoS admission layer (GCRA quotas + retry
+    /// budgets); the gateway consults it before submitting.
+    pub fn qos(&self) -> &Arc<QosLayer> {
+        &self.qos
+    }
+
     /// Recent P95 latency (s).
     pub fn p95(&self) -> f64 {
         self.latency.lock().unwrap().p95()
@@ -1996,6 +2049,17 @@ impl ServingSystem {
         opts: Option<&SubmitOptions>,
         t0: f64,
     ) -> Result<InferResult, RuntimeError> {
+        // Replica-dispatch checkpoint: admission may have taken long
+        // enough (screener pass, controller lock) that the deadline
+        // lapsed; drop before engines or the singleflight table see it.
+        if let Some(o) = opts {
+            if let Some(d) = o.deadline {
+                let now = self.clock.now();
+                if now >= d {
+                    return Err(self.abandon_expired(handle, o, t0, now));
+                }
+            }
+        }
         let sig = ResponseCache::signature(
             &req.model,
             handle.version,
@@ -2092,6 +2156,12 @@ impl ServingSystem {
                 Err(RuntimeError::ModelUnavailable { model: req.model.clone() })
             }
             FollowerVerdict::TimedOut => {
+                // The follower abandons its wait; the leader keeps
+                // running, so no energy was avoided — count the
+                // abandonment without a saved-joules credit.
+                crate::telemetry::MetricsRegistry::global()
+                    .counter("gf_deadline_abandoned_total")
+                    .inc();
                 let now = self.clock.now();
                 let fallback = SubmitOptions::default();
                 Err(deadline_error(opts.unwrap_or(&fallback), t0, now))
@@ -2120,6 +2190,29 @@ impl ServingSystem {
         results.pop().ok_or_else(|| RuntimeError::Xla("empty batch".into()))
     }
 
+    /// A propagated deadline expired *before* the expensive hand-off:
+    /// account the abandoned work and build the typed error. The
+    /// execution energy the drop avoided — the version's per-request
+    /// profile estimate, the same figure a coalesced follower credits —
+    /// goes to the meter's saved ledger and `gf_joules_saved_total`, so
+    /// work a caller abandoned upstream shows up in the energy audit
+    /// instead of silently burning joules (`gf_deadline_abandoned_total`
+    /// counts the drops).
+    fn abandon_expired(
+        &self,
+        handle: &Arc<VersionHandle>,
+        opts: &SubmitOptions,
+        t0: f64,
+        now: f64,
+    ) -> RuntimeError {
+        let saved = self.shared.cfg.device.exec_energy(handle.manifest.flops_per_item(1));
+        self.shared.meter.record_saved(saved);
+        let reg = crate::telemetry::MetricsRegistry::global();
+        reg.gauge("gf_joules_saved_total").set(self.shared.meter.total_joules_saved());
+        reg.counter("gf_deadline_abandoned_total").inc();
+        deadline_error(opts, t0, now)
+    }
+
     /// The v2-protocol batch entry point. Semantics:
     ///
     /// * One routing decision and one deadline for the whole body (the
@@ -2143,12 +2236,19 @@ impl ServingSystem {
             return Ok(Vec::new());
         }
         let t0 = self.clock.now();
+        let model = &reqs[0].model;
         if let Some(d) = opts.deadline {
             if t0 >= d {
+                // Arrived already expired (the client abandoned it
+                // upstream): refuse without work, crediting the avoided
+                // execution when the model resolves. Resolution errors
+                // stay masked by the deadline, as before.
+                if let Ok(h) = self.resolve(model, opts.version) {
+                    return Err(self.abandon_expired(&h, opts, t0, t0));
+                }
                 return Err(deadline_error(opts, t0, t0));
             }
         }
-        let model = &reqs[0].model;
         let handle = self.resolve(model, opts.version)?;
 
         let mut path = match prefer {
@@ -2185,7 +2285,7 @@ impl ServingSystem {
                 if let Some(d) = opts.deadline {
                     let now = self.clock.now();
                     if now >= d {
-                        return Err(deadline_error(opts, t0, now));
+                        return Err(self.abandon_expired(&handle, opts, t0, now));
                     }
                 }
                 let r = if bypass_admission {
@@ -2230,7 +2330,7 @@ impl ServingSystem {
             if let Some(d) = opts.deadline {
                 let now = self.clock.now();
                 if now >= d {
-                    return Err(deadline_error(opts, t0, now));
+                    return Err(self.abandon_expired(&handle, opts, t0, now));
                 }
             }
             if bypass_admission {
@@ -2265,6 +2365,17 @@ impl ServingSystem {
                 ItemPlan::Skip(_) => pending.push(Slot::Skip),
                 ItemPlan::Exec { .. } => {
                     let t_item = self.clock.now();
+                    // Last check before engine work is enqueued: an item
+                    // whose deadline expired while earlier items joined
+                    // the batcher must not buy a bucket slot. Receivers
+                    // already enqueued are dropped (the batcher discards
+                    // their replies) and the dropped leader guards
+                    // publish the failure to any follower.
+                    if let Some(d) = opts.deadline {
+                        if t_item >= d {
+                            return Err(self.abandon_expired(&handle, opts, t0, t_item));
+                        }
+                    }
                     let sig = ResponseCache::signature(
                         &req.model,
                         handle.version,

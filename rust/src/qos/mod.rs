@@ -1,0 +1,647 @@
+//! Per-tenant QoS admission: GCRA rate limits, retry budgets, and the
+//! header surface for deadline propagation.
+//!
+//! This layer sits between the HTTP gateway and
+//! [`crate::pipeline::ServingSystem`]: every inference request is
+//! attributed to a tenant (the `X-Tenant-Id` header, or the `default`
+//! tenant when absent) and must clear two per-tenant gates *before* it
+//! reaches the energy-aware admission controller:
+//!
+//! 1. **GCRA rate limit** — each tenant owns a Generic Cell Rate
+//!    Algorithm limiter in its virtual-scheduling form. The limiter
+//!    keeps a single float, the *theoretical arrival time* (TAT). With
+//!    rate `r` requests/s the emission interval is `T = 1/r` and the
+//!    burst tolerance is `τ = (burst − 1)·T`. An arrival at time `t`
+//!    conforms iff `max(TAT, t) − t ≤ τ`; on admit the TAT advances by
+//!    `T` per admitted item. Over any window of `W` seconds this admits
+//!    at most `r·W + burst` items — the bound the property tests pin.
+//!    Non-conforming arrivals are shed with `RATE_LIMITED`/429 and a
+//!    `Retry-After` hint derived from the TAT overshoot.
+//!
+//!    The per-tenant rate is an [`Adaptive<u32>`] cell: the
+//!    `QuotaScaler` control law (see [`crate::control::law`]) shrinks
+//!    every tenant's quota multiplicatively when the global power draw
+//!    is over budget and lets it recover toward the configured base
+//!    rate when pressure clears.
+//!
+//! 2. **Retry budget** — clients mark retries with `X-Retry-Attempt`.
+//!    A windowed ledger per tenant admits a retry only while
+//!    `retries + 1 ≤ fraction × successes` over the trailing window,
+//!    so retry storms decay geometrically instead of amplifying energy
+//!    spend. Over-budget retries are shed with
+//!    `RETRY_BUDGET_EXHAUSTED`/429 before they can reach the admission
+//!    controller or burn engine joules.
+//!
+//! Deadline propagation itself (the `X-Request-Deadline` header) is
+//! parsed here ([`parse_deadline_unix_ms`]) but enforced in the
+//! pipeline: the gateway converts the absolute unix-millis deadline
+//! into the serving system's monotonic clock domain and the pipeline
+//! checks it at every expensive hand-off, crediting the avoided
+//! execution energy to the saved-joules ledger.
+//!
+//! All decision state is time-explicit (`now` is a parameter, never
+//! sampled internally), so the deterministic tenancy sim
+//! ([`crate::sim::tenancy`]) and the property tests drive the very same
+//! code that serves live traffic.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::control::Adaptive;
+use crate::telemetry::registry::Counter;
+use crate::telemetry::MetricsRegistry;
+
+/// Header naming the tenant a request is accounted to.
+pub const TENANT_HEADER: &str = "X-Tenant-Id";
+/// Header marking a request as the N-th retry of an earlier attempt.
+pub const RETRY_HEADER: &str = "X-Retry-Attempt";
+/// Header carrying an absolute request deadline in unix milliseconds.
+pub const DEADLINE_HEADER: &str = "X-Request-Deadline";
+/// Tenant used when a request carries no `X-Tenant-Id` header.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Longest accepted tenant id, in bytes.
+pub const MAX_TENANT_ID_LEN: usize = 64;
+
+/// Static configuration for the QoS layer.
+///
+/// Defaults are deliberately generous: single-tenant deployments (and
+/// every pre-existing test and bench) run under the `default` tenant
+/// and must never be shed by a limiter they did not opt into.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Base GCRA rate for every tenant, requests per second.
+    pub default_rate_rps: u32,
+    /// GCRA burst tolerance, in requests (≥ 1).
+    pub default_burst: u32,
+    /// Retries admitted per success over the trailing window
+    /// (`0.1` = one retry per ten successes).
+    pub retry_fraction: f64,
+    /// Width of the retry-ledger window, seconds.
+    pub retry_window_secs: f64,
+    /// Hard cap on distinct tenants; excess ids share the `default`
+    /// tenant's quota so a header-spraying client cannot grow the
+    /// table (or the metrics namespace) without bound.
+    pub max_tenants: usize,
+    /// Shard count for the tenant table (power of two recommended).
+    pub shards: usize,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            default_rate_rps: 250_000,
+            default_burst: 50_000,
+            retry_fraction: 0.1,
+            retry_window_secs: 10.0,
+            max_tenants: 64,
+            shards: 8,
+        }
+    }
+}
+
+/// Outcome of a QoS admission decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QosVerdict {
+    /// The request may proceed to the admission controller.
+    Admit,
+    /// The tenant is over its GCRA quota; retry after the given
+    /// number of seconds (the TAT overshoot).
+    RateLimited {
+        /// Seconds until the earliest conforming arrival.
+        retry_after_secs: f64,
+    },
+    /// The tenant's retry budget is exhausted; the retry is shed
+    /// before touching admission.
+    RetryBudgetExhausted,
+}
+
+/// GCRA limiter state in virtual-scheduling form: one float, the
+/// theoretical arrival time of the next conforming cell.
+#[derive(Debug, Clone, Default)]
+pub struct Gcra {
+    tat: f64,
+}
+
+impl Gcra {
+    /// Fresh limiter; the first arrival always conforms.
+    pub fn new() -> Self {
+        Gcra { tat: 0.0 }
+    }
+
+    /// Decide `items` arrivals at time `now` (seconds) against
+    /// `rate_rps`/`burst`. `Ok(())` admits and advances the TAT;
+    /// `Err(wait)` rejects with the seconds until the batch would
+    /// conform. Admitting never exceeds `rate × W + burst` items over
+    /// any window of `W` seconds.
+    pub fn decide(&mut self, now: f64, rate_rps: u32, burst: u32, items: u32) -> Result<(), f64> {
+        let items = items.max(1);
+        let t = 1.0 / f64::from(rate_rps.max(1));
+        let tolerance = f64::from(burst.max(1) - 1) * t;
+        let base = self.tat.max(now);
+        // All `items` cells conform iff the last one is within tolerance.
+        let offset = (base - now) + f64::from(items - 1) * t;
+        if offset > tolerance + 1e-9 {
+            Err(offset - tolerance)
+        } else {
+            self.tat = base + f64::from(items) * t;
+            Ok(())
+        }
+    }
+
+    /// Current theoretical arrival time (test/introspection hook).
+    pub fn tat(&self) -> f64 {
+        self.tat
+    }
+}
+
+const LEDGER_BUCKETS_MIN: usize = 1;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct LedgerBucket {
+    /// `second + 1` of the bucket's data; 0 = empty.
+    epoch1: u64,
+    successes: u64,
+    retries: u64,
+}
+
+/// Windowed per-tenant retry ledger: ring of one-second buckets
+/// tracking successes and admitted retries over the trailing window.
+///
+/// A retry is admissible only while
+/// `retries + 1 ≤ fraction × successes` over the window, so after each
+/// admission the invariant `retries ≤ fraction × successes` holds for
+/// any interleaving of events — with zero recent successes no retries
+/// are admitted at all.
+#[derive(Debug, Clone)]
+pub struct RetryLedger {
+    buckets: Vec<LedgerBucket>,
+}
+
+impl RetryLedger {
+    /// Ledger with a trailing window of `window_secs` (rounded up to
+    /// whole seconds, minimum one).
+    pub fn new(window_secs: f64) -> Self {
+        let n = (window_secs.max(1.0).ceil() as usize).max(LEDGER_BUCKETS_MIN);
+        RetryLedger { buckets: vec![LedgerBucket::default(); n] }
+    }
+
+    fn second(now: f64) -> u64 {
+        now.max(0.0).floor() as u64
+    }
+
+    fn bucket_mut(&mut self, now: f64) -> &mut LedgerBucket {
+        let sec = Self::second(now);
+        let n = self.buckets.len() as u64;
+        let b = &mut self.buckets[(sec % n) as usize];
+        if b.epoch1 != sec + 1 {
+            *b = LedgerBucket { epoch1: sec + 1, successes: 0, retries: 0 };
+        }
+        b
+    }
+
+    /// `(successes, retries)` within the trailing window ending at `now`.
+    pub fn totals(&self, now: f64) -> (u64, u64) {
+        let sec = Self::second(now);
+        let n = self.buckets.len() as u64;
+        let mut s = 0;
+        let mut r = 0;
+        for b in &self.buckets {
+            if b.epoch1 != 0 && b.epoch1 - 1 + n > sec && b.epoch1 - 1 <= sec {
+                s += b.successes;
+                r += b.retries;
+            }
+        }
+        (s, r)
+    }
+
+    /// Would one more retry stay within `fraction × successes`?
+    pub fn would_allow_retry(&self, now: f64, fraction: f64) -> bool {
+        let (successes, retries) = self.totals(now);
+        (retries + 1) as f64 <= fraction * successes as f64
+    }
+
+    /// Record an admitted retry.
+    pub fn note_retry(&mut self, now: f64) {
+        self.bucket_mut(now).retries += 1;
+    }
+
+    /// Record `items` successfully served items.
+    pub fn note_success(&mut self, now: f64, items: u64) {
+        self.bucket_mut(now).successes += items;
+    }
+}
+
+#[derive(Debug)]
+struct TenantState {
+    gcra: Gcra,
+    retry: RetryLedger,
+}
+
+/// One tenant: quota cell, limiter state, and accounting.
+#[derive(Debug)]
+pub struct Tenant {
+    name: String,
+    base_rate_rps: u32,
+    rate_rps: Adaptive<u32>,
+    burst: u32,
+    state: Mutex<TenantState>,
+    admitted: AtomicU64,
+    shed_rate_limited: AtomicU64,
+    shed_retry_budget: AtomicU64,
+    successes: AtomicU64,
+    retries_admitted: AtomicU64,
+    admitted_counter: Arc<Counter>,
+    shed_counter: Arc<Counter>,
+}
+
+impl Tenant {
+    fn new(name: &str, cfg: &QosConfig, scale: f64) -> Self {
+        let reg = MetricsRegistry::global();
+        Tenant {
+            name: name.to_string(),
+            base_rate_rps: cfg.default_rate_rps,
+            rate_rps: Adaptive::new(scaled_rate(cfg.default_rate_rps, scale)),
+            burst: cfg.default_burst.max(1),
+            state: Mutex::new(TenantState {
+                gcra: Gcra::new(),
+                retry: RetryLedger::new(cfg.retry_window_secs),
+            }),
+            admitted: AtomicU64::new(0),
+            shed_rate_limited: AtomicU64::new(0),
+            shed_retry_budget: AtomicU64::new(0),
+            successes: AtomicU64::new(0),
+            retries_admitted: AtomicU64::new(0),
+            admitted_counter: reg.counter(&format!("gf_tenant_admitted_total.{name}")),
+            shed_counter: reg.counter(&format!("gf_tenant_shed_total.{name}")),
+        }
+    }
+
+    /// Tenant name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Current (possibly scaled-down) GCRA rate in requests/s.
+    pub fn rate_rps(&self) -> u32 {
+        self.rate_rps.get()
+    }
+
+    fn decide(&self, items: u32, retry_attempt: u32, now: f64, fraction: f64) -> QosVerdict {
+        let is_retry = retry_attempt > 0;
+        let mut st = self.state.lock().unwrap();
+        if is_retry && !st.retry.would_allow_retry(now, fraction) {
+            drop(st);
+            self.shed_retry_budget.fetch_add(1, Ordering::Relaxed);
+            self.shed_counter.inc();
+            return QosVerdict::RetryBudgetExhausted;
+        }
+        match st.gcra.decide(now, self.rate_rps.get(), self.burst, items) {
+            Ok(()) => {
+                if is_retry {
+                    st.retry.note_retry(now);
+                    self.retries_admitted.fetch_add(1, Ordering::Relaxed);
+                }
+                drop(st);
+                self.admitted.fetch_add(u64::from(items.max(1)), Ordering::Relaxed);
+                self.admitted_counter.add(u64::from(items.max(1)));
+                QosVerdict::Admit
+            }
+            Err(wait) => {
+                drop(st);
+                self.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
+                self.shed_counter.inc();
+                QosVerdict::RateLimited { retry_after_secs: wait }
+            }
+        }
+    }
+
+    fn stats(&self) -> TenantStats {
+        TenantStats {
+            name: self.name.clone(),
+            base_rate_rps: self.base_rate_rps,
+            rate_rps: self.rate_rps.get(),
+            burst: self.burst,
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_rate_limited: self.shed_rate_limited.load(Ordering::Relaxed),
+            shed_retry_budget: self.shed_retry_budget.load(Ordering::Relaxed),
+            successes: self.successes.load(Ordering::Relaxed),
+            retries_admitted: self.retries_admitted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time accounting snapshot for one tenant (the
+/// `/v2/tenants` payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    /// Tenant name.
+    pub name: String,
+    /// Configured base GCRA rate, requests/s.
+    pub base_rate_rps: u32,
+    /// Effective (quota-scaled) GCRA rate, requests/s.
+    pub rate_rps: u32,
+    /// GCRA burst tolerance, requests.
+    pub burst: u32,
+    /// Items admitted past the QoS gates.
+    pub admitted: u64,
+    /// Requests shed by the GCRA limiter.
+    pub shed_rate_limited: u64,
+    /// Retries shed by the retry budget.
+    pub shed_retry_budget: u64,
+    /// Items recorded as successfully served.
+    pub successes: u64,
+    /// Retries admitted within budget.
+    pub retries_admitted: u64,
+}
+
+type Shard = RwLock<HashMap<String, Arc<Tenant>>>;
+
+/// The per-tenant QoS admission layer: a sharded tenant table plus the
+/// global quota-scale cell the `QuotaScaler` control loop writes.
+#[derive(Debug)]
+pub struct QosLayer {
+    cfg: QosConfig,
+    shards: Vec<Shard>,
+    scale: Adaptive<f64>,
+    retry_shed_counter: Arc<Counter>,
+}
+
+impl QosLayer {
+    /// Build the layer and pre-register the `default` tenant.
+    pub fn new(cfg: QosConfig) -> Self {
+        let shards = (0..cfg.shards.max(1)).map(|_| RwLock::new(HashMap::new())).collect();
+        let layer = QosLayer {
+            cfg,
+            shards,
+            scale: Adaptive::new(1.0),
+            retry_shed_counter: MetricsRegistry::global().counter("gf_retry_shed_total"),
+        };
+        layer.tenant(DEFAULT_TENANT);
+        layer
+    }
+
+    /// Layer configuration.
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    fn shard_index(&self, name: &str) -> usize {
+        // FNV-1a over the tenant name; local so `qos` stays free of
+        // pipeline dependencies.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h as usize) % self.shards.len()
+    }
+
+    /// Number of distinct tenants currently tracked.
+    pub fn tenant_count(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Resolve (creating on first sight) the tenant for `name`. When
+    /// the table is at `max_tenants`, unknown names share the
+    /// `default` tenant.
+    pub fn tenant(&self, name: &str) -> Arc<Tenant> {
+        let idx = self.shard_index(name);
+        if let Some(t) = self.shards[idx].read().unwrap().get(name) {
+            return Arc::clone(t);
+        }
+        let mut w = self.shards[idx].write().unwrap();
+        if let Some(t) = w.get(name) {
+            return Arc::clone(t);
+        }
+        if name != DEFAULT_TENANT {
+            let others: usize = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != idx)
+                .map(|(_, s)| s.read().unwrap().len())
+                .sum();
+            if others + w.len() >= self.cfg.max_tenants {
+                drop(w);
+                return self.tenant(DEFAULT_TENANT);
+            }
+        }
+        let t = Arc::new(Tenant::new(name, &self.cfg, self.scale.get()));
+        w.insert(name.to_string(), Arc::clone(&t));
+        t
+    }
+
+    /// Run the QoS gates for `items` arrivals attributed to
+    /// `tenant_id` at time `now` (seconds on the caller's clock).
+    /// `retry_attempt > 0` marks the request as a retry and charges
+    /// the retry budget.
+    pub fn decide(&self, tenant_id: &str, items: u32, retry_attempt: u32, now: f64) -> QosVerdict {
+        let tenant = self.tenant(tenant_id);
+        let verdict = tenant.decide(items, retry_attempt, now, self.cfg.retry_fraction);
+        if verdict == QosVerdict::RetryBudgetExhausted {
+            self.retry_shed_counter.inc();
+        }
+        verdict
+    }
+
+    /// Record `items` successfully served items for `tenant_id`,
+    /// growing its retry budget.
+    pub fn record_success(&self, tenant_id: &str, items: u64, now: f64) {
+        let t = self.tenant(tenant_id);
+        t.state.lock().unwrap().retry.note_success(now, items);
+        t.successes.fetch_add(items, Ordering::Relaxed);
+    }
+
+    /// Current global quota scale in `(0, 1]`.
+    pub fn quota_scale(&self) -> f64 {
+        self.scale.get()
+    }
+
+    /// Apply a new quota scale: every tenant's effective rate becomes
+    /// `base_rate × scale` (floored at one request/s). Called by the
+    /// `tenant_quota_scale` control loop.
+    pub fn set_quota_scale(&self, scale: f64) {
+        let scale = if scale.is_finite() { scale.clamp(0.01, 1.0) } else { 1.0 };
+        self.scale.set(scale);
+        for shard in &self.shards {
+            for t in shard.read().unwrap().values() {
+                t.rate_rps.set(scaled_rate(t.base_rate_rps, scale));
+            }
+        }
+    }
+
+    /// Stats for every tenant, sorted by name for deterministic output.
+    pub fn tenants(&self) -> Vec<TenantStats> {
+        let mut out: Vec<TenantStats> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().values().map(|t| t.stats()).collect::<Vec<_>>())
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+fn scaled_rate(base: u32, scale: f64) -> u32 {
+    ((f64::from(base) * scale).round() as u32).max(1)
+}
+
+/// Validate a tenant id: non-empty, at most [`MAX_TENANT_ID_LEN`]
+/// bytes, characters in `[A-Za-z0-9_.-]`.
+pub fn validate_tenant_id(v: &str) -> Result<(), String> {
+    if v.is_empty() {
+        return Err("tenant id must be non-empty".to_string());
+    }
+    if v.len() > MAX_TENANT_ID_LEN {
+        return Err(format!("tenant id exceeds {MAX_TENANT_ID_LEN} bytes"));
+    }
+    if !v.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'.' || b == b'-') {
+        return Err("tenant id may only contain [A-Za-z0-9_.-]".to_string());
+    }
+    Ok(())
+}
+
+/// Parse the `X-Retry-Attempt` header: a non-negative decimal integer.
+pub fn parse_retry_attempt(v: &str) -> Result<u32, String> {
+    v.trim().parse::<u32>().map_err(|_| {
+        format!("{RETRY_HEADER} must be a non-negative integer, got {v:?}")
+    })
+}
+
+/// Parse the `X-Request-Deadline` header: an absolute unix timestamp
+/// in milliseconds.
+pub fn parse_deadline_unix_ms(v: &str) -> Result<u64, String> {
+    v.trim().parse::<u64>().map_err(|_| {
+        format!("{DEADLINE_HEADER} must be an absolute unix timestamp in milliseconds, got {v:?}")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcra_admits_burst_then_paces() {
+        let mut g = Gcra::new();
+        // rate 10 rps, burst 3: three instantaneous admits, then shed.
+        for i in 0..3 {
+            assert!(g.decide(0.0, 10, 3, 1).is_ok(), "burst admit {i}");
+        }
+        let wait = g.decide(0.0, 10, 3, 1).expect_err("fourth instantaneous arrival sheds");
+        assert!(wait > 0.0 && wait <= 0.1 + 1e-9, "wait {wait} within one emission interval");
+        // After waiting out the hint the arrival conforms.
+        assert!(g.decide(wait + 1e-6, 10, 3, 1).is_ok());
+    }
+
+    #[test]
+    fn gcra_steady_rate_always_conforms() {
+        let mut g = Gcra::new();
+        for i in 0..1000 {
+            let now = f64::from(i) * 0.1;
+            assert!(g.decide(now, 10, 1, 1).is_ok(), "paced arrival {i}");
+        }
+    }
+
+    #[test]
+    fn gcra_batch_charges_every_item() {
+        let mut g = Gcra::new();
+        assert!(g.decide(0.0, 100, 10, 10).is_ok(), "burst-sized batch admits");
+        assert!(g.decide(0.0, 100, 10, 1).is_err(), "burst fully consumed");
+        let mut g2 = Gcra::new();
+        assert!(g2.decide(0.0, 100, 10, 11).is_err(), "batch larger than burst sheds");
+    }
+
+    #[test]
+    fn retry_ledger_caps_retries_at_fraction_of_successes() {
+        let mut l = RetryLedger::new(10.0);
+        assert!(!l.would_allow_retry(0.0, 0.5), "no successes, no retries");
+        l.note_success(0.0, 10);
+        let mut admitted = 0;
+        while l.would_allow_retry(0.5, 0.5) {
+            l.note_retry(0.5);
+            admitted += 1;
+            assert!(admitted <= 5, "runaway ledger");
+        }
+        assert_eq!(admitted, 5, "0.5 × 10 successes = 5 retries");
+    }
+
+    #[test]
+    fn retry_ledger_window_expires_old_traffic() {
+        let mut l = RetryLedger::new(2.0);
+        l.note_success(0.0, 100);
+        assert!(l.would_allow_retry(1.0, 0.1), "window still covers the successes");
+        assert!(!l.would_allow_retry(10.0, 0.1), "successes aged out");
+    }
+
+    #[test]
+    fn layer_decides_and_accounts_per_tenant() {
+        let cfg = QosConfig { default_rate_rps: 5, default_burst: 2, ..QosConfig::default() };
+        let layer = QosLayer::new(cfg);
+        assert_eq!(layer.decide("acme", 1, 0, 0.0), QosVerdict::Admit);
+        assert_eq!(layer.decide("acme", 1, 0, 0.0), QosVerdict::Admit);
+        match layer.decide("acme", 1, 0, 0.0) {
+            QosVerdict::RateLimited { retry_after_secs } => assert!(retry_after_secs > 0.0),
+            v => panic!("expected rate limit, got {v:?}"),
+        }
+        // A different tenant has its own bucket.
+        assert_eq!(layer.decide("globex", 1, 0, 0.0), QosVerdict::Admit);
+        let stats = layer.tenants();
+        let acme = stats.iter().find(|t| t.name == "acme").expect("acme tracked");
+        assert_eq!(acme.admitted, 2);
+        assert_eq!(acme.shed_rate_limited, 1);
+    }
+
+    #[test]
+    fn layer_sheds_retries_without_budget() {
+        let layer = QosLayer::new(QosConfig::default());
+        assert_eq!(
+            layer.decide("acme", 1, 1, 0.0),
+            QosVerdict::RetryBudgetExhausted,
+            "no successes yet, retry must shed"
+        );
+        layer.record_success("acme", 100, 0.0);
+        assert_eq!(layer.decide("acme", 1, 1, 0.5), QosVerdict::Admit, "budget accrued");
+    }
+
+    #[test]
+    fn quota_scale_rescales_every_tenant() {
+        let cfg = QosConfig { default_rate_rps: 1000, ..QosConfig::default() };
+        let layer = QosLayer::new(cfg);
+        layer.tenant("acme");
+        layer.set_quota_scale(0.25);
+        assert_eq!(layer.tenant("acme").rate_rps(), 250);
+        assert_eq!(layer.tenant(DEFAULT_TENANT).rate_rps(), 250);
+        // New tenants inherit the live scale.
+        assert_eq!(layer.tenant("late").rate_rps(), 250);
+        layer.set_quota_scale(1.0);
+        assert_eq!(layer.tenant("acme").rate_rps(), 1000);
+    }
+
+    #[test]
+    fn tenant_table_caps_and_falls_back_to_default() {
+        let cfg = QosConfig { max_tenants: 3, ..QosConfig::default() };
+        let layer = QosLayer::new(cfg);
+        layer.tenant("a");
+        layer.tenant("b");
+        assert_eq!(layer.tenant_count(), 3, "default + a + b");
+        let overflow = layer.tenant("c");
+        assert_eq!(overflow.name(), DEFAULT_TENANT, "table full, shares default quota");
+        assert_eq!(layer.tenant_count(), 3);
+    }
+
+    #[test]
+    fn header_parsers_accept_valid_and_reject_garbage() {
+        assert!(validate_tenant_id("acme-prod_7.eu").is_ok());
+        assert!(validate_tenant_id("").is_err());
+        assert!(validate_tenant_id("sp ace").is_err());
+        assert!(validate_tenant_id(&"x".repeat(MAX_TENANT_ID_LEN + 1)).is_err());
+        assert_eq!(parse_retry_attempt("2"), Ok(2));
+        assert!(parse_retry_attempt("-1").is_err());
+        assert!(parse_retry_attempt("two").is_err());
+        assert_eq!(parse_deadline_unix_ms("1754640000000"), Ok(1_754_640_000_000));
+        assert!(parse_deadline_unix_ms("soon").is_err());
+        assert!(parse_deadline_unix_ms("1.5e3").is_err());
+    }
+}

@@ -27,6 +27,11 @@ const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0; // 2^53
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorCode {
     BadRequest,
+    /// A well-formed request carrying a malformed QoS header
+    /// (`X-Request-Deadline`, `X-Retry-Attempt`, `X-Tenant-Id`): typed
+    /// 400 so clients cannot believe they set a deadline that was
+    /// silently dropped.
+    InvalidArgument,
     NotFound,
     ModelNotFound,
     /// The model exists in the repository but has no ready version
@@ -35,6 +40,12 @@ pub enum ErrorCode {
     Unsupported,
     PayloadTooLarge,
     Backpressure,
+    /// The tenant is over its GCRA quota; `Retry-After` carries the
+    /// theoretical-arrival-time hint.
+    RateLimited,
+    /// The tenant's retry budget is exhausted; the retry was shed
+    /// before admission.
+    RetryBudgetExhausted,
     DeadlineExceeded,
     Internal,
 }
@@ -43,12 +54,15 @@ impl ErrorCode {
     pub fn as_str(&self) -> &'static str {
         match self {
             ErrorCode::BadRequest => "BAD_REQUEST",
+            ErrorCode::InvalidArgument => "INVALID_ARGUMENT",
             ErrorCode::NotFound => "NOT_FOUND",
             ErrorCode::ModelNotFound => "MODEL_NOT_FOUND",
             ErrorCode::ModelUnavailable => "MODEL_UNAVAILABLE",
             ErrorCode::Unsupported => "UNSUPPORTED",
             ErrorCode::PayloadTooLarge => "PAYLOAD_TOO_LARGE",
             ErrorCode::Backpressure => "BACKPRESSURE",
+            ErrorCode::RateLimited => "RATE_LIMITED",
+            ErrorCode::RetryBudgetExhausted => "RETRY_BUDGET_EXHAUSTED",
             ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
             ErrorCode::Internal => "INTERNAL",
         }
@@ -56,32 +70,51 @@ impl ErrorCode {
 
     pub fn http_status(&self) -> u16 {
         match self {
-            ErrorCode::BadRequest => 400,
+            ErrorCode::BadRequest | ErrorCode::InvalidArgument => 400,
             ErrorCode::NotFound | ErrorCode::ModelNotFound => 404,
             ErrorCode::ModelUnavailable => 503,
             ErrorCode::Unsupported => 405,
             ErrorCode::PayloadTooLarge => 413,
-            ErrorCode::Backpressure => 429,
+            ErrorCode::Backpressure
+            | ErrorCode::RateLimited
+            | ErrorCode::RetryBudgetExhausted => 429,
             ErrorCode::DeadlineExceeded => 504,
             ErrorCode::Internal => 500,
         }
     }
 }
 
-/// A protocol-level error: code + human message.
+/// A protocol-level error: code + human message, plus an optional
+/// `Retry-After` hint every 429 should carry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ApiError {
     pub code: ErrorCode,
     pub message: String,
+    /// Seconds the client should wait before retrying; rendered as a
+    /// `Retry-After` response header (shed responses without a hint
+    /// teach clients to hammer).
+    pub retry_after_secs: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
-        ApiError { code, message: message.into() }
+        ApiError { code, message: message.into(), retry_after_secs: None }
     }
 
     pub fn bad_request(message: impl Into<String>) -> Self {
         Self::new(ErrorCode::BadRequest, message)
+    }
+
+    /// Typed 400 for a malformed QoS header.
+    pub fn invalid_argument(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::InvalidArgument, message)
+    }
+
+    /// Attach a `Retry-After` hint (seconds, floored at 1 so a
+    /// sub-second wait never renders as `Retry-After: 0`).
+    pub fn with_retry_after(mut self, secs: f64) -> Self {
+        self.retry_after_secs = Some(secs.max(0.0).ceil().max(1.0) as u64);
+        self
     }
 
     /// Map a serving-system error onto the protocol.
@@ -99,7 +132,7 @@ impl ApiError {
                 ErrorCode::Internal
             }
         };
-        ApiError { code, message: e.to_string() }
+        ApiError { code, message: e.to_string(), retry_after_secs: None }
     }
 
     pub fn to_json(&self) -> Value {
@@ -113,7 +146,11 @@ impl ApiError {
     }
 
     pub fn to_response(&self) -> HttpResponse {
-        HttpResponse::json(self.code.http_status(), self.to_json().to_json())
+        let resp = HttpResponse::json(self.code.http_status(), self.to_json().to_json());
+        match self.retry_after_secs {
+            Some(secs) => resp.with_header("Retry-After", &secs.to_string()),
+            None => resp,
+        }
     }
 }
 
@@ -483,12 +520,18 @@ mod tests {
     #[test]
     fn error_codes_map_to_http() {
         assert_eq!(ErrorCode::Backpressure.http_status(), 429);
+        assert_eq!(ErrorCode::RateLimited.http_status(), 429);
+        assert_eq!(ErrorCode::RetryBudgetExhausted.http_status(), 429);
+        assert_eq!(ErrorCode::InvalidArgument.http_status(), 400);
         assert_eq!(ErrorCode::ModelNotFound.http_status(), 404);
         assert_eq!(ErrorCode::ModelUnavailable.http_status(), 503);
         assert_eq!(ErrorCode::DeadlineExceeded.http_status(), 504);
         assert_eq!(ErrorCode::PayloadTooLarge.http_status(), 413);
         assert_eq!(ErrorCode::BadRequest.as_str(), "BAD_REQUEST");
         assert_eq!(ErrorCode::ModelUnavailable.as_str(), "MODEL_UNAVAILABLE");
+        assert_eq!(ErrorCode::RateLimited.as_str(), "RATE_LIMITED");
+        assert_eq!(ErrorCode::RetryBudgetExhausted.as_str(), "RETRY_BUDGET_EXHAUSTED");
+        assert_eq!(ErrorCode::InvalidArgument.as_str(), "INVALID_ARGUMENT");
     }
 
     #[test]
@@ -525,6 +568,25 @@ mod tests {
         assert_eq!(resp.status, 429);
         let v = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(v.get("error").unwrap().get("code").unwrap().as_str().unwrap(), "BACKPRESSURE");
+        assert!(resp.extra_headers.is_empty(), "no hint attached, no header");
+    }
+
+    #[test]
+    fn retry_after_renders_as_header() {
+        let resp = ApiError::new(ErrorCode::RateLimited, "tenant over quota")
+            .with_retry_after(0.037)
+            .to_response();
+        assert_eq!(resp.status, 429);
+        // Sub-second waits round up: "Retry-After: 0" would teach
+        // clients to hammer.
+        assert_eq!(
+            resp.extra_headers,
+            vec![("Retry-After".to_string(), "1".to_string())]
+        );
+        let resp = ApiError::new(ErrorCode::Backpressure, "queue full")
+            .with_retry_after(2.4)
+            .to_response();
+        assert_eq!(resp.extra_headers[0].1, "3", "ceil, not round");
     }
 
     #[test]

@@ -17,7 +17,17 @@
 //!   body; `?wait=true` blocks for the old synchronous semantics)
 //! * `GET  /v2/control/loops`          — control-plane introspection
 //! * `GET  /v2/admission/stats`        — admission-controller stats
+//! * `GET  /v2/tenants`                — per-tenant QoS accounting
 //! * legacy: `POST /infer`, `GET /health`, `GET /models`, `GET /metrics`
+//!
+//! Every infer request first clears the per-tenant QoS layer
+//! ([`crate::qos`]): `X-Tenant-Id` names the tenant (absent = the
+//! `default` tenant), `X-Retry-Attempt` charges the retry budget, and
+//! `X-Request-Deadline` (absolute unix millis) propagates a deadline
+//! the pipeline enforces at every hand-off. Shed requests answer 429
+//! (`RATE_LIMITED` with a GCRA-derived `Retry-After`, or
+//! `RETRY_BUDGET_EXHAUSTED`); malformed QoS headers answer a typed 400
+//! (`INVALID_ARGUMENT`) rather than being silently ignored.
 //!
 //! Connections are HTTP/1.1 **keep-alive**, served by the epoll
 //! reactor in [`super::reactor`] on Linux (`docs/REACTOR.md`): a small
@@ -42,10 +52,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use crate::json::{self, Value};
 use crate::pipeline::system::{InferResult, ServingSystem, SubmitOptions};
+use crate::qos::{self, QosVerdict};
 use crate::router::PathKind;
 use crate::telemetry::{MetricsRegistry, ShardedCounter};
 use crate::util::Clock;
@@ -80,6 +91,8 @@ pub(crate) struct HotCounters {
     pub(crate) backpressure: Arc<ShardedCounter>,
     pub(crate) deadline_exceeded: Arc<ShardedCounter>,
     pub(crate) model_unavailable: Arc<ShardedCounter>,
+    pub(crate) rate_limited: Arc<ShardedCounter>,
+    pub(crate) retry_budget: Arc<ShardedCounter>,
 }
 
 /// The gateway's hot-path counters, resolved once per process. Readers
@@ -96,6 +109,8 @@ pub(crate) fn hot() -> &'static HotCounters {
             backpressure: reg.sharded_counter("gf_http_backpressure_total"),
             deadline_exceeded: reg.sharded_counter("gf_http_deadline_exceeded_total"),
             model_unavailable: reg.sharded_counter("gf_http_model_unavailable_total"),
+            rate_limited: reg.sharded_counter("gf_http_rate_limited_total"),
+            retry_budget: reg.sharded_counter("gf_http_retry_budget_total"),
         }
     })
 }
@@ -469,6 +484,7 @@ fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
         }
         ("GET", ["v2", "control", "loops"]) => control_loops(system),
         ("GET", ["v2", "admission", "stats"]) => admission_stats(system),
+        ("GET", ["v2", "tenants"]) => tenant_stats(system),
 
         // ------------------------------------------------------ legacy
         ("GET", ["health"]) => HttpResponse::ok_json(
@@ -501,13 +517,74 @@ fn route(req: &HttpRequest, system: &ServingSystem) -> HttpResponse {
     }
 }
 
+/// Per-request QoS context parsed from the gateway headers
+/// ([`qos::TENANT_HEADER`], [`qos::RETRY_HEADER`],
+/// [`qos::DEADLINE_HEADER`]).
+struct QosContext {
+    tenant: String,
+    retry_attempt: u32,
+    deadline_unix_ms: Option<u64>,
+}
+
+/// Parse the QoS headers off an infer request. Malformed values are
+/// typed 400s (`INVALID_ARGUMENT`), never silently dropped: a client
+/// that *tried* to set a deadline must not run without one.
+fn parse_qos_headers(req: &HttpRequest) -> Result<QosContext, ApiError> {
+    let tenant = match req.header(qos::TENANT_HEADER) {
+        Some(v) => {
+            qos::validate_tenant_id(v).map_err(ApiError::invalid_argument)?;
+            v.to_string()
+        }
+        None => qos::DEFAULT_TENANT.to_string(),
+    };
+    let retry_attempt = match req.header(qos::RETRY_HEADER) {
+        Some(v) => qos::parse_retry_attempt(v).map_err(ApiError::invalid_argument)?,
+        None => 0,
+    };
+    let deadline_unix_ms = match req.header(qos::DEADLINE_HEADER) {
+        Some(v) => Some(qos::parse_deadline_unix_ms(v).map_err(ApiError::invalid_argument)?),
+        None => None,
+    };
+    Ok(QosContext { tenant, retry_attempt, deadline_unix_ms })
+}
+
+/// Convert the absolute unix-millis deadline into the serving clock's
+/// domain: the serving clock's origin is process-local, so only the
+/// *remaining* time transfers between domains. An already-expired
+/// deadline maps to `now`, which the pipeline sheds at its first
+/// checkpoint (crediting the avoided energy).
+fn deadline_to_clock(now: f64, deadline_unix_ms: u64) -> f64 {
+    let unix_now_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    now + deadline_unix_ms.saturating_sub(unix_now_ms) as f64 / 1e3
+}
+
+/// `Retry-After` hint for a full queue: roughly the time to drain the
+/// queue at the observed throughput. With no recent traffic to
+/// estimate from, fall back to one second.
+fn backpressure_retry_after(system: &ServingSystem) -> f64 {
+    let snap = system.metrics().snapshot();
+    if snap.qps.is_finite() && snap.qps > 0.0 {
+        (system.queue_capacity() as f64 / snap.qps).clamp(1.0, 30.0)
+    } else {
+        1.0
+    }
+}
+
 /// Run a typed infer request through the serving system as one batch:
 /// the whole body goes down [`ServingSystem::submit_batch`], which
 /// coalesces multi-item bodies into shared batcher buckets (admission
 /// still runs per item) and keeps the all-or-error contract — the
 /// first failure aborts the batch and becomes the response status.
+///
+/// Before anything touches the engine the request clears the
+/// per-tenant QoS gates ([`crate::qos`]): the GCRA rate limiter and —
+/// when `X-Retry-Attempt` marks it as a retry — the retry budget.
 fn run_infer(
     ir: &InferRequest,
+    qctx: &QosContext,
     system: &ServingSystem,
 ) -> Result<(u64, Vec<(u64, InferResult)>), ApiError> {
     // Model existence first: MODEL_NOT_FOUND beats any submit error.
@@ -520,9 +597,31 @@ fn run_infer(
     let reg = MetricsRegistry::global();
     let request_id = api::next_request_id();
     let now = system.clock().now();
+    match system.qos().decide(&qctx.tenant, ir.seeds.len() as u32, qctx.retry_attempt, now) {
+        QosVerdict::Admit => {}
+        QosVerdict::RateLimited { retry_after_secs } => {
+            hot().rate_limited.inc();
+            return Err(ApiError::new(
+                ErrorCode::RateLimited,
+                format!("tenant {:?} is over its rate quota", qctx.tenant),
+            )
+            .with_retry_after(retry_after_secs));
+        }
+        QosVerdict::RetryBudgetExhausted => {
+            hot().retry_budget.inc();
+            return Err(ApiError::new(
+                ErrorCode::RetryBudgetExhausted,
+                format!(
+                    "tenant {:?} has exhausted its retry budget; shed before admission",
+                    qctx.tenant
+                ),
+            ));
+        }
+    }
     // One deadline for the whole batch: it bounds the client's wait, not
-    // each item's share of it.
-    let opts = match ir.timeout_ms {
+    // each item's share of it. The header deadline min-combines with the
+    // body's `timeout_ms` — whichever expires first wins.
+    let mut opts = match ir.timeout_ms {
         Some(ms) => SubmitOptions {
             version: ir.version,
             ..SubmitOptions::with_timeout(now, ms, ir.priority)
@@ -533,6 +632,10 @@ fn run_infer(
             ..SubmitOptions::default()
         },
     };
+    if let Some(dl_ms) = qctx.deadline_unix_ms {
+        let abs = deadline_to_clock(now, dl_ms);
+        opts.deadline = Some(opts.deadline.map_or(abs, |t| t.min(abs)));
+    }
     hot().infer_items.add(ir.seeds.len() as u64);
     let requests: Vec<Request> = ir
         .seeds
@@ -546,12 +649,22 @@ fn run_infer(
             if let Some(last) = results.last() {
                 reg.gauge("gf_last_latency_secs").set(last.latency_secs);
             }
+            system.qos().record_success(
+                &qctx.tenant,
+                ir.seeds.len() as u64,
+                system.clock().now(),
+            );
             Ok((request_id, ir.seeds.iter().copied().zip(results).collect()))
         }
         Err(e) => {
-            let api_err = ApiError::from_runtime(&e);
+            let mut api_err = ApiError::from_runtime(&e);
             match api_err.code {
-                ErrorCode::Backpressure => hot().backpressure.inc(),
+                ErrorCode::Backpressure => {
+                    hot().backpressure.inc();
+                    // A 429 without a hint just invites an immediate
+                    // retry; tell the client when a slot is likely free.
+                    api_err = api_err.with_retry_after(backpressure_retry_after(system));
+                }
                 ErrorCode::DeadlineExceeded => hot().deadline_exceeded.inc(),
                 ErrorCode::ModelUnavailable => hot().model_unavailable.inc(),
                 _ => {}
@@ -567,11 +680,12 @@ fn v2_infer(
     req: &HttpRequest,
     system: &ServingSystem,
 ) -> Result<HttpResponse, ApiError> {
+    let qctx = parse_qos_headers(req)?;
     let body = req.body_str().map_err(ApiError::bad_request)?;
     let v = json::parse(body).map_err(|e| ApiError::bad_request(e.to_string()))?;
     let mut ir = InferRequest::from_json(model, &v)?;
     ir.version = version;
-    let (request_id, results) = run_infer(&ir, system)?;
+    let (request_id, results) = run_infer(&ir, &qctx, system)?;
     let outputs = results.iter().map(|(seed, r)| api::item_json(*seed, r)).collect();
     Ok(InferResponse {
         request_id,
@@ -787,6 +901,7 @@ fn repository_control(
 /// strings still mean "direct" (historic leniency); negative or
 /// fractional seeds are now 400s instead of silently wrapping.
 fn legacy_infer(req: &HttpRequest, system: &ServingSystem) -> Result<HttpResponse, ApiError> {
+    let qctx = parse_qos_headers(req)?;
     let body = req.body_str().map_err(ApiError::bad_request)?;
     let v = json::parse(body).map_err(|e| ApiError::bad_request(e.to_string()))?;
     let model = v
@@ -812,7 +927,7 @@ fn legacy_infer(req: &HttpRequest, system: &ServingSystem) -> Result<HttpRespons
         priority: Default::default(),
         version: None,
     };
-    let (request_id, results) = run_infer(&ir, system)?;
+    let (request_id, results) = run_infer(&ir, &qctx, system)?;
     let (_, r) = &results[0];
     Ok(HttpResponse::ok_json(
         json::obj(vec![
@@ -881,6 +996,37 @@ fn control_loops(system: &ServingSystem) -> HttpResponse {
     )
 }
 
+/// `GET /v2/tenants`: the QoS layer's per-tenant accounting — the live
+/// quota scale, each tenant's effective (possibly scaled-down) rate,
+/// and its admit/shed counts.
+fn tenant_stats(system: &ServingSystem) -> HttpResponse {
+    let qos = system.qos();
+    let tenants: Vec<Value> = qos
+        .tenants()
+        .iter()
+        .map(|t| {
+            json::obj(vec![
+                ("name", json::s(&t.name)),
+                ("base_rate_rps", json::num(t.base_rate_rps as f64)),
+                ("rate_rps", json::num(t.rate_rps as f64)),
+                ("burst", json::num(t.burst as f64)),
+                ("admitted", json::num(t.admitted as f64)),
+                ("shed_rate_limited", json::num(t.shed_rate_limited as f64)),
+                ("shed_retry_budget", json::num(t.shed_retry_budget as f64)),
+                ("successes", json::num(t.successes as f64)),
+                ("retries_admitted", json::num(t.retries_admitted as f64)),
+            ])
+        })
+        .collect();
+    HttpResponse::ok_json(
+        json::obj(vec![
+            ("quota_scale", json::num(finite(qos.quota_scale()))),
+            ("tenants", Value::Arr(tenants)),
+        ])
+        .to_json(),
+    )
+}
+
 /// `GET /v2/admission/stats`: the closed-loop controller's counters,
 /// plus the gateway's own refusal counters (typed view of the same
 /// series `/metrics` exposes; `counter_value` reads without minting
@@ -895,6 +1041,30 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
         ("backpressure_responses", count("gf_http_backpressure_total")),
         ("deadline_exceeded_responses", count("gf_http_deadline_exceeded_total")),
         ("model_unavailable_responses", count("gf_http_model_unavailable_total")),
+        ("rate_limited_responses", count("gf_http_rate_limited_total")),
+        ("retry_budget_responses", count("gf_http_retry_budget_total")),
+    ]);
+    // Per-tenant QoS rollup: enough to spot a misbehaving tenant from
+    // this one endpoint; `/v2/tenants` has the full accounting.
+    let qos_layer = system.qos();
+    let tenant_blocks: Vec<Value> = qos_layer
+        .tenants()
+        .iter()
+        .map(|t| {
+            json::obj(vec![
+                ("name", json::s(&t.name)),
+                ("rate_rps", json::num(t.rate_rps as f64)),
+                ("admitted", json::num(t.admitted as f64)),
+                ("shed_rate_limited", json::num(t.shed_rate_limited as f64)),
+                ("shed_retry_budget", json::num(t.shed_retry_budget as f64)),
+            ])
+        })
+        .collect();
+    let qos_block = json::obj(vec![
+        ("quota_scale", json::num(finite(qos_layer.quota_scale()))),
+        ("retry_shed_total", count("gf_retry_shed_total")),
+        ("deadline_abandoned_total", count("gf_deadline_abandoned_total")),
+        ("tenants", Value::Arr(tenant_blocks)),
     ]);
     // The coalescing/cache blocks read the *system's* own counters
     // (not the process-global registry, which other systems in the
@@ -931,12 +1101,14 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
             ("gateway", gateway),
             ("coalesce", coalesce),
             ("cache", cache),
+            ("qos", qos_block),
         ]),
         None => json::obj(vec![
             ("enabled", Value::Bool(false)),
             ("gateway", gateway),
             ("coalesce", coalesce),
             ("cache", cache),
+            ("qos", qos_block),
         ]),
     };
     HttpResponse::ok_json(body.to_json())
@@ -1035,5 +1207,94 @@ mod tests {
             .extra_headers
             .iter()
             .any(|(k, v)| k == "X-Request-Id" && v == "rid-9"));
+
+        // Malformed QoS headers are typed 400s, not silently ignored.
+        let mut req = post("/v2/models/distilbert_mini/infer", br#"{"seed": 1}"#);
+        req.headers.insert("x-request-deadline".into(), "soon".into());
+        let resp = dispatch(&req, &system);
+        assert_eq!(resp.status, 400);
+        assert_eq!(
+            body_json(&resp).get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+            "INVALID_ARGUMENT"
+        );
+        let mut req = post("/infer", br#"{"model": "distilbert_mini", "seed": 1}"#);
+        req.headers.insert("x-retry-attempt".into(), "-1".into());
+        assert_eq!(dispatch(&req, &system).status, 400);
+
+        // An already-expired absolute deadline is shed before execution
+        // with the avoided energy credited to the saved-joules ledger.
+        let saved0 = system.meter().total_joules_saved();
+        let mut req = post("/v2/models/distilbert_mini/infer", br#"{"seed": 2}"#);
+        req.headers.insert("x-request-deadline".into(), "1".into());
+        let resp = dispatch(&req, &system);
+        assert_eq!(resp.status, 504);
+        assert_eq!(
+            body_json(&resp).get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+            "DEADLINE_EXCEEDED"
+        );
+        assert!(
+            system.meter().total_joules_saved() > saved0,
+            "pre-execution deadline drop must credit saved joules"
+        );
+
+        // A tenant header attributes the request; /v2/tenants shows it.
+        let mut req = post("/v2/models/distilbert_mini/infer", br#"{"seed": 3}"#);
+        req.headers.insert("x-tenant-id".into(), "acme".into());
+        assert_eq!(dispatch(&req, &system).status, 200);
+        let tenants = dispatch(&get("/v2/tenants"), &system);
+        assert_eq!(tenants.status, 200);
+        let v = body_json(&tenants);
+        assert!(v.get("quota_scale").unwrap().as_f64().unwrap() > 0.0);
+        let list = v.get("tenants").unwrap().as_arr().unwrap();
+        let acme = list
+            .iter()
+            .find(|t| t.get("name").unwrap().as_str().unwrap() == "acme")
+            .expect("acme tenant tracked");
+        assert!(acme.get("admitted").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(acme.get("successes").unwrap().as_f64().unwrap() >= 1.0);
+
+        // The admission-stats rollup carries the per-tenant blocks.
+        let adm = dispatch(&get("/v2/admission/stats"), &system);
+        let qos_block = body_json(&adm).get("qos").unwrap().clone();
+        assert!(qos_block.get("quota_scale").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!qos_block.get("tenants").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    // Header parsing needs no artifacts: it never touches a system.
+    #[test]
+    fn qos_headers_parse_and_reject() {
+        let ctx = parse_qos_headers(&get("/v2/models/m/infer")).unwrap();
+        assert_eq!(ctx.tenant, qos::DEFAULT_TENANT);
+        assert_eq!(ctx.retry_attempt, 0);
+        assert_eq!(ctx.deadline_unix_ms, None);
+
+        let mut req = get("/v2/models/m/infer");
+        req.headers.insert("x-tenant-id".into(), "acme-prod".into());
+        req.headers.insert("x-retry-attempt".into(), "2".into());
+        req.headers.insert("x-request-deadline".into(), "1754640000000".into());
+        let ctx = parse_qos_headers(&req).unwrap();
+        assert_eq!(ctx.tenant, "acme-prod");
+        assert_eq!(ctx.retry_attempt, 2);
+        assert_eq!(ctx.deadline_unix_ms, Some(1_754_640_000_000));
+
+        for (name, value) in [
+            ("x-tenant-id", "sp ace"),
+            ("x-retry-attempt", "two"),
+            ("x-request-deadline", "soon"),
+        ] {
+            let mut req = get("/v2/models/m/infer");
+            req.headers.insert(name.into(), value.into());
+            let err = parse_qos_headers(&req).unwrap_err();
+            assert_eq!(err.code, ErrorCode::InvalidArgument, "{name}: {value}");
+        }
+    }
+
+    #[test]
+    fn deadline_conversion_clamps_expired_to_now() {
+        // An epoch-millis deadline in the distant past lands exactly on
+        // `now` (saturating), never before it.
+        assert_eq!(deadline_to_clock(12.5, 1), 12.5);
+        // A far-future deadline lands after `now`.
+        assert!(deadline_to_clock(0.0, u64::MAX / 2) > 0.0);
     }
 }

@@ -18,12 +18,18 @@
 //!   the [`crate::control::ReplicaScaler`] law with lagged spawns and a
 //!   cold-start wait, proving the scale-up → scale-down → scale-to-zero →
 //!   cold-start trajectory deterministically.
+//! * [`tenancy`] — a discrete-tick model of the gateway → QoS → engine
+//!   path driving a real [`crate::qos::QosLayer`], proving that a tenant
+//!   offering 10× its fair share is clamped to its own quota while
+//!   well-behaved tenants keep their baseline admitted rate.
 
 pub mod batching;
 pub mod landscape;
 pub mod replica;
 pub mod serving;
+pub mod tenancy;
 
 pub use batching::{simulate_batching, BatchSimConfig, BatchSimReport};
 pub use replica::{simulate_replicas, ReplicaSimConfig, ReplicaSimReport};
 pub use serving::{simulate, SimConfig, SimReport};
+pub use tenancy::{simulate_tenancy, TenancySimConfig, TenancySimReport, TenantOutcome};

@@ -21,7 +21,8 @@ use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::{AdaptiveTauPolicy, AdmissionController, ControllerConfig};
 use greenflow::sim::{
-    simulate, simulate_batching, simulate_replicas, BatchSimConfig, ReplicaSimConfig, SimConfig,
+    simulate, simulate_batching, simulate_replicas, simulate_tenancy, BatchSimConfig,
+    ReplicaSimConfig, SimConfig, TenancySimConfig,
 };
 use greenflow::util::Rng;
 use greenflow::workload::arrival::{arrival_times, ArrivalProcess};
@@ -259,6 +260,55 @@ fn replica_scaler_converges_on_a_lagged_plant_without_oscillating() {
     let again = simulate_replicas(&offered, &cfg);
     assert_eq!(rep.replicas, again.replicas);
     assert_eq!(rep.targets, again.targets);
+}
+
+#[test]
+fn qos_isolates_well_behaved_tenants_from_a_hot_tenant() {
+    // The PR-9 acceptance scenario end to end: five tenants at a fair
+    // 200 req/s each, then tenant 0 turns hot and offers 10× its fair
+    // share. The per-tenant GCRA must clamp the hot tenant to its own
+    // quota while every well-behaved tenant retains ≥ 90% of its
+    // baseline admitted rate; budget-shed retries never reach the
+    // engine; and expired-deadline arrivals drop *before* execution,
+    // crediting the avoided energy to the saved-joules ledger.
+    let base = TenancySimConfig { expired_deadline_every: 25, ..TenancySimConfig::default() };
+    let baseline = simulate_tenancy(&base);
+    let hot_cfg = TenancySimConfig { hot_tenant: Some(0), ..base.clone() };
+    let hot = simulate_tenancy(&hot_cfg);
+
+    // Isolation: well-behaved tenants keep their baseline rate.
+    for i in 1..base.tenants {
+        let before = baseline.admitted_rate(i, &base);
+        let after = hot.admitted_rate(i, &hot_cfg);
+        assert!(
+            after >= 0.9 * before,
+            "tenant {i} dropped to {after:.1}/{before:.1} req/s under the hot tenant"
+        );
+    }
+    // Containment: the hot tenant's admitted rate stays at its quota,
+    // nowhere near its 2000 req/s offered rate.
+    let hot_rate = hot.admitted_rate(0, &hot_cfg);
+    assert!(
+        hot_rate <= f64::from(hot_cfg.tenant_rate_rps) * 1.2,
+        "hot tenant admitted {hot_rate:.1} req/s past its {} req/s quota",
+        hot_cfg.tenant_rate_rps
+    );
+
+    // Budget-shed retries never reach the engine: engine arrivals are
+    // exactly the admitted-minus-deadline-dropped traffic.
+    let admitted: u64 = hot.tenants.iter().map(|t| t.admitted).sum();
+    let dropped: u64 = hot.tenants.iter().map(|t| t.deadline_dropped).sum();
+    let retry_shed: u64 = hot.tenants.iter().map(|t| t.shed_retry_budget).sum();
+    assert!(retry_shed > 0, "the scenario must exercise the retry budget");
+    assert_eq!(hot.engine_arrivals, admitted - dropped, "shed work reached the engine");
+
+    // Deadline drops happen pre-execution and credit saved joules.
+    assert!(dropped > 0, "the scenario must exercise deadline drops");
+    assert!(hot.saved_joules > 0.0);
+    assert!((hot.saved_joules - dropped as f64 * hot_cfg.joules_per_exec).abs() < 1e-9);
+
+    // Deterministic: the acceptance numbers replay exactly.
+    assert_eq!(simulate_tenancy(&hot_cfg), hot);
 }
 
 #[test]

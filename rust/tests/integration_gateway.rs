@@ -424,6 +424,17 @@ fn batched_path_overload_maps_to_429_backpressure() {
                                 })
                                 .and_then(|c| c.as_str().map(|s| s.to_string()).ok());
                             assert_eq!(code.as_deref(), Some("BACKPRESSURE"));
+                            // A 429 without a hint just invites an
+                            // immediate retry: the gateway must say
+                            // when to come back.
+                            let after = resp
+                                .header("retry-after")
+                                .and_then(|v| v.parse::<u64>().ok());
+                            assert!(
+                                after.is_some_and(|s| s >= 1),
+                                "BACKPRESSURE must carry Retry-After, got {:?}",
+                                resp.header("retry-after")
+                            );
                             saw_429.store(true, Ordering::SeqCst);
                         }
                         Ok(resp) if resp.status == 200 => {
@@ -442,6 +453,88 @@ fn batched_path_overload_maps_to_429_backpressure() {
         saw_429.load(Ordering::SeqCst),
         "a capacity-1 queue under 8 concurrent clients must backpressure"
     );
+}
+
+#[test]
+fn tenant_rate_limit_answers_429_with_retry_after_and_stats() {
+    let Some(root) = repo_root() else { return };
+    // A one-request-per-second, burst-1 quota: the first request lands,
+    // the second sheds at the GCRA with the typed code and a hint.
+    let cfg = SystemConfig::new(root).with_qos(greenflow::qos::QosConfig {
+        default_rate_rps: 1,
+        default_burst: 1,
+        ..greenflow::qos::QosConfig::default()
+    });
+    let sys = Arc::new(ServingSystem::start(cfg).unwrap());
+    let gw = Gateway::start(sys, 0, 4).unwrap();
+    let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+    let path = format!("/v2/models/{}/infer", models::DISTILBERT);
+    let hdrs = [("Content-Type", "application/json"), ("X-Tenant-Id", "acme")];
+    let ok = client
+        .request("POST", &path, &hdrs, Some(br#"{"seed": 1}"#.as_slice()))
+        .unwrap();
+    assert_eq!(ok.status, 200, "{:?}", ok.body_str());
+    let shed = client
+        .request("POST", &path, &hdrs, Some(br#"{"seed": 2}"#.as_slice()))
+        .unwrap();
+    assert_eq!(shed.status, 429, "{:?}", shed.body_str());
+    let v = shed.json().unwrap();
+    assert_eq!(
+        v.get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+        "RATE_LIMITED"
+    );
+    assert!(
+        shed.header("retry-after").and_then(|s| s.parse::<u64>().ok()).is_some_and(|s| s >= 1),
+        "RATE_LIMITED must carry Retry-After"
+    );
+
+    // Another tenant is untouched by acme's exhausted bucket.
+    let other = [("Content-Type", "application/json"), ("X-Tenant-Id", "globex")];
+    let ok = client
+        .request("POST", &path, &other, Some(br#"{"seed": 3}"#.as_slice()))
+        .unwrap();
+    assert_eq!(ok.status, 200, "{:?}", ok.body_str());
+
+    // A retry with no success history sheds on the retry budget.
+    let retry = [
+        ("Content-Type", "application/json"),
+        ("X-Tenant-Id", "initech"),
+        ("X-Retry-Attempt", "1"),
+    ];
+    let shed = client
+        .request("POST", &path, &retry, Some(br#"{"seed": 4}"#.as_slice()))
+        .unwrap();
+    assert_eq!(shed.status, 429, "{:?}", shed.body_str());
+    let v = shed.json().unwrap();
+    assert_eq!(
+        v.get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+        "RETRY_BUDGET_EXHAUSTED"
+    );
+
+    // Malformed QoS headers are typed 400s over the wire too.
+    let bad = [("Content-Type", "application/json"), ("X-Request-Deadline", "yesterday")];
+    let resp = client
+        .request("POST", &path, &bad, Some(br#"{"seed": 5}"#.as_slice()))
+        .unwrap();
+    assert_eq!(resp.status, 400, "{:?}", resp.body_str());
+    let v = resp.json().unwrap();
+    assert_eq!(
+        v.get("error").unwrap().get("code").unwrap().as_str().unwrap(),
+        "INVALID_ARGUMENT"
+    );
+
+    // /v2/tenants shows all three tenants with their tallies.
+    let tenants = client.get("/v2/tenants").unwrap().json().unwrap();
+    let list = tenants.get("tenants").unwrap().as_arr().unwrap();
+    let find = |name: &str| {
+        list.iter()
+            .find(|t| t.get("name").unwrap().as_str().unwrap() == name)
+            .unwrap_or_else(|| panic!("tenant {name} missing"))
+    };
+    assert!(find("acme").get("shed_rate_limited").unwrap().as_i64().unwrap() >= 1);
+    assert!(find("globex").get("admitted").unwrap().as_i64().unwrap() >= 1);
+    assert!(find("initech").get("shed_retry_budget").unwrap().as_i64().unwrap() >= 1);
 }
 
 #[test]

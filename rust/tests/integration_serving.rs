@@ -67,6 +67,42 @@ fn trace_replay_is_deterministic() {
 }
 
 #[test]
+fn expired_deadline_is_shed_pre_execution_and_credits_saved_joules() {
+    let Some(root) = repo_root() else { return };
+    let sys = ServingSystem::start(SystemConfig::new(root)).unwrap();
+    let reg = greenflow::telemetry::MetricsRegistry::global();
+    let saved_before = sys.meter().total_joules_saved();
+    let abandoned_before = reg.counter_value("gf_deadline_abandoned_total").unwrap_or(0);
+
+    // A deadline already in the past: the pipeline must refuse before
+    // any engine work and credit the avoided execution energy.
+    let body = requests(1, models::DISTILBERT, 77);
+    let opts = SubmitOptions {
+        deadline: Some(sys.clock().now() - 0.001),
+        timeout_ms: 1,
+        ..SubmitOptions::default()
+    };
+    let err = sys
+        .submit_batch(&body, Some(PathKind::Direct), &opts)
+        .expect_err("expired deadline must be refused");
+    assert!(
+        matches!(err, greenflow::runtime::RuntimeError::DeadlineExceeded { .. }),
+        "wrong error: {err:?}"
+    );
+    assert!(
+        sys.meter().total_joules_saved() > saved_before,
+        "pre-execution deadline drop must credit the saved-joules ledger"
+    );
+    assert!(
+        reg.counter_value("gf_deadline_abandoned_total").unwrap_or(0) > abandoned_before,
+        "gf_deadline_abandoned_total must count the drop"
+    );
+    // (The `gf_joules_saved_total` gauge mirrors the meter but is
+    // process-global, so concurrent tests may overwrite it — the
+    // per-system meter above is the authoritative assertion.)
+}
+
+#[test]
 fn closed_loop_decay_admits_early_tightens_late() {
     let Some(root) = repo_root() else { return };
     // τ runs permissive→strict fast (k = 20: 95% settled by 150 ms). The

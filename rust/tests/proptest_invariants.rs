@@ -10,6 +10,7 @@ use greenflow::controller::cost::{CostInputs, CostWeights};
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::{AdmissionController, AdmissionPolicy, ControllerConfig};
 use greenflow::json;
+use greenflow::qos::{Gcra, RetryLedger};
 use greenflow::stats::LatencyHistogram;
 use greenflow::util::Rng;
 
@@ -194,6 +195,98 @@ fn prop_json_roundtrip_random_values() {
         let text = v.to_json();
         let back = json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} on {text}"));
         assert_eq!(back, v, "case {case}: roundtrip mismatch on {text}");
+    }
+}
+
+#[test]
+fn prop_gcra_never_exceeds_rate_window_plus_burst() {
+    // For ANY interleaving of arrival times and batch sizes inside a
+    // window of W seconds, GCRA admits at most rate × W + burst items
+    // (the bound `docs/QOS.md` derives from the TAT recurrence).
+    let mut rng = Rng::new(9);
+    for case in 0..CASES {
+        let rate = 1 + rng.below(100) as u32;
+        let burst = 1 + rng.below(20) as u32;
+        let window = rng.range(0.5, 5.0);
+        let n = 1 + rng.below(200) as usize;
+        let mut times: Vec<f64> = (0..n).map(|_| rng.range(0.0, window)).collect();
+        times.sort_by(f64::total_cmp);
+        let mut g = Gcra::new();
+        let mut admitted = 0u64;
+        for &t in &times {
+            let items = 1 + rng.below(4) as u32;
+            if g.decide(t, rate, burst, items).is_ok() {
+                admitted += u64::from(items);
+            }
+        }
+        let bound = f64::from(rate) * window + f64::from(burst);
+        assert!(
+            (admitted as f64) <= bound + 1e-6,
+            "case {case}: admitted {admitted} > rate {rate} × window {window:.3} + burst {burst}"
+        );
+    }
+}
+
+#[test]
+fn prop_gcra_rejection_hint_is_sufficient() {
+    // Whatever state the limiter is in, waiting out the Retry-After
+    // hint always makes the same arrival conform.
+    let mut rng = Rng::new(10);
+    for case in 0..CASES {
+        let rate = 1 + rng.below(50) as u32;
+        let burst = 1 + rng.below(10) as u32;
+        let mut g = Gcra::new();
+        let mut now = 0.0f64;
+        for _ in 0..20 {
+            now += rng.range(0.0, 0.2);
+            // A batch larger than the burst can never conform, so the
+            // hint only promises conformance for items ≤ burst.
+            let items = (1 + rng.below(3) as u32).min(burst);
+            if let Err(wait) = g.decide(now, rate, burst, items) {
+                assert!(wait > 0.0, "case {case}: rejection with no wait");
+                assert!(
+                    g.decide(now + wait + 1e-9, rate, burst, items).is_ok(),
+                    "case {case}: hint {wait} did not clear the limiter"
+                );
+                now += wait + 1e-9;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_retry_ledger_never_admits_over_fraction() {
+    // For ANY interleaving of successes and retries, every admitted
+    // retry keeps the trailing-window invariant
+    // `retries ≤ fraction × successes` at the instant it was admitted —
+    // and with no successes at all, no retry is ever admitted.
+    let mut rng = Rng::new(11);
+    for case in 0..CASES {
+        let fraction = rng.range(0.05, 0.5);
+        let window = rng.range(1.0, 8.0);
+        let mut ledger = RetryLedger::new(window);
+        let mut now = 0.0f64;
+        let mut admitted_total = 0u64;
+        let mut successes_total = 0u64;
+        for _ in 0..(10 + rng.below(120)) {
+            now += rng.range(0.0, 0.5);
+            if rng.chance(0.6) {
+                let items = 1 + rng.below(20);
+                ledger.note_success(now, items);
+                successes_total += items;
+            } else if ledger.would_allow_retry(now, fraction) {
+                ledger.note_retry(now);
+                admitted_total += 1;
+                let (s, r) = ledger.totals(now);
+                assert!(
+                    r as f64 <= fraction * s as f64 + 1e-9,
+                    "case {case}: window retries {r} > {fraction} × successes {s}"
+                );
+            }
+        }
+        if successes_total == 0 {
+            assert_eq!(admitted_total, 0, "case {case}: retries admitted without a success");
+        }
     }
 }
 

@@ -14,6 +14,11 @@ pub struct BatcherPolicy {
     /// Window the oldest request may wait before a sub-preferred batch is
     /// released anyway (µs, live-updatable).
     max_queue_delay: Adaptive<u64>,
+    /// Multiplicative stretch on the delay window — effective delay is
+    /// `base × (1 + stretch)`. The carbon pacer links every version's
+    /// policy to its shared pressure-derived cell; unlinked policies
+    /// keep a private cell pinned at 0 (no stretch).
+    stretch: Adaptive<f64>,
 }
 
 impl BatcherPolicy {
@@ -26,12 +31,29 @@ impl BatcherPolicy {
             max_batch_size,
             preferred_batch_sizes: preferred,
             max_queue_delay: Adaptive::new(max_queue_delay_us),
+            stretch: Adaptive::new(0.0f64),
         }
     }
 
-    /// Current queue-delay window (µs).
+    /// Current queue-delay window (µs), including any carbon stretch.
+    /// A zero base window stays zero — carbon pacing lengthens windows
+    /// the operator configured, it never introduces delay where none
+    /// was asked for.
     pub fn max_queue_delay_us(&self) -> u64 {
-        self.max_queue_delay.get()
+        let base = self.max_queue_delay.get();
+        let stretch = self.stretch.get();
+        if stretch > 0.0 {
+            (base as f64 * (1.0 + stretch)).round() as u64
+        } else {
+            base
+        }
+    }
+
+    /// Replace the stretch cell with a shared handle (the carbon
+    /// pacer's pressure × delay_weight cell). Call before cloning for
+    /// replicas so every clone shares it.
+    pub fn link_stretch(&mut self, handle: Adaptive<f64>) {
+        self.stretch = handle;
     }
 
     /// Live handle onto the delay window, for the control plane's AIMD
@@ -185,6 +207,25 @@ mod tests {
         p.delay_handle().set(1_000);
         assert_eq!(on_batcher_thread.max_queue_delay_us(), 1_000);
         assert_eq!(on_batcher_thread.plan(3, 5_000), BatchPlan::Fire { size: 3 });
+    }
+
+    #[test]
+    fn carbon_stretch_lengthens_the_window() {
+        let mut p = BatcherPolicy::new(8, vec![8], 1_000);
+        let cell = Adaptive::new(0.0f64);
+        p.link_stretch(cell.handle());
+        let on_batcher_thread = p.clone(); // replica clone shares the cell
+        assert_eq!(on_batcher_thread.max_queue_delay_us(), 1_000);
+        cell.set(1.0); // full pressure, delay_weight 1 → 2× window
+        assert_eq!(on_batcher_thread.max_queue_delay_us(), 2_000);
+        assert_eq!(on_batcher_thread.plan(3, 1_500), BatchPlan::Wait, "stretched window holds");
+        cell.set(0.0);
+        assert_eq!(on_batcher_thread.plan(3, 1_500), BatchPlan::Fire { size: 3 });
+        // A zero base window never acquires delay from stretch.
+        let mut z = BatcherPolicy::immediate(4);
+        z.link_stretch(cell.handle());
+        cell.set(1.0);
+        assert_eq!(z.max_queue_delay_us(), 0);
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //!                     [--model-control explicit|none]
 //!                     [--adaptive-tau 0.58] [--adaptive-delay] [--adaptive-router]
 //!                     [--energy-budget 60] [--slo 0.25] [--tick-ms 100]
+//!                     [--carbon-pacer THRESH] [--carbon-trace trace.csv]
 //!                     [--serve-bench N [--model distilbert_mini] [--bench-json out.json]
 //!                      [--bench-conns C] [--bench-dup-ratio R]
-//!                      [--bench-tenants T] [--bench-hot-tenant-share S]]
+//!                      [--bench-tenants T] [--bench-hot-tenant-share S]
+//!                      [--scenario name|file:trace.csv] [--scenario-seed S]
+//!                      [--scenario-out trace.csv]]
 //! greenflow repo      <index|load|unload> [--addr 127.0.0.1:8080]
 //!                     [--model NAME] [--version N] [--wait]
 //! greenflow report    --repo artifacts
@@ -17,6 +20,8 @@
 //! greenflow perfgate  --serve-json serve_bench.json [--micro-json micro.json]
 //!                     [--serve-hc-json serve_bench_hc.json]
 //!                     [--serve-tenant-json serve_bench_tenant.json]
+//!                     [--serve-flash-json serve_bench_flash.json]
+//!                     [--serve-diurnal-json serve_bench_diurnal.json]
 //!                     [--out BENCH.json] [--baseline benches/baseline.json]
 //!                     [--max-regress 0.20] [--label pr6]
 //! greenflow version
@@ -39,6 +44,16 @@
 //! round-robin across the cold ones. The report then carries
 //! per-tenant admitted-rate fields (`tenant_stats`) — the QoS
 //! hot-tenant lane (see `docs/QOS.md`).
+//!
+//! `--scenario <name|file:trace.csv>` replays a deterministic
+//! [`crate::workload::scenario`] request sequence instead of the flat
+//! seed ladder: request *i* (global index across connections) carries
+//! the scenario's *i*-th seed and its lattice priority in the body's
+//! `parameters.priority`, so the live bench and the deterministic sims
+//! exercise bit-identical traces (`docs/SCENARIOS.md`).
+//! `--scenario-out` saves the resolved trace as a CSV that
+//! `--scenario file:<path>` replays exactly — the CI scenario-matrix
+//! lane uploads it with the BENCH artifact.
 //!
 //! The `--adaptive-*` / `--energy-budget` flags boot the control plane
 //! ([`crate::control`]): background loops that retune τ, the batcher
@@ -200,6 +215,16 @@ fn control_config(args: &Args, slo: f64) -> Option<ControlPlaneConfig> {
     if let Some(w) = args.get_f64("energy-budget") {
         cfg = cfg.with_energy_budget(w);
     }
+    if args.has("carbon-pacer") || args.has("carbon-trace") {
+        // `--carbon-pacer [THRESH]` enables the pacer at the given clean
+        // threshold (kg CO₂/kWh); `--carbon-trace` alone implies it at
+        // the default threshold so a trace is never silently ignored.
+        let threshold = args
+            .get_f64("carbon-pacer")
+            .filter(|v| *v > 0.0)
+            .unwrap_or(crate::control::CarbonPacerConfig::default().threshold_kg_per_kwh);
+        cfg = cfg.with_carbon_pacer(threshold);
+    }
     cfg.any_enabled().then_some(cfg)
 }
 
@@ -297,11 +322,14 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     let control = control_config(args, cfg.slo_latency);
-    // τ-side loops need the admission controller in front.
+    // τ-side loops need the admission controller in front (the carbon
+    // pacer biases τ on deferrable work, so it counts).
     let needs_controller = args.has("controller")
         || control
             .as_ref()
-            .map(|c| c.adaptive_tau.is_some() || c.energy_budget.is_some())
+            .map(|c| {
+                c.adaptive_tau.is_some() || c.energy_budget.is_some() || c.carbon_pacer.is_some()
+            })
             .unwrap_or(false);
     if needs_controller {
         cfg = cfg.with_controller(controller_config(args));
@@ -309,7 +337,33 @@ fn cmd_serve(args: &Args) -> i32 {
     if let Some(c) = control {
         cfg = cfg.with_control(c);
     }
+    if let Some(path) = args.get("carbon-trace") {
+        match crate::energy::CarbonIntensityTrace::load(std::path::Path::new(&path)) {
+            Ok(trace) => cfg = cfg.with_carbon_trace(trace),
+            Err(e) => {
+                eprintln!("cannot load --carbon-trace {path}: {e}");
+                return 2;
+            }
+        }
+    }
     let bench_n = args.get_f64("serve-bench").map(|n| n.max(1.0) as usize);
+    // Fail fast on a bad --scenario spec before booting anything (file
+    // traces are validated at resolve time — the path may appear later).
+    if let Some(spec) = args.get("scenario") {
+        if bench_n.is_none() {
+            eprintln!("--scenario requires --serve-bench N");
+            return 2;
+        }
+        if !spec.starts_with("file:")
+            && crate::workload::scenario::Scenario::named(&spec).is_none()
+        {
+            eprintln!(
+                "unknown scenario {spec:?}; built-ins: {}, or file:<trace.csv>",
+                crate::workload::scenario::Scenario::builtin_names().join(", ")
+            );
+            return 2;
+        }
+    }
     // Bench mode defaults to an ephemeral port so it never collides.
     let default_port = if bench_n.is_some() { 0.0 } else { 8080.0 };
     let port = args.get_f64("port").unwrap_or(default_port) as u16;
@@ -349,6 +403,10 @@ fn cmd_serve(args: &Args) -> i32 {
                 let dup_ratio = args.get_f64("bench-dup-ratio").unwrap_or(0.0).clamp(0.0, 1.0);
                 let tenants = args.get_f64("bench-tenants").map(|t| t as usize).unwrap_or(0);
                 let hot_tenant_share = args.get_f64("bench-hot-tenant-share").unwrap_or(0.0);
+                let scenario_seed = args
+                    .get_f64("scenario-seed")
+                    .map(|s| s as u64)
+                    .unwrap_or(crate::workload::scenario::DEFAULT_SEED);
                 let opts = BenchOpts {
                     n,
                     model,
@@ -356,6 +414,9 @@ fn cmd_serve(args: &Args) -> i32 {
                     dup_ratio,
                     tenants,
                     hot_tenant_share,
+                    scenario: args.get("scenario"),
+                    scenario_seed,
+                    scenario_out: args.get("scenario-out"),
                     json_out: args.get("bench-json"),
                 };
                 let code = serve_bench(gw.addr(), &opts);
@@ -400,6 +461,14 @@ fn cmd_serve(args: &Args) -> i32 {
 /// tenant `t0` (Bresenham-spread like the duplicate mix, so the
 /// interleave is deterministic), the rest round-robin across the cold
 /// tenants, and the report gains per-tenant admitted-rate fields.
+///
+/// `scenario` replaces the flat seed ladder with a resolved
+/// [`crate::workload::scenario`] run: request *i* (global index
+/// `worker + conns·i`) replays the scenario's *i*-th seed and carries
+/// its lattice priority in `parameters.priority`, making the live bench
+/// and the deterministic sims consume bit-identical traces. The report
+/// then gains `scenario`/`scenario_seed`/`joules_per_answer` plus the
+/// gateway's carbon accounting when the pacer is wired.
 struct BenchOpts {
     n: usize,
     model: String,
@@ -407,14 +476,48 @@ struct BenchOpts {
     dup_ratio: f64,
     tenants: usize,
     hot_tenant_share: f64,
+    scenario: Option<String>,
+    scenario_seed: u64,
+    scenario_out: Option<String>,
     json_out: Option<String>,
 }
 
 fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
     use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-    let (n, model, dup_ratio) = (opts.n, opts.model.as_str(), opts.dup_ratio);
+    let (model, dup_ratio) = (opts.model.as_str(), opts.dup_ratio);
     let (tenants, hot_share) = (opts.tenants, opts.hot_tenant_share.clamp(0.0, 1.0));
     let json_out = opts.json_out.as_deref();
+    // Scenario replay: resolve the spec once; the workers then index the
+    // shared run by global request index, so the wire order per worker is
+    // exactly the scenario order modulo `conns`-striding.
+    let scenario_run = match opts.scenario.as_deref() {
+        Some(spec) => {
+            match crate::workload::scenario::resolve(spec, opts.n, opts.scenario_seed) {
+                Ok(run) if run.requests.is_empty() => {
+                    eprintln!("serve-bench: scenario {spec:?} resolved to zero requests");
+                    return 2;
+                }
+                Ok(run) => Some(run),
+                Err(e) => {
+                    eprintln!("serve-bench: {e}");
+                    return 2;
+                }
+            }
+        }
+        None => None,
+    };
+    // File traces may carry fewer requests than asked for.
+    let n = scenario_run.as_ref().map(|r| r.requests.len()).unwrap_or(opts.n);
+    if let (Some(run), Some(path)) = (&scenario_run, opts.scenario_out.as_deref()) {
+        if let Err(e) = crate::workload::trace::save(std::path::Path::new(path), &run.requests) {
+            eprintln!("serve-bench: cannot write scenario trace {path}: {e}");
+            return 1;
+        }
+        println!(
+            "serve-bench: wrote scenario trace {path} (replay with --scenario file:{path})"
+        );
+    }
+    let scenario = scenario_run.as_ref();
     let conns = opts.conns.clamp(1, n.max(1));
     // Readiness probe on its own connection, dropped before timing.
     let ready = match crate::server::HttpClient::connect(addr) {
@@ -476,13 +579,33 @@ fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
                 // ⌊quota·S⌋±1 requests land on t0, evenly interleaved.
                 let mut hot_acc = 0.0f64;
                 for i in 0..quota {
-                    dup_acc += dup_ratio;
-                    let seed = if dup_acc >= 1.0 {
-                        dup_acc -= 1.0;
-                        0 // the shared hot request every duplicate collapses onto
-                    } else {
-                        // Globally unique across workers.
-                        1 + (worker + conns * i) as u64
+                    // Global index: worker w sends scenario requests
+                    // w, w+conns, w+2·conns, … — together the workers
+                    // cover exactly [0, n).
+                    let global = worker + conns * i;
+                    let body = match scenario {
+                        Some(run) => {
+                            // Replay the scenario's seed and tag its
+                            // lattice priority so the gateway's carbon
+                            // pacer sees the deferrable share.
+                            let r = &run.requests[global];
+                            format!(
+                                "{{\"seed\": {}, \"parameters\": {{\"priority\": \"{}\"}}}}",
+                                r.seed,
+                                run.priority_for(global).as_str(),
+                            )
+                        }
+                        None => {
+                            dup_acc += dup_ratio;
+                            let seed = if dup_acc >= 1.0 {
+                                dup_acc -= 1.0;
+                                0 // the shared hot request every duplicate collapses onto
+                            } else {
+                                // Globally unique across workers.
+                                1 + global as u64
+                            };
+                            format!("{{\"seed\": {seed}}}")
+                        }
                     };
                     let tenant = if tenants == 0 {
                         None
@@ -494,7 +617,7 @@ fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
                         } else if tenants == 1 {
                             Some(0)
                         } else {
-                            Some(1 + (worker + conns * i) % (tenants - 1))
+                            Some(1 + global % (tenants - 1))
                         }
                     };
                     let t_req = std::time::Instant::now();
@@ -507,15 +630,13 @@ fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
                                     "POST",
                                     infer_path,
                                     &[("Content-Type", "application/json"), id],
-                                    Some(format!("{{\"seed\": {seed}}}").as_bytes()),
+                                    Some(body.as_bytes()),
                                 )
                             } else {
                                 client.request("GET", "/v2/health/live", &[id], None)
                             }
                         }
-                        None if ready => {
-                            client.post_json(infer_path, &format!("{{\"seed\": {seed}}}"))
-                        }
+                        None if ready => client.post_json(infer_path, &body),
                         None => client.get("/v2/health/live"),
                     };
                     match result {
@@ -568,26 +689,25 @@ fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
     let (ok, err) = (ok.load(Ordering::Relaxed), err.load(Ordering::Relaxed));
     let p50 = crate::stats::quantile(&latencies, 0.5);
     let p95 = crate::stats::quantile(&latencies, 0.95);
-    // Post-run coalescing gains, scraped from the server's own stats
-    // endpoint (zero in the health fallback — no executions to save).
-    let (coalesce_hit_rate, joules_saved, executions) =
-        match crate::server::HttpClient::connect(addr)
-            .ok()
-            .and_then(|mut c| c.get("/v2/admission/stats").ok())
-            .and_then(|r| r.json().ok())
-        {
-            Some(v) => {
-                let co = |key: &str| {
-                    v.get("coalesce")
-                        .ok()
-                        .and_then(|c| c.get(key).ok())
-                        .and_then(|x| x.as_f64().ok())
-                        .unwrap_or(0.0)
-                };
-                (co("hit_rate"), co("joules_saved"), co("executions"))
-            }
-            None => (0.0, 0.0, 0.0),
-        };
+    // Post-run gains, scraped from the server's own stats endpoint
+    // (coalescing zero in the health fallback — no executions to save;
+    // the carbon block present whenever the pacer is wired).
+    let stats = crate::server::HttpClient::connect(addr)
+        .ok()
+        .and_then(|mut c| c.get("/v2/admission/stats").ok())
+        .and_then(|r| r.json().ok());
+    let stats_num = |block: &str, key: &str| {
+        stats
+            .as_ref()
+            .and_then(|v| v.get(block).ok())
+            .and_then(|b| b.get(key).ok())
+            .and_then(|x| x.as_f64().ok())
+    };
+    let coalesce_hit_rate = stats_num("coalesce", "hit_rate").unwrap_or(0.0);
+    let joules_saved = stats_num("coalesce", "joules_saved").unwrap_or(0.0);
+    let executions = stats_num("coalesce", "executions").unwrap_or(0.0);
+    let carbon = stats.as_ref().and_then(|v| v.get("carbon").ok()).cloned();
+    let energy_joules = stats_num("carbon", "energy_joules").unwrap_or(0.0);
     println!(
         "serve-bench[{target}]: {n} round-trips across {conns} keep-alive connection(s) \
          in {:.3} s ({:.0} req/s, p50 {:.1} µs, p95 {:.1} µs), {ok} ok / {err} error responses",
@@ -602,6 +722,17 @@ fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
              ({:.0} exec/s), coalesce hit rate {:.1}%, {joules_saved:.3} J saved",
             executions / secs,
             coalesce_hit_rate * 100.0,
+        );
+    }
+    if let Some(run) = scenario {
+        println!(
+            "serve-bench[scenario {}]: seed {}, {n} requests, {:.4} J/answer, \
+             {:.3} g CO₂ total ({:.3} g deferred)",
+            run.name,
+            run.seed,
+            energy_joules / n.max(1) as f64,
+            stats_num("carbon", "co2_total_grams").unwrap_or(0.0),
+            stats_num("carbon", "co2_deferred_grams").unwrap_or(0.0),
         );
     }
     // Per-tenant admitted rates for the QoS lane (hot tenant first).
@@ -647,6 +778,20 @@ fn serve_bench(addr: std::net::SocketAddr, opts: &BenchOpts) -> i32 {
             fields.push(("tenants", crate::json::num(tenants as f64)));
             fields.push(("hot_tenant_share", crate::json::num(hot_share)));
             fields.push(("tenant_stats", crate::json::Value::Arr(tenant_rows)));
+        }
+        if let Some(run) = scenario {
+            fields.push(("scenario", crate::json::s(&run.name)));
+            fields.push(("scenario_seed", crate::json::num(run.seed as f64)));
+            // Joules per answered request over the whole run — the
+            // per-scenario energy figure the CI matrix records (0 in the
+            // health fallback, real when a backend executes).
+            fields.push((
+                "joules_per_answer",
+                crate::json::num(energy_joules / n.max(1) as f64),
+            ));
+        }
+        if let Some(c) = carbon {
+            fields.push(("carbon", c));
         }
         let report = crate::json::obj(fields);
         if let Err(e) = std::fs::write(path, report.to_json()) {
@@ -763,6 +908,8 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 ///                    [--serve-hc-json serve_bench_hc.json]
 ///                    [--serve-dup-json serve_bench_dup.json]
 ///                    [--serve-tenant-json serve_bench_tenant.json]
+///                    [--serve-flash-json serve_bench_flash.json]
+///                    [--serve-diurnal-json serve_bench_diurnal.json]
 ///                    --out BENCH_6.json [--label pr6]
 ///                    [--baseline benches/baseline.json] [--max-regress 0.20]
 ///                    [--requests 2000]
@@ -791,10 +938,19 @@ fn baseline_field(v: &crate::json::Value, key: &str) -> Option<f64> {
 /// serve-bench input carries coalescing gains (the `--serve-dup-json`
 /// report preferred, else the main one), `coalesce_hit_rate` and
 /// `joules_saved` are recorded in the
-/// snapshot (never gated — they depend on the duplicate mix). Exits 1
+/// snapshot (never gated — they depend on the duplicate mix).
+///
+/// The scenario-matrix lanes (`--scenario flash-crowd` / `--scenario
+/// diurnal` serve-bench runs, passed as `--serve-flash-json` /
+/// `--serve-diurnal-json`) are embedded as `serve_bench_flash_crowd` /
+/// `serve_bench_diurnal`; their p95s surface as `flash_crowd_p95_ms`
+/// (the pinned tail-latency gate) and `diurnal_p95_ms`, and each run's
+/// `joules_per_answer` is recorded per scenario. Exits 1
 /// when any pinned baseline regresses by more than `--max-regress`
 /// (direction-aware: throughput may not drop, latency and read/dispatch
-/// costs may not grow, admit rate may not drift either way).
+/// costs may not grow, admit rate may not drift either way). When CI
+/// exposes `GITHUB_STEP_SUMMARY`, the per-metric delta table is also
+/// appended there as markdown.
 fn cmd_perfgate(args: &Args) -> i32 {
     use crate::json::{self, Value};
 
@@ -865,6 +1021,45 @@ fn cmd_perfgate(args: &Args) -> i32 {
         },
         None => None,
     };
+    // Optional scenario-matrix serve-benches (`--scenario flash-crowd`
+    // / `--scenario diurnal` runs): flash-crowd p95 is the pinned
+    // tail-latency gate, diurnal p95 and both joules-per-answer figures
+    // are recorded.
+    let read_optional = |flag: &str| -> Result<Option<Value>, i32> {
+        match args.get(flag) {
+            Some(p) => match read_json_file(&p) {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => {
+                    eprintln!("perfgate: {e}");
+                    Err(1)
+                }
+            },
+            None => Ok(None),
+        }
+    };
+    let serve_flash = match read_optional("serve-flash-json") {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let serve_diurnal = match read_optional("serve-diurnal-json") {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let scen_num = |v: &Option<Value>, key: &str| {
+        v.as_ref().and_then(|x| x.get(key).ok()).and_then(|x| x.as_f64().ok())
+    };
+    let flash_p95_ms = scen_num(&serve_flash, "p95_latency_us").map(|us| us / 1e3);
+    if serve_flash.is_some() && flash_p95_ms.is_none() {
+        eprintln!("perfgate: --serve-flash-json input is missing p95_latency_us");
+        return 1;
+    }
+    let diurnal_p95_ms = scen_num(&serve_diurnal, "p95_latency_us").map(|us| us / 1e3);
+    if serve_diurnal.is_some() && diurnal_p95_ms.is_none() {
+        eprintln!("perfgate: --serve-diurnal-json input is missing p95_latency_us");
+        return 1;
+    }
+    let flash_jpa = scen_num(&serve_flash, "joules_per_answer");
+    let diurnal_jpa = scen_num(&serve_diurnal, "joules_per_answer");
     let components = match args.get("micro-json") {
         Some(p) => match read_json_file(&p) {
             Ok(v) => v,
@@ -1027,6 +1222,18 @@ fn cmd_perfgate(args: &Args) -> i32 {
     if let Some(hc) = hc_throughput {
         fields.push(("hc_throughput_rps", json::num(hc)));
     }
+    if let Some(v) = flash_p95_ms {
+        fields.push(("flash_crowd_p95_ms", json::num(v)));
+    }
+    if let Some(v) = flash_jpa {
+        fields.push(("flash_crowd_joules_per_answer", json::num(v)));
+    }
+    if let Some(v) = diurnal_p95_ms {
+        fields.push(("diurnal_p95_ms", json::num(v)));
+    }
+    if let Some(v) = diurnal_jpa {
+        fields.push(("diurnal_joules_per_answer", json::num(v)));
+    }
     fields.push(("serve_bench", serve));
     if let Some(hc) = serve_hc {
         fields.push(("serve_bench_hc", hc));
@@ -1036,6 +1243,12 @@ fn cmd_perfgate(args: &Args) -> i32 {
     }
     if let Some(tenant) = serve_tenant {
         fields.push(("serve_bench_tenant", tenant));
+    }
+    if let Some(flash) = serve_flash {
+        fields.push(("serve_bench_flash_crowd", flash));
+    }
+    if let Some(diurnal) = serve_diurnal {
+        fields.push(("serve_bench_diurnal", diurnal));
     }
     fields.push(("components", components));
     let bench = json::obj(fields);
@@ -1082,10 +1295,19 @@ fn cmd_perfgate(args: &Args) -> i32 {
     if let Some(hc) = hc_throughput {
         checks.push(("hc_throughput_rps", hc, Gate::Floor));
     }
+    if let Some(v) = flash_p95_ms {
+        checks.push(("flash_crowd_p95_ms", v, Gate::Ceiling));
+    }
+    if let Some(v) = diurnal_p95_ms {
+        checks.push(("diurnal_p95_ms", v, Gate::Ceiling));
+    }
+    // (metric, measured, Some((baseline, delta %, ok)) when pinned).
+    let mut rows: Vec<(&str, f64, Option<(f64, f64, bool)>)> = Vec::new();
     let mut failed = false;
     for (name, measured, gate) in checks {
         let Some(base) = baseline_field(&baseline, name) else {
-            println!("  {name:<18} {measured:>12.3}  (baseline unpinned — recorded only)");
+            println!("  {name:<20} {measured:>12.3}  (baseline unpinned — recorded only)");
+            rows.push((name, measured, None));
             continue;
         };
         let ok = match gate {
@@ -1093,12 +1315,42 @@ fn cmd_perfgate(args: &Args) -> i32 {
             Gate::Ceiling => measured <= base * (1.0 + r),
             Gate::Drift => (measured - base).abs() <= r * base.abs().max(1e-9),
         };
+        let delta_pct = if base.abs() > 1e-12 { (measured - base) / base * 100.0 } else { 0.0 };
         println!(
-            "  {name:<18} {measured:>12.3}  vs baseline {base:>12.3}  [{}]",
+            "  {name:<20} {measured:>12.3}  vs baseline {base:>12.3}  ({delta_pct:>+7.1}%)  [{}]",
             if ok { "ok" } else { "REGRESSION" }
         );
+        rows.push((name, measured, Some((base, delta_pct, ok))));
         if !ok {
             failed = true;
+        }
+    }
+    // Mirror the per-metric delta table into the GitHub job summary when
+    // CI exposes the well-known file (no-op locally).
+    if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        let mut md = format!("### perfgate — {label} (budget ±{:.0}%)\n\n", r * 100.0);
+        md.push_str("| metric | measured | baseline | Δ | status |\n");
+        md.push_str("|---|---:|---:|---:|---|\n");
+        for (name, measured, pinned) in &rows {
+            match pinned {
+                Some((base, delta, ok)) => md.push_str(&format!(
+                    "| {name} | {measured:.3} | {base:.3} | {delta:+.1}% | {} |\n",
+                    if *ok { "ok" } else { "**REGRESSION**" }
+                )),
+                None => {
+                    md.push_str(&format!("| {name} | {measured:.3} | — | — | recorded |\n"))
+                }
+            }
+        }
+        md.push('\n');
+        let appended = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&summary_path)
+            .and_then(|mut f| f.write_all(md.as_bytes()));
+        if let Err(e) = appended {
+            eprintln!("perfgate: cannot append job summary {summary_path}: {e}");
         }
     }
     if failed {
@@ -1160,6 +1412,21 @@ mod tests {
     }
 
     #[test]
+    fn serve_rejects_bad_scenario_flags() {
+        // Unknown built-in, scenario without bench mode, and a missing
+        // carbon trace are all usage errors before anything binds.
+        assert_eq!(
+            run(&sv(&["serve", "--serve-bench", "10", "--scenario", "no-such-scenario"])),
+            2
+        );
+        assert_eq!(run(&sv(&["serve", "--scenario", "diurnal"])), 2);
+        assert_eq!(
+            run(&sv(&["serve", "--carbon-trace", "/nonexistent/trace.csv"])),
+            2
+        );
+    }
+
+    #[test]
     fn ablation_runs_in_sim() {
         assert_eq!(run(&sv(&["ablation", "--requests", "200"])), 0);
     }
@@ -1199,6 +1466,21 @@ mod tests {
         assert!(c.adaptive_router.is_none());
         assert_eq!(c.energy_budget.as_ref().unwrap().budget_watts, 75.0);
         assert!(control_config(&Args::parse(&[]).unwrap(), 0.1).is_none());
+    }
+
+    #[test]
+    fn control_config_carbon_flags() {
+        // Explicit threshold.
+        let a = Args::parse(&sv(&["--carbon-pacer", "0.2"])).unwrap();
+        let c = control_config(&a, 0.1).expect("pacer requested");
+        assert_eq!(c.carbon_pacer.as_ref().unwrap().threshold_kg_per_kwh, 0.2);
+        // A trace alone implies the pacer at the default threshold.
+        let a = Args::parse(&sv(&["--carbon-trace", "grid.csv"])).unwrap();
+        let c = control_config(&a, 0.1).expect("trace implies pacer");
+        assert_eq!(
+            c.carbon_pacer.as_ref().unwrap().threshold_kg_per_kwh,
+            crate::control::CarbonPacerConfig::default().threshold_kg_per_kwh
+        );
     }
 
     #[test]
@@ -1419,6 +1701,202 @@ mod tests {
         assert_eq!(embedded.get("tenants").unwrap().as_f64().unwrap(), 4.0);
         let rows = embedded.get("tenant_stats").unwrap().as_arr().unwrap();
         assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "t0");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn perfgate_scenario_lanes_gate_flash_p95() {
+        let dir = std::env::temp_dir().join(format!(
+            "gf-perfgate-scen-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let serve = dir.join("serve_bench.json");
+        std::fs::write(
+            &serve,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "throughput_rps": 5000.0, "p50_latency_us": 100.0,
+                "p95_latency_us": 400.0}"#,
+        )
+        .unwrap();
+        let flash = dir.join("serve_bench_flash.json");
+        std::fs::write(
+            &flash,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "scenario": "flash-crowd", "scenario_seed": 539232264,
+                "throughput_rps": 4000.0, "p50_latency_us": 200.0,
+                "p95_latency_us": 2500.0, "joules_per_answer": 0.012}"#,
+        )
+        .unwrap();
+        let diurnal = dir.join("serve_bench_diurnal.json");
+        std::fs::write(
+            &diurnal,
+            r#"{"schema": "greenflow.serve-bench/1", "target": "health",
+                "scenario": "diurnal", "scenario_seed": 539232264,
+                "throughput_rps": 4500.0, "p50_latency_us": 150.0,
+                "p95_latency_us": 1200.0, "joules_per_answer": 0.010}"#,
+        )
+        .unwrap();
+        let out = dir.join("BENCH_test.json");
+        let base_args = [
+            "perfgate",
+            "--serve-json",
+            serve.to_str().unwrap(),
+            "--serve-flash-json",
+            flash.to_str().unwrap(),
+            "--serve-diurnal-json",
+            diurnal.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+            "--requests",
+            "200",
+        ];
+
+        // No baseline: per-scenario metrics recorded, reports embedded.
+        assert_eq!(run(&sv(&base_args)), 0);
+        let bench = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(bench.get("flash_crowd_p95_ms").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(bench.get("diurnal_p95_ms").unwrap().as_f64().unwrap(), 1.2);
+        assert_eq!(
+            bench.get("flash_crowd_joules_per_answer").unwrap().as_f64().unwrap(),
+            0.012
+        );
+        assert_eq!(
+            bench.get("diurnal_joules_per_answer").unwrap().as_f64().unwrap(),
+            0.010
+        );
+        assert_eq!(
+            bench
+                .get("serve_bench_flash_crowd")
+                .unwrap()
+                .get("scenario")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "flash-crowd"
+        );
+        assert!(bench.get("serve_bench_diurnal").is_ok());
+
+        // Generous flash pin passes (diurnal left unpinned = recorded);
+        // a tight pin fails the gate.
+        let good = dir.join("baseline_good.json");
+        std::fs::write(&good, r#"{"flash_crowd_p95_ms": 3.0, "diurnal_p95_ms": null}"#)
+            .unwrap();
+        let with_baseline = |b: &std::path::Path| {
+            let mut v = sv(&base_args);
+            v.push("--baseline".to_string());
+            v.push(b.to_str().unwrap().to_string());
+            v
+        };
+        assert_eq!(run(&with_baseline(&good)), 0);
+        let bad = dir.join("baseline_bad.json");
+        std::fs::write(&bad, r#"{"flash_crowd_p95_ms": 1.0}"#).unwrap();
+        assert_eq!(run(&with_baseline(&bad)), 1);
+
+        // A scenario input without latency fields is a runtime error.
+        let broken = dir.join("broken.json");
+        std::fs::write(&broken, r#"{"schema": "greenflow.serve-bench/1"}"#).unwrap();
+        assert_eq!(
+            run(&sv(&[
+                "perfgate",
+                "--serve-json",
+                serve.to_str().unwrap(),
+                "--serve-flash-json",
+                broken.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+                "--requests",
+                "200",
+            ])),
+            1
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn serve_bench_scenario_replay_round_trips() {
+        // Hermetic: `--model-control explicit` loads nothing, so the
+        // bench degrades to health round-trips — but the scenario
+        // resolution, trace save, file replay, and the carbon block on
+        // the report are all exercised end-to-end (the CI lane's shape).
+        let dir = std::env::temp_dir().join(format!(
+            "gf-scenario-bench-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("benches/fixtures/bench_repo");
+        let trace_csv = dir.join("grid.csv");
+        std::fs::write(&trace_csv, "t_secs,kg_co2_per_kwh\n0,0.475\n30,0.056\n").unwrap();
+        let scenario_out = dir.join("flash_trace.csv");
+        let report_path = dir.join("bench.json");
+        assert_eq!(
+            run(&sv(&[
+                "serve",
+                "--repo",
+                repo.to_str().unwrap(),
+                "--model-control",
+                "explicit",
+                "--serve-bench",
+                "30",
+                "--bench-conns",
+                "3",
+                "--scenario",
+                "flash-crowd",
+                "--carbon-pacer",
+                "0.35",
+                "--carbon-trace",
+                trace_csv.to_str().unwrap(),
+                "--scenario-out",
+                scenario_out.to_str().unwrap(),
+                "--bench-json",
+                report_path.to_str().unwrap(),
+            ])),
+            0
+        );
+        let report =
+            crate::json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+        assert_eq!(report.get("scenario").unwrap().as_str().unwrap(), "flash-crowd");
+        assert_eq!(
+            report.get("scenario_seed").unwrap().as_f64().unwrap(),
+            crate::workload::scenario::DEFAULT_SEED as f64
+        );
+        assert!(report.get("joules_per_answer").unwrap().as_f64().is_ok());
+        // The pacer was wired, so the gateway's carbon accounting rides
+        // along; the trace opens at the world-average intensity.
+        let carbon = report.get("carbon").unwrap();
+        assert_eq!(carbon.get("intensity_kg_per_kwh").unwrap().as_f64().unwrap(), 0.475);
+        // The saved trace is exactly the resolved scenario prefix…
+        let saved = crate::workload::trace::load(&scenario_out).unwrap();
+        let resolved = crate::workload::scenario::resolve(
+            "flash-crowd",
+            30,
+            crate::workload::scenario::DEFAULT_SEED,
+        )
+        .unwrap();
+        assert_eq!(saved.len(), 30);
+        for (a, b) in saved.iter().zip(&resolved.requests) {
+            assert_eq!(a.seed, b.seed);
+        }
+        // …and replays through the file: spec.
+        assert_eq!(
+            run(&sv(&[
+                "serve",
+                "--repo",
+                repo.to_str().unwrap(),
+                "--model-control",
+                "explicit",
+                "--serve-bench",
+                "30",
+                "--scenario",
+                &format!("file:{}", scenario_out.display()),
+            ])),
+            0
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -376,6 +376,53 @@ impl ControlLaw for QuotaScaler {
     }
 }
 
+/// Carbon-aware pacer: maps grid carbon intensity (kg CO₂/kWh, the
+/// [`crate::energy::CarbonIntensityTrace`] sample fed through
+/// `WindowedMetrics`) to a deferral *pressure* in `[0, 1]`.
+///
+/// Like [`QuotaScaler`], the law integrates the **relative** overshoot
+/// of intensity above `threshold` (`gain × (signal − threshold)/threshold`
+/// per second), so one gain works from France (0.056) to the world
+/// average (0.475). Pressure rises while the grid is dirty and unwinds
+/// symmetrically once intensity drops below the threshold — a clean
+/// window actively drains the deferral bias instead of merely freezing
+/// it. The actor side applies the pressure as a positive admission-τ
+/// bias and a batch-delay stretch on *deferrable* (low-priority) work
+/// only; high-priority traffic never sees it (docs/SCENARIOS.md).
+#[derive(Debug, Clone)]
+pub struct CarbonPacer {
+    /// Intensity above which work should start deferring (kg CO₂/kWh).
+    pub threshold: f64,
+    /// Pressure change per second per unit of relative overshoot.
+    pub gain: f64,
+    value: f64,
+}
+
+impl CarbonPacer {
+    pub fn new(threshold: f64, gain: f64) -> Self {
+        assert!(threshold > 0.0, "carbon threshold must be positive");
+        assert!(gain > 0.0, "a gainless pacer never moves");
+        CarbonPacer { threshold, gain, value: 0.0 }
+    }
+}
+
+impl ControlLaw for CarbonPacer {
+    fn step(&mut self, signal: f64, dt: f64) -> f64 {
+        let dt = dt.max(0.0);
+        let err = (signal - self.threshold) / self.threshold;
+        self.value = (self.value + self.gain * err * dt).clamp(0.0, 1.0);
+        self.value
+    }
+
+    fn output(&self) -> f64 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "carbon"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -676,6 +723,40 @@ mod tests {
     }
 
     #[test]
+    fn carbon_pacer_builds_and_drains_pressure() {
+        let mut c = CarbonPacer::new(0.35, 0.5);
+        assert_eq!(c.output(), 0.0, "starts with no deferral pressure");
+        // 0.70 kg/kWh against a 0.35 threshold: relative error 1.0 → +0.5/s.
+        assert!((c.step(0.70, 1.0) - 0.5).abs() < 1e-9);
+        for _ in 0..10 {
+            c.step(0.70, 1.0);
+        }
+        assert_eq!(c.output(), 1.0, "clamps at full pressure");
+        // Clean window (France-like grid): pressure actively drains to 0.
+        for _ in 0..10 {
+            c.step(0.056, 1.0);
+        }
+        assert_eq!(c.output(), 0.0);
+    }
+
+    #[test]
+    fn carbon_pacer_scales_with_dt() {
+        let mut a = CarbonPacer::new(0.35, 0.2);
+        let mut b = CarbonPacer::new(0.35, 0.2);
+        a.step(0.5, 1.0);
+        for _ in 0..10 {
+            b.step(0.5, 0.1);
+        }
+        assert!((a.output() - b.output()).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn carbon_pacer_rejects_zero_threshold() {
+        CarbonPacer::new(0.0, 0.5);
+    }
+
+    #[test]
     fn laws_are_object_safe() {
         let mut laws: Vec<Box<dyn ControlLaw>> = vec![
             Box::new(Aimd::new(1.0, 1.0, 1.0, 0.5, 0.0, 10.0)),
@@ -684,6 +765,7 @@ mod tests {
             Box::new(Pid::new(0.0, 0.5, 0.5, 0.1, 0.05, -1.0, 1.0)),
             Box::new(ReplicaScaler::new(1.0, 4.0, 0.8, 0.4, 30.0)),
             Box::new(QuotaScaler::new(40.0, 0.5, 0.05)),
+            Box::new(CarbonPacer::new(0.35, 0.5)),
         ];
         for law in &mut laws {
             let out = law.step(0.7, 0.1);

@@ -63,9 +63,12 @@ pub mod plane;
 pub mod window;
 
 pub use adaptive::{Adaptive, AtomicBits};
-pub use law::{Aimd, BudgetPacer, ControlLaw, Pid, QuotaScaler, ReplicaScaler, SetpointTracker};
+pub use law::{
+    Aimd, BudgetPacer, CarbonPacer, ControlLaw, Pid, QuotaScaler, ReplicaScaler, SetpointTracker,
+};
 pub use plane::{
-    AdaptiveDelayConfig, AdaptiveRouterConfig, AdaptiveTauConfig, ControlLoop, ControlPlane,
-    ControlPlaneConfig, EnergyBudgetConfig, LoopState, QuotaScalerConfig, ReplicaScalerConfig,
+    AdaptiveDelayConfig, AdaptiveRouterConfig, AdaptiveTauConfig, CarbonPacerConfig, ControlLoop,
+    ControlPlane, ControlPlaneConfig, EnergyBudgetConfig, LoopState, QuotaScalerConfig,
+    ReplicaScalerConfig,
 };
 pub use window::{EnergyWindow, LatencyWindow, MetricsSnapshot, RateWindow, WindowedMetrics};

@@ -342,6 +342,37 @@ impl Default for QuotaScalerConfig {
     }
 }
 
+/// Carbon-aware pacing: a `CarbonPacer` loop observes the grid carbon
+/// intensity (a `crate::energy::CarbonIntensityTrace` sampled per tick)
+/// and applies its deferral pressure as an admission-τ bias plus a
+/// batch-delay stretch on low-priority work only.
+#[derive(Debug, Clone)]
+pub struct CarbonPacerConfig {
+    /// Intensity above which deferrable work starts waiting (kg CO₂/kWh).
+    /// Default sits between the EU average (~0.35) and the world average
+    /// (0.475): dirty grids defer, clean grids run free.
+    pub threshold_kg_per_kwh: f64,
+    /// Pressure change per second per unit relative overshoot.
+    pub gain: f64,
+    /// Admission-τ bias at full pressure (added to low-priority
+    /// decisions; the skip threshold for deferrable work).
+    pub tau_weight: f64,
+    /// Batch-delay stretch at full pressure: the effective queue-delay
+    /// window becomes `delay × (1 + pressure × delay_weight)`.
+    pub delay_weight: f64,
+}
+
+impl Default for CarbonPacerConfig {
+    fn default() -> Self {
+        CarbonPacerConfig {
+            threshold_kg_per_kwh: 0.35,
+            gain: 0.5,
+            tau_weight: 0.5,
+            delay_weight: 1.0,
+        }
+    }
+}
+
 /// Which loops the serving system boots, and the tick cadence.
 #[derive(Debug, Clone)]
 pub struct ControlPlaneConfig {
@@ -352,6 +383,7 @@ pub struct ControlPlaneConfig {
     pub energy_budget: Option<EnergyBudgetConfig>,
     pub replica_scaler: Option<ReplicaScalerConfig>,
     pub quota_scaler: Option<QuotaScalerConfig>,
+    pub carbon_pacer: Option<CarbonPacerConfig>,
 }
 
 impl Default for ControlPlaneConfig {
@@ -364,6 +396,7 @@ impl Default for ControlPlaneConfig {
             energy_budget: None,
             replica_scaler: None,
             quota_scaler: None,
+            carbon_pacer: None,
         }
     }
 }
@@ -408,6 +441,12 @@ impl ControlPlaneConfig {
         self
     }
 
+    pub fn with_carbon_pacer(mut self, threshold_kg_per_kwh: f64) -> Self {
+        self.carbon_pacer =
+            Some(CarbonPacerConfig { threshold_kg_per_kwh, ..CarbonPacerConfig::default() });
+        self
+    }
+
     /// Any loop enabled?
     pub fn any_enabled(&self) -> bool {
         self.adaptive_tau.is_some()
@@ -416,6 +455,7 @@ impl ControlPlaneConfig {
             || self.energy_budget.is_some()
             || self.replica_scaler.is_some()
             || self.quota_scaler.is_some()
+            || self.carbon_pacer.is_some()
     }
 }
 
@@ -523,7 +563,8 @@ mod tests {
             .with_adaptive_router(0.1)
             .with_energy_budget(75.0)
             .with_replica_scaler(6, 30.0)
-            .with_quota_scaler(45.0);
+            .with_quota_scaler(45.0)
+            .with_carbon_pacer(0.3);
         assert!(c.any_enabled());
         assert_eq!(c.adaptive_tau.unwrap().target_admit_rate, 0.6);
         assert_eq!(c.adaptive_batch_delay.unwrap().slo_p95_secs, 0.05);
@@ -533,6 +574,7 @@ mod tests {
         assert_eq!(rs.max_replicas, 6);
         assert_eq!(rs.idle_secs, 30.0);
         assert_eq!(c.quota_scaler.unwrap().budget_watts, 45.0);
+        assert_eq!(c.carbon_pacer.unwrap().threshold_kg_per_kwh, 0.3);
         assert!(!ControlPlaneConfig::default().any_enabled());
     }
 }

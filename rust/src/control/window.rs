@@ -212,6 +212,9 @@ pub struct MetricsSnapshot {
     /// Per-path completion counts since boot (freshness gates).
     pub events_direct: u64,
     pub events_batched: u64,
+    /// Last observed grid carbon intensity (kg CO₂/kWh); `NaN` until the
+    /// carbon loop records a sample (no trace configured).
+    pub carbon_intensity: f64,
 }
 
 /// Lock-light shared aggregator: the serving pipeline calls the three
@@ -232,6 +235,8 @@ pub struct WindowedMetrics {
     events: AtomicU64,
     events_direct: AtomicU64,
     events_batched: AtomicU64,
+    /// f64 bits; `NaN` until the first carbon sample lands.
+    carbon_intensity: AtomicU64,
 }
 
 impl WindowedMetrics {
@@ -247,6 +252,7 @@ impl WindowedMetrics {
             events: AtomicU64::new(0),
             events_direct: AtomicU64::new(0),
             events_batched: AtomicU64::new(0),
+            carbon_intensity: AtomicU64::new(f64::NAN.to_bits()),
         }
     }
 
@@ -274,6 +280,18 @@ impl WindowedMetrics {
         self.latencies.lock().unwrap().record(secs);
         self.batched.lock().unwrap().record(secs);
         self.events_batched.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the latest observed grid carbon intensity (kg CO₂/kWh).
+    /// A point sample, not a window: the intensity trace is a slow step
+    /// function, so "last seen" is the right estimator.
+    pub fn record_carbon_intensity(&self, kg_co2_per_kwh: f64) {
+        self.carbon_intensity.store(kg_co2_per_kwh.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Last recorded carbon intensity; `NaN` before any sample.
+    pub fn carbon_intensity(&self) -> f64 {
+        f64::from_bits(self.carbon_intensity.load(Ordering::Relaxed))
     }
 
     pub fn record_joules(&self, t: f64, joules: f64) {
@@ -316,6 +334,7 @@ impl WindowedMetrics {
             p95_batched,
             events_direct: self.events_direct(),
             events_batched: self.events_batched(),
+            carbon_intensity: self.carbon_intensity(),
         }
     }
 }
@@ -477,5 +496,18 @@ mod tests {
         assert!((s.p95_latency - 0.5).abs() < 1e-12);
         assert_eq!(s.events_direct, 0);
         assert_eq!(s.events_batched, 0);
+    }
+
+    #[test]
+    fn carbon_intensity_is_nan_until_recorded() {
+        let m = WindowedMetrics::new(16, 64);
+        assert!(m.carbon_intensity().is_nan(), "no trace, no signal");
+        assert!(m.snapshot().carbon_intensity.is_nan());
+        m.record_carbon_intensity(0.475);
+        assert_eq!(m.carbon_intensity(), 0.475);
+        assert_eq!(m.snapshot().carbon_intensity, 0.475);
+        // Point sample: a newer value replaces, never averages.
+        m.record_carbon_intensity(0.056);
+        assert_eq!(m.snapshot().carbon_intensity, 0.056);
     }
 }

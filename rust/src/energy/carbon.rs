@@ -12,9 +12,13 @@ pub struct GridIntensity {
     pub kg_co2_per_kwh: f64,
 }
 
+/// World-average grid intensity — the fallback when no region or trace
+/// is configured.
+pub const WORLD_KG_CO2_PER_KWH: f64 = 0.475;
+
 /// Representative regional averages (order: dirtiest first).
 pub const REGIONS: &[GridIntensity] = &[
-    GridIntensity { region: "world", kg_co2_per_kwh: 0.475 },
+    GridIntensity { region: "world", kg_co2_per_kwh: WORLD_KG_CO2_PER_KWH },
     GridIntensity { region: "us", kg_co2_per_kwh: 0.38 },
     GridIntensity { region: "de", kg_co2_per_kwh: 0.35 },
     GridIntensity { region: "tn", kg_co2_per_kwh: 0.47 }, // Tunisia (authors' lab)
@@ -76,6 +80,142 @@ impl CarbonAccountant {
     }
 }
 
+/// Time-varying grid carbon intensity: a right-continuous step function
+/// of `(t_secs, kg CO₂/kWh)` breakpoints, the signal the `CarbonPacer`
+/// control law observes. Loadable from a two-column CSV
+/// (`t_secs,kg_co2_per_kwh`, header required — docs/SCENARIOS.md) so a
+/// real grid forecast can be replayed against the gateway.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonIntensityTrace {
+    /// Sorted ascending by time; the first step's intensity also covers
+    /// t < steps[0].0.
+    steps: Vec<(f64, f64)>,
+}
+
+impl CarbonIntensityTrace {
+    /// Build from breakpoints. Sorts by time; panics on empty input or
+    /// non-finite / negative values (a trace is config, not data).
+    pub fn new(mut steps: Vec<(f64, f64)>) -> Self {
+        assert!(!steps.is_empty(), "carbon trace needs at least one step");
+        for &(t, v) in &steps {
+            assert!(t.is_finite() && v.is_finite() && v >= 0.0, "bad step ({t}, {v})");
+        }
+        steps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        CarbonIntensityTrace { steps }
+    }
+
+    /// A flat trace (the regional-average degenerate case).
+    pub fn constant(kg_co2_per_kwh: f64) -> Self {
+        CarbonIntensityTrace::new(vec![(0.0, kg_co2_per_kwh)])
+    }
+
+    /// Intensity at time `t` (seconds from trace start): the last step at
+    /// or before `t`, clamped to the first step before it.
+    pub fn intensity_at(&self, t: f64) -> f64 {
+        let mut current = self.steps[0].1;
+        for &(start, v) in &self.steps {
+            if start <= t {
+                current = v;
+            } else {
+                break;
+            }
+        }
+        current
+    }
+
+    pub fn steps(&self) -> &[(f64, f64)] {
+        &self.steps
+    }
+
+    /// Lowest intensity anywhere on the trace — the "clean window" level
+    /// a pacer threshold is usually set just above.
+    pub fn min_intensity(&self) -> f64 {
+        self.steps.iter().map(|s| s.1).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Serialise to the CSV schema (`t_secs,kg_co2_per_kwh`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_secs,kg_co2_per_kwh\n");
+        for &(t, v) in &self.steps {
+            out.push_str(&format!("{t:.3},{v:.6}\n"));
+        }
+        out
+    }
+
+    /// Parse the CSV schema back (header line skipped, blanks ignored).
+    pub fn from_csv(text: &str) -> Result<Self, String> {
+        let mut steps = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if ln == 0 || line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 2 {
+                return Err(format!("line {}: expected 2 fields, got {}", ln + 1, f.len()));
+            }
+            let t: f64 = f[0].trim().parse().map_err(|e| format!("line {}: t: {e}", ln + 1))?;
+            let v: f64 =
+                f[1].trim().parse().map_err(|e| format!("line {}: intensity: {e}", ln + 1))?;
+            if !t.is_finite() || !v.is_finite() || v < 0.0 {
+                return Err(format!("line {}: non-finite or negative step ({t}, {v})", ln + 1));
+            }
+            steps.push((t, v));
+        }
+        if steps.is_empty() {
+            return Err("carbon trace has no steps".to_string());
+        }
+        Ok(CarbonIntensityTrace::new(steps))
+    }
+
+    /// Load the CSV schema from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_csv(&text)
+    }
+}
+
+/// Running CO₂ ledger for a live serving system: grams emitted (energy ×
+/// intensity-at-spend-time) and grams *avoided* by deferring or skipping
+/// deferrable work under carbon pressure. Backs the `gf_co2_total` /
+/// `gf_co2_deferred_grams` gauges and the gateway's `carbon` stats block.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CarbonLedger {
+    grams: f64,
+    deferred_grams: f64,
+}
+
+impl CarbonLedger {
+    pub fn new() -> Self {
+        CarbonLedger::default()
+    }
+
+    /// Charge `joules` spent at the given intensity (kg CO₂/kWh → grams).
+    pub fn record(&mut self, joules: f64, kg_co2_per_kwh: f64) {
+        if joules.is_finite() && kg_co2_per_kwh.is_finite() {
+            self.grams += super::joules_to_kwh(joules.max(0.0)) * kg_co2_per_kwh.max(0.0) * 1000.0;
+        }
+    }
+
+    /// Credit `joules` of work *not* done now because the pacer deferred
+    /// it out of a dirty window.
+    pub fn record_deferred(&mut self, joules: f64, kg_co2_per_kwh: f64) {
+        if joules.is_finite() && kg_co2_per_kwh.is_finite() {
+            self.deferred_grams +=
+                super::joules_to_kwh(joules.max(0.0)) * kg_co2_per_kwh.max(0.0) * 1000.0;
+        }
+    }
+
+    /// Total grams CO₂eq emitted.
+    pub fn grams(&self) -> f64 {
+        self.grams
+    }
+
+    /// Total grams CO₂eq avoided by deferral.
+    pub fn deferred_grams(&self) -> f64 {
+        self.deferred_grams
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +243,58 @@ mod tests {
         assert!(intensity("fr").unwrap().kg_co2_per_kwh < intensity("us").unwrap().kg_co2_per_kwh);
         assert!(intensity("atlantis").is_none());
         assert!(CarbonAccountant::for_region("se").is_some());
+    }
+
+    #[test]
+    fn trace_step_function_semantics() {
+        let tr = CarbonIntensityTrace::new(vec![(0.0, 0.5), (10.0, 0.1), (20.0, 0.4)]);
+        assert_eq!(tr.intensity_at(-5.0), 0.5); // clamp before first step
+        assert_eq!(tr.intensity_at(0.0), 0.5);
+        assert_eq!(tr.intensity_at(9.999), 0.5);
+        assert_eq!(tr.intensity_at(10.0), 0.1); // right-continuous
+        assert_eq!(tr.intensity_at(19.0), 0.1);
+        assert_eq!(tr.intensity_at(25.0), 0.4);
+        assert_eq!(tr.min_intensity(), 0.1);
+        assert_eq!(CarbonIntensityTrace::constant(0.3).intensity_at(1e9), 0.3);
+    }
+
+    #[test]
+    fn trace_sorts_unordered_steps() {
+        let tr = CarbonIntensityTrace::new(vec![(20.0, 0.4), (0.0, 0.5), (10.0, 0.1)]);
+        assert_eq!(tr.steps()[0], (0.0, 0.5));
+        assert_eq!(tr.intensity_at(15.0), 0.1);
+    }
+
+    #[test]
+    fn trace_csv_round_trip() {
+        let tr = CarbonIntensityTrace::new(vec![(0.0, 0.475), (30.0, 0.056), (60.0, 0.475)]);
+        let parsed = CarbonIntensityTrace::from_csv(&tr.to_csv()).unwrap();
+        assert_eq!(parsed.steps().len(), 3);
+        for (a, b) in tr.steps().iter().zip(parsed.steps()) {
+            assert!((a.0 - b.0).abs() < 1e-6 && (a.1 - b.1).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn trace_csv_rejects_bad_rows() {
+        assert!(CarbonIntensityTrace::from_csv("h\n").is_err()); // empty
+        assert!(CarbonIntensityTrace::from_csv("h\n1.0\n").is_err()); // field count
+        assert!(CarbonIntensityTrace::from_csv("h\nx,0.3\n").is_err()); // parse
+        assert!(CarbonIntensityTrace::from_csv("h\n0.0,NaN\n").is_err()); // non-finite
+        assert!(CarbonIntensityTrace::from_csv("h\n0.0,-0.1\n").is_err()); // negative
+    }
+
+    #[test]
+    fn ledger_accumulates_grams() {
+        let mut l = CarbonLedger::new();
+        // 1 kWh at 0.5 kg/kWh = 500 g.
+        l.record(crate::energy::J_PER_KWH, 0.5);
+        assert!((l.grams() - 500.0).abs() < 1e-9);
+        l.record_deferred(crate::energy::J_PER_KWH / 2.0, 0.4);
+        assert!((l.deferred_grams() - 200.0).abs() < 1e-9);
+        // Garbage inputs are ignored, not propagated.
+        l.record(f64::NAN, 0.5);
+        l.record(-1.0, 0.5);
+        assert!((l.grams() - 500.0).abs() < 1e-9);
     }
 }

@@ -22,7 +22,7 @@ pub mod meter;
 pub mod profile;
 pub mod sampler;
 
-pub use carbon::CarbonAccountant;
+pub use carbon::{CarbonAccountant, CarbonIntensityTrace, CarbonLedger};
 pub use meter::{EnergyMeter, EnergyReading};
 pub use profile::DeviceProfile;
 

@@ -61,13 +61,14 @@ use std::time::{Duration, Instant};
 
 use crate::batching::policy::BatcherPolicy;
 use crate::configsys::ModelConfig;
-use crate::control::law::{Aimd, BudgetPacer, QuotaScaler, ReplicaScaler, SetpointTracker};
+use crate::control::law::{Aimd, BudgetPacer, CarbonPacer, QuotaScaler, ReplicaScaler, SetpointTracker};
 use crate::control::{
     Adaptive, ControlLoop, ControlPlane, ControlPlaneConfig, EnergyWindow, WindowedMetrics,
 };
 use crate::controller::cache::{CachedResponse, ResponseCache};
 use crate::controller::cost::CostInputs;
 use crate::controller::{AdmissionController, ControllerConfig, Decision};
+use crate::energy::carbon::{CarbonIntensityTrace, CarbonLedger, WORLD_KG_CO2_PER_KWH};
 use crate::energy::meter::{EnergyMeter, MeterMode};
 use crate::energy::profile::DeviceProfile;
 use crate::pipeline::coalesce::{
@@ -187,6 +188,10 @@ pub struct SystemConfig {
     /// on; the defaults are generous enough that single-tenant
     /// deployments never notice it.
     pub qos: QosConfig,
+    /// Time-varying grid carbon intensity the carbon pacer observes.
+    /// None with a carbon pacer enabled falls back to the world-average
+    /// constant; without a pacer the trace is inert.
+    pub carbon_trace: Option<CarbonIntensityTrace>,
 }
 
 impl SystemConfig {
@@ -207,6 +212,7 @@ impl SystemConfig {
             model_control: ModelControl::None,
             load_hooks: false,
             qos: QosConfig::default(),
+            carbon_trace: None,
         }
     }
 
@@ -237,6 +243,11 @@ impl SystemConfig {
 
     pub fn with_qos(mut self, qos: QosConfig) -> Self {
         self.qos = qos;
+        self
+    }
+
+    pub fn with_carbon_trace(mut self, trace: CarbonIntensityTrace) -> Self {
+        self.carbon_trace = Some(trace);
         self
     }
 }
@@ -612,6 +623,58 @@ enum AdmitOutcome {
     Skip { result: InferResult },
 }
 
+/// Shared state of the carbon pacer: the control loop's apply side
+/// writes the pressure/stretch cells; the admission and batching hot
+/// paths read them (one relaxed load each); the signal side integrates
+/// metered joules into the ledger at the current grid intensity.
+struct CarbonRuntime {
+    /// Pacer output in [0, 1]: 0 = clean grid, 1 = full deferral bias.
+    pressure: Adaptive<f64>,
+    /// Last sampled grid intensity (kg CO₂ / kWh).
+    intensity: Adaptive<f64>,
+    /// Batch-delay stretch factor (pressure × delay_weight), linked
+    /// into every batched version's [`BatcherPolicy`].
+    delay_stretch: Adaptive<f64>,
+    /// Cumulative emissions + deferred-work credit. Mutex, not atomics:
+    /// touched once per control tick and per skipped request, never on
+    /// the execute hot path.
+    ledger: Mutex<CarbonLedger>,
+    /// Admission-τ bias at full pressure for deferrable (Low) work.
+    tau_weight: f64,
+}
+
+impl CarbonRuntime {
+    fn new(initial_intensity: f64, tau_weight: f64) -> Self {
+        CarbonRuntime {
+            pressure: Adaptive::new(0.0f64),
+            intensity: Adaptive::new(initial_intensity),
+            delay_stretch: Adaptive::new(0.0f64),
+            ledger: Mutex::new(CarbonLedger::default()),
+            tau_weight: tau_weight.max(0.0),
+        }
+    }
+
+    /// Extra admission-τ bias for deferrable work: pressure-scaled,
+    /// zero on a clean grid.
+    fn tau_bias(&self) -> f64 {
+        self.pressure.get() * self.tau_weight
+    }
+}
+
+/// Snapshot of the carbon pacer's state for stats surfaces
+/// (`/v2/admission/stats` `carbon` block, serve-bench reports).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CarbonStats {
+    /// Last observed grid intensity (kg CO₂ / kWh).
+    pub intensity_kg_per_kwh: f64,
+    /// Pacer pressure in [0, 1].
+    pub pressure: f64,
+    /// Cumulative emissions attributed to metered energy (grams CO₂).
+    pub co2_grams: f64,
+    /// Emissions avoided by deferral-biased skips (grams CO₂).
+    pub co2_deferred_grams: f64,
+}
+
 /// State the lifecycle executor's job closures need: everything a load
 /// or unload touches, shared (`Arc`) between the request path and the
 /// executor threads. Serving-path-only state (controller, router,
@@ -633,6 +696,8 @@ struct SystemShared {
     /// `Arc<SystemShared>`, so a strong reference here would cycle and
     /// leak the whole system. Set once in [`ServingSystem::start`].
     executor: OnceLock<Weak<LifecycleExecutor>>,
+    /// Some iff the control plane runs a carbon pacer loop.
+    carbon: Option<Arc<CarbonRuntime>>,
     cfg: SystemConfig,
 }
 
@@ -672,10 +737,28 @@ impl ServingSystem {
         // The QoS layer exists before the control plane: the quota
         // loop's apply side captures it.
         let qos = Arc::new(QosLayer::new(cfg.qos.clone()));
-        let plane = cfg
-            .control
-            .as_ref()
-            .and_then(|pc| Self::wire_global_loops(pc, &controller, &metrics, &router, &qos));
+        // Carbon runtime exists iff the control plane runs a pacer; a
+        // carbon trace without a pacer is inert (nothing observes it).
+        let carbon = cfg.control.as_ref().and_then(|pc| pc.carbon_pacer.as_ref()).map(|cc| {
+            let initial = cfg
+                .carbon_trace
+                .as_ref()
+                .map(|t| t.intensity_at(0.0))
+                .unwrap_or(WORLD_KG_CO2_PER_KWH);
+            Arc::new(CarbonRuntime::new(initial, cc.tau_weight))
+        });
+        let plane = cfg.control.as_ref().and_then(|pc| {
+            Self::wire_global_loops(
+                pc,
+                &controller,
+                &metrics,
+                &router,
+                &qos,
+                &meter,
+                &carbon,
+                &cfg.carbon_trace,
+            )
+        });
         let shared = Arc::new(SystemShared {
             plane,
             registry,
@@ -685,6 +768,7 @@ impl ServingSystem {
             coalesce: SingleflightTable::new(),
             metrics,
             executor: OnceLock::new(),
+            carbon,
             cfg,
         });
         let executor = Arc::new(LifecycleExecutor::start(LIFECYCLE_WORKERS, LIFECYCLE_QUEUE_CAP));
@@ -728,12 +812,16 @@ impl ServingSystem {
     /// loops (τ servo, router threshold). Per-model loops (batcher
     /// AIMD, energy-budget pacers) attach per loaded version — the
     /// plane ticks even while empty so later loads find it running.
+    #[allow(clippy::too_many_arguments)]
     fn wire_global_loops(
         pc: &ControlPlaneConfig,
         controller: &Option<Arc<Mutex<AdmissionController>>>,
         metrics: &Arc<WindowedMetrics>,
         router: &Router,
         qos: &Arc<QosLayer>,
+        meter: &Arc<EnergyMeter>,
+        carbon: &Option<Arc<CarbonRuntime>>,
+        carbon_trace: &Option<CarbonIntensityTrace>,
     ) -> Option<ControlPlane> {
         if !pc.any_enabled() {
             return None;
@@ -817,6 +905,48 @@ impl ServingSystem {
                 Box::new(law),
                 Box::new(signal),
                 Box::new(move |v| q.set_quota_scale(v)),
+            ));
+        }
+
+        // Carbon pacer: sampled grid intensity vs the clean-grid
+        // threshold → deferral pressure in [0, 1]. The signal side also
+        // integrates metered joules into the CO₂ ledger at the
+        // intensity of the window they were spent in, so `gf_co2_total`
+        // reflects *when* energy was drawn, not just how much.
+        if let (Some(cc), Some(car)) = (&pc.carbon_pacer, carbon) {
+            let trace = carbon_trace
+                .clone()
+                .unwrap_or_else(|| CarbonIntensityTrace::constant(WORLD_KG_CO2_PER_KWH));
+            let m = metrics.clone();
+            let meter = meter.clone();
+            let car_sig = car.clone();
+            let start = Instant::now();
+            let mut last_joules = meter.total_joules();
+            let signal = move || {
+                let v = trace.intensity_at(start.elapsed().as_secs_f64());
+                car_sig.intensity.set(v);
+                m.record_carbon_intensity(v);
+                let joules = meter.total_joules();
+                let delta = joules - last_joules;
+                last_joules = joules;
+                let mut ledger = car_sig.ledger.lock().unwrap();
+                ledger.record(delta, v);
+                let reg = crate::telemetry::MetricsRegistry::global();
+                reg.gauge("gf_carbon_intensity").set(v);
+                reg.gauge("gf_co2_total").set(ledger.grams());
+                v
+            };
+            let law = CarbonPacer::new(cc.threshold_kg_per_kwh, cc.gain);
+            let car_apply = car.clone();
+            let delay_weight = cc.delay_weight.max(0.0);
+            plane.add_loop(ControlLoop::new(
+                "carbon_pacer",
+                Box::new(law),
+                Box::new(signal),
+                Box::new(move |p| {
+                    car_apply.pressure.set(p);
+                    car_apply.delay_stretch.set(p * delay_weight);
+                }),
             ));
         }
 
@@ -1077,7 +1207,7 @@ impl SystemShared {
         // model's replicas carry a batcher. Policy clones share one
         // Adaptive delay cell, so the AIMD loop keeps driving every
         // replica's window no matter how many the scaler spawns.
-        let policy = if model == models::SCREENER {
+        let mut policy = if model == models::SCREENER {
             None
         } else {
             Some(
@@ -1087,6 +1217,13 @@ impl SystemShared {
                     .unwrap_or_else(|| BatcherPolicy::immediate(manifest.max_bucket())),
             )
         };
+        // Carbon pacing stretches every batched queue's delay window by
+        // the shared pressure cell (amortise flushes onto fewer, fuller
+        // batches while the grid is dirty). Linked here, once per
+        // version: replica clones share the cell for free.
+        if let (Some(p), Some(car)) = (policy.as_mut(), &shared.carbon) {
+            p.link_stretch(car.delay_stretch.handle());
+        }
         let delay_handle = policy.as_ref().map(|p| p.delay_handle());
         let instances = config.as_ref().map(|c| c.total_instances()).unwrap_or(1);
         let first = shared.spawn_replica(&info.dir, policy.as_ref(), instances)?;
@@ -1754,6 +1891,20 @@ impl ServingSystem {
         self.controller.as_ref().map(|c| c.lock().unwrap().stats())
     }
 
+    /// Carbon pacer state (None unless a carbon pacer is configured):
+    /// last grid intensity, deferral pressure, and the CO₂ ledger.
+    pub fn carbon_stats(&self) -> Option<CarbonStats> {
+        self.shared.carbon.as_ref().map(|car| {
+            let ledger = car.ledger.lock().unwrap();
+            CarbonStats {
+                intensity_kg_per_kwh: car.intensity.get(),
+                pressure: car.pressure.get(),
+                co2_grams: ledger.grams(),
+                co2_deferred_grams: ledger.deferred_grams(),
+            }
+        })
+    }
+
     /// Restart the controller's τ(t) epoch at "now" — the paper's folding
     /// restarts when the landscape changes (deploys, model swaps); also
     /// lets benchmarks align τ0 with their first request.
@@ -1904,6 +2055,7 @@ impl ServingSystem {
         handle: &Arc<VersionHandle>,
         req: &Request,
         t0: f64,
+        deferrable: bool,
     ) -> Result<AdmitOutcome, RuntimeError> {
         // 1. Cheap L(x) estimate: screener pass on its direct engine
         // (resolved from the live snapshot — an unloaded screener falls
@@ -1954,8 +2106,15 @@ impl ServingSystem {
             slo_latency: self.shared.cfg.slo_latency,
         };
 
-        // 3. Decide, biased by this model's energy-budget pacer.
-        let bias = handle.energy_correction.get();
+        // 3. Decide, biased by this model's energy-budget pacer plus —
+        // for deferrable (Low-priority) work only — the carbon pacer's
+        // pressure: on a dirty grid deferrable requests face a tighter
+        // effective τ and skew toward the cheap cache/screener answer.
+        let carbon_bias = match (&self.shared.carbon, deferrable) {
+            (Some(car), true) => car.tau_bias(),
+            _ => 0.0,
+        };
+        let bias = handle.energy_correction.get() + carbon_bias;
         let decision = ctrl.lock().unwrap().decide_biased(&x, t0, bias);
         match decision {
             Decision::Admit { j, tau } => Ok(AdmitOutcome::Execute { j, tau }),
@@ -1985,6 +2144,21 @@ impl ServingSystem {
                 // Energy: only the screener pass.
                 let reading = self.shared.meter.record(scr_flops, scr_exec);
                 self.shared.metrics.record_joules(self.clock.now(), reading.joules);
+                // Carbon-biased skip: credit the emissions the skipped
+                // execution would have produced at the current grid
+                // intensity (nominal per-request joules = energy_ref/2,
+                // net of the screener energy actually spent).
+                if carbon_bias > 0.0 {
+                    if let Some(car) = &self.shared.carbon {
+                        let avoided = (energy_ref / 2.0 - reading.joules).max(0.0);
+                        let intensity = car.intensity.get();
+                        let mut ledger = car.ledger.lock().unwrap();
+                        ledger.record_deferred(avoided, intensity);
+                        crate::telemetry::MetricsRegistry::global()
+                            .gauge("gf_co2_deferred_grams")
+                            .set(ledger.deferred_grams());
+                    }
+                }
                 Ok(AdmitOutcome::Skip {
                     result: InferResult {
                         request_id: req.id,
@@ -2023,7 +2197,8 @@ impl ServingSystem {
         let Some(ctrl) = &self.controller else {
             return self.execute_coalesced(handle, req, prefer, f64::NAN, f64::NAN, opts, t0);
         };
-        match self.admission_decision(ctrl, handle, req, t0)? {
+        let deferrable = opts.is_some_and(|o| o.priority == Priority::Low);
+        match self.admission_decision(ctrl, handle, req, t0, deferrable)? {
             AdmitOutcome::Execute { j, tau } => {
                 self.execute_coalesced(handle, req, prefer, j, tau, opts, t0)
             }
@@ -2337,7 +2512,8 @@ impl ServingSystem {
                 plans.push(ItemPlan::Exec { j: f64::NAN, tau: f64::NAN });
             } else {
                 let ctrl = self.controller.as_ref().expect("checked above");
-                match self.admission_decision(ctrl, &handle, req, self.clock.now())? {
+                let deferrable = opts.priority == Priority::Low;
+                match self.admission_decision(ctrl, &handle, req, self.clock.now(), deferrable)? {
                     AdmitOutcome::Execute { j, tau } => plans.push(ItemPlan::Exec { j, tau }),
                     AdmitOutcome::Skip { result } => plans.push(ItemPlan::Skip(result)),
                 }

@@ -1089,8 +1089,20 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
         ("entries", json::num(cs.len as f64)),
         ("hit_rate", json::num(finite(cs.hit_rate()))),
     ]);
-    let body = match system.controller_stats() {
-        Some(s) => json::obj(vec![
+    // Carbon pacer block (present only when a pacer runs): grid
+    // intensity, deferral pressure, the CO₂ ledger, and total metered
+    // joules so one scrape yields joules-per-answer AND CO₂-per-answer.
+    let carbon = system.carbon_stats().map(|c| {
+        json::obj(vec![
+            ("intensity_kg_per_kwh", json::num(finite(c.intensity_kg_per_kwh))),
+            ("pressure", json::num(finite(c.pressure))),
+            ("co2_total_grams", json::num(finite(c.co2_grams))),
+            ("co2_deferred_grams", json::num(finite(c.co2_deferred_grams))),
+            ("energy_joules", json::num(finite(system.meter().total_joules()))),
+        ])
+    });
+    let mut fields = match system.controller_stats() {
+        Some(s) => vec![
             ("enabled", Value::Bool(true)),
             ("admitted", json::num(s.admitted as f64)),
             ("skipped", json::num(s.skipped as f64)),
@@ -1102,16 +1114,19 @@ fn admission_stats(system: &ServingSystem) -> HttpResponse {
             ("coalesce", coalesce),
             ("cache", cache),
             ("qos", qos_block),
-        ]),
-        None => json::obj(vec![
+        ],
+        None => vec![
             ("enabled", Value::Bool(false)),
             ("gateway", gateway),
             ("coalesce", coalesce),
             ("cache", cache),
             ("qos", qos_block),
-        ]),
+        ],
     };
-    HttpResponse::ok_json(body.to_json())
+    if let Some(c) = carbon {
+        fields.push(("carbon", c));
+    }
+    HttpResponse::ok_json(json::obj(fields).to_json())
 }
 
 #[cfg(test)]

@@ -22,14 +22,20 @@
 //!   path driving a real [`crate::qos::QosLayer`], proving that a tenant
 //!   offering 10× its fair share is clamped to its own quota while
 //!   well-behaved tenants keep their baseline admitted rate.
+//! * [`carbon`] — a discrete-tick FCFS model of carbon-aware pacing: the
+//!   [`crate::control::CarbonPacer`] law parks deferrable work while the
+//!   grid is dirty and drains it in the clean window, proving CO₂ per
+//!   answer drops at unchanged energy and accuracy.
 
 pub mod batching;
+pub mod carbon;
 pub mod landscape;
 pub mod replica;
 pub mod serving;
 pub mod tenancy;
 
 pub use batching::{simulate_batching, BatchSimConfig, BatchSimReport};
+pub use carbon::{simulate_carbon, CarbonSimConfig, CarbonSimReport};
 pub use replica::{simulate_replicas, ReplicaSimConfig, ReplicaSimReport};
 pub use serving::{simulate, SimConfig, SimReport};
 pub use tenancy::{simulate_tenancy, TenancySimConfig, TenancySimReport, TenantOutcome};

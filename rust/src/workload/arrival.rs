@@ -26,6 +26,27 @@ pub enum ArrivalProcess {
     },
     /// Fixed-gap arrivals (rate = 1/gap), for deterministic tests.
     Uniform { gap: f64 },
+    /// Diurnal sinusoid: a non-homogeneous Poisson process with
+    /// λ(t) = base·(1 + amplitude·sin(2πt/period)), sampled by
+    /// Lewis–Shedler thinning against the peak envelope
+    /// λmax = base·(1 + amplitude). Models the day/night load swing the
+    /// carbon pacer exploits (clean overnight windows).
+    Diurnal {
+        /// Mean rate (req/s); the sinusoid integrates to this over a period.
+        base: f64,
+        /// Relative swing in [0, 1): 0.8 means troughs at 0.2·base and
+        /// peaks at 1.8·base.
+        amplitude: f64,
+        /// Full cycle length (s).
+        period: f64,
+        /// Internal: absolute clock of the thinning walk.
+        t: f64,
+    },
+    /// Flash crowd: baseline Poisson at `base` req/s with a rectangular
+    /// spike of `base + spike` during [start, start + len). The step is
+    /// sampled by the same thinning walk (envelope `base + spike`), so
+    /// the spike edge lands at exactly `start` regardless of seed.
+    FlashCrowd { base: f64, spike: f64, start: f64, len: f64, t: f64 },
 }
 
 #[derive(Debug, Clone, Default)]
@@ -56,6 +77,36 @@ impl ArrivalProcess {
         ArrivalProcess::Uniform { gap }
     }
 
+    pub fn diurnal(base: f64, amplitude: f64, period: f64) -> Self {
+        assert!(base > 0.0 && period > 0.0);
+        assert!((0.0..1.0).contains(&amplitude), "amplitude must be in [0, 1)");
+        ArrivalProcess::Diurnal { base, amplitude, period, t: 0.0 }
+    }
+
+    pub fn flash_crowd(base: f64, spike: f64, start: f64, len: f64) -> Self {
+        assert!(base > 0.0 && spike > 0.0 && start >= 0.0 && len > 0.0);
+        ArrivalProcess::FlashCrowd { base, spike, start, len, t: 0.0 }
+    }
+
+    /// Instantaneous rate λ(t) for the time-varying processes; the
+    /// stationary rate for the rest. Used by the thinning sampler and by
+    /// tests asserting peak/trough density.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            ArrivalProcess::Diurnal { base, amplitude, period, .. } => {
+                base * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period).sin())
+            }
+            ArrivalProcess::FlashCrowd { base, spike, start, len, .. } => {
+                if t >= *start && t < start + len {
+                    base + spike
+                } else {
+                    *base
+                }
+            }
+            other => other.mean_rate(),
+        }
+    }
+
     /// Long-run average arrival rate (req/s).
     pub fn mean_rate(&self) -> f64 {
         match self {
@@ -71,6 +122,12 @@ impl ArrivalProcess {
                     f64::INFINITY
                 }
             }
+            // The sinusoid integrates to base over any whole period.
+            ArrivalProcess::Diurnal { base, .. } => *base,
+            // Long-run rate on an infinite horizon: the rectangular spike
+            // has measure zero in the limit. Over the bench horizon the
+            // effective rate is base + spike·len/horizon.
+            ArrivalProcess::FlashCrowd { base, .. } => *base,
         }
     }
 }
@@ -93,6 +150,34 @@ impl Arrival for ArrivalProcess {
                     state.burst = !state.burst;
                 }
                 gap
+            }
+            // Lewis–Shedler thinning: propose candidate points from a
+            // homogeneous Poisson at the peak envelope λmax, accept each
+            // with probability λ(t)/λmax. Accepted points are a
+            // non-homogeneous Poisson process with intensity λ(t).
+            ArrivalProcess::Diurnal { base, amplitude, period, t } => {
+                let lambda_max = *base * (1.0 + *amplitude);
+                let start = *t;
+                loop {
+                    *t += rng.exponential(lambda_max);
+                    let lambda = *base
+                        * (1.0 + *amplitude * (2.0 * std::f64::consts::PI * *t / *period).sin());
+                    if rng.uniform() * lambda_max <= lambda {
+                        return *t - start;
+                    }
+                }
+            }
+            ArrivalProcess::FlashCrowd { base, spike, start, len, t } => {
+                let lambda_max = *base + *spike;
+                let began = *t;
+                loop {
+                    *t += rng.exponential(lambda_max);
+                    let lambda =
+                        if *t >= *start && *t < *start + *len { *base + *spike } else { *base };
+                    if rng.uniform() * lambda_max <= lambda {
+                        return *t - began;
+                    }
+                }
             }
         }
     }
@@ -180,5 +265,71 @@ mod tests {
         let p = ArrivalProcess::mmpp2(10.0, 100.0, 3.0, 1.0);
         let want = (10.0 * 3.0 + 100.0 * 1.0) / 4.0;
         assert!((p.mean_rate() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diurnal_hits_mean_rate_over_whole_periods() {
+        // Over whole periods the sinusoid averages out: empirical rate
+        // within tolerance of base.
+        let mut p = ArrivalProcess::diurnal(100.0, 0.8, 10.0);
+        let mut rng = Rng::new(11);
+        let times = arrival_times(&mut p, 40_000, &mut rng);
+        let whole = (times.last().unwrap() / 10.0).floor() * 10.0;
+        let n = times.iter().filter(|&&t| t < whole).count();
+        let rate = n as f64 / whole;
+        assert!((rate - 100.0).abs() / 100.0 < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn diurnal_peak_denser_than_trough() {
+        // Period 40s: peak quarter [0,10) vs trough quarter [20,30).
+        let mut p = ArrivalProcess::diurnal(50.0, 0.8, 40.0);
+        let mut rng = Rng::new(12);
+        let times = arrival_times(&mut p, 20_000, &mut rng);
+        let in_phase = |lo: f64, hi: f64| {
+            times.iter().filter(|&&t| (t % 40.0) >= lo && (t % 40.0) < hi).count()
+        };
+        let peak = in_phase(0.0, 10.0);
+        let trough = in_phase(20.0, 30.0);
+        assert!(peak as f64 > 2.0 * trough as f64, "peak {peak} trough {trough}");
+    }
+
+    #[test]
+    fn flash_crowd_spike_density() {
+        // base 50, spike +350 in [5, 15): the spike window should run at
+        // ~8x the baseline density.
+        let mut p = ArrivalProcess::flash_crowd(50.0, 350.0, 5.0, 10.0);
+        let mut rng = Rng::new(13);
+        let times = arrival_times(&mut p, 20_000, &mut rng);
+        let in_range = |lo: f64, hi: f64| times.iter().filter(|&&t| t >= lo && t < hi).count();
+        let spike_rate = in_range(5.0, 15.0) as f64 / 10.0;
+        let calm_rate = in_range(20.0, 40.0) as f64 / 20.0;
+        assert!((spike_rate - 400.0).abs() / 400.0 < 0.10, "spike {spike_rate}");
+        assert!((calm_rate - 50.0).abs() / 50.0 < 0.15, "calm {calm_rate}");
+    }
+
+    #[test]
+    fn time_varying_deterministic_given_seed() {
+        let gen = |seed| {
+            let mut d = ArrivalProcess::diurnal(80.0, 0.5, 20.0);
+            let mut f = ArrivalProcess::flash_crowd(40.0, 200.0, 2.0, 4.0);
+            let mut rng = Rng::new(seed);
+            let mut out = arrival_times(&mut d, 500, &mut rng);
+            out.extend(arrival_times(&mut f, 500, &mut rng));
+            out
+        };
+        assert_eq!(gen(21), gen(21));
+        assert_ne!(gen(21), gen(22));
+    }
+
+    #[test]
+    fn rate_at_tracks_the_schedule() {
+        let d = ArrivalProcess::diurnal(100.0, 0.5, 4.0);
+        assert!((d.rate_at(1.0) - 150.0).abs() < 1e-9); // sin peak at period/4
+        assert!((d.rate_at(3.0) - 50.0).abs() < 1e-9); // trough at 3·period/4
+        let f = ArrivalProcess::flash_crowd(50.0, 350.0, 5.0, 10.0);
+        assert_eq!(f.rate_at(4.9), 50.0);
+        assert_eq!(f.rate_at(5.0), 400.0);
+        assert_eq!(f.rate_at(15.0), 50.0);
     }
 }

@@ -11,8 +11,11 @@
 //! requests, lose <0.5pp accuracy" claim testable (DESIGN.md §2).
 
 pub mod arrival;
+pub mod scenario;
 pub mod stream;
 pub mod trace;
 
 pub use arrival::{Arrival, ArrivalProcess};
-pub use stream::{Request, RequestStream, StreamConfig};
+pub use scenario::{Scenario, ScenarioRun};
+pub use stream::{Priority, Request, RequestStream, StreamConfig};
+pub use trace::TraceError;

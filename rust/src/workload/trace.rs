@@ -1,9 +1,43 @@
 //! Trace record/replay: persist a generated workload to CSV and replay it
 //! bit-exactly — the audit loop of §X (export everything as CSV).
 
+use std::fmt;
 use std::path::Path;
 
 use crate::workload::stream::Request;
+
+/// Typed per-line trace-parse failure. Replay timing silently corrupts
+/// when a hand-edited trace carries a `NaN`/`inf` or backwards arrival,
+/// so those are rejected at parse time instead of surfacing later as a
+/// sim hang or a negative gap.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// Could not read the file at all.
+    Io(String),
+    /// Wrong field count or an unparseable field. `line` is 1-based.
+    Malformed { line: usize, reason: String },
+    /// `arrival` (or another float field) parsed but is `NaN`/`±inf`.
+    NonFinite { line: usize, field: &'static str, value: f64 },
+    /// `arrival` went backwards relative to the previous row.
+    NonMonotone { line: usize, arrival: f64, prev: f64 },
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace io: {e}"),
+            TraceError::Malformed { line, reason } => write!(f, "line {line}: {reason}"),
+            TraceError::NonFinite { line, field, value } => {
+                write!(f, "line {line}: {field} is not finite ({value})")
+            }
+            TraceError::NonMonotone { line, arrival, prev } => {
+                write!(f, "line {line}: arrival {arrival} < previous {prev} (non-monotone)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
 
 /// Serialise requests to CSV (`id,model,arrival,seed,label,difficulty,confidence`).
 pub fn to_csv(requests: &[Request]) -> String {
@@ -17,26 +51,48 @@ pub fn to_csv(requests: &[Request]) -> String {
     out
 }
 
-/// Parse a trace CSV back into requests.
-pub fn from_csv(text: &str) -> Result<Vec<Request>, String> {
-    let mut out = Vec::new();
+/// Parse a trace CSV back into requests. Rejects non-finite and
+/// non-monotone `arrival` values with a typed per-line error.
+pub fn from_csv(text: &str) -> Result<Vec<Request>, TraceError> {
+    let mut out: Vec<Request> = Vec::new();
+    let mut prev_arrival = f64::NEG_INFINITY;
     for (ln, line) in text.lines().enumerate() {
         if ln == 0 || line.trim().is_empty() {
             continue; // header / blank
         }
+        let lineno = ln + 1;
+        let malformed = |reason: String| TraceError::Malformed { line: lineno, reason };
         let f: Vec<&str> = line.split(',').collect();
         if f.len() != 7 {
-            return Err(format!("line {}: expected 7 fields, got {}", ln + 1, f.len()));
+            return Err(malformed(format!("expected 7 fields, got {}", f.len())));
         }
-        out.push(Request {
-            id: f[0].parse().map_err(|e| format!("line {}: id: {e}", ln + 1))?,
+        let req = Request {
+            id: f[0].parse().map_err(|e| malformed(format!("id: {e}")))?,
             model: f[1].to_string(),
-            arrival: f[2].parse().map_err(|e| format!("line {}: arrival: {e}", ln + 1))?,
-            seed: f[3].parse().map_err(|e| format!("line {}: seed: {e}", ln + 1))?,
-            label: f[4].parse().map_err(|e| format!("line {}: label: {e}", ln + 1))?,
-            difficulty: f[5].parse().map_err(|e| format!("line {}: difficulty: {e}", ln + 1))?,
-            confidence: f[6].parse().map_err(|e| format!("line {}: confidence: {e}", ln + 1))?,
-        });
+            arrival: f[2].parse().map_err(|e| malformed(format!("arrival: {e}")))?,
+            seed: f[3].parse().map_err(|e| malformed(format!("seed: {e}")))?,
+            label: f[4].parse().map_err(|e| malformed(format!("label: {e}")))?,
+            difficulty: f[5].parse().map_err(|e| malformed(format!("difficulty: {e}")))?,
+            confidence: f[6].parse().map_err(|e| malformed(format!("confidence: {e}")))?,
+        };
+        for (field, value) in [
+            ("arrival", req.arrival),
+            ("difficulty", req.difficulty),
+            ("confidence", req.confidence),
+        ] {
+            if !value.is_finite() {
+                return Err(TraceError::NonFinite { line: lineno, field, value });
+            }
+        }
+        if req.arrival < prev_arrival {
+            return Err(TraceError::NonMonotone {
+                line: lineno,
+                arrival: req.arrival,
+                prev: prev_arrival,
+            });
+        }
+        prev_arrival = req.arrival;
+        out.push(req);
     }
     Ok(out)
 }
@@ -47,17 +103,17 @@ pub fn save(path: &Path, requests: &[Request]) -> std::io::Result<()> {
 }
 
 /// Load a trace file.
-pub fn load(path: &Path) -> Result<Vec<Request>, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+pub fn load(path: &Path) -> Result<Vec<Request>, TraceError> {
+    let text = std::fs::read_to_string(path).map_err(|e| TraceError::Io(e.to_string()))?;
     from_csv(&text)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
     use crate::workload::arrival::{arrival_times, ArrivalProcess};
     use crate::workload::stream::{RequestStream, StreamConfig};
-    use crate::util::Rng;
 
     fn sample() -> Vec<Request> {
         let mut rng = Rng::new(1);
@@ -94,9 +150,55 @@ mod tests {
 
     #[test]
     fn rejects_malformed() {
-        assert!(from_csv("id,model\n1,2\n").is_err());
-        assert!(from_csv("h\nnot,enough,fields,x,y,z,q\n").is_err() || true);
-        assert!(from_csv("h\na,m,b,c,d,e,f\n").is_err());
+        assert!(matches!(
+            from_csv("id,model\n1,2\n"),
+            Err(TraceError::Malformed { line: 2, .. })
+        ));
+        assert!(matches!(
+            from_csv("h\na,m,b,c,d,e,f\n"),
+            Err(TraceError::Malformed { line: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_non_finite_arrival() {
+        let csv = "h\n1,m,NaN,2,0,0.5,0.5\n";
+        assert!(matches!(
+            from_csv(csv),
+            Err(TraceError::NonFinite { line: 2, field: "arrival", .. })
+        ));
+        let csv = "h\n1,m,inf,2,0,0.5,0.5\n";
+        assert!(matches!(
+            from_csv(csv),
+            Err(TraceError::NonFinite { line: 2, field: "arrival", .. })
+        ));
+        let csv = "h\n1,m,0.5,2,0,NaN,0.5\n";
+        assert!(matches!(
+            from_csv(csv),
+            Err(TraceError::NonFinite { line: 2, field: "difficulty", .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_non_monotone_arrival() {
+        let csv = "h\n1,m,1.0,2,0,0.5,0.5\n2,m,0.5,3,0,0.5,0.5\n";
+        match from_csv(csv) {
+            Err(TraceError::NonMonotone { line, arrival, prev }) => {
+                assert_eq!(line, 3);
+                assert!((arrival - 0.5).abs() < 1e-12);
+                assert!((prev - 1.0).abs() < 1e-12);
+            }
+            other => panic!("expected NonMonotone, got {other:?}"),
+        }
+        // Equal arrivals (simultaneous batch) stay legal.
+        let csv = "h\n1,m,1.0,2,0,0.5,0.5\n2,m,1.0,3,0,0.5,0.5\n";
+        assert_eq!(from_csv(csv).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn error_displays_line_numbers() {
+        let err = from_csv("h\n1,m,NaN,2,0,0.5,0.5\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
     }
 
     #[test]

@@ -21,8 +21,8 @@ use greenflow::controller::cost::WeightPolicy;
 use greenflow::controller::threshold::ThresholdSchedule;
 use greenflow::controller::{AdaptiveTauPolicy, AdmissionController, ControllerConfig};
 use greenflow::sim::{
-    simulate, simulate_batching, simulate_replicas, simulate_tenancy, BatchSimConfig,
-    ReplicaSimConfig, SimConfig, TenancySimConfig,
+    simulate, simulate_batching, simulate_carbon, simulate_replicas, simulate_tenancy,
+    BatchSimConfig, CarbonSimConfig, ReplicaSimConfig, SimConfig, TenancySimConfig,
 };
 use greenflow::util::Rng;
 use greenflow::workload::arrival::{arrival_times, ArrivalProcess};
@@ -327,4 +327,56 @@ fn aimd_delay_still_amortises_when_the_slo_allows_it() {
     });
     assert!(rep.mean_batch > 1.3, "batching collapsed: mean batch {}", rep.mean_batch);
     assert!(rep.final_delay_us > 10_000, "window collapsed: {} µs", rep.final_delay_us);
+}
+
+#[test]
+fn carbon_pacer_shifts_deferrable_energy_into_the_clean_window() {
+    // Acceptance gate for the carbon-aware pacing loop (docs/SCENARIOS.md):
+    // on a step carbon trace (dirty world-average grid for 30 s, then the
+    // clean French grid), the paced run must
+    //   1. emit strictly less CO₂ per answer than the open-loop baseline,
+    //   2. at *identical* accuracy (deferral moves work in time, it never
+    //      degrades answers) and identical total energy,
+    //   3. without inflating the non-deferrable (High) p95 beyond a 10%
+    //      band, and
+    //   4. replay bit-identically under the same seed.
+    let run = greenflow::workload::scenario::resolve(
+        "diurnal",
+        2000,
+        greenflow::workload::scenario::DEFAULT_SEED,
+    )
+    .unwrap();
+    let cfg = CarbonSimConfig::paper_default();
+    let open = simulate_carbon(&run, &cfg.clone().open_loop());
+    let paced = simulate_carbon(&run, &cfg);
+
+    // The dirty opening window must actually park deferrable work.
+    assert!(paced.deferred > 0, "nothing deferred — the scenario is not exercising the pacer");
+
+    // 1. Strictly lower CO₂ per answer.
+    assert!(
+        paced.co2_per_answer() < open.co2_per_answer(),
+        "paced {} g/answer !< open {} g/answer",
+        paced.co2_per_answer(),
+        open.co2_per_answer()
+    );
+    // 2. Unchanged accuracy (bit-identical: same answers, order-free sum)
+    //    and energy (the pacer moves joules in time, never adds any).
+    assert_eq!(paced.accuracy, open.accuracy);
+    assert!((open.accuracy - paced.accuracy).abs() < 0.005, "accuracy moved past the 0.5% gate");
+    assert!((paced.energy_joules - open.energy_joules).abs() < 1e-9);
+    // The grams came from the dirty→clean shift, visible in the split.
+    assert!(paced.clean_joules > open.clean_joules);
+    assert!(paced.dirty_joules < open.dirty_joules);
+
+    // 3. High-priority latency is not taxed for the carbon win.
+    assert!(
+        paced.p95_high_secs <= open.p95_high_secs * 1.10 + 1e-6,
+        "high-priority p95 inflated: {} s vs {} s",
+        paced.p95_high_secs,
+        open.p95_high_secs
+    );
+
+    // 4. Deterministic replay: whole-report equality.
+    assert_eq!(simulate_carbon(&run, &cfg), paced);
 }
